@@ -1,0 +1,75 @@
+//! Quickstart: preprocess a sparse matrix once, then run hybrid SpMM
+//! and SDDMM on the two engines.
+//!
+//!     cargo run --release --example quickstart
+
+use libra::balance::BalanceParams;
+use libra::costmodel;
+use libra::dist::Op;
+use libra::exec::sddmm::SddmmExecutor;
+use libra::exec::{SpmmExecutor, TcBackend};
+use libra::sparse::{gen, Dense};
+use libra::util::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    libra::util::logger::init();
+    let mut rng = SplitMix64::new(42);
+
+    // a mixed-density matrix: dense FEM-like blocks + sparse noise
+    let m = gen::block_diag_noise(&mut rng, 2048, 24, 0.4, 1e-3);
+    println!("matrix: {}x{}, nnz = {}", m.rows, m.cols, m.nnz());
+    println!("NNZ-1 vector ratio: {:.3}", libra::sparse::stats::nnz1_vector_ratio(&m, 8));
+
+    // --- 2D-aware distribution with the substrate-tuned threshold ---
+    let params = costmodel::substrate_params(Op::Spmm, 128);
+    println!("tuned SpMM threshold: {}", params.threshold);
+    let exec = SpmmExecutor::new(&m, &params, &BalanceParams::default(), TcBackend::NativeBitmap);
+    let st = &exec.dist.stats;
+    println!(
+        "distribution: {} nnz structured ({} blocks, {:.1}% padding), {} nnz flexible",
+        st.nnz_tc,
+        st.n_blocks,
+        st.padding_ratio * 100.0,
+        st.nnz_flex
+    );
+    println!(
+        "schedule: {} TC segments, {} long tiles, {} short tiles, {} atomic windows",
+        exec.sched.tc_segments.len(),
+        exec.sched.long_tiles.len(),
+        exec.sched.short_tiles.len(),
+        exec.sched.atomic_windows
+    );
+
+    // --- hybrid SpMM ---
+    let b = Dense::random(&mut rng, m.cols, 128);
+    let t = std::time::Instant::now();
+    let c = exec.execute(&b)?;
+    println!("SpMM C = A*B: {}x{} in {:.2} ms", c.rows, c.cols, t.elapsed().as_secs_f64() * 1e3);
+    let reference = m.spmm_dense_ref(&b);
+    println!("max |err| vs reference: {:.2e}", c.max_abs_diff(&reference));
+
+    // --- hybrid SDDMM ---
+    let k = 32;
+    let a = Dense::random(&mut rng, m.rows, k);
+    let b2 = Dense::random(&mut rng, m.cols, k);
+    let sd = SddmmExecutor::new(&m, &costmodel::substrate_params(Op::Sddmm, k), TcBackend::NativeBitmap);
+    let t = std::time::Instant::now();
+    let out = sd.execute(&a, &b2)?;
+    println!("SDDMM: {} sampled values in {:.2} ms", out.nnz(), t.elapsed().as_secs_f64() * 1e3);
+
+    // --- PJRT structured engine (the AOT path), if artifacts exist ---
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = std::sync::Arc::new(libra::runtime::Runtime::open("artifacts")?);
+        let exec_pjrt =
+            SpmmExecutor::new(&m, &params, &BalanceParams::default(), TcBackend::Pjrt(rt));
+        let c2 = exec_pjrt.execute(&b)?;
+        println!(
+            "PJRT structured engine: max |err| vs native = {:.2e} ({} artifact calls)",
+            c2.max_abs_diff(&c),
+            exec_pjrt.counters.snapshot().pjrt_calls
+        );
+    } else {
+        println!("(run `make artifacts` to exercise the PJRT structured engine)");
+    }
+    Ok(())
+}

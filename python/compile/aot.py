@@ -1,0 +1,197 @@
+"""AOT pipeline: lower every kernel/model bucket to HLO text artifacts.
+
+Interchange format is HLO *text* (NOT serialized HloModuleProto): jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the Rust ``xla`` crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--only REGEX]
+Outputs ``<name>.hlo.txt`` per artifact plus ``manifest.json``
+describing input/output shapes and dtypes for the Rust loader.
+"""
+
+import argparse
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import sddmm_tc, spmm_tc
+
+# Batch-size buckets for the structured sparse kernels. The Rust
+# batcher picks the largest bucket <= remaining work and pads the tail.
+SPMM_G_BUCKETS = (256, 1024, 4096)
+SPMM_N_BUCKETS = (32, 128)
+SDDMM_G_BUCKETS = (256, 1024)
+SDDMM_K_BUCKETS = (32, 128)
+
+# Dense GNN tile buckets: (K, N) pairs used by the GCN/AGNN configs.
+LINEAR_TILE_T = 2048
+LINEAR_KN = ((128, 64), (64, 64), (64, 16), (128, 32), (32, 32), (32, 16), (64, 32))
+XENT_C = (16,)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dt_name(dtype) -> str:
+    return {"float32": "f32", "uint32": "u32", "bfloat16": "bf16"}[jnp.dtype(dtype).name]
+
+
+def _gb_for(g, cap=None):
+    """Pallas per-step block count for the CPU artifacts.
+
+    On CPU-PJRT the interpret-mode grid loop lowers to an XLA while
+    loop whose per-step overhead dwarfs the work (measured 20x slower
+    at gb=64 vs gb=G for G=4096), so the CPU artifacts use a single
+    grid step. On a real TPU target `cap` would bound the VMEM-resident
+    tile instead (see DESIGN.md §Perf for the budget).
+    """
+    return g if cap is None else min(g, cap)
+
+
+def artifact_registry():
+    """name -> (fn, [input ShapeDtypeStructs]). fn must return a tuple."""
+    arts = {}
+
+    # --- SpMM structured kernels -----------------------------------------
+    for g in SPMM_G_BUCKETS:
+        for n in SPMM_N_BUCKETS:
+            for dt, suffix in ((jnp.float32, ""), (jnp.bfloat16, "_bf16")):
+                if suffix and g != 1024:
+                    continue  # bf16 study uses the mid bucket only
+                name = f"spmm_tc_bitmap_{g}x{n}{suffix}"
+                gb = _gb_for(g)
+
+                def fn(bm, vals, b, gb=gb):
+                    return (spmm_tc.spmm_tc_bitmap(bm, vals, b, gb=gb),)
+
+                arts[name] = (
+                    fn,
+                    [
+                        _spec((g, 2), jnp.uint32),
+                        _spec((g, 64), dt),
+                        _spec((g, 8, n), dt),
+                    ],
+                )
+    for n in SPMM_N_BUCKETS:
+        g = 1024
+        name = f"spmm_tc_dense_{g}x{n}"
+
+        def fn_dense(a, b):
+            return (spmm_tc.spmm_tc_dense(a, b, gb=64),)
+
+        arts[name] = (fn_dense, [_spec((g, 8, 8), jnp.float32), _spec((g, 8, n), jnp.float32)])
+
+    # --- SDDMM structured kernels ----------------------------------------
+    for g in SDDMM_G_BUCKETS:
+        for k in SDDMM_K_BUCKETS:
+            name = f"sddmm_tc_bitmap_{g}x{k}"
+            gb = _gb_for(g)
+
+            def fn_sd(a, b, bm, sv, gb=gb):
+                return (sddmm_tc.sddmm_tc_bitmap(a, b, bm, sv, gb=gb),)
+
+            arts[name] = (
+                fn_sd,
+                [
+                    _spec((g, 8, k), jnp.float32),
+                    _spec((g, k, 16), jnp.float32),
+                    _spec((g, 4), jnp.uint32),
+                    _spec((g, 128), jnp.float32),
+                ],
+            )
+    g, k = 1024, 32
+    name = f"sddmm_tc_dense_{g}x{k}"
+
+    def fn_sdd(a, b):
+        return (sddmm_tc.sddmm_tc_dense(a, b, gb=1024),)
+
+    arts[name] = (fn_sdd, [_spec((g, 8, k), jnp.float32), _spec((g, k, 16), jnp.float32)])
+
+    # --- GNN dense tiles ---------------------------------------------------
+    t = LINEAR_TILE_T
+    for kk, nn in LINEAR_KN:
+        arts[f"linear_{t}x{kk}x{nn}"] = (
+            model.linear_fwd,
+            [_spec((t, kk), jnp.float32), _spec((kk, nn), jnp.float32)],
+        )
+        arts[f"linear_relu_{t}x{kk}x{nn}"] = (
+            model.linear_relu_fwd,
+            [_spec((t, kk), jnp.float32), _spec((kk, nn), jnp.float32)],
+        )
+        arts[f"grad_w_{t}x{kk}x{nn}"] = (
+            model.grad_w,
+            [_spec((t, kk), jnp.float32), _spec((t, nn), jnp.float32)],
+        )
+        arts[f"grad_x_{t}x{kk}x{nn}"] = (
+            model.grad_x,
+            [_spec((t, nn), jnp.float32), _spec((kk, nn), jnp.float32)],
+        )
+    for c in XENT_C:
+        arts[f"softmax_xent_{t}x{c}"] = (
+            model.softmax_xent,
+            [_spec((t, c), jnp.float32), _spec((t, c), jnp.float32)],
+        )
+    for nn in (16, 32, 64):
+        arts[f"relu_bwd_{t}x{nn}"] = (
+            model.relu_bwd,
+            [_spec((t, nn), jnp.float32), _spec((t, nn), jnp.float32)],
+        )
+
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="regex filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    arts = artifact_registry()
+    manifest = {"artifacts": []}
+    pat = re.compile(args.only) if args.only else None
+    for name, (fn, in_specs) in sorted(arts.items()):
+        if pat and not pat.search(name):
+            continue
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.tree_util.tree_leaves(lowered.out_info)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": _dt_name(s.dtype)} for s in in_specs
+                ],
+                "outputs": [
+                    {"shape": list(o.shape), "dtype": _dt_name(o.dtype)} for o in outs
+                ],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels for Libra's structured (TC-block) engine.
+
+All kernels are authored for the MXU mental model (8xK tiles, batched
+MMA) but lowered with ``interpret=True`` so the resulting HLO runs on
+the CPU PJRT client that the Rust coordinator embeds. See
+DESIGN.md "Hardware adaptation".
+"""
+
+from . import ref  # noqa: F401
+from .spmm_tc import spmm_tc_bitmap, spmm_tc_dense  # noqa: F401
+from .sddmm_tc import sddmm_tc_bitmap, sddmm_tc_dense  # noqa: F401

@@ -1,0 +1,57 @@
+"""Shared bitmap helpers (the vectorized form of Bit-Decoding).
+
+A TC block's nonzero layout is a row-major bitmap (bit ``r*k + c``);
+its values are stored compressed in ascending bit order. On the GPU the
+paper decodes with per-thread ``__popc`` prefix masks; the vectorized
+TPU/XLA equivalent is an exclusive cumulative sum over the bit vector:
+
+    prefix[i] = popcount(bitmap & ((1 << i) - 1)) = cumsum(bits)[i] - bits[i]
+
+which every lane computes in parallel, followed by a gather from the
+compressed value array.
+"""
+
+import jax.numpy as jnp
+
+
+def unpack_bits(words, n_bits):
+    """Unpack uint32 words [..., W] into bits [..., n_bits] (int32).
+
+    Bit ``i`` of the block bitmap lives in word ``i // 32``, bit
+    ``i % 32`` — matching the Rust packer in ``runtime/pack.rs``.
+    """
+    w = words.shape[-1]
+    assert w * 32 >= n_bits, (w, n_bits)
+    positions = jnp.arange(32, dtype=jnp.uint32)
+    # [..., W, 32] -> [..., W*32]
+    bits = (words[..., :, None] >> positions) & jnp.uint32(1)
+    bits = bits.reshape(*words.shape[:-1], w * 32)
+    return bits[..., :n_bits].astype(jnp.int32)
+
+
+def decode_values(bits, packed_values):
+    """Expand compressed values into dense bit-position order.
+
+    bits: [..., B] 0/1 int32; packed_values: [..., B] where the first
+    ``sum(bits)`` entries are the nonzero values in ascending bit order.
+    Returns dense [..., B]: value at set bits, 0 elsewhere.
+    """
+    prefix = jnp.cumsum(bits, axis=-1) - bits  # exclusive prefix popcount
+    gathered = jnp.take_along_axis(packed_values, prefix, axis=-1)
+    return gathered * bits.astype(packed_values.dtype)
+
+
+def compact_values(bits, dense):
+    """Inverse of :func:`decode_values`: gather dense bit-position values
+    into compressed ascending-bit order (the in-kernel SDDMM sampling).
+
+    Returns [..., B] with the set-bit values first (bit-ascending) and
+    zeros after. Uses the argsort trick: set bits keep their position as
+    the sort key, unset bits are pushed past the end.
+    """
+    n = bits.shape[-1]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    keys = jnp.where(bits == 1, idx, n + idx)
+    order = jnp.argsort(keys, axis=-1)
+    compacted = jnp.take_along_axis(dense * bits.astype(dense.dtype), order, axis=-1)
+    return compacted

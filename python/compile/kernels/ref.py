@@ -1,0 +1,88 @@
+"""Pure-jnp reference oracles for the structured-engine kernels.
+
+These define the semantics the Pallas kernels must match bit-for-bit in
+structure (and to fp tolerance in value). The Rust test-suite checks
+its host-side Bit-Decoding against the same conventions.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import bits
+
+
+def spmm_tc_bitmap_ref(bitmap_words, packed_values, b_gathered):
+    """Reference for the bitmap SpMM TC kernel.
+
+    bitmap_words: [G, 2] uint32 (64-bit row-major 8x8 bitmap per block)
+    packed_values: [G, 64] f32 (compressed values, bit-ascending)
+    b_gathered: [G, 8, N] f32 (rows of B for the block's 8 column slots;
+                zero rows for padding slots)
+    Returns [G, 8, N]: the per-block partial products A_block @ B_block.
+    """
+    g = bitmap_words.shape[0]
+    bvec = bits.unpack_bits(bitmap_words, 64)  # [G, 64]
+    dense = bits.decode_values(bvec, packed_values)  # [G, 64]
+    a = dense.reshape(g, 8, 8)
+    return jnp.einsum("gik,gkn->gin", a, b_gathered, preferred_element_type=jnp.float32)
+
+
+def spmm_tc_dense_ref(a_tiles, b_gathered):
+    """Reference for the staged (pre-decoded) SpMM variant."""
+    return jnp.einsum(
+        "gik,gkn->gin", a_tiles, b_gathered, preferred_element_type=jnp.float32
+    )
+
+
+def sddmm_tc_bitmap_ref(a_rows, b_cols, bitmap_words, scale_values):
+    """Reference for the bitmap SDDMM TC kernel.
+
+    a_rows: [G, 8, K] f32 (window rows of A per block)
+    b_cols: [G, K, 16] f32 (columns of B for the block's 16 slots)
+    bitmap_words: [G, 4] uint32 (128-bit row-major 8x16 bitmap)
+    scale_values: [G, 128] f32 (the sparse matrix's own values,
+                  compressed bit-ascending — SDDMM scales the sampled
+                  dot products by them)
+    Returns [G, 128] f32: compacted sampled results, bit-ascending, with
+    zeros after the block's nnz (in-kernel sampling + compaction).
+    """
+    g = a_rows.shape[0]
+    dense = jnp.einsum(
+        "gik,gkn->gin", a_rows, b_cols, preferred_element_type=jnp.float32
+    ).reshape(g, 128)
+    bvec = bits.unpack_bits(bitmap_words, 128)  # [G, 128]
+    compacted = bits.compact_values(bvec, dense)
+    return compacted * scale_values
+
+
+def sddmm_tc_dense_ref(a_rows, b_cols):
+    """Reference for the dense-output SDDMM variant (host samples)."""
+    return jnp.einsum("gik,gkn->gin", a_rows, b_cols, preferred_element_type=jnp.float32)
+
+
+def linear_ref(x, w):
+    """Reference for the GNN dense layer tile."""
+    return x @ w
+
+
+# ---------------------------------------------------------------------------
+# numpy host-side helpers shared by the python tests (mirror the Rust packer)
+# ---------------------------------------------------------------------------
+
+def pack_bitmap_words(bitmap_int, n_words):
+    """Split an arbitrary-precision python int bitmap into uint32 words."""
+    return np.array(
+        [(bitmap_int >> (32 * w)) & 0xFFFFFFFF for w in range(n_words)], dtype=np.uint32
+    )
+
+
+def encode_block_np(tile):
+    """Encode a dense row-major tile (2D numpy) into (bitmap_int, values)."""
+    flat = tile.reshape(-1)
+    bitmap = 0
+    values = []
+    for i, v in enumerate(flat):
+        if v != 0.0:
+            bitmap |= 1 << i
+            values.append(v)
+    return bitmap, np.array(values, dtype=np.float32)

@@ -1,0 +1,97 @@
+"""SpMM structured-engine Pallas kernels.
+
+The hot spot of Libra's structured path: a batch of G bitmap-compressed
+8x8 TC blocks multiplied against their gathered dense operands,
+``out[g] = decode(bitmap[g], values[g]) @ b_gathered[g]``.
+
+MXU adaptation (DESIGN.md "Hardware adaptation"): the GPU paper issues
+one ``mma.m16n8k8`` per TC block from a warp, with Bit-Decoding done by
+per-thread ``__popc`` on a register-held bitmap. On the TPU model we
+batch ``GB`` blocks per grid step so the (8, K)x(K, N) tiles fill the
+MXU lanes, and Bit-Decoding becomes an exclusive cumsum + gather on the
+VPU, fused ahead of the matmul in the same kernel — the compressed
+values never round-trip through a staging buffer (the shared-memory
+bypass property).
+
+Two variants:
+ * :func:`spmm_tc_bitmap` — bitmap + compressed values in, decode
+   in-kernel (Libra's Bit-Decoding).
+ * :func:`spmm_tc_dense`  — pre-decoded dense tiles in (the ME-TCF /
+   staged baseline for the Table-8 ablation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import bits
+
+# Blocks per grid step: 8 rows x GB blocks fills MXU/VPU lanes while the
+# VMEM footprint stays small (see DESIGN.md §Perf for the budget).
+DEFAULT_GB = 64
+
+
+def _bitmap_kernel(bitmap_ref, vals_ref, b_ref, o_ref):
+    """One grid step: decode GB blocks and contract with their B tiles."""
+    bm = bitmap_ref[...]  # [GB, 2] uint32
+    vals = vals_ref[...]  # [GB, 64]
+    b = b_ref[...]  # [GB, 8, N]
+    bvec = bits.unpack_bits(bm, 64)  # [GB, 64] int32
+    dense = bits.decode_values(bvec, vals)  # [GB, 64]
+    a = dense.reshape(dense.shape[0], 8, 8)
+    o_ref[...] = jnp.einsum(
+        "gik,gkn->gin", a, b, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _dense_kernel(a_ref, b_ref, o_ref):
+    """Staged variant: tiles arrive pre-decoded."""
+    o_ref[...] = jnp.einsum(
+        "gik,gkn->gin", a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("gb",))
+def spmm_tc_bitmap(bitmap_words, packed_values, b_gathered, gb=DEFAULT_GB):
+    """Libra bitmap SpMM kernel over a [G] batch of TC blocks.
+
+    Shapes: bitmap_words [G, 2] u32; packed_values [G, 64] f32;
+    b_gathered [G, 8, N] f32 -> [G, 8, N] f32. G must be a multiple of
+    ``gb`` (the Rust packer pads with empty blocks).
+    """
+    g, _, n = b_gathered.shape
+    assert g % gb == 0, (g, gb)
+    grid = (g // gb,)
+    return pl.pallas_call(
+        _bitmap_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((gb, 2), lambda i: (i, 0)),
+            pl.BlockSpec((gb, 64), lambda i: (i, 0)),
+            pl.BlockSpec((gb, 8, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((gb, 8, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, 8, n), b_gathered.dtype),
+        interpret=True,  # CPU-PJRT execution; Mosaic lowering is TPU-only
+    )(bitmap_words, packed_values, b_gathered)
+
+
+@functools.partial(jax.jit, static_argnames=("gb",))
+def spmm_tc_dense(a_tiles, b_gathered, gb=DEFAULT_GB):
+    """Staged (pre-decoded) SpMM kernel — ablation baseline."""
+    g, _, n = b_gathered.shape
+    assert g % gb == 0, (g, gb)
+    grid = (g // gb,)
+    return pl.pallas_call(
+        _dense_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((gb, 8, 8), lambda i: (i, 0, 0)),
+            pl.BlockSpec((gb, 8, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((gb, 8, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, 8, n), b_gathered.dtype),
+        interpret=True,
+    )(a_tiles, b_gathered)

@@ -1,0 +1,61 @@
+"""Layer-2 JAX compute graphs: the GNN dense tiles.
+
+The Rust coordinator runs GCN / AGNN training with *manual* backward
+passes; every dense contraction in those passes is one of the tiled
+computations below, AOT-lowered per (T, K, N) bucket by ``aot.py``.
+The sparse aggregation / attention steps go through the Libra hybrid
+executor instead (structured kernels from ``kernels/`` + the native
+flexible engine).
+
+Tiling: node dimension is processed in row tiles of T (default 2048);
+the Rust side pads the last tile with zero rows, which is harmless for
+every op here (matmul, bias, relu — all row-local).
+"""
+
+import jax.numpy as jnp
+
+
+def linear_fwd(x, w):
+    """Y = X @ W for one row tile. x: [T, K], w: [K, N] -> [T, N]."""
+    return (jnp.matmul(x, w, preferred_element_type=jnp.float32),)
+
+
+def linear_relu_fwd(x, w):
+    """Fused Y = relu(X @ W) — saves one artifact round-trip per layer."""
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    return (jnp.maximum(y, 0.0),)
+
+
+def grad_w(x, dy):
+    """dW = X^T @ dY. x: [T, K], dy: [T, N] -> [K, N].
+
+    The Rust trainer accumulates tile contributions: dW = sum_t dW_t.
+    """
+    return (jnp.matmul(x.T, dy, preferred_element_type=jnp.float32),)
+
+
+def grad_x(dy, w):
+    """dX = dY @ W^T. dy: [T, N], w: [K, N] -> [T, K]."""
+    return (jnp.matmul(dy, w.T, preferred_element_type=jnp.float32),)
+
+
+def relu_bwd(y, dy):
+    """dX for relu given the *output* y (y > 0 ⇔ input > 0)."""
+    return (jnp.where(y > 0.0, dy, 0.0),)
+
+
+def softmax_xent(logits, onehot):
+    """Row softmax cross-entropy: returns (mean loss [1], dlogits [T, C]).
+
+    Rows whose one-hot target is all zero (padding rows) contribute
+    neither to the loss nor to the gradient.
+    """
+    zmax = jnp.max(logits, axis=1, keepdims=True)
+    z = logits - zmax
+    logsum = jnp.log(jnp.sum(jnp.exp(z), axis=1, keepdims=True))
+    logp = z - logsum
+    valid = jnp.sum(onehot, axis=1, keepdims=True)  # 1 for real rows, 0 pad
+    n = jnp.maximum(jnp.sum(valid), 1.0)
+    loss = -jnp.sum(logp * onehot) / n
+    dlogits = (jnp.exp(logp) - onehot) * valid / n
+    return (jnp.reshape(loss, (1,)), dlogits)

@@ -1,0 +1,40 @@
+"""Shared fixtures/helpers for the kernel test suite."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+def make_spmm_blocks(rng, g, n, density=0.3):
+    """Random SpMM TC-block batch: returns (tiles, bitmap_words, packed, b)."""
+    tiles = rng.random((g, 8, 8)).astype(np.float32)
+    tiles *= (rng.random((g, 8, 8)) < density).astype(np.float32)
+    words = np.zeros((g, 2), np.uint32)
+    packed = np.zeros((g, 64), np.float32)
+    for i in range(g):
+        bm, v = ref.encode_block_np(tiles[i])
+        words[i] = ref.pack_bitmap_words(bm, 2)
+        packed[i, : len(v)] = v
+    b = rng.standard_normal((g, 8, n)).astype(np.float32)
+    return tiles, words, packed, b
+
+
+def make_sddmm_blocks(rng, g, k, density=0.25):
+    """Random SDDMM batch: (a_rows, b_cols, sparse_tiles, words, scale)."""
+    a_rows = rng.standard_normal((g, 8, k)).astype(np.float32)
+    b_cols = rng.standard_normal((g, k, 16)).astype(np.float32)
+    stiles = rng.random((g, 8, 16)).astype(np.float32)
+    stiles *= (rng.random((g, 8, 16)) < density).astype(np.float32)
+    words = np.zeros((g, 4), np.uint32)
+    scale = np.zeros((g, 128), np.float32)
+    for i in range(g):
+        bm, v = ref.encode_block_np(stiles[i])
+        words[i] = ref.pack_bitmap_words(bm, 4)
+        scale[i, : len(v)] = v
+    return a_rows, b_cols, stiles, words, scale
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xBEEF)

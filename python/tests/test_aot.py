@@ -1,0 +1,56 @@
+"""AOT pipeline tests: registry integrity and HLO-text lowering."""
+
+import json
+import os
+import re
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from compile import aot
+
+
+def test_registry_names_unique_and_wellformed():
+    arts = aot.artifact_registry()
+    assert len(arts) >= 40
+    for name in arts:
+        assert re.fullmatch(r"[a-z0-9_]+", name), name
+
+
+def test_registry_specs_have_static_shapes():
+    arts = aot.artifact_registry()
+    for name, (_, specs) in arts.items():
+        for s in specs:
+            assert all(isinstance(d, int) and d > 0 for d in s.shape), (name, s)
+
+
+@pytest.mark.parametrize("name", ["spmm_tc_bitmap_256x32", "linear_2048x64x16", "softmax_xent_2048x16"])
+def test_lowering_produces_parsable_hlo(name):
+    arts = aot.artifact_registry()
+    fn, specs = arts[name]
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ROOT" in text
+    # outputs are a tuple (return_tuple=True)
+    assert "tuple(" in text.replace(" ", "") or ") tuple" in text
+
+
+def test_cli_with_filter(tmp_path):
+    env = dict(os.environ)
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path), "--only", "relu_bwd_2048x16"],
+        capture_output=True,
+        text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    assert out.returncode == 0, out.stderr
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    names = [a["name"] for a in man["artifacts"]]
+    assert names == ["relu_bwd_2048x16"]
+    art = man["artifacts"][0]
+    assert art["inputs"][0] == {"shape": [2048, 16], "dtype": "f32"}
+    assert (tmp_path / "relu_bwd_2048x16.hlo.txt").exists()

@@ -1,0 +1,84 @@
+"""Unit + property tests for the bitmap decode/compact primitives."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import bits, ref
+
+
+def np_bits(bitmap_int, n):
+    return np.array([(bitmap_int >> i) & 1 for i in range(n)], dtype=np.int32)
+
+
+class TestUnpackBits:
+    def test_known_pattern(self):
+        words = jnp.array([[0b1011, 0]], dtype=jnp.uint32)
+        out = np.asarray(bits.unpack_bits(words, 64))
+        assert out[0, 0] == 1 and out[0, 1] == 1 and out[0, 2] == 0 and out[0, 3] == 1
+        assert out[0, 4:].sum() == 0
+
+    def test_high_word(self):
+        words = jnp.array([[0, 1]], dtype=jnp.uint32)
+        out = np.asarray(bits.unpack_bits(words, 64))
+        assert out[0, 32] == 1
+        assert out.sum() == 1
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(min_value=0, max_value=(1 << 64) - 1))
+    def test_matches_python_int(self, bm):
+        words = jnp.array([ref.pack_bitmap_words(bm, 2)], dtype=jnp.uint32)
+        out = np.asarray(bits.unpack_bits(words, 64))[0]
+        np.testing.assert_array_equal(out, np_bits(bm, 64))
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(min_value=0, max_value=(1 << 128) - 1))
+    def test_128_bit(self, bm):
+        words = jnp.array([ref.pack_bitmap_words(bm, 4)], dtype=jnp.uint32)
+        out = np.asarray(bits.unpack_bits(words, 128))[0]
+        np.testing.assert_array_equal(out, np_bits(bm, 128))
+
+
+class TestDecodeValues:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.booleans(), min_size=64, max_size=64))
+    def test_roundtrip_against_dense(self, mask):
+        mask = np.array(mask, dtype=np.int32)
+        dense = mask * np.arange(1.0, 65.0, dtype=np.float32)
+        packed = np.zeros(64, np.float32)
+        packed[: mask.sum()] = dense[mask == 1]
+        out = np.asarray(
+            bits.decode_values(jnp.array(mask[None]), jnp.array(packed[None]))
+        )[0]
+        np.testing.assert_allclose(out, dense)
+
+    def test_empty(self):
+        out = np.asarray(
+            bits.decode_values(jnp.zeros((1, 64), jnp.int32), jnp.zeros((1, 64)))
+        )
+        assert out.sum() == 0
+
+
+class TestCompactValues:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.booleans(), min_size=128, max_size=128))
+    def test_compact_then_decode(self, mask):
+        mask = np.array(mask, dtype=np.int32)
+        dense = np.arange(1.0, 129.0, dtype=np.float32) * mask
+        compact = np.asarray(
+            bits.compact_values(jnp.array(mask[None]), jnp.array(dense[None]))
+        )[0]
+        nnz = int(mask.sum())
+        # first nnz entries = the set-bit values, ascending bit order
+        np.testing.assert_allclose(compact[:nnz], dense[mask == 1])
+        np.testing.assert_allclose(compact[nnz:], 0.0)
+
+    def test_compact_is_inverse_of_decode(self):
+        rng = np.random.default_rng(7)
+        mask = (rng.random(128) < 0.3).astype(np.int32)
+        packed = np.zeros(128, np.float32)
+        packed[: mask.sum()] = rng.standard_normal(mask.sum()).astype(np.float32)
+        dense = np.asarray(bits.decode_values(jnp.array(mask[None]), jnp.array(packed[None])))
+        back = np.asarray(bits.compact_values(jnp.array(mask[None]), jnp.array(dense)))
+        np.testing.assert_allclose(back, packed[None])

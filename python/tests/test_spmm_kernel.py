@@ -1,0 +1,101 @@
+"""Pallas SpMM structured kernel vs pure-jnp oracle — the core L1
+correctness signal (bitmap decode + block matmul)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref, spmm_tc
+from .conftest import make_spmm_blocks
+
+
+@pytest.mark.parametrize("g,n,gb", [(64, 32, 32), (128, 128, 64), (256, 32, 64)])
+def test_bitmap_kernel_matches_dense_einsum(rng, g, n, gb):
+    tiles, words, packed, b = make_spmm_blocks(rng, g, n)
+    out = np.asarray(
+        spmm_tc.spmm_tc_bitmap(jnp.array(words), jnp.array(packed), jnp.array(b), gb=gb)
+    )
+    expect = np.einsum("gik,gkn->gin", tiles, b)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("g,n", [(64, 32), (128, 128)])
+def test_bitmap_kernel_matches_ref(rng, g, n):
+    _, words, packed, b = make_spmm_blocks(rng, g, n)
+    out = np.asarray(
+        spmm_tc.spmm_tc_bitmap(jnp.array(words), jnp.array(packed), jnp.array(b), gb=32)
+    )
+    r = np.asarray(ref.spmm_tc_bitmap_ref(jnp.array(words), jnp.array(packed), jnp.array(b)))
+    np.testing.assert_allclose(out, r, rtol=1e-5, atol=1e-5)
+
+
+def test_dense_variant_matches(rng):
+    tiles, _, _, b = make_spmm_blocks(rng, 128, 32)
+    out = np.asarray(spmm_tc.spmm_tc_dense(jnp.array(tiles), jnp.array(b), gb=64))
+    expect = np.einsum("gik,gkn->gin", tiles, b)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_empty_blocks_produce_zero(rng):
+    g, n = 64, 32
+    words = np.zeros((g, 2), np.uint32)
+    packed = np.zeros((g, 64), np.float32)
+    b = rng.standard_normal((g, 8, n)).astype(np.float32)
+    out = np.asarray(
+        spmm_tc.spmm_tc_bitmap(jnp.array(words), jnp.array(packed), jnp.array(b), gb=32)
+    )
+    assert np.abs(out).max() == 0.0
+
+
+def test_full_blocks(rng):
+    """All 64 bits set: decode must reproduce the full dense tile."""
+    g, n = 32, 32
+    tiles = rng.standard_normal((g, 8, 8)).astype(np.float32)
+    tiles[tiles == 0.0] = 1.0
+    words = np.zeros((g, 2), np.uint32)
+    packed = np.zeros((g, 64), np.float32)
+    for i in range(g):
+        bm, v = ref.encode_block_np(tiles[i])
+        assert bm == (1 << 64) - 1
+        words[i] = ref.pack_bitmap_words(bm, 2)
+        packed[i, : len(v)] = v
+    b = rng.standard_normal((g, 8, n)).astype(np.float32)
+    out = np.asarray(
+        spmm_tc.spmm_tc_bitmap(jnp.array(words), jnp.array(packed), jnp.array(b), gb=32)
+    )
+    np.testing.assert_allclose(out, np.einsum("gik,gkn->gin", tiles, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    g_exp=st.integers(min_value=5, max_value=8),
+    n=st.sampled_from([32, 128]),
+    density=st.floats(min_value=0.02, max_value=0.9),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hypothesis_shape_density_sweep(g_exp, n, density, seed):
+    rng = np.random.default_rng(seed)
+    g = 2**g_exp
+    tiles, words, packed, b = make_spmm_blocks(rng, g, n, density)
+    out = np.asarray(
+        spmm_tc.spmm_tc_bitmap(jnp.array(words), jnp.array(packed), jnp.array(b), gb=32)
+    )
+    expect = np.einsum("gik,gkn->gin", tiles, b)
+    np.testing.assert_allclose(out, expect, rtol=1e-3, atol=1e-3)
+
+
+def test_bf16_variant_runs(rng):
+    """bf16 inputs: looser tolerance, checks the precision path lowers."""
+    tiles, words, packed, b = make_spmm_blocks(rng, 64, 32)
+    out = np.asarray(
+        spmm_tc.spmm_tc_bitmap(
+            jnp.array(words),
+            jnp.array(packed).astype(jnp.bfloat16),
+            jnp.array(b).astype(jnp.bfloat16),
+            gb=32,
+        ).astype(jnp.float32)
+    )
+    expect = np.einsum("gik,gkn->gin", tiles, b)
+    np.testing.assert_allclose(out, expect, rtol=0.1, atol=0.1)

@@ -1,0 +1,105 @@
+//! Figure 9 + Table 4: SpMM across the corpus (N = 128), Libra hybrid
+//! vs every baseline; prints the per-decile GFLOPS series (Fig 9) and
+//! the speedup-distribution table (Table 4).
+
+use libra::balance::BalanceParams;
+use libra::baselines::cuda_like::{CsrRowSpmm, RodeLikeSpmm, SputnikLikeSpmm};
+use libra::baselines::sparsetir_like::SparseTirLikeSpmm;
+use libra::baselines::tc_like::TcOnlySpmm;
+use libra::baselines::SpmmImpl;
+use libra::bench::{self, SpeedupDist, Table};
+use libra::dist::DistParams;
+use libra::exec::{SpmmExecutor, TcBackend};
+use libra::sparse::Dense;
+use libra::util::SplitMix64;
+use std::collections::BTreeMap;
+
+const N: usize = 128;
+
+fn main() {
+    let mats = bench::build_corpus(bench::corpus_size());
+    let rt = bench::open_runtime();
+    let names = [
+        "libra",
+        "csr_row",
+        "sputnik_like",
+        "rode_like",
+        "tc_only_tcf",
+        "tc_only_metcf",
+        "flash_like",
+        "sparsetir_like",
+    ];
+    let mut gflops: BTreeMap<&str, Vec<f64>> = names.iter().map(|&n| (n, Vec::new())).collect();
+    let mut rng = SplitMix64::new(5);
+
+    for (i, bm) in mats.iter().enumerate() {
+        let m = &bm.m;
+        let b = Dense::random(&mut rng, m.cols, N);
+        // Libra hybrid: native structured engine + substrate-tuned theta
+        // (the PJRT engine is profiled separately in tab05_profile)
+        let _ = &rt;
+        let params = libra::costmodel::substrate_params(libra::dist::Op::Spmm, N);
+        let libra =
+            SpmmExecutor::new(m, &params, &BalanceParams::default(), TcBackend::NativeBitmap);
+        let secs = bench::time_median(|| {
+            std::hint::black_box(libra.execute(&b).unwrap());
+        });
+        gflops.get_mut("libra").unwrap().push(bench::gflops(m.nnz(), N, secs));
+
+        let mut baselines: Vec<Box<dyn SpmmImpl>> = vec![
+            Box::new(CsrRowSpmm::new()),
+            Box::new(SputnikLikeSpmm::new()),
+            Box::new(RodeLikeSpmm::new()),
+            Box::new(TcOnlySpmm::tcgnn_like()),
+            Box::new(TcOnlySpmm::dtc_like()),
+            Box::new(TcOnlySpmm::flash_like()),
+            Box::new(SparseTirLikeSpmm::new()),
+        ];
+        for imp in baselines.iter_mut() {
+            imp.prepare(m);
+            let secs = bench::time_median(|| {
+                std::hint::black_box(imp.execute(&b));
+            });
+            gflops.get_mut(imp.name()).unwrap().push(bench::gflops(m.nnz(), N, secs));
+        }
+        if i % 20 == 0 {
+            eprintln!("[{}/{}] {}", i + 1, mats.len(), bm.name);
+        }
+    }
+
+    // Fig 9: decile-averaged GFLOPS series (x = NNZ-1 ratio rank)
+    let mut t = Table::new(
+        "Fig 9: SpMM GFLOPS by corpus decile (sorted by NNZ-1 ratio desc; N=128)",
+        &["decile", "libra", "csr_row", "sputnik", "rode", "tcf", "metcf", "flash", "sparsetir"],
+    );
+    let n_mats = mats.len();
+    for d in 0..10 {
+        let lo = d * n_mats / 10;
+        let hi = ((d + 1) * n_mats / 10).max(lo + 1).min(n_mats);
+        let avg = |v: &Vec<f64>| v[lo..hi].iter().sum::<f64>() / (hi - lo) as f64;
+        t.add(vec![
+            format!("{d}"),
+            format!("{:.2}", avg(&gflops["libra"])),
+            format!("{:.2}", avg(&gflops["csr_row"])),
+            format!("{:.2}", avg(&gflops["sputnik_like"])),
+            format!("{:.2}", avg(&gflops["rode_like"])),
+            format!("{:.2}", avg(&gflops["tc_only_tcf"])),
+            format!("{:.2}", avg(&gflops["tc_only_metcf"])),
+            format!("{:.2}", avg(&gflops["flash_like"])),
+            format!("{:.2}", avg(&gflops["sparsetir_like"])),
+        ]);
+    }
+    t.print();
+
+    // Table 4: speedup distribution of Libra over each baseline
+    println!("\n== Table 4: SpMM speedup distribution (Libra over baseline) ==");
+    println!("{}", SpeedupDist::header());
+    for &base in &names[1..] {
+        let sp: Vec<f64> = gflops["libra"]
+            .iter()
+            .zip(&gflops[base])
+            .map(|(l, b)| if *b > 0.0 { l / b } else { 1.0 })
+            .collect();
+        println!("{}", SpeedupDist::from(&sp).row(base));
+    }
+}

@@ -1,0 +1,82 @@
+//! Figure 10 + Table 6: SDDMM across the corpus (N = K = 32), Libra
+//! hybrid vs the FlashSparse-like and RoDe-like baselines.
+
+use libra::baselines::cuda_like::RodeLikeSddmm;
+use libra::baselines::tc_like::TcOnlySddmm;
+use libra::baselines::SddmmImpl;
+use libra::bench::{self, SpeedupDist, Table};
+use libra::dist::DistParams;
+use libra::exec::sddmm::SddmmExecutor;
+use libra::exec::TcBackend;
+use libra::sparse::Dense;
+use libra::util::SplitMix64;
+use std::collections::BTreeMap;
+
+const K: usize = 32;
+
+fn main() {
+    let mats = bench::build_corpus(bench::corpus_size());
+    let rt = bench::open_runtime();
+    let names = ["libra", "flash_like", "tc_only_tcf", "rode_like"];
+    let mut gflops: BTreeMap<&str, Vec<f64>> = names.iter().map(|&n| (n, Vec::new())).collect();
+    let mut rng = SplitMix64::new(6);
+
+    for (i, bm) in mats.iter().enumerate() {
+        let m = &bm.m;
+        let a = Dense::random(&mut rng, m.rows, K);
+        let b = Dense::random(&mut rng, m.cols, K);
+        let _ = &rt;
+        let params = libra::costmodel::substrate_params(libra::dist::Op::Sddmm, K);
+        let libra = SddmmExecutor::new(m, &params, TcBackend::NativeBitmap);
+        let secs = bench::time_median(|| {
+            std::hint::black_box(libra.execute(&a, &b).unwrap());
+        });
+        gflops.get_mut("libra").unwrap().push(bench::gflops(m.nnz(), K, secs));
+
+        let mut baselines: Vec<Box<dyn SddmmImpl>> = vec![
+            Box::new(TcOnlySddmm::flash_like()),
+            Box::new(TcOnlySddmm::tcgnn_like()),
+            Box::new(RodeLikeSddmm::new()),
+        ];
+        for imp in baselines.iter_mut() {
+            imp.prepare(m);
+            let secs = bench::time_median(|| {
+                std::hint::black_box(imp.execute(&a, &b));
+            });
+            gflops.get_mut(imp.name()).unwrap().push(bench::gflops(m.nnz(), K, secs));
+        }
+        if i % 20 == 0 {
+            eprintln!("[{}/{}] {}", i + 1, mats.len(), bm.name);
+        }
+    }
+
+    let mut t = Table::new(
+        "Fig 10: SDDMM GFLOPS by corpus decile (sorted by NNZ-1 ratio desc; K=32)",
+        &["decile", "libra", "flash_like", "tc_only_tcf", "rode_like"],
+    );
+    let n_mats = mats.len();
+    for d in 0..10 {
+        let lo = d * n_mats / 10;
+        let hi = ((d + 1) * n_mats / 10).max(lo + 1).min(n_mats);
+        let avg = |v: &Vec<f64>| v[lo..hi].iter().sum::<f64>() / (hi - lo) as f64;
+        t.add(vec![
+            format!("{d}"),
+            format!("{:.2}", avg(&gflops["libra"])),
+            format!("{:.2}", avg(&gflops["flash_like"])),
+            format!("{:.2}", avg(&gflops["tc_only_tcf"])),
+            format!("{:.2}", avg(&gflops["rode_like"])),
+        ]);
+    }
+    t.print();
+
+    println!("\n== Table 6: SDDMM speedup distribution (Libra over baseline) ==");
+    println!("{}", SpeedupDist::header());
+    for &base in &names[1..] {
+        let sp: Vec<f64> = gflops["libra"]
+            .iter()
+            .zip(&gflops[base])
+            .map(|(l, b)| if *b > 0.0 { l / b } else { 1.0 })
+            .collect();
+        println!("{}", SpeedupDist::from(&sp).row(base));
+    }
+}

@@ -1,0 +1,105 @@
+//! Table 7 + §5.4.1: Hybrid vs CUDA-core-only vs TCU-only, per matrix;
+//! reports on how many matrices hybrid wins and the speedup
+//! distribution over each single-resource mode.
+
+use libra::balance::BalanceParams;
+use libra::bench::{self, SpeedupDist, Table};
+use libra::dist::DistParams;
+use libra::exec::sddmm::SddmmExecutor;
+use libra::exec::{SpmmExecutor, TcBackend};
+use libra::sparse::Dense;
+use libra::util::SplitMix64;
+
+fn main() {
+    let mats = bench::build_corpus(bench::corpus_size());
+    let rt = bench::open_runtime();
+    let mut rng = SplitMix64::new(8);
+
+    let mut spmm_vs_flex = Vec::new();
+    let mut spmm_vs_tc = Vec::new();
+    let mut spmm_hybrid_wins = 0usize;
+    let mut sddmm_vs_flex = Vec::new();
+    let mut sddmm_vs_tc = Vec::new();
+    let mut sddmm_hybrid_wins = 0usize;
+
+    for (i, bm) in mats.iter().enumerate() {
+        let m = &bm.m;
+        let _ = &rt;
+        let backend = || TcBackend::NativeBitmap;
+        // --- SpMM, N=128 ---
+        let b = Dense::random(&mut rng, m.cols, 128);
+        let time_mode = |dist: &DistParams| {
+            let exec = SpmmExecutor::new(m, dist, &BalanceParams::default(), backend());
+            bench::time_median(|| {
+                std::hint::black_box(exec.execute(&b).unwrap());
+            })
+        };
+        let hybrid = time_mode(&libra::costmodel::substrate_params(libra::dist::Op::Spmm, 128));
+        let flex = time_mode(&DistParams::flex_only());
+        let tc = time_mode(&DistParams::tc_only());
+        if hybrid <= flex && hybrid <= tc {
+            spmm_hybrid_wins += 1;
+            spmm_vs_flex.push(flex / hybrid);
+            spmm_vs_tc.push(tc / hybrid);
+        }
+
+        // --- SDDMM, K=32 ---
+        let a = Dense::random(&mut rng, m.rows, 32);
+        let b2 = Dense::random(&mut rng, m.cols, 32);
+        let time_sddmm = |dist: &DistParams| {
+            let exec = SddmmExecutor::new(m, dist, backend());
+            bench::time_median(|| {
+                std::hint::black_box(exec.execute(&a, &b2).unwrap());
+            })
+        };
+        let hybrid_s = time_sddmm(&libra::costmodel::substrate_params(libra::dist::Op::Sddmm, 32));
+        let flex_s = time_sddmm(&DistParams::flex_only());
+        let tc_s = time_sddmm(&DistParams::tc_only());
+        if hybrid_s <= flex_s && hybrid_s <= tc_s {
+            sddmm_hybrid_wins += 1;
+            sddmm_vs_flex.push(flex_s / hybrid_s);
+            sddmm_vs_tc.push(tc_s / hybrid_s);
+        }
+        if i % 20 == 0 {
+            eprintln!("[{}/{}] {}", i + 1, mats.len(), bm.name);
+        }
+    }
+
+    println!(
+        "\nSpMM: hybrid fastest on {spmm_hybrid_wins}/{} matrices (paper: 328/500)",
+        mats.len()
+    );
+    println!(
+        "SDDMM: hybrid fastest on {sddmm_hybrid_wins}/{} matrices (paper: 453/500)",
+        mats.len()
+    );
+
+    let mut t = Table::new(
+        "Table 7: hybrid speedup where hybrid wins",
+        &["comparison", "1x~1.2x", "1.2x~1.5x", ">=1.5x", "mean", "max"],
+    );
+    for (label, sp) in [
+        ("spmm: hybrid vs flex-only", &spmm_vs_flex),
+        ("spmm: hybrid vs tc-only", &spmm_vs_tc),
+        ("sddmm: hybrid vs flex-only", &sddmm_vs_flex),
+        ("sddmm: hybrid vs tc-only", &sddmm_vs_tc),
+    ] {
+        if sp.is_empty() {
+            continue;
+        }
+        let n = sp.len() as f64;
+        let frac = |lo: f64, hi: f64| {
+            sp.iter().filter(|&&s| s >= lo && s < hi).count() as f64 / n * 100.0
+        };
+        let d = SpeedupDist::from(sp);
+        t.add(vec![
+            label.into(),
+            format!("{:.1}%", frac(1.0, 1.2)),
+            format!("{:.1}%", frac(1.2, 1.5)),
+            format!("{:.1}%", frac(1.5, f64::MAX)),
+            format!("{:.2}x", d.geomean),
+            format!("{:.2}x", d.max),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,131 @@
+//! Table 8: component ablations —
+//!  row 1: load balancing on/off (power-law matrices);
+//!  rows 2-4: Bit-Decoding vs TCF vs ME-TCF (SpMM and SDDMM);
+//!  row 5: parallel vs sequential preprocessing.
+
+use libra::balance::BalanceParams;
+use libra::bench::{self, SpeedupDist, Table};
+use libra::dist::DistParams;
+use libra::exec::sddmm::SddmmExecutor;
+use libra::exec::{SpmmExecutor, TcBackend};
+use libra::prep::{self, PrepMode};
+use libra::sparse::Dense;
+use libra::util::{SplitMix64, Timer};
+
+fn main() {
+    let mats = bench::build_corpus(bench::corpus_size().min(120));
+    let mut rng = SplitMix64::new(10);
+
+    // --- row 1: load balancing (native backends isolate the effect) ---
+    let mut lb_speedups = Vec::new();
+    let mut lb_effective = 0usize;
+    for bm in &mats {
+        let m = &bm.m;
+        let b = Dense::random(&mut rng, m.cols, 128);
+        let on = SpmmExecutor::new(
+            m,
+            &DistParams::default(),
+            &BalanceParams::default(),
+            TcBackend::NativeBitmap,
+        );
+        let off = SpmmExecutor::new(
+            m,
+            &DistParams::default(),
+            &BalanceParams::disabled(),
+            TcBackend::NativeBitmap,
+        );
+        let t_on = bench::time_median(|| {
+            std::hint::black_box(on.execute(&b).unwrap());
+        });
+        let t_off = bench::time_median(|| {
+            std::hint::black_box(off.execute(&b).unwrap());
+        });
+        let sp = t_off / t_on;
+        if sp > 1.0 {
+            lb_effective += 1;
+            lb_speedups.push(sp);
+        }
+    }
+    println!("\n== Table 8 row 1: load balancing ==");
+    println!("effective on {lb_effective}/{} matrices (paper: 212/500, power-law dominated)", mats.len());
+    if !lb_speedups.is_empty() {
+        println!("{}", SpeedupDist::header());
+        println!("{}", SpeedupDist::from(&lb_speedups).row("lb on vs off"));
+    }
+
+    // --- rows 2-4: decode-format ablation ---
+    let mut spmm_vs_tcf = Vec::new();
+    let mut spmm_vs_metcf = Vec::new();
+    let mut sddmm_vs_metcf = Vec::new();
+    for bm in mats.iter().take(60) {
+        let m = &bm.m;
+        let b = Dense::random(&mut rng, m.cols, 128);
+        let tc = DistParams::tc_only();
+        let time_spmm = |backend: TcBackend| {
+            let exec = SpmmExecutor::new(m, &tc, &BalanceParams::default(), backend);
+            bench::time_median(|| {
+                std::hint::black_box(exec.execute(&b).unwrap());
+            })
+        };
+        let bitmap = time_spmm(TcBackend::NativeBitmap);
+        let tcf = time_spmm(TcBackend::NativeTraversal);
+        let metcf = time_spmm(TcBackend::NativeStaged);
+        spmm_vs_tcf.push(tcf / bitmap);
+        spmm_vs_metcf.push(metcf / bitmap);
+
+        let a = Dense::random(&mut rng, m.rows, 32);
+        let b2 = Dense::random(&mut rng, m.cols, 32);
+        let time_sddmm = |backend: TcBackend| {
+            let exec = SddmmExecutor::new(m, &tc, backend);
+            bench::time_median(|| {
+                std::hint::black_box(exec.execute(&a, &b2).unwrap());
+            })
+        };
+        let sd_bitmap = time_sddmm(TcBackend::NativeBitmap);
+        let sd_tcf = time_sddmm(TcBackend::NativeTraversal);
+        sddmm_vs_metcf.push(sd_tcf / sd_bitmap);
+    }
+    println!("\n== Table 8 rows 2-4: Bit-Decoding vs legacy formats (TC-only pattern) ==");
+    println!("{}", SpeedupDist::header());
+    println!("{}", SpeedupDist::from(&spmm_vs_tcf).row("spmm vs TCF"));
+    println!("{}", SpeedupDist::from(&spmm_vs_metcf).row("spmm vs ME-TCF"));
+    println!("{}", SpeedupDist::from(&sddmm_vs_metcf).row("sddmm vs trav."));
+
+    // --- row 5: preprocessing parallel vs sequential ---
+    let mut prep_speedups = Vec::new();
+    for bm in &mats {
+        let m = &bm.m;
+        let t = Timer::start();
+        let seq = prep::preprocess_spmm(m, &DistParams::default(), &BalanceParams::default(), PrepMode::Sequential);
+        let t_seq = t.elapsed_secs();
+        let t = Timer::start();
+        let par = prep::preprocess_spmm(m, &DistParams::default(), &BalanceParams::default(), PrepMode::Parallel);
+        let t_par = t.elapsed_secs();
+        assert_eq!(seq.dist.tc.bitmaps, par.dist.tc.bitmaps);
+        prep_speedups.push(t_seq / t_par.max(1e-9));
+    }
+    println!("\n== Table 8 row 5: preprocessing parallel vs sequential ==");
+    println!("{}", SpeedupDist::header());
+    println!("{}", SpeedupDist::from(&prep_speedups).row("prep par/seq"));
+    println!("(paper: GPU vs OpenMP mean 17.1x; here thread-parallel vs serial on one CPU)");
+
+    // small summary table of component contributions
+    let mut t = Table::new(
+        "Table 8 summary (geomean speedups)",
+        &["component", "geomean", "max"],
+    );
+    for (name, v) in [
+        ("load balancing", &lb_speedups),
+        ("bit-dec vs TCF (spmm)", &spmm_vs_tcf),
+        ("bit-dec vs ME-TCF (spmm)", &spmm_vs_metcf),
+        ("bit-dec vs traversal (sddmm)", &sddmm_vs_metcf),
+        ("parallel preprocessing", &prep_speedups),
+    ] {
+        if v.is_empty() {
+            continue;
+        }
+        let d = SpeedupDist::from(v);
+        t.add(vec![name.into(), format!("{:.2}x", d.geomean), format!("{:.2}x", d.max)]);
+    }
+    t.print();
+}

@@ -1,0 +1,365 @@
+//! Hybrid load balancing (paper §4.3).
+//!
+//! After distribution, the workload of each window is decomposed into
+//! fixed-bound execution **segments** so they can be mapped evenly onto
+//! worker threads (the paper's thread blocks):
+//!
+//! * TC blocks → **TC segments** of at most `Ts` blocks;
+//! * flexible rows → **short tiles** (`len < Short_len`, executed from
+//!   registers in the paper; directly in the short-tile stream here)
+//!   and **long tiles**, which are further chunked into groups of at
+//!   most `Cs` elements;
+//! * an `atomic` flag per segment: a window whose output rows are
+//!   written by more than one segment needs atomic accumulation for
+//!   SpMM; single-writer windows skip the atomics (the paper's three
+//!   decomposition cases, Fig. 6).
+//!
+//! The auxiliary arrays mirror the paper's: `WindowOffset`/`RowOffset`
+//! become the per-segment block/element ranges, `CurWindow`/`CurRow`
+//! the origin window/row, and `Atomic` the flag array.
+
+use crate::dist::SpmmDist;
+use crate::format::WINDOW;
+
+/// Load balancing parameters (paper §5.4.2 defaults: Ts = Cs = 32,
+/// Short_len = 3; Cs here is in elements — the flexible tile unit).
+#[derive(Debug, Clone, Copy)]
+pub struct BalanceParams {
+    /// Max TC blocks per TC segment.
+    pub ts: usize,
+    /// Max elements per long-tile chunk.
+    pub cs: usize,
+    /// Rows with fewer than this many flexible elements are short tiles.
+    pub short_len: usize,
+    /// Disable decomposition entirely (ablation: Table 8 row 1).
+    pub enabled: bool,
+}
+
+impl Default for BalanceParams {
+    fn default() -> Self {
+        Self { ts: 32, cs: 256, short_len: 3, enabled: true }
+    }
+}
+
+impl BalanceParams {
+    pub fn disabled() -> Self {
+        Self { enabled: false, ..Self::default() }
+    }
+}
+
+/// A structured-engine segment: a run of TC blocks of one window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TcSegment {
+    /// Range of block indices in the plan's `TcBlocks`.
+    pub block_start: u32,
+    pub block_end: u32,
+    /// Origin window (CurWindow).
+    pub window: u32,
+    /// Whether output accumulation must be atomic.
+    pub atomic: bool,
+}
+
+/// A flexible-engine tile: a run of elements of one row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlexTile {
+    /// Element range in the plan's flexible arrays.
+    pub elem_start: u32,
+    pub elem_end: u32,
+    /// Origin row (CurRow).
+    pub row: u32,
+    /// Whether output accumulation must be atomic.
+    pub atomic: bool,
+    /// True iff this tile is one chunk of a row split across tiles
+    /// (concurrent flexible writers on the same output row).
+    pub row_split: bool,
+}
+
+/// The balanced SpMM schedule.
+#[derive(Debug, Clone, Default)]
+pub struct SpmmSchedule {
+    pub tc_segments: Vec<TcSegment>,
+    pub long_tiles: Vec<FlexTile>,
+    pub short_tiles: Vec<FlexTile>,
+    /// Number of windows that required atomics (reported by benches).
+    pub atomic_windows: usize,
+}
+
+impl SpmmSchedule {
+    /// Total flexible elements covered by tiles.
+    pub fn flex_elems(&self) -> usize {
+        self.long_tiles
+            .iter()
+            .chain(&self.short_tiles)
+            .map(|t| (t.elem_end - t.elem_start) as usize)
+            .sum()
+    }
+}
+
+/// Build the balanced schedule for a distributed SpMM workload.
+pub fn balance_spmm(dist: &SpmmDist, params: &BalanceParams) -> SpmmSchedule {
+    let n_windows = dist.rows.div_ceil(WINDOW);
+    let mut sched = SpmmSchedule::default();
+
+    // group blocks by window (blocks are emitted window-major by dist)
+    let nb = dist.tc.n_blocks();
+    let mut win_block_start = vec![0u32; n_windows + 1];
+    for b in 0..nb {
+        win_block_start[dist.tc.window_of[b] as usize + 1] += 1;
+    }
+    for w in 0..n_windows {
+        win_block_start[w + 1] += win_block_start[w];
+    }
+
+    for w in 0..n_windows {
+        let bs = win_block_start[w] as usize;
+        let be = win_block_start[w + 1] as usize;
+        let lo = w * WINDOW;
+        let hi = ((w + 1) * WINDOW).min(dist.rows);
+
+        // classify the window's flexible rows
+        let mut short_rows: Vec<(u32, u32, u32)> = Vec::new(); // (row, s, e)
+        let mut long_rows: Vec<(u32, u32, u32)> = Vec::new();
+        for r in lo..hi {
+            let (s, e) = (dist.flex_row_ptr[r], dist.flex_row_ptr[r + 1]);
+            if s == e {
+                continue;
+            }
+            let len = (e - s) as usize;
+            if len < params.short_len {
+                short_rows.push((r as u32, s, e));
+            } else {
+                long_rows.push((r as u32, s, e));
+            }
+        }
+
+        // decomposition decisions
+        let tc_decomposed = params.enabled && be - bs > params.ts;
+        let long_decomposed = params.enabled
+            && long_rows.iter().any(|&(_, s, e)| (e - s) as usize > params.cs);
+
+        // Atomicity (paper Fig. 6): any decomposition in the window, or
+        // multiple independent writers over the same window rows,
+        // forces atomics for every segment of the window.
+        let n_writers = (be > bs) as usize + long_rows.len() + short_rows.len();
+        let multi_writer_rows = {
+            // TC segments write all rows of the window; a flexible tile
+            // writes one row. Conflict exists iff TC work coexists with
+            // any flexible work, or decomposition splits one row/window
+            // across segments.
+            (be > bs) && (!long_rows.is_empty() || !short_rows.is_empty())
+        };
+        let atomic = tc_decomposed || long_decomposed || multi_writer_rows;
+        let _ = n_writers;
+        if atomic {
+            sched.atomic_windows += 1;
+        }
+
+        // TC segments
+        if be > bs {
+            if params.enabled {
+                let mut b = bs;
+                while b < be {
+                    let end = (b + params.ts).min(be);
+                    sched.tc_segments.push(TcSegment {
+                        block_start: b as u32,
+                        block_end: end as u32,
+                        window: w as u32,
+                        atomic,
+                    });
+                    b = end;
+                }
+            } else {
+                sched.tc_segments.push(TcSegment {
+                    block_start: bs as u32,
+                    block_end: be as u32,
+                    window: w as u32,
+                    atomic,
+                });
+            }
+        }
+
+        // long tiles, chunked by Cs elements
+        for &(row, s, e) in &long_rows {
+            if params.enabled {
+                let mut x = s;
+                while x < e {
+                    let end = (x + params.cs as u32).min(e);
+                    // a row split across chunks always needs atomics
+                    let row_split = e - s > params.cs as u32;
+                    sched.long_tiles.push(FlexTile {
+                        elem_start: x,
+                        elem_end: end,
+                        row,
+                        atomic: atomic || row_split,
+                        row_split,
+                    });
+                    x = end;
+                }
+            } else {
+                sched.long_tiles.push(FlexTile { elem_start: s, elem_end: e, row, atomic, row_split: false });
+            }
+        }
+
+        // short tiles (never decomposed)
+        for &(row, s, e) in &short_rows {
+            sched.short_tiles.push(FlexTile { elem_start: s, elem_end: e, row, atomic, row_split: false });
+        }
+    }
+    sched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{distribute_spmm, DistParams};
+    use crate::sparse::gen;
+    use crate::util::propcheck::{check, Config};
+    use crate::util::SplitMix64;
+
+    fn schedule_covers(dist: &SpmmDist, sched: &SpmmSchedule) {
+        // every TC block in exactly one segment
+        let mut seen = vec![false; dist.tc.n_blocks()];
+        for seg in &sched.tc_segments {
+            for b in seg.block_start..seg.block_end {
+                assert!(!seen[b as usize], "block {b} double-scheduled");
+                seen[b as usize] = true;
+                assert_eq!(dist.tc.window_of[b as usize], seg.window);
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "unscheduled blocks");
+        // every flexible element in exactly one tile
+        let mut elem_seen = vec![false; dist.flex_vals.len()];
+        for t in sched.long_tiles.iter().chain(&sched.short_tiles) {
+            for i in t.elem_start..t.elem_end {
+                assert!(!elem_seen[i as usize], "elem {i} double-scheduled");
+                elem_seen[i as usize] = true;
+            }
+            // tile elements must belong to the tile's row
+            let r = t.row as usize;
+            assert!(t.elem_start >= dist.flex_row_ptr[r] && t.elem_end <= dist.flex_row_ptr[r + 1]);
+        }
+        assert!(elem_seen.iter().all(|&x| x), "unscheduled flexible elements");
+    }
+
+    #[test]
+    fn cover_property() {
+        check(Config::default().cases(30), "schedule covers workload", |rng| {
+            let (rr, cc) = (rng.range(1, 150), rng.range(1, 100));
+            let m = gen::uniform_random(rng, rr, cc, 0.1);
+            let d = distribute_spmm(&m, &DistParams { threshold: rng.range(1, 6), fill_padding: true });
+            let p = BalanceParams {
+                ts: rng.range(1, 8),
+                cs: rng.range(2, 40),
+                short_len: rng.range(1, 6),
+                enabled: rng.chance(0.8),
+            };
+            let sched = balance_spmm(&d, &p);
+            schedule_covers(&d, &sched);
+        });
+    }
+
+    #[test]
+    fn segment_sizes_bounded() {
+        let mut rng = SplitMix64::new(40);
+        let m = gen::power_law(&mut rng, 1024, 24.0, 2.0);
+        let d = distribute_spmm(&m, &DistParams::default());
+        let p = BalanceParams { ts: 4, cs: 16, short_len: 3, enabled: true };
+        let sched = balance_spmm(&d, &p);
+        for seg in &sched.tc_segments {
+            assert!((seg.block_end - seg.block_start) as usize <= 4);
+        }
+        for t in &sched.long_tiles {
+            assert!((t.elem_end - t.elem_start) as usize <= 16);
+            assert!((t.elem_end - t.elem_start) as usize >= 1);
+        }
+        for t in &sched.short_tiles {
+            assert!(((t.elem_end - t.elem_start) as usize) < 3);
+        }
+    }
+
+    #[test]
+    fn single_writer_window_skips_atomics() {
+        // one dense column vector only -> single TC segment, no flex
+        let mut coo = crate::sparse::Coo::new(8, 4);
+        for r in 0..8 {
+            coo.push(r, 0, 1.0);
+        }
+        let m = coo.to_csr();
+        let d = distribute_spmm(&m, &DistParams { threshold: 2, fill_padding: false });
+        let sched = balance_spmm(&d, &BalanceParams::default());
+        assert_eq!(sched.tc_segments.len(), 1);
+        assert!(!sched.tc_segments[0].atomic);
+        assert_eq!(sched.atomic_windows, 0);
+    }
+
+    #[test]
+    fn mixed_window_needs_atomics() {
+        // dense column (tc) + singleton in another column (flex)
+        let mut coo = crate::sparse::Coo::new(8, 4);
+        for r in 0..8 {
+            coo.push(r, 0, 1.0);
+        }
+        coo.push(2, 3, 5.0);
+        let m = coo.to_csr();
+        let d = distribute_spmm(&m, &DistParams { threshold: 2, fill_padding: false });
+        assert!(d.stats.nnz_flex > 0);
+        let sched = balance_spmm(&d, &BalanceParams::default());
+        assert!(sched.tc_segments[0].atomic);
+        assert!(sched.short_tiles[0].atomic);
+        assert_eq!(sched.atomic_windows, 1);
+    }
+
+    #[test]
+    fn decomposed_tc_needs_atomics() {
+        // many dense columns -> more blocks than Ts
+        let mut coo = crate::sparse::Coo::new(8, 256);
+        for c in 0..256 {
+            for r in 0..8 {
+                coo.push(r, c, 1.0);
+            }
+        }
+        let m = coo.to_csr();
+        let d = distribute_spmm(&m, &DistParams { threshold: 2, fill_padding: false });
+        assert_eq!(d.tc.n_blocks(), 32);
+        let p = BalanceParams { ts: 8, cs: 256, short_len: 3, enabled: true };
+        let sched = balance_spmm(&d, &p);
+        assert_eq!(sched.tc_segments.len(), 4);
+        assert!(sched.tc_segments.iter().all(|s| s.atomic));
+    }
+
+    #[test]
+    fn long_row_split_is_atomic() {
+        // one long flexible row split across chunks
+        let mut coo = crate::sparse::Coo::new(8, 600);
+        for c in 0..600 {
+            coo.push(0, c, 1.0);
+        }
+        let m = coo.to_csr();
+        let d = distribute_spmm(&m, &DistParams::flex_only());
+        let p = BalanceParams { ts: 32, cs: 100, short_len: 3, enabled: true };
+        let sched = balance_spmm(&d, &p);
+        assert_eq!(sched.long_tiles.len(), 6);
+        assert!(sched.long_tiles.iter().all(|t| t.atomic));
+    }
+
+    #[test]
+    fn disabled_balancing_one_segment_per_window() {
+        let mut rng = SplitMix64::new(41);
+        let m = gen::power_law(&mut rng, 512, 16.0, 2.2);
+        let d = distribute_spmm(&m, &DistParams::default());
+        let sched = balance_spmm(&d, &BalanceParams::disabled());
+        schedule_covers(&d, &sched);
+        // no window contributes more than one TC segment
+        let mut per_window = std::collections::HashMap::new();
+        for seg in &sched.tc_segments {
+            *per_window.entry(seg.window).or_insert(0) += 1;
+        }
+        assert!(per_window.values().all(|&c| c == 1));
+        // long tiles are whole rows
+        for t in &sched.long_tiles {
+            let r = t.row as usize;
+            assert_eq!(t.elem_start, d.flex_row_ptr[r]);
+            assert_eq!(t.elem_end, d.flex_row_ptr[r + 1]);
+        }
+    }
+}

@@ -1,0 +1,403 @@
+//! Flexible-engine-only baselines: cuSPARSE-, Sputnik- and RoDe-style.
+
+use super::{SddmmImpl, SpmmImpl};
+use crate::sparse::{Csr, Dense};
+use crossbeam_utils::thread;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+fn n_threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+}
+
+/// cuSPARSE-like: plain row-parallel CSR SpMM. One row per work item,
+/// no tiling, no load balancing beyond the row queue.
+#[derive(Default)]
+pub struct CsrRowSpmm {
+    m: Csr,
+}
+
+impl CsrRowSpmm {
+    pub fn new() -> Self {
+        Self { m: Csr::zeros(0, 0) }
+    }
+}
+
+impl SpmmImpl for CsrRowSpmm {
+    fn name(&self) -> &str {
+        "csr_row"
+    }
+
+    fn prepare(&mut self, m: &Csr) {
+        self.m = m.clone();
+    }
+
+    fn execute(&self, b: &Dense) -> Dense {
+        let n = b.cols;
+        let mut out = Dense::zeros(self.m.rows, n);
+        let shared = crate::exec::output::SharedOut::new(&mut out.data);
+        let cursor = AtomicUsize::new(0);
+        const ROWS_PER_GRAB: usize = 64;
+        thread::scope(|s| {
+            for _ in 0..n_threads() {
+                let shared = &shared;
+                let cursor = &cursor;
+                s.spawn(move |_| loop {
+                    let r0 = cursor.fetch_add(ROWS_PER_GRAB, Ordering::Relaxed);
+                    if r0 >= self.m.rows {
+                        break;
+                    }
+                    let r1 = (r0 + ROWS_PER_GRAB).min(self.m.rows);
+                    for r in r0..r1 {
+                        let (cols, vals) = self.m.row(r);
+                        for (&c, &v) in cols.iter().zip(vals) {
+                            let brow = b.row(c as usize);
+                            unsafe {
+                                for j in 0..n {
+                                    shared.add_plain(r * n + j, v * brow[j]);
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+        })
+        .unwrap();
+        drop(shared);
+        out
+    }
+}
+
+/// Sputnik-like: 1D row tiling with 4-wide inner unrolling (the
+/// vector-memory-op analog) and contiguous row tiles per worker.
+#[derive(Default)]
+pub struct SputnikLikeSpmm {
+    m: Csr,
+    /// row tile boundaries, nnz-balanced at prepare time
+    tiles: Vec<(u32, u32)>,
+}
+
+impl SputnikLikeSpmm {
+    pub fn new() -> Self {
+        Self { m: Csr::zeros(0, 0), tiles: Vec::new() }
+    }
+}
+
+impl SpmmImpl for SputnikLikeSpmm {
+    fn name(&self) -> &str {
+        "sputnik_like"
+    }
+
+    fn prepare(&mut self, m: &Csr) {
+        self.m = m.clone();
+        // nnz-balanced contiguous row tiles (Sputnik's 1D tiling)
+        let target = (m.nnz() / (n_threads() * 8)).max(256);
+        self.tiles.clear();
+        let mut start = 0usize;
+        let mut acc = 0usize;
+        for r in 0..m.rows {
+            acc += m.row_len(r);
+            if acc >= target {
+                self.tiles.push((start as u32, (r + 1) as u32));
+                start = r + 1;
+                acc = 0;
+            }
+        }
+        if start < m.rows {
+            self.tiles.push((start as u32, m.rows as u32));
+        }
+    }
+
+    fn execute(&self, b: &Dense) -> Dense {
+        let n = b.cols;
+        let mut out = Dense::zeros(self.m.rows, n);
+        let shared = crate::exec::output::SharedOut::new(&mut out.data);
+        let cursor = AtomicUsize::new(0);
+        thread::scope(|s| {
+            for _ in 0..n_threads() {
+                let shared = &shared;
+                let cursor = &cursor;
+                s.spawn(move |_| {
+                    let mut acc = vec![0f32; n];
+                    loop {
+                        let t = cursor.fetch_add(1, Ordering::Relaxed);
+                        if t >= self.tiles.len() {
+                            break;
+                        }
+                        let (r0, r1) = self.tiles[t];
+                        for r in r0 as usize..r1 as usize {
+                            let (cols, vals) = self.m.row(r);
+                            acc[..n].fill(0.0);
+                            // unrolled by 4 over the nonzeros
+                            let mut i = 0;
+                            while i + 4 <= cols.len() {
+                                let b0 = b.row(cols[i] as usize);
+                                let b1 = b.row(cols[i + 1] as usize);
+                                let b2 = b.row(cols[i + 2] as usize);
+                                let b3 = b.row(cols[i + 3] as usize);
+                                let (v0, v1, v2, v3) =
+                                    (vals[i], vals[i + 1], vals[i + 2], vals[i + 3]);
+                                for j in 0..n {
+                                    acc[j] += v0 * b0[j] + v1 * b1[j] + v2 * b2[j] + v3 * b3[j];
+                                }
+                                i += 4;
+                            }
+                            while i < cols.len() {
+                                let brow = b.row(cols[i] as usize);
+                                let v = vals[i];
+                                for j in 0..n {
+                                    acc[j] += v * brow[j];
+                                }
+                                i += 1;
+                            }
+                            shared.add_slice(r * n, &acc[..n], false);
+                        }
+                    }
+                });
+            }
+        })
+        .unwrap();
+        drop(shared);
+        out
+    }
+}
+
+/// RoDe-like: rows split into a *regular* part (balanced fixed-size
+/// nnz chunks, atomic merge) and a *residual* part (short rows).
+pub struct RodeLikeSpmm {
+    m: Csr,
+    /// (row, start, end) chunks of long rows
+    regular: Vec<(u32, u32, u32)>,
+    /// short rows processed whole
+    residual: Vec<u32>,
+    pub chunk: usize,
+}
+
+impl Default for RodeLikeSpmm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RodeLikeSpmm {
+    pub fn new() -> Self {
+        Self { m: Csr::zeros(0, 0), regular: Vec::new(), residual: Vec::new(), chunk: 256 }
+    }
+}
+
+impl SpmmImpl for RodeLikeSpmm {
+    fn name(&self) -> &str {
+        "rode_like"
+    }
+
+    fn prepare(&mut self, m: &Csr) {
+        self.m = m.clone();
+        self.regular.clear();
+        self.residual.clear();
+        for r in 0..m.rows {
+            let len = m.row_len(r);
+            if len == 0 {
+                continue;
+            }
+            if len > self.chunk {
+                let (s, e) = (m.row_ptr[r], m.row_ptr[r + 1]);
+                let mut x = s;
+                while x < e {
+                    let end = (x + self.chunk as u32).min(e);
+                    self.regular.push((r as u32, x, end));
+                    x = end;
+                }
+            } else {
+                self.residual.push(r as u32);
+            }
+        }
+    }
+
+    fn execute(&self, b: &Dense) -> Dense {
+        let n = b.cols;
+        let mut out = Dense::zeros(self.m.rows, n);
+        let shared = crate::exec::output::SharedOut::new(&mut out.data);
+        let reg_cursor = AtomicUsize::new(0);
+        let res_cursor = AtomicUsize::new(0);
+        thread::scope(|s| {
+            for _ in 0..n_threads() {
+                let shared = &shared;
+                let reg_cursor = &reg_cursor;
+                let res_cursor = &res_cursor;
+                s.spawn(move |_| {
+                    let mut acc = vec![0f32; n];
+                    // regular part: chunked long rows, atomic merge
+                    loop {
+                        let i = reg_cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= self.regular.len() {
+                            break;
+                        }
+                        let (r, x0, x1) = self.regular[i];
+                        acc[..n].fill(0.0);
+                        for x in x0 as usize..x1 as usize {
+                            let c = self.m.col_idx[x] as usize;
+                            let v = self.m.values[x];
+                            let brow = b.row(c);
+                            for j in 0..n {
+                                acc[j] += v * brow[j];
+                            }
+                        }
+                        shared.add_slice(r as usize * n, &acc[..n], true);
+                    }
+                    // residual part: whole short rows, exclusive writes
+                    const GRAB: usize = 64;
+                    loop {
+                        let i0 = res_cursor.fetch_add(GRAB, Ordering::Relaxed);
+                        if i0 >= self.residual.len() {
+                            break;
+                        }
+                        let i1 = (i0 + GRAB).min(self.residual.len());
+                        for &r in &self.residual[i0..i1] {
+                            let (cols, vals) = self.m.row(r as usize);
+                            acc[..n].fill(0.0);
+                            for (&c, &v) in cols.iter().zip(vals) {
+                                let brow = b.row(c as usize);
+                                for j in 0..n {
+                                    acc[j] += v * brow[j];
+                                }
+                            }
+                            shared.add_slice(r as usize * n, &acc[..n], false);
+                        }
+                    }
+                });
+            }
+        })
+        .unwrap();
+        drop(shared);
+        out
+    }
+}
+
+/// RoDe-like SDDMM: per-element dot products, rows chunked like the
+/// SpMM regular/residual split (RoDe's SDDMM variant).
+pub struct RodeLikeSddmm {
+    m: Csr,
+}
+
+impl Default for RodeLikeSddmm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RodeLikeSddmm {
+    pub fn new() -> Self {
+        Self { m: Csr::zeros(0, 0) }
+    }
+}
+
+impl SddmmImpl for RodeLikeSddmm {
+    fn name(&self) -> &str {
+        "rode_like"
+    }
+
+    fn prepare(&mut self, m: &Csr) {
+        self.m = m.clone();
+    }
+
+    fn execute(&self, a: &Dense, b: &Dense) -> Vec<f32> {
+        let k = a.cols;
+        let nnz = self.m.nnz();
+        let mut out = vec![0f32; nnz];
+        let shared = crate::exec::output::SharedOut::new(&mut out);
+        let cursor = AtomicUsize::new(0);
+        const CHUNK: usize = 1024;
+        thread::scope(|s| {
+            for _ in 0..n_threads() {
+                let shared = &shared;
+                let cursor = &cursor;
+                s.spawn(move |_| loop {
+                    let r0 = cursor.fetch_add(CHUNK, Ordering::Relaxed);
+                    if r0 >= self.m.rows {
+                        break;
+                    }
+                    let r1 = (r0 + CHUNK).min(self.m.rows);
+                    for r in r0..r1 {
+                        let (s0, e0) = (self.m.row_ptr[r] as usize, self.m.row_ptr[r + 1] as usize);
+                        let arow = a.row(r);
+                        for i in s0..e0 {
+                            let c = self.m.col_idx[i] as usize;
+                            let brow = b.row(c);
+                            let mut dot = 0f32;
+                            for kk in 0..k {
+                                dot += arow[kk] * brow[kk];
+                            }
+                            unsafe {
+                                shared.add_plain(i, self.m.values[i] * dot);
+                            }
+                        }
+                    }
+                });
+            }
+        })
+        .unwrap();
+        drop(shared);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::verify_spmm;
+    use crate::sparse::gen;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn csr_row_matches_ref() {
+        let mut rng = SplitMix64::new(100);
+        let m = gen::uniform_random(&mut rng, 200, 150, 0.05);
+        verify_spmm(&mut CsrRowSpmm::new(), &m, 16, 101);
+    }
+
+    #[test]
+    fn sputnik_like_matches_ref() {
+        let mut rng = SplitMix64::new(102);
+        let m = gen::power_law(&mut rng, 500, 10.0, 2.0);
+        verify_spmm(&mut SputnikLikeSpmm::new(), &m, 32, 103);
+    }
+
+    #[test]
+    fn rode_like_matches_ref() {
+        let mut rng = SplitMix64::new(104);
+        // power-law: some rows exceed the chunk size -> regular part used
+        let m = gen::power_law(&mut rng, 800, 12.0, 1.8);
+        let mut imp = RodeLikeSpmm::new();
+        imp.chunk = 64;
+        verify_spmm(&mut imp, &m, 16, 105);
+        assert!(!imp.regular.is_empty(), "expected long-row chunks");
+        assert!(!imp.residual.is_empty());
+    }
+
+    #[test]
+    fn rode_sddmm_matches_ref() {
+        let mut rng = SplitMix64::new(106);
+        let m = gen::uniform_random(&mut rng, 120, 100, 0.08);
+        let a = crate::sparse::Dense::random(&mut rng, 120, 16);
+        let b = crate::sparse::Dense::random(&mut rng, 100, 16);
+        let mut imp = RodeLikeSddmm::new();
+        imp.prepare(&m);
+        let got = imp.execute(&a, &b);
+        let expect = m.sddmm_dense_ref(&a, &b);
+        for (g, w) in got.iter().zip(&expect.values) {
+            assert!((g - w).abs() < 1e-3 + 1e-4 * w.abs());
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_matrices() {
+        let m = Csr::zeros(4, 4);
+        verify_spmm(&mut CsrRowSpmm::new(), &m, 8, 107);
+        verify_spmm(&mut SputnikLikeSpmm::new(), &m, 8, 108);
+        verify_spmm(&mut RodeLikeSpmm::new(), &m, 8, 109);
+        let mut rng = SplitMix64::new(110);
+        let tiny = gen::uniform_random(&mut rng, 3, 5, 0.5);
+        verify_spmm(&mut CsrRowSpmm::new(), &tiny, 4, 111);
+        verify_spmm(&mut SputnikLikeSpmm::new(), &tiny, 4, 112);
+        verify_spmm(&mut RodeLikeSpmm::new(), &tiny, 4, 113);
+    }
+}

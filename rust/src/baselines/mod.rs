@@ -1,0 +1,58 @@
+//! Baseline SpMM / SDDMM implementations over the same substrate,
+//! mirroring the systems the paper compares against (§5.1, Table 3).
+//!
+//! Each reimplementation keeps the property the paper credits or
+//! blames the original for:
+//!
+//! | Baseline        | Analog of     | Characteristic preserved |
+//! |-----------------|---------------|--------------------------|
+//! | `csr_row`       | cuSPARSE      | row-parallel CSR, no tiling |
+//! | `sputnik_like`  | Sputnik       | 1D row tiling + inner unroll |
+//! | `rode_like`     | RoDe          | regular/residual row decomposition |
+//! | `tc_only(TCF)`  | TC-GNN        | TC-only, traversal write-back |
+//! | `tc_only(ME-TCF)`| DTC-SpMM     | TC-only, staged decode |
+//! | `tc_only(bitmap)`| FlashSparse  | TC-only, bitmap decode |
+//! | `sparsetir_like`| SparseTIR     | coarse (window-level) hybrid |
+//!
+//! TC-only baselines are Libra's executor pinned to `threshold = 1`
+//! with the corresponding decode backend, which is exactly how the
+//! paper frames them (single-resource points in its design space).
+
+pub mod cuda_like;
+pub mod sparsetir_like;
+pub mod tc_like;
+
+use crate::sparse::{Csr, Dense};
+
+/// Common interface for every SpMM implementation in the benches.
+pub trait SpmmImpl: Send + Sync {
+    fn name(&self) -> &str;
+    /// Preprocess for `m` (timed separately by the benches).
+    fn prepare(&mut self, m: &Csr);
+    /// `C = A * B` (hot path).
+    fn execute(&self, b: &Dense) -> Dense;
+}
+
+/// Common interface for every SDDMM implementation.
+pub trait SddmmImpl: Send + Sync {
+    fn name(&self) -> &str;
+    fn prepare(&mut self, m: &Csr);
+    /// `C = (A·Bᵀ) ⊙ S`, values only (pattern fixed by `prepare`).
+    fn execute(&self, a: &Dense, b: &Dense) -> Vec<f32>;
+}
+
+/// Verify an implementation against the dense reference on `m`.
+#[cfg(test)]
+pub(crate) fn verify_spmm(imp: &mut dyn SpmmImpl, m: &Csr, n: usize, seed: u64) {
+    let mut rng = crate::util::SplitMix64::new(seed);
+    let b = Dense::random(&mut rng, m.cols, n);
+    imp.prepare(m);
+    let got = imp.execute(&b);
+    let expect = m.spmm_dense_ref(&b);
+    assert!(
+        got.allclose(&expect, 1e-3),
+        "{} mismatch: {}",
+        imp.name(),
+        got.max_abs_diff(&expect)
+    );
+}

@@ -1,0 +1,130 @@
+//! SparseTIR-like coarse hybrid: window-granularity format composition.
+//!
+//! SparseTIR composes formats per *region* using row/edge-block
+//! sparsity only. The analog here assigns an entire 8-row window to the
+//! structured engine iff the window's mean nonzeros-per-vector clears a
+//! window threshold — no per-vector distribution, which is exactly the
+//! imprecision the paper criticizes (§6 drawback ①): sparsity varies
+//! *within* windows, so coarse assignment strands sparse vectors on the
+//! structured engine (redundancy) and dense vectors on the flexible
+//! engine (lost reuse).
+
+use super::SpmmImpl;
+use crate::balance::BalanceParams;
+use crate::dist::spmm::{assemble, distribute_window, WindowOut};
+use crate::dist::DistParams;
+use crate::exec::{SpmmExecutor, TcBackend};
+use crate::format::WINDOW;
+use crate::sparse::{Csr, Dense};
+
+/// Window-granularity hybrid SpMM.
+pub struct SparseTirLikeSpmm {
+    /// windows whose mean vector NNZ >= this go to the structured engine
+    pub window_threshold: f64,
+    exec: Option<SpmmExecutor>,
+}
+
+impl SparseTirLikeSpmm {
+    pub fn new() -> Self {
+        // tuned like the paper tunes SparseTIR: best-effort hyperparam
+        Self { window_threshold: 2.0, exec: None }
+    }
+}
+
+impl Default for SparseTirLikeSpmm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SpmmImpl for SparseTirLikeSpmm {
+    fn name(&self) -> &str {
+        "sparsetir_like"
+    }
+
+    fn prepare(&mut self, m: &Csr) {
+        let n_windows = m.rows.div_ceil(WINDOW);
+        // per-window coarse decision, then reuse Libra's machinery with
+        // per-window all-TC or all-flex parameters
+        let tc_params = DistParams { threshold: 1, fill_padding: false };
+        let flex_params = DistParams::flex_only();
+        let outs: Vec<WindowOut> = (0..n_windows)
+            .map(|w| {
+                let lo = w * WINDOW;
+                let hi = ((w + 1) * WINDOW).min(m.rows);
+                // window stats: nnz and distinct columns
+                let mut nnz = 0usize;
+                let mut cols: Vec<u32> = Vec::new();
+                for r in lo..hi {
+                    let (c, _) = m.row(r);
+                    nnz += c.len();
+                    cols.extend_from_slice(c);
+                }
+                cols.sort_unstable();
+                cols.dedup();
+                let mean_vec_nnz = if cols.is_empty() { 0.0 } else { nnz as f64 / cols.len() as f64 };
+                let params = if mean_vec_nnz >= self.window_threshold { &tc_params } else { &flex_params };
+                distribute_window(m, w, params)
+            })
+            .collect();
+        let dist = assemble(m.rows, m.cols, m.nnz(), &outs);
+        self.exec = Some(SpmmExecutor::from_dist(
+            dist,
+            &BalanceParams::default(),
+            TcBackend::NativeBitmap,
+        ));
+    }
+
+    fn execute(&self, b: &Dense) -> Dense {
+        self.exec.as_ref().expect("prepare first").execute(b).expect("sparsetir spmm")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::verify_spmm;
+    use crate::dist::distribute_spmm;
+    use crate::sparse::gen;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn matches_ref() {
+        let mut rng = SplitMix64::new(130);
+        let m = gen::column_clustered(&mut rng, 256, 256, 5000, 0.5, 5);
+        verify_spmm(&mut SparseTirLikeSpmm::new(), &m, 16, 131);
+    }
+
+    #[test]
+    fn coarse_hybrid_is_less_precise_than_libra() {
+        // a matrix with mixed-density windows: coarse assignment must
+        // put more sparse nnz on the structured engine (higher padding)
+        // or more dense nnz on the flexible engine than Libra's
+        // per-vector split does
+        let mut rng = SplitMix64::new(132);
+        let m = gen::column_clustered(&mut rng, 512, 512, 10_000, 0.5, 6);
+        let mut st = SparseTirLikeSpmm::new();
+        st.prepare(&m);
+        let st_exec = st.exec.as_ref().unwrap();
+        let libra = distribute_spmm(&m, &DistParams::default());
+        // Libra's blocks should be denser on average
+        let libra_fill = 1.0 - libra.stats.padding_ratio;
+        let st_fill = 1.0 - st_exec.dist.stats.padding_ratio;
+        assert!(
+            libra_fill >= st_fill - 0.05,
+            "libra fill {libra_fill} vs sparsetir-like fill {st_fill}"
+        );
+    }
+
+    #[test]
+    fn extreme_thresholds_degenerate() {
+        let mut rng = SplitMix64::new(133);
+        let m = gen::uniform_random(&mut rng, 64, 64, 0.1);
+        let mut all_tc = SparseTirLikeSpmm { window_threshold: 0.0, exec: None };
+        all_tc.prepare(&m);
+        assert_eq!(all_tc.exec.as_ref().unwrap().dist.stats.nnz_flex, 0);
+        let mut all_flex = SparseTirLikeSpmm { window_threshold: f64::MAX, exec: None };
+        all_flex.prepare(&m);
+        assert_eq!(all_flex.exec.as_ref().unwrap().dist.stats.nnz_tc, 0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Structured-engine-only baselines (TC-GNN / DTC-SpMM / FlashSparse
+//! analogs): Libra's executor pinned to `threshold = 1` (everything on
+//! the structured engine) with the decode strategy of each system.
+
+use super::{SddmmImpl, SpmmImpl};
+use crate::balance::BalanceParams;
+use crate::dist::DistParams;
+use crate::exec::sddmm::SddmmExecutor;
+use crate::exec::{SpmmExecutor, TcBackend};
+use crate::sparse::{Csr, Dense};
+
+/// TC-only SpMM with a chosen decode backend.
+pub struct TcOnlySpmm {
+    name: String,
+    backend: TcBackend,
+    exec: Option<SpmmExecutor>,
+}
+
+impl TcOnlySpmm {
+    /// TC-GNN analog: traversal write-back (TCF format).
+    pub fn tcgnn_like() -> Self {
+        Self { name: "tc_only_tcf".into(), backend: TcBackend::NativeTraversal, exec: None }
+    }
+
+    /// DTC-SpMM analog: staged decode (ME-TCF format).
+    pub fn dtc_like() -> Self {
+        Self { name: "tc_only_metcf".into(), backend: TcBackend::NativeStaged, exec: None }
+    }
+
+    /// FlashSparse analog: bitmap bit-decoding.
+    pub fn flash_like() -> Self {
+        Self { name: "flash_like".into(), backend: TcBackend::NativeBitmap, exec: None }
+    }
+
+    /// FlashSparse analog on the PJRT structured engine.
+    pub fn flash_like_pjrt(rt: std::sync::Arc<crate::runtime::Runtime>) -> Self {
+        Self { name: "flash_like_pjrt".into(), backend: TcBackend::Pjrt(rt), exec: None }
+    }
+
+    pub fn counters(&self) -> Option<crate::exec::counters::CounterSnapshot> {
+        self.exec.as_ref().map(|e| e.counters.snapshot())
+    }
+}
+
+impl SpmmImpl for TcOnlySpmm {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn prepare(&mut self, m: &Csr) {
+        self.exec = Some(SpmmExecutor::new(
+            m,
+            &DistParams::tc_only(),
+            &BalanceParams::default(),
+            self.backend.clone(),
+        ));
+    }
+
+    fn execute(&self, b: &Dense) -> Dense {
+        self.exec.as_ref().expect("prepare first").execute(b).expect("tc-only spmm")
+    }
+}
+
+/// TC-only SDDMM with a chosen decode backend.
+pub struct TcOnlySddmm {
+    name: String,
+    backend: TcBackend,
+    exec: Option<SddmmExecutor>,
+}
+
+impl TcOnlySddmm {
+    pub fn tcgnn_like() -> Self {
+        Self { name: "tc_only_tcf".into(), backend: TcBackend::NativeTraversal, exec: None }
+    }
+
+    pub fn dtc_like() -> Self {
+        Self { name: "tc_only_metcf".into(), backend: TcBackend::NativeStaged, exec: None }
+    }
+
+    pub fn flash_like() -> Self {
+        Self { name: "flash_like".into(), backend: TcBackend::NativeBitmap, exec: None }
+    }
+
+    pub fn counters(&self) -> Option<crate::exec::counters::CounterSnapshot> {
+        self.exec.as_ref().map(|e| e.counters.snapshot())
+    }
+}
+
+impl SddmmImpl for TcOnlySddmm {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn prepare(&mut self, m: &Csr) {
+        self.exec = Some(SddmmExecutor::new(m, &DistParams::tc_only(), self.backend.clone()));
+    }
+
+    fn execute(&self, a: &Dense, b: &Dense) -> Vec<f32> {
+        self.exec.as_ref().expect("prepare first").execute(a, b).expect("tc-only sddmm").values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::verify_spmm;
+    use crate::sparse::gen;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn all_tc_only_variants_match_ref() {
+        let mut rng = SplitMix64::new(120);
+        let m = gen::banded(&mut rng, 128, 5, 0.6);
+        verify_spmm(&mut TcOnlySpmm::tcgnn_like(), &m, 16, 121);
+        verify_spmm(&mut TcOnlySpmm::dtc_like(), &m, 16, 122);
+        verify_spmm(&mut TcOnlySpmm::flash_like(), &m, 16, 123);
+    }
+
+    #[test]
+    fn sddmm_variants_match_ref() {
+        let mut rng = SplitMix64::new(124);
+        let m = gen::uniform_random(&mut rng, 64, 64, 0.1);
+        let a = Dense::random(&mut rng, 64, 8);
+        let b = Dense::random(&mut rng, 64, 8);
+        let expect = m.sddmm_dense_ref(&a, &b);
+        for mut imp in [TcOnlySddmm::tcgnn_like(), TcOnlySddmm::dtc_like(), TcOnlySddmm::flash_like()] {
+            imp.prepare(&m);
+            let got = imp.execute(&a, &b);
+            for (g, w) in got.iter().zip(&expect.values) {
+                assert!((g - w).abs() < 1e-3 + 1e-4 * w.abs(), "{}", imp.name());
+            }
+        }
+    }
+
+    #[test]
+    fn tcf_does_more_traversal_work() {
+        let mut rng = SplitMix64::new(125);
+        let m = gen::uniform_random(&mut rng, 128, 128, 0.1);
+        let b = Dense::random(&mut rng, 128, 8);
+        let mut tcf = TcOnlySpmm::tcgnn_like();
+        tcf.prepare(&m);
+        tcf.execute(&b);
+        let mut flash = TcOnlySpmm::flash_like();
+        flash.prepare(&m);
+        flash.execute(&b);
+        assert!(tcf.counters().unwrap().traversal_steps > 0);
+        assert_eq!(flash.counters().unwrap().traversal_steps, 0);
+    }
+}

@@ -1,0 +1,195 @@
+//! Benchmark harness utilities shared by the `benches/` binaries
+//! (offline stand-in for criterion, shaped around reproducing the
+//! paper's tables: speedup-distribution buckets, geomean, GFLOPS).
+
+use crate::sparse::corpus::CorpusSpec;
+use crate::sparse::Csr;
+use crate::util::timer;
+
+/// Environment-controlled bench scale:
+/// `LIBRA_BENCH=smoke|default|full` (12 / 120 / 500 matrices).
+pub fn corpus_size() -> usize {
+    match std::env::var("LIBRA_BENCH").as_deref() {
+        Ok("smoke") => 12,
+        Ok("full") => 500,
+        _ => 120,
+    }
+}
+
+/// Iterations per measurement at the current scale.
+pub fn bench_iters() -> usize {
+    match std::env::var("LIBRA_BENCH").as_deref() {
+        Ok("smoke") => 2,
+        Ok("full") => 5,
+        _ => 3,
+    }
+}
+
+/// Time `f` and return median seconds.
+pub fn time_median<F: FnMut()>(f: F) -> f64 {
+    timer::median(&timer::time_iters(1, bench_iters(), f))
+}
+
+/// SpMM/SDDMM GFLOPS (2 flops per nonzero per output column).
+pub fn gflops(nnz: usize, n: usize, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return 0.0;
+    }
+    (2.0 * nnz as f64 * n as f64) / secs / 1e9
+}
+
+/// Paper-style speedup distribution (Tables 4 & 6): bucket fractions,
+/// geometric mean and max of `speedups`.
+#[derive(Debug, Clone, Default)]
+pub struct SpeedupDist {
+    pub below_1: f64,
+    pub b1_15: f64,
+    pub b15_2: f64,
+    pub above_2: f64,
+    pub geomean: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+impl SpeedupDist {
+    pub fn from(speedups: &[f64]) -> Self {
+        let n = speedups.len();
+        if n == 0 {
+            return Self::default();
+        }
+        let frac = |pred: &dyn Fn(f64) -> bool| {
+            speedups.iter().filter(|&&s| pred(s)).count() as f64 / n as f64 * 100.0
+        };
+        Self {
+            below_1: frac(&|s| s < 1.0),
+            b1_15: frac(&|s| (1.0..1.5).contains(&s)),
+            b15_2: frac(&|s| (1.5..2.0).contains(&s)),
+            above_2: frac(&|s| s >= 2.0),
+            geomean: timer::geomean(speedups),
+            max: speedups.iter().cloned().fold(f64::MIN, f64::max),
+            n,
+        }
+    }
+
+    pub fn row(&self, label: &str) -> String {
+        format!(
+            "{label:<16} {:>6.2}% {:>7.2}% {:>7.2}% {:>7.2}%  {:>6.2}x {:>8.2}x  (n={})",
+            self.below_1, self.b1_15, self.b15_2, self.above_2, self.geomean, self.max, self.n
+        )
+    }
+
+    pub fn header() -> &'static str {
+        "baseline           <1x   1~1.5x  1.5~2x     >=2x    Mean      Max"
+    }
+}
+
+/// Materialized corpus entry with basic stats.
+pub struct BenchMatrix {
+    pub name: String,
+    pub family: &'static str,
+    pub m: Csr,
+    pub nnz1_ratio: f64,
+}
+
+/// Build the bench corpus (sorted by NNZ-1 ratio like Fig. 1).
+pub fn build_corpus(size: usize) -> Vec<BenchMatrix> {
+    let specs = crate::sparse::corpus::corpus(size);
+    let mut out: Vec<BenchMatrix> = specs
+        .iter()
+        .map(|s: &CorpusSpec| {
+            let m = s.build();
+            let nnz1 = crate::sparse::stats::nnz1_vector_ratio(&m, 8);
+            BenchMatrix { name: s.name.clone(), family: s.family.name(), m, nnz1_ratio: nnz1 }
+        })
+        .collect();
+    out.sort_by(|a, b| b.nnz1_ratio.partial_cmp(&a.nnz1_ratio).unwrap());
+    out
+}
+
+/// Simple fixed-width table printer.
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.columns.len());
+        self.rows.push(row);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let header: Vec<String> =
+            self.columns.iter().zip(&widths).map(|(c, w)| format!("{c:>w$}")).collect();
+        println!("{}", header.join("  "));
+        for row in &self.rows {
+            let line: Vec<String> =
+                row.iter().zip(&widths).map(|(c, w)| format!("{c:>w$}")).collect();
+            println!("{}", line.join("  "));
+        }
+    }
+}
+
+/// Shared PJRT runtime for benches (None if artifacts are missing).
+pub fn open_runtime() -> Option<std::sync::Arc<crate::runtime::Runtime>> {
+    let dir = std::env::var("LIBRA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("NOTE: no artifacts at {dir}; PJRT series skipped (run `make artifacts`)");
+        return None;
+    }
+    Some(std::sync::Arc::new(crate::runtime::Runtime::open(dir).ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_dist_buckets() {
+        let d = SpeedupDist::from(&[0.5, 1.2, 1.7, 2.5, 3.0]);
+        assert!((d.below_1 - 20.0).abs() < 1e-9);
+        assert!((d.b1_15 - 20.0).abs() < 1e-9);
+        assert!((d.b15_2 - 20.0).abs() < 1e-9);
+        assert!((d.above_2 - 40.0).abs() < 1e-9);
+        assert_eq!(d.max, 3.0);
+        assert_eq!(d.n, 5);
+        assert!(d.geomean > 1.5 && d.geomean < 2.0);
+    }
+
+    #[test]
+    fn gflops_math() {
+        assert!((gflops(1_000_000, 128, 0.256) - 1.0).abs() < 1e-9);
+        assert_eq!(gflops(100, 10, 0.0), 0.0);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new("test", &["a", "b"]);
+        t.add(vec!["1".into(), "2".into()]);
+        t.print();
+    }
+
+    #[test]
+    fn corpus_sorted_by_nnz1() {
+        let c = build_corpus(8);
+        for w in c.windows(2) {
+            assert!(w[0].nnz1_ratio >= w[1].nnz1_ratio);
+        }
+    }
+}

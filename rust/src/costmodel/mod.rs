@@ -1,0 +1,311 @@
+//! Analytical cost model and threshold tuner (paper §4.2).
+//!
+//! Encodes the paper's two distribution dimensions:
+//! * data reusability: `R_spmm = NNZ/k`, `R_sddmm = 2·NNZ/(m+n)` —
+//!   the dense-operand access-cost ratio between the flexible and
+//!   structured engines;
+//! * practical performance: structured peak × block density vs
+//!   flexible peak — which yields the NNZ threshold where the
+//!   structured engine starts winning.
+//!
+//! The model is parameterized by a [`HardwareProfile`]; shipping
+//! profiles cover the paper's H100 figures and a profile measured on
+//! this substrate (used to sanity-check the bench results and produce
+//! the paper-scale estimates recorded in EXPERIMENTS.md).
+
+use crate::dist::Op;
+use crate::format::{SDDMM_BLOCK_N, SPMM_BLOCK_K, WINDOW};
+
+/// Peak-rate description of the two engines.
+#[derive(Debug, Clone, Copy)]
+pub struct HardwareProfile {
+    /// structured-engine peak, in multiply-adds / s
+    pub structured_peak: f64,
+    /// flexible-engine peak, in multiply-adds / s
+    pub flexible_peak: f64,
+    /// memory bandwidth, bytes / s (shared by both engines)
+    pub mem_bw: f64,
+    /// per-kernel-invocation overhead on the structured engine, s
+    pub structured_call_overhead: f64,
+    /// Calibrated multiplier on the structured engine's memory term:
+    /// beyond the dense-operand bytes, the structured path moves block
+    /// metadata (bitmaps, column indices) and writes the full padded
+    /// 8xN accumulator. The paper handles this empirically ("practical
+    /// performance is not known a priori" -> threshold tuner); we fold
+    /// it into one factor calibrated so the H100 profile reproduces the
+    /// paper's measured optima (theta = 3 for SpMM, ~24 for SDDMM).
+    pub structured_mem_factor: f64,
+    pub name: &'static str,
+}
+
+impl HardwareProfile {
+    /// NVIDIA H100 PCIe at TF32 vs FP32 CUDA cores (paper §3.1: ~15x).
+    pub fn h100() -> Self {
+        Self {
+            structured_peak: 378e12, // TF32 TCU MACs/s
+            flexible_peak: 25.6e12,  // FP32 CUDA MACs/s
+            mem_bw: 2.0e12,
+            structured_call_overhead: 4e-6,
+            structured_mem_factor: 2.2,
+            name: "h100",
+        }
+    }
+
+    /// This repo's substrate, calibrated by `tab05_profile`: on a
+    /// single CPU core both engines hit the same SIMD axpy rate
+    /// (~13 GMAC/s), so the peak ratio is ~1 (vs the paper's 15x) and
+    /// the tuned threshold shifts upward exactly as Eq. 2 predicts.
+    pub fn cpu_substrate() -> Self {
+        Self {
+            structured_peak: 13e9,
+            flexible_peak: 13e9,
+            mem_bw: 30e9,
+            structured_call_overhead: 1e-4,
+            structured_mem_factor: 2.2,
+            name: "cpu_substrate",
+        }
+    }
+
+    /// Peak ratio between the engines (the paper's "15x").
+    pub fn peak_ratio(&self) -> f64 {
+        self.structured_peak / self.flexible_peak
+    }
+}
+
+/// Data-access-cost ratio for an SpMM vector (paper Eq. 2):
+/// flexible cost `NNZ·n` over structured cost `k·n`.
+pub fn r_spmm(nnz: usize) -> f64 {
+    nnz as f64 / SPMM_BLOCK_K as f64
+}
+
+/// Data-access-cost ratio for an SDDMM block (paper Eq. 3).
+pub fn r_sddmm(nnz: usize) -> f64 {
+    2.0 * nnz as f64 / (WINDOW + SDDMM_BLOCK_N) as f64
+}
+
+/// Predicted execution time of a *vector* (SpMM) or *block* (SDDMM)
+/// with `nnz` nonzeros on each engine, `n` = dense column count.
+///
+/// Memory term: dense-operand traffic dominates (paper §4.2); the
+/// structured engine loads each dense row once per block slot, the
+/// flexible engine once per nonzero. Compute term: the structured
+/// engine always issues the full padded tile.
+pub fn predict_unit_times(hw: &HardwareProfile, op: Op, nnz: usize, n: usize) -> (f64, f64) {
+    match op {
+        Op::Spmm => {
+            // per-vector: structured issues 8·n MACs (a full vector
+            // lane) and loads one dense row of n floats; flexible
+            // issues nnz·n MACs and loads nnz rows.
+            let structured = (WINDOW * n) as f64 / hw.structured_peak
+                + hw.structured_mem_factor * (n * 4) as f64 / hw.mem_bw;
+            let flexible =
+                (nnz * n) as f64 / hw.flexible_peak + (nnz * n * 4) as f64 / hw.mem_bw;
+            (structured, flexible)
+        }
+        Op::Sddmm => {
+            // per-block: structured issues 8·k·16 MACs, loads (8+16)·k
+            // floats; flexible issues nnz·k MACs, loads 2·nnz·k floats.
+            let k = n; // feature dim
+            let structured = (WINDOW * k * SDDMM_BLOCK_N) as f64 / hw.structured_peak
+                + hw.structured_mem_factor * ((WINDOW + SDDMM_BLOCK_N) * k * 4) as f64 / hw.mem_bw;
+            let flexible =
+                (nnz * k) as f64 / hw.flexible_peak + (2 * nnz * k * 4) as f64 / hw.mem_bw;
+            (structured, flexible)
+        }
+    }
+}
+
+/// The analytic threshold: smallest NNZ at which the structured engine
+/// is predicted to beat the flexible engine for one unit.
+pub fn analytic_threshold(hw: &HardwareProfile, op: Op, n: usize) -> usize {
+    let max_nnz = match op {
+        Op::Spmm => WINDOW,
+        Op::Sddmm => WINDOW * SDDMM_BLOCK_N,
+    };
+    for nnz in 1..=max_nnz {
+        let (s, f) = predict_unit_times(hw, op, nnz, n);
+        if s <= f {
+            return nnz;
+        }
+    }
+    max_nnz
+}
+
+/// Predict total hybrid execution time given a per-unit NNZ histogram
+/// (`hist[i]` = number of units with NNZ = i) and a threshold θ.
+pub fn predict_hybrid_time(
+    hw: &HardwareProfile,
+    op: Op,
+    hist: &[usize],
+    n: usize,
+    theta: usize,
+) -> f64 {
+    let mut structured = 0.0;
+    let mut flexible = 0.0;
+    let mut structured_units = 0usize;
+    for (nnz, &count) in hist.iter().enumerate().skip(1) {
+        if count == 0 {
+            continue;
+        }
+        let (s, f) = predict_unit_times(hw, op, nnz, n);
+        if nnz >= theta {
+            structured += s * count as f64;
+            structured_units += count;
+        } else {
+            flexible += f * count as f64;
+        }
+    }
+    // structured call overhead amortized over bucketed batches
+    let batches = structured_units.div_ceil(4096).max(usize::from(structured_units > 0));
+    // the two engines run concurrently: total = max(streams) + overhead
+    structured.max(flexible) + batches as f64 * hw.structured_call_overhead
+}
+
+/// Threshold tuner: pick θ minimizing predicted hybrid time over the
+/// observed unit histogram (the "practical performance" dimension).
+pub fn tune_threshold(hw: &HardwareProfile, op: Op, hist: &[usize], n: usize) -> usize {
+    let candidates: Vec<usize> = match op {
+        Op::Spmm => (1..=WINDOW).collect(),
+        Op::Sddmm => (1..=WINDOW * SDDMM_BLOCK_N).collect(),
+    };
+    let mut best = (f64::MAX, 1usize);
+    for theta in candidates {
+        let t = predict_hybrid_time(hw, op, hist, n, theta);
+        if t < best.0 {
+            best = (t, theta);
+        }
+    }
+    best.1
+}
+
+/// Substrate-tuned distribution parameters: the analytic threshold on
+/// the calibrated CPU profile, clamped to each operator's valid range.
+pub fn substrate_params(op: Op, n: usize) -> crate::dist::DistParams {
+    let hw = HardwareProfile::cpu_substrate();
+    let theta = analytic_threshold(&hw, op, n);
+    let theta = match op {
+        Op::Spmm => theta.min(WINDOW),
+        Op::Sddmm => theta.min(WINDOW * SDDMM_BLOCK_N),
+    };
+    crate::dist::DistParams { threshold: theta, fill_padding: true }
+}
+
+/// Build the per-vector NNZ histogram of a matrix (SpMM granularity).
+pub fn vector_histogram(m: &crate::sparse::Csr) -> Vec<usize> {
+    let mut hist = vec![0usize; WINDOW + 1];
+    let nwin = m.rows.div_ceil(WINDOW);
+    let mut cols_buf: Vec<u32> = Vec::new();
+    for w in 0..nwin {
+        cols_buf.clear();
+        let lo = w * WINDOW;
+        let hi = ((w + 1) * WINDOW).min(m.rows);
+        for r in lo..hi {
+            let (cols, _) = m.row(r);
+            cols_buf.extend_from_slice(cols);
+        }
+        cols_buf.sort_unstable();
+        let mut i = 0;
+        while i < cols_buf.len() {
+            let c = cols_buf[i];
+            let mut j = i + 1;
+            while j < cols_buf.len() && cols_buf[j] == c {
+                j += 1;
+            }
+            hist[(j - i).min(WINDOW)] += 1;
+            i = j;
+        }
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn ratios_match_paper_formulas() {
+        assert!((r_spmm(8) - 1.0).abs() < 1e-12);
+        assert!((r_spmm(16) - 2.0).abs() < 1e-12);
+        assert!((r_sddmm(12) - 1.0).abs() < 1e-12);
+        assert!((r_sddmm(24) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn h100_peak_ratio_about_15x() {
+        let hw = HardwareProfile::h100();
+        assert!((hw.peak_ratio() - 14.77).abs() < 0.5);
+    }
+
+    #[test]
+    fn denser_units_favor_structured() {
+        let hw = HardwareProfile::h100();
+        let (s1, f1) = predict_unit_times(&hw, Op::Spmm, 1, 128);
+        let (s8, f8) = predict_unit_times(&hw, Op::Spmm, 8, 128);
+        // structured time is density-independent; flexible grows with nnz
+        assert!((s1 - s8).abs() < 1e-15);
+        assert!(f8 > f1);
+        // an NNZ-1 vector should favor the flexible engine
+        assert!(f1 < s1, "flexible should win NNZ-1 vectors");
+        // a full vector should favor the structured engine
+        assert!(s8 < f8, "structured should win dense vectors");
+    }
+
+    #[test]
+    fn analytic_thresholds_in_paper_range() {
+        let hw = HardwareProfile::h100();
+        let t_spmm = analytic_threshold(&hw, Op::Spmm, 128);
+        // paper Fig. 11: optimal θ = 3 for SpMM (range 1..8)
+        assert!((2..=4).contains(&t_spmm), "spmm threshold {t_spmm}");
+        let t_sddmm = analytic_threshold(&hw, Op::Sddmm, 32);
+        // paper Fig. 11: optimal θ = 24 for SDDMM (range 8..64)
+        assert!((8..=48).contains(&t_sddmm), "sddmm threshold {t_sddmm}");
+    }
+
+    #[test]
+    fn tuner_picks_extremes_for_extreme_matrices() {
+        let hw = HardwareProfile::h100();
+        // all vectors dense -> tuner should pick a low threshold
+        let mut dense_hist = vec![0usize; 9];
+        dense_hist[8] = 1000;
+        let t = tune_threshold(&hw, Op::Spmm, &dense_hist, 128);
+        assert!(t <= 8);
+        // all NNZ-1 -> predicted hybrid at high θ (all flex) must beat all-TC
+        let mut sparse_hist = vec![0usize; 9];
+        sparse_hist[1] = 1000;
+        let t_all_flex = predict_hybrid_time(&hw, Op::Spmm, &sparse_hist, 128, 8);
+        let t_all_tc = predict_hybrid_time(&hw, Op::Spmm, &sparse_hist, 128, 1);
+        assert!(t_all_flex < t_all_tc);
+    }
+
+    #[test]
+    fn vector_histogram_counts() {
+        let mut rng = SplitMix64::new(140);
+        let m = gen::uniform_random(&mut rng, 64, 64, 0.1);
+        let hist = vector_histogram(&m);
+        let total_nnz: usize = hist.iter().enumerate().map(|(nnz, &c)| nnz * c).sum();
+        assert_eq!(total_nnz, m.nnz());
+        let (vectors, nnz1) = crate::sparse::stats::count_vectors(&m, WINDOW);
+        assert_eq!(hist.iter().sum::<usize>(), vectors);
+        assert_eq!(hist[1], nnz1);
+    }
+
+    #[test]
+    fn threshold_stability_across_matrices() {
+        // the paper's claim: optimal θ is hardware- not matrix-dependent.
+        // tune on several different matrices and check the spread is small.
+        let hw = HardwareProfile::h100();
+        let mut rng = SplitMix64::new(141);
+        let mats = [
+            gen::banded(&mut rng, 256, 4, 0.6),
+            gen::column_clustered(&mut rng, 512, 512, 8000, 0.5, 5),
+            gen::power_law(&mut rng, 512, 8.0, 2.0),
+        ];
+        let thetas: Vec<usize> =
+            mats.iter().map(|m| tune_threshold(&hw, Op::Spmm, &vector_histogram(m), 128)).collect();
+        let min = *thetas.iter().min().unwrap();
+        let max = *thetas.iter().max().unwrap();
+        assert!(max - min <= 2, "thresholds too spread: {thetas:?}");
+    }
+}

@@ -1,0 +1,106 @@
+//! Execution counters — the substrate's stand-in for Nsight Compute.
+//!
+//! Tables 1, 2 and 5 of the paper report DRAM traffic, achieved
+//! throughput and occupancy. On this substrate we count the actual
+//! bytes each engine *must* move (sparse operands, gathered dense
+//! operands, outputs) and the FLOPs it issues (including structured
+//! zero-padding redundancy), from which the benches derive the same
+//! comparisons.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Cumulative counters for one operator execution.
+#[derive(Debug, Default)]
+pub struct Counters {
+    /// bytes of sparse-operand data touched (values + indices + bitmaps)
+    pub bytes_sparse: AtomicU64,
+    /// bytes of dense-operand data gathered/read
+    pub bytes_dense: AtomicU64,
+    /// bytes written to the output
+    pub bytes_out: AtomicU64,
+    /// multiply-add FLOPs issued by the structured engine (includes
+    /// padded zeros — the redundancy the threshold bounds)
+    pub flops_structured: AtomicU64,
+    /// multiply-add FLOPs issued by the flexible engine (exactly nnz·n)
+    pub flops_flex: AtomicU64,
+    /// PJRT artifact invocations
+    pub pjrt_calls: AtomicU64,
+    /// TC blocks executed (incl. bucket padding blocks)
+    pub blocks_executed: AtomicU64,
+    /// atomic adds performed on the shared output
+    pub atomic_adds: AtomicU64,
+    /// staging-buffer decode passes (ME-TCF ablation counter)
+    pub staged_decodes: AtomicU64,
+    /// traversal steps (TCF ablation counter)
+    pub traversal_steps: AtomicU64,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&self, field: &AtomicU64, v: u64) {
+        field.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Snapshot into a plain struct for reporting.
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            bytes_sparse: self.bytes_sparse.load(Ordering::Relaxed),
+            bytes_dense: self.bytes_dense.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            flops_structured: self.flops_structured.load(Ordering::Relaxed),
+            flops_flex: self.flops_flex.load(Ordering::Relaxed),
+            pjrt_calls: self.pjrt_calls.load(Ordering::Relaxed),
+            blocks_executed: self.blocks_executed.load(Ordering::Relaxed),
+            atomic_adds: self.atomic_adds.load(Ordering::Relaxed),
+            staged_decodes: self.staged_decodes.load(Ordering::Relaxed),
+            traversal_steps: self.traversal_steps.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain copy of [`Counters`] values.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub bytes_sparse: u64,
+    pub bytes_dense: u64,
+    pub bytes_out: u64,
+    pub flops_structured: u64,
+    pub flops_flex: u64,
+    pub pjrt_calls: u64,
+    pub blocks_executed: u64,
+    pub atomic_adds: u64,
+    pub staged_decodes: u64,
+    pub traversal_steps: u64,
+}
+
+impl CounterSnapshot {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_sparse + self.bytes_dense + self.bytes_out
+    }
+
+    pub fn total_flops(&self) -> u64 {
+        self.flops_structured + self.flops_flex
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let c = Counters::new();
+        c.add(&c.bytes_dense, 100);
+        c.add(&c.flops_flex, 7);
+        c.add(&c.bytes_dense, 28);
+        let s = c.snapshot();
+        assert_eq!(s.bytes_dense, 128);
+        assert_eq!(s.flops_flex, 7);
+        assert_eq!(s.total_bytes(), 128);
+        assert_eq!(s.total_flops(), 7);
+    }
+}

@@ -1,0 +1,55 @@
+//! Hybrid executor: maps the balanced workload onto the two engines.
+//!
+//! Runtime task mapping (paper §4.4): three concurrent streams —
+//! stream 0 executes TC-block batches on the structured engine (PJRT
+//! artifacts or the native bit-decoding kernel), streams 1 and 2 run
+//! long / short flexible tiles on worker threads. All streams
+//! accumulate into one shared output buffer; segments flagged by the
+//! load balancer use atomic adds, single-writer segments use plain
+//! stores (the paper's atomicAdd-only-when-needed optimization).
+
+pub mod counters;
+pub mod flex;
+pub mod output;
+pub mod pack;
+pub mod sddmm;
+pub mod spmm;
+pub mod structured;
+
+pub use counters::Counters;
+pub use spmm::{SpmmExecutor, TcBackendKind};
+
+use crate::runtime::Runtime;
+use std::sync::Arc;
+
+/// Which implementation serves the structured (TC-block) stream.
+#[derive(Clone)]
+pub enum TcBackend {
+    /// AOT PJRT artifacts (the production path).
+    Pjrt(Arc<Runtime>),
+    /// Native bit-decoding kernel (used when artifacts are absent and
+    /// by the format-ablation benches).
+    NativeBitmap,
+    /// Native staged decode (ME-TCF / DTC-SpMM-style ablation).
+    NativeStaged,
+    /// Native per-element traversal (TCF / TC-GNN-style ablation).
+    NativeTraversal,
+}
+
+impl std::fmt::Debug for TcBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TcBackend::Pjrt(_) => write!(f, "Pjrt"),
+            TcBackend::NativeBitmap => write!(f, "NativeBitmap"),
+            TcBackend::NativeStaged => write!(f, "NativeStaged"),
+            TcBackend::NativeTraversal => write!(f, "NativeTraversal"),
+        }
+    }
+}
+
+/// Worker threads for the flexible streams (leaves one core for the
+/// structured stream when possible).
+pub fn default_flex_threads() -> usize {
+    let n = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    (n - 1).max(1)
+}

@@ -1,0 +1,151 @@
+//! Shared output buffer with per-segment atomic / plain accumulation.
+//!
+//! Mirrors the paper's use of `atomicAdd` only where window
+//! decomposition creates multiple writers: the load balancer's
+//! `atomic` flags are a *proof obligation* — a segment without the
+//! flag is the exclusive writer of its output rows, so a plain
+//! read-modify-write is race-free; flagged segments use a lock-free
+//! CAS add on the f32 bits.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// Shared mutable view over an output f32 buffer.
+///
+/// Safety contract: concurrent `add_plain` calls to the same index are
+/// forbidden (enforced by the scheduler's single-writer invariant,
+/// which `balance::tests` verify); `add_atomic` is always safe.
+pub struct SharedOut {
+    ptr: *mut f32,
+    len: usize,
+    /// count of atomic adds performed (profiling counter)
+    pub atomic_adds: AtomicU64,
+}
+
+unsafe impl Send for SharedOut {}
+unsafe impl Sync for SharedOut {}
+
+impl SharedOut {
+    pub fn new(buf: &mut [f32]) -> Self {
+        Self { ptr: buf.as_mut_ptr(), len: buf.len(), atomic_adds: AtomicU64::new(0) }
+    }
+
+    /// A second view over the same buffer (its own atomic-add counter).
+    pub fn alias(&self) -> SharedOut {
+        SharedOut { ptr: self.ptr, len: self.len, atomic_adds: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Plain accumulate — caller must be the exclusive writer of `idx`.
+    ///
+    /// # Safety
+    /// No other thread may access `idx` concurrently.
+    #[inline]
+    pub unsafe fn add_plain(&self, idx: usize, v: f32) {
+        debug_assert!(idx < self.len);
+        *self.ptr.add(idx) += v;
+    }
+
+    /// Lock-free atomic accumulate (f32 CAS on the bit pattern).
+    #[inline]
+    pub fn add_atomic(&self, idx: usize, v: f32) {
+        debug_assert!(idx < self.len);
+        if v == 0.0 {
+            return;
+        }
+        let cell = unsafe { &*(self.ptr.add(idx) as *const AtomicU32) };
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            let new = (f32::from_bits(cur) + v).to_bits();
+            match cell.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+        self.atomic_adds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Accumulate a contiguous row slice starting at `offset`.
+    #[inline]
+    pub fn add_slice(&self, offset: usize, src: &[f32], atomic: bool) {
+        if atomic {
+            for (j, &v) in src.iter().enumerate() {
+                self.add_atomic(offset + j, v);
+            }
+        } else {
+            // exclusive writer: vectorizable plain loop
+            unsafe {
+                let dst = std::slice::from_raw_parts_mut(self.ptr.add(offset), src.len());
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d += s;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crossbeam_utils::thread;
+
+    #[test]
+    fn plain_add() {
+        let mut buf = vec![1.0f32; 8];
+        let out = SharedOut::new(&mut buf);
+        unsafe {
+            out.add_plain(3, 2.0);
+        }
+        drop(out);
+        assert_eq!(buf[3], 3.0);
+    }
+
+    #[test]
+    fn atomic_add_correct_under_contention() {
+        let mut buf = vec![0.0f32; 4];
+        let out = SharedOut::new(&mut buf);
+        let n_threads = 8;
+        let adds_per_thread = 10_000;
+        thread::scope(|s| {
+            for _ in 0..n_threads {
+                s.spawn(|_| {
+                    for _ in 0..adds_per_thread {
+                        out.add_atomic(1, 1.0);
+                    }
+                });
+            }
+        })
+        .unwrap();
+        let total = out.atomic_adds.load(Ordering::Relaxed);
+        drop(out);
+        assert_eq!(buf[1], (n_threads * adds_per_thread) as f32);
+        assert_eq!(total, (n_threads * adds_per_thread) as u64);
+    }
+
+    #[test]
+    fn add_slice_both_modes() {
+        let mut buf = vec![1.0f32; 6];
+        {
+            let out = SharedOut::new(&mut buf);
+            out.add_slice(0, &[1.0, 2.0, 3.0], false);
+            out.add_slice(3, &[4.0, 5.0, 6.0], true);
+        }
+        assert_eq!(buf, vec![2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn atomic_add_zero_is_noop() {
+        let mut buf = vec![0.0f32; 1];
+        let out = SharedOut::new(&mut buf);
+        out.add_atomic(0, 0.0);
+        assert_eq!(out.atomic_adds.load(Ordering::Relaxed), 0);
+    }
+}

@@ -1,0 +1,272 @@
+//! Packing TC-block batches into the fixed-shape buffers the PJRT
+//! artifacts expect, and scattering their results back.
+//!
+//! The structured artifacts are compiled for bucketed batch sizes
+//! (G ∈ {256, 1024, 4096}); the batcher picks the largest bucket that
+//! fits the remaining blocks and pads the tail with empty blocks
+//! (bitmap 0 → zero output → scatter skipped).
+
+use crate::format::{TcBlocks, PAD_COL, WINDOW};
+use crate::sparse::Dense;
+
+/// Reusable packing buffers (allocated once per executor, reused per
+/// batch — keeps the hot loop allocation-free).
+#[derive(Debug, Default)]
+pub struct PackBufs {
+    pub bm_words: Vec<u32>,
+    pub values: Vec<f32>,
+    pub gathered: Vec<f32>,
+    pub scale: Vec<f32>,
+}
+
+/// Pack SpMM blocks `[b0, b1)` (b1-b0 <= bucket) into buffers shaped
+/// for `spmm_tc_bitmap_{bucket}x{n}`: bm [bucket,2], vals [bucket,64],
+/// b_gathered [bucket,8,n]. Returns bytes of dense data gathered.
+pub fn pack_spmm_batch(
+    tc: &TcBlocks,
+    b0: usize,
+    b1: usize,
+    bucket: usize,
+    b: &Dense,
+    bufs: &mut PackBufs,
+) -> u64 {
+    let k = tc.k;
+    debug_assert_eq!(k, 8);
+    let n = b.cols;
+    let g = b1 - b0;
+    debug_assert!(g <= bucket);
+    bufs.bm_words.clear();
+    bufs.bm_words.resize(bucket * 2, 0);
+    bufs.values.clear();
+    bufs.values.resize(bucket * 64, 0.0);
+    bufs.gathered.clear();
+    bufs.gathered.resize(bucket * 8 * n, 0.0);
+    let mut dense_bytes = 0u64;
+    for (slot, blk) in (b0..b1).enumerate() {
+        let bm = tc.bitmaps[blk] as u64;
+        bufs.bm_words[slot * 2] = bm as u32;
+        bufs.bm_words[slot * 2 + 1] = (bm >> 32) as u32;
+        let vals = tc.block_values(blk);
+        bufs.values[slot * 64..slot * 64 + vals.len()].copy_from_slice(vals);
+        let cols = tc.block_cols(blk);
+        let gbase = slot * 8 * n;
+        for (c, &col) in cols.iter().enumerate() {
+            if col == PAD_COL {
+                continue;
+            }
+            let brow = b.row(col as usize);
+            bufs.gathered[gbase + c * n..gbase + (c + 1) * n].copy_from_slice(brow);
+            dense_bytes += (n * 4) as u64;
+        }
+    }
+    let _ = g;
+    dense_bytes
+}
+
+/// Scatter a `[bucket, 8, n]` SpMM kernel output back into the shared
+/// output for blocks `[b0, b1)` (the tail padding slots are skipped).
+pub fn scatter_spmm_batch(
+    tc: &TcBlocks,
+    b0: usize,
+    b1: usize,
+    n: usize,
+    rows: usize,
+    result: &[f32],
+    atomic: &[bool],
+    out: &super::output::SharedOut,
+) {
+    for (slot, blk) in (b0..b1).enumerate() {
+        if tc.bitmaps[blk] == 0 {
+            continue; // empty block contributes nothing
+        }
+        let win = tc.window_of[blk] as usize;
+        let lo = win * WINDOW;
+        let hi = ((win + 1) * WINDOW).min(rows);
+        let base = slot * 8 * n;
+        for r in lo..hi {
+            let src = &result[base + (r - lo) * n..base + (r - lo + 1) * n];
+            out.add_slice(r * n, src, atomic[blk]);
+        }
+    }
+}
+
+/// Pack SDDMM blocks `[b0, b1)` for `sddmm_tc_bitmap_{bucket}x{k}`:
+/// a_rows [bucket,8,K], b_cols [bucket,K,16], bm [bucket,4],
+/// scale [bucket,128]. `a` is rows x K, `b` is cols x K (row-major).
+pub fn pack_sddmm_batch(
+    tc: &TcBlocks,
+    b0: usize,
+    b1: usize,
+    bucket: usize,
+    a: &Dense,
+    b: &Dense,
+    bufs: &mut PackBufs,
+) -> u64 {
+    let nslots = tc.k;
+    debug_assert_eq!(nslots, 16);
+    let kdim = a.cols;
+    bufs.bm_words.clear();
+    bufs.bm_words.resize(bucket * 4, 0);
+    bufs.scale.clear();
+    bufs.scale.resize(bucket * 128, 0.0);
+    bufs.values.clear();
+    bufs.values.resize(bucket * 8 * kdim, 0.0); // a_rows
+    bufs.gathered.clear();
+    bufs.gathered.resize(bucket * kdim * 16, 0.0); // b_cols
+    let mut dense_bytes = 0u64;
+    for (slot, blk) in (b0..b1).enumerate() {
+        let bm = tc.bitmaps[blk];
+        for w in 0..4 {
+            bufs.bm_words[slot * 4 + w] = (bm >> (32 * w)) as u32;
+        }
+        let vals = tc.block_values(blk);
+        bufs.scale[slot * 128..slot * 128 + vals.len()].copy_from_slice(vals);
+        // gather the window's 8 rows of A
+        let win = tc.window_of[blk] as usize;
+        let abase = slot * 8 * kdim;
+        for r in 0..WINDOW {
+            let row = win * WINDOW + r;
+            if row >= a.rows {
+                break;
+            }
+            bufs.values[abase + r * kdim..abase + (r + 1) * kdim].copy_from_slice(a.row(row));
+            dense_bytes += (kdim * 4) as u64;
+        }
+        // gather the block's 16 column vectors of B, transposed to [K, 16]
+        let cols = tc.block_cols(blk);
+        let bbase = slot * kdim * 16;
+        for (c, &col) in cols.iter().enumerate() {
+            if col == PAD_COL {
+                continue;
+            }
+            let brow = b.row(col as usize);
+            for kk in 0..kdim {
+                bufs.gathered[bbase + kk * 16 + c] = brow[kk];
+            }
+            dense_bytes += (kdim * 4) as u64;
+        }
+    }
+    dense_bytes
+}
+
+/// Scatter a `[bucket, 128]` compacted SDDMM result into the output
+/// values via the plan's out-index table.
+pub fn scatter_sddmm_batch(
+    tc: &TcBlocks,
+    tc_out_idx: &[u32],
+    b0: usize,
+    b1: usize,
+    result: &[f32],
+    out_values: &super::output::SharedOut,
+) {
+    for (slot, blk) in (b0..b1).enumerate() {
+        let s = tc.val_ptr[blk] as usize;
+        let e = tc.val_ptr[blk + 1] as usize;
+        let base = slot * 128;
+        for (i, &pos) in tc_out_idx[s..e].iter().enumerate() {
+            unsafe {
+                out_values.add_plain(pos as usize, result[base + i]);
+            }
+        }
+    }
+}
+
+/// Choose the execution bucket for `remaining` blocks from the sorted
+/// (descending) bucket list: largest bucket fully coverable, else the
+/// smallest bucket (padded).
+pub fn choose_bucket(buckets: &[usize], remaining: usize) -> usize {
+    debug_assert!(!buckets.is_empty());
+    for &b in buckets {
+        if remaining >= b {
+            return b;
+        }
+    }
+    *buckets.last().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{distribute_spmm, DistParams};
+    use crate::exec::output::SharedOut;
+    use crate::sparse::gen;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn choose_bucket_logic() {
+        let buckets = [4096, 1024, 256];
+        assert_eq!(choose_bucket(&buckets, 9000), 4096);
+        assert_eq!(choose_bucket(&buckets, 4096), 4096);
+        assert_eq!(choose_bucket(&buckets, 2000), 1024);
+        assert_eq!(choose_bucket(&buckets, 100), 256);
+        assert_eq!(choose_bucket(&buckets, 0), 256);
+    }
+
+    #[test]
+    fn pack_scatter_roundtrip_matches_native() {
+        // pack a batch, emulate the kernel in-place (decode+matmul via
+        // the host bitmap decoder), scatter, compare to the reference.
+        let mut rng = SplitMix64::new(70);
+        let m = gen::uniform_random(&mut rng, 40, 40, 0.2);
+        let b = Dense::random(&mut rng, 40, 8);
+        let d = distribute_spmm(&m, &DistParams { threshold: 1, fill_padding: false });
+        let nb = d.tc.n_blocks();
+        let bucket = nb.next_power_of_two().max(4);
+        let mut bufs = PackBufs::default();
+        pack_spmm_batch(&d.tc, 0, nb, bucket, &b, &mut bufs);
+
+        // emulate kernel: out[g] = decode(bm, vals) @ gathered[g]
+        let n = 8;
+        let mut result = vec![0f32; bucket * 8 * n];
+        let mut tile = vec![0f32; 64];
+        for g in 0..bucket {
+            let bm = bufs.bm_words[g * 2] as u128 | ((bufs.bm_words[g * 2 + 1] as u128) << 32);
+            let nnz = bm.count_ones() as usize;
+            crate::format::bitmap::decode_block(bm, &bufs.values[g * 64..g * 64 + nnz], 8, 8, &mut tile);
+            for r in 0..8 {
+                for c in 0..8 {
+                    let v = tile[r * 8 + c];
+                    if v == 0.0 {
+                        continue;
+                    }
+                    for j in 0..n {
+                        result[g * 8 * n + r * n + j] += v * bufs.gathered[g * 8 * n + c * n + j];
+                    }
+                }
+            }
+        }
+        let mut out_buf = vec![0f32; 40 * n];
+        {
+            let out = SharedOut::new(&mut out_buf);
+            let flags = vec![false; nb];
+            scatter_spmm_batch(&d.tc, 0, nb, n, 40, &result, &flags, &out);
+        }
+        let expect = m.spmm_dense_ref(&b);
+        let got = Dense::from_vec(40, n, out_buf);
+        assert!(got.allclose(&expect, 1e-4), "diff {}", got.max_abs_diff(&expect));
+    }
+
+    #[test]
+    fn sddmm_pack_transposes_b() {
+        let mut rng = SplitMix64::new(71);
+        let m = gen::uniform_random(&mut rng, 16, 16, 0.3);
+        let a = Dense::random(&mut rng, 16, 4);
+        let b = Dense::random(&mut rng, 16, 4);
+        let d = crate::dist::distribute_sddmm(&m, &DistParams { threshold: 1, fill_padding: true });
+        if d.tc.n_blocks() == 0 {
+            return;
+        }
+        let mut bufs = PackBufs::default();
+        pack_sddmm_batch(&d.tc, 0, 1, 4, &a, &b, &mut bufs);
+        // b_cols[0][kk][slot] must equal B[cols[slot]][kk]
+        let cols = d.tc.block_cols(0);
+        for (slot, &col) in cols.iter().enumerate() {
+            if col == PAD_COL {
+                continue;
+            }
+            for kk in 0..4 {
+                assert_eq!(bufs.gathered[kk * 16 + slot], b.row(col as usize)[kk]);
+            }
+        }
+    }
+}

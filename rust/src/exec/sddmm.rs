@@ -1,0 +1,272 @@
+//! The hybrid SDDMM executor (paper §4.4, Fig. 7b).
+//!
+//! Stream 0 runs TC-block batches (dense MMA + in-kernel sampling &
+//! compaction); stream 1 runs per-element dot products for the
+//! flexible portion. SDDMM writes each nonzero exactly once, so no
+//! atomics are needed anywhere — load balancing is pure chunking.
+
+use super::counters::Counters;
+use super::flex;
+use super::output::SharedOut;
+use super::pack::{self, PackBufs};
+use super::structured::{self, Decode};
+use super::TcBackend;
+use crate::dist::{DistParams, SddmmDist};
+use crate::format::legacy::TcfBlocks;
+use crate::runtime::Input;
+use crate::sparse::{Csr, Dense};
+use anyhow::Result;
+use crossbeam_utils::thread;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Elements per flexible work unit (the SDDMM tile chunk).
+const FLEX_CHUNK: usize = 512;
+
+/// A preprocessed SDDMM operator.
+pub struct SddmmExecutor {
+    pub dist: SddmmDist,
+    pub tcf: Option<TcfBlocks>,
+    pub backend: TcBackend,
+    pub flex_threads: usize,
+    pub counters: Counters,
+    /// pattern of the sparse matrix (row_ptr/col_idx reused for output)
+    pub pattern: Csr,
+}
+
+impl SddmmExecutor {
+    pub fn new(m: &Csr, dist_params: &DistParams, backend: TcBackend) -> Self {
+        let dist = crate::dist::distribute_sddmm(m, dist_params);
+        let tcf = matches!(backend, TcBackend::NativeTraversal)
+            .then(|| TcfBlocks::from_bitmap(&dist.tc));
+        Self {
+            dist,
+            tcf,
+            backend,
+            flex_threads: super::default_flex_threads(),
+            counters: Counters::new(),
+            pattern: m.clone(),
+        }
+    }
+
+    /// `C = (A · Bᵀ) ⊙ S` where S is the sparse pattern (values scale
+    /// the samples). `a` is rows x K, `b` is cols x K.
+    pub fn execute(&self, a: &Dense, b: &Dense) -> Result<Csr> {
+        anyhow::ensure!(a.rows == self.dist.rows, "A rows");
+        anyhow::ensure!(b.rows == self.dist.cols, "B rows");
+        anyhow::ensure!(a.cols == b.cols, "feature dims differ");
+        let mut out = self.pattern.clone();
+        out.values.fill(0.0);
+        {
+            let shared = SharedOut::new(&mut out.values);
+            self.execute_values(a, b, &shared)?;
+        }
+        Ok(out)
+    }
+
+    /// Execute into a raw values buffer (len = nnz).
+    pub fn execute_values(&self, a: &Dense, b: &Dense, out: &SharedOut) -> Result<()> {
+        let n_blocks = self.dist.tc.n_blocks();
+        let structured_err: std::sync::Mutex<Option<anyhow::Error>> = std::sync::Mutex::new(None);
+        let cursor = AtomicUsize::new(0);
+        let n_flex = self.dist.flex_vals.len();
+
+        thread::scope(|s| {
+            if n_blocks > 0 {
+                let err_ref = &structured_err;
+                s.spawn(move |_| {
+                    if let Err(e) = self.run_structured(a, b, out) {
+                        *err_ref.lock().unwrap() = Some(e);
+                    }
+                });
+            }
+            for _ in 0..self.flex_threads {
+                let cursor_ref = &cursor;
+                s.spawn(move |_| loop {
+                    let i0 = cursor_ref.fetch_add(FLEX_CHUNK, Ordering::Relaxed);
+                    if i0 >= n_flex {
+                        break;
+                    }
+                    let i1 = (i0 + FLEX_CHUNK).min(n_flex);
+                    flex::sddmm_range(
+                        i0..i1,
+                        &self.dist.flex_rows,
+                        &self.dist.flex_cols,
+                        &self.dist.flex_vals,
+                        &self.dist.flex_out_idx,
+                        a,
+                        b,
+                        out,
+                        &self.counters,
+                    );
+                });
+            }
+        })
+        .map_err(|_| anyhow::anyhow!("sddmm executor thread panicked"))?;
+
+        if let Some(e) = structured_err.into_inner().unwrap() {
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    fn run_structured(&self, a: &Dense, b: &Dense, out: &SharedOut) -> Result<()> {
+        let n_blocks = self.dist.tc.n_blocks();
+        match &self.backend {
+            TcBackend::Pjrt(rt) => {
+                let k = a.cols;
+                let mut buckets: Vec<usize> = rt
+                    .manifest
+                    .artifacts
+                    .iter()
+                    .filter_map(|art| {
+                        let rest = art.name.strip_prefix("sddmm_tc_bitmap_")?;
+                        let (g, kk) = rest.split_once('x')?;
+                        (kk == k.to_string()).then(|| g.parse::<usize>().ok()).flatten()
+                    })
+                    .collect();
+                anyhow::ensure!(!buckets.is_empty(), "no sddmm_tc_bitmap artifacts for K={k}");
+                buckets.sort_unstable_by(|x, y| y.cmp(x));
+                let mut bufs = PackBufs::default();
+                let mut b0 = 0usize;
+                while b0 < n_blocks {
+                    let bucket = pack::choose_bucket(&buckets, n_blocks - b0);
+                    let b1 = (b0 + bucket).min(n_blocks);
+                    let dense_bytes =
+                        pack::pack_sddmm_batch(&self.dist.tc, b0, b1, bucket, a, b, &mut bufs);
+                    let name = format!("sddmm_tc_bitmap_{bucket}x{k}");
+                    let outs = rt.execute_f32(
+                        &name,
+                        &[
+                            Input::F32(&bufs.values),   // a_rows
+                            Input::F32(&bufs.gathered), // b_cols
+                            Input::U32(&bufs.bm_words),
+                            Input::F32(&bufs.scale),
+                        ],
+                    )?;
+                    pack::scatter_sddmm_batch(&self.dist.tc, &self.dist.tc_out_idx, b0, b1, &outs[0], out);
+                    let c = &self.counters;
+                    c.add(&c.pjrt_calls, 1);
+                    c.add(&c.blocks_executed, bucket as u64);
+                    c.add(&c.flops_structured, (bucket * 8 * k * 16) as u64);
+                    c.add(&c.bytes_dense, dense_bytes);
+                    c.add(&c.bytes_out, ((b1 - b0) * 128 * 4) as u64);
+                    b0 = b1;
+                }
+                Ok(())
+            }
+            TcBackend::NativeBitmap | TcBackend::NativeStaged => {
+                let decode = if matches!(self.backend, TcBackend::NativeBitmap) {
+                    Decode::Bitmap
+                } else {
+                    Decode::Staged
+                };
+                structured::sddmm_blocks(
+                    &self.dist.tc,
+                    None,
+                    decode,
+                    &self.dist.tc_out_idx,
+                    0,
+                    n_blocks,
+                    a,
+                    b,
+                    out,
+                    &self.counters,
+                );
+                Ok(())
+            }
+            TcBackend::NativeTraversal => {
+                structured::sddmm_blocks(
+                    &self.dist.tc,
+                    self.tcf.as_ref(),
+                    Decode::Traversal,
+                    &self.dist.tc_out_idx,
+                    0,
+                    n_blocks,
+                    a,
+                    b,
+                    out,
+                    &self.counters,
+                );
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::util::propcheck::{check, Config};
+    use crate::util::SplitMix64;
+    use std::sync::Arc;
+
+    fn check_matches_ref(m: &Csr, k: usize, backend: TcBackend, th: usize, seed: u64) {
+        let mut rng = SplitMix64::new(seed);
+        let a = Dense::random(&mut rng, m.rows, k);
+        let b = Dense::random(&mut rng, m.cols, k);
+        let exec = SddmmExecutor::new(m, &DistParams { threshold: th, fill_padding: true }, backend);
+        let got = exec.execute(&a, &b).unwrap();
+        let expect = m.sddmm_dense_ref(&a, &b);
+        for (i, (&g, &w)) in got.values.iter().zip(&expect.values).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-2 + 1e-3 * w.abs().max(g.abs()),
+                "pos {i}: {g} vs {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn hybrid_native_matches_ref() {
+        check(Config::default().cases(12), "hybrid sddmm == ref", |rng| {
+            let rows = rng.range(1, 150);
+            let cols = rng.range(1, 150);
+            let m = gen::uniform_random(rng, rows, cols, 0.08);
+            let th = rng.range(1, 48);
+            check_matches_ref(&m, 16, TcBackend::NativeBitmap, th, rng.next_u64());
+        });
+    }
+
+    #[test]
+    fn all_backends_agree() {
+        let mut rng = SplitMix64::new(90);
+        let m = gen::block_diag_noise(&mut rng, 96, 6, 0.4, 0.003);
+        for backend in [
+            TcBackend::NativeBitmap,
+            TcBackend::NativeStaged,
+            TcBackend::NativeTraversal,
+        ] {
+            check_matches_ref(&m, 12, backend, 16, 91);
+        }
+    }
+
+    #[test]
+    fn flex_only_and_tc_only() {
+        let mut rng = SplitMix64::new(92);
+        let m = gen::uniform_random(&mut rng, 80, 80, 0.12);
+        check_matches_ref(&m, 8, TcBackend::NativeBitmap, usize::MAX, 93); // flex only
+        check_matches_ref(&m, 8, TcBackend::NativeBitmap, 1, 94); // tc only
+    }
+
+    #[test]
+    fn pjrt_backend_matches_ref() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping pjrt sddmm test: run `make artifacts`");
+            return;
+        }
+        let rt = Arc::new(crate::runtime::Runtime::open("artifacts").unwrap());
+        let mut rng = SplitMix64::new(95);
+        let m = gen::block_diag_noise(&mut rng, 256, 12, 0.5, 0.001);
+        check_matches_ref(&m, 32, TcBackend::Pjrt(rt), 24, 96);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Csr::zeros(8, 8);
+        let a = Dense::ones(8, 4);
+        let b = Dense::ones(8, 4);
+        let exec = SddmmExecutor::new(&m, &DistParams::sddmm_default(), TcBackend::NativeBitmap);
+        let got = exec.execute(&a, &b).unwrap();
+        assert_eq!(got.nnz(), 0);
+    }
+}

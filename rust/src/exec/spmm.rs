@@ -1,0 +1,449 @@
+//! The hybrid SpMM executor (paper §4.4, Fig. 7a).
+//!
+//! Stream 0 drains TC-block batches on the structured engine (PJRT
+//! artifact calls or the native kernel); streams 1/2 drain long/short
+//! flexible tiles on worker threads. All streams merge into one shared
+//! output buffer, with atomics only where the load balancer flagged
+//! multi-writer windows.
+
+use super::counters::Counters;
+use super::flex;
+use super::output::SharedOut;
+use super::pack::{self, PackBufs};
+use super::structured::{self, Decode};
+use super::TcBackend;
+use crate::balance::{BalanceParams, FlexTile, SpmmSchedule};
+use crate::dist::{DistParams, SpmmDist};
+use crate::format::legacy::TcfBlocks;
+use crate::runtime::Input;
+use crate::sparse::{Csr, Dense};
+use anyhow::Result;
+use crossbeam_utils::thread;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Selects the structured backend by name (CLI / config integration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TcBackendKind {
+    Pjrt,
+    NativeBitmap,
+    NativeStaged,
+    NativeTraversal,
+}
+
+/// A fully preprocessed SpMM operator, ready to apply to dense inputs.
+///
+/// Preprocessing (distribution + balancing + format translation) runs
+/// once per matrix; `execute` is the iteration hot path.
+pub struct SpmmExecutor {
+    pub dist: SpmmDist,
+    pub sched: SpmmSchedule,
+    /// per-block atomic flags derived from the TC segments
+    pub block_atomic: Arc<Vec<bool>>,
+    /// TCF conversion, built lazily for the traversal ablation
+    pub tcf: Option<TcfBlocks>,
+    pub backend: TcBackend,
+    /// flexible-stream worker threads
+    pub flex_threads: usize,
+    pub counters: Counters,
+}
+
+impl SpmmExecutor {
+    /// Preprocess `m` with the given parameters.
+    pub fn new(
+        m: &Csr,
+        dist_params: &DistParams,
+        balance_params: &BalanceParams,
+        backend: TcBackend,
+    ) -> Self {
+        let dist = crate::dist::distribute_spmm(m, dist_params);
+        Self::from_dist(dist, balance_params, backend)
+    }
+
+    /// Build from an existing distribution (used by `prep`).
+    pub fn from_dist(dist: SpmmDist, balance_params: &BalanceParams, backend: TcBackend) -> Self {
+        let sched = crate::balance::balance_spmm(&dist, balance_params);
+        let mut block_atomic = vec![true; dist.tc.n_blocks()];
+        for seg in &sched.tc_segments {
+            for b in seg.block_start..seg.block_end {
+                block_atomic[b as usize] = seg.atomic;
+            }
+        }
+        let tcf = matches!(backend, TcBackend::NativeTraversal)
+            .then(|| TcfBlocks::from_bitmap(&dist.tc));
+        Self {
+            dist,
+            sched,
+            block_atomic: Arc::new(block_atomic),
+            tcf,
+            backend,
+            flex_threads: super::default_flex_threads(),
+            counters: Counters::new(),
+        }
+    }
+
+    /// `C = A * B` into a fresh buffer. `b.rows` must equal `A.cols`.
+    pub fn execute(&self, b: &Dense) -> Result<Dense> {
+        let mut out = Dense::zeros(self.dist.rows, b.cols);
+        self.execute_into(b, &mut out)?;
+        Ok(out)
+    }
+
+    /// Execute into an existing (zeroed) output buffer.
+    ///
+    /// Cross-engine write conflicts (the paper's atomicAdd case) are
+    /// resolved by *buffer privatization* — the CPU analog of selective
+    /// atomics: when both engines are active, the flexible streams
+    /// accumulate into a private buffer merged after the barrier, so
+    /// the structured scatter and flexible tiles both use plain
+    /// vectorizable stores. CAS atomics remain only for row-split
+    /// flexible chunks racing each other (`FlexTile::row_split`).
+    pub fn execute_into(&self, b: &Dense, out_mat: &mut Dense) -> Result<()> {
+        anyhow::ensure!(b.rows == self.dist.cols, "B rows {} != A cols {}", b.rows, self.dist.cols);
+        anyhow::ensure!(out_mat.rows == self.dist.rows && out_mat.cols == b.cols, "bad out shape");
+        let n_blocks = self.dist.tc.n_blocks();
+        let has_flex = !self.sched.long_tiles.is_empty() || !self.sched.short_tiles.is_empty();
+        let privatize = n_blocks > 0 && has_flex;
+        let counters = &self.counters;
+
+        let mut flex_buf = if privatize { vec![0f32; out_mat.data.len()] } else { Vec::new() };
+        {
+            let out = SharedOut::new(&mut out_mat.data);
+            let flex_out = if privatize { SharedOut::new(&mut flex_buf) } else { out.alias() };
+
+            // Tile queues for the flexible streams (streams 1 and 2).
+            let long_cursor = AtomicUsize::new(0);
+            let short_cursor = AtomicUsize::new(0);
+            let structured_err: std::sync::Mutex<Option<anyhow::Error>> = std::sync::Mutex::new(None);
+
+            thread::scope(|s| {
+                // --- stream 0: structured engine (single issuing thread:
+                // plain stores; block atomic flags only matter when the
+                // flexible streams share the same buffer) ---
+                if n_blocks > 0 {
+                    let out_ref = &out;
+                    let err_ref = &structured_err;
+                    s.spawn(move |_| {
+                        let res = self.run_structured(b, out_ref, privatize);
+                        if let Err(e) = res {
+                            *err_ref.lock().unwrap() = Some(e);
+                        }
+                    });
+                }
+                // --- streams 1 & 2: flexible engines ---
+                let n = b.cols;
+                for _ in 0..self.flex_threads {
+                    let fo = &flex_out;
+                    let long_ref = &long_cursor;
+                    let short_ref = &short_cursor;
+                    s.spawn(move |_| {
+                        let mut scratch = vec![0f32; n];
+                        // stream 1: long tiles (chunked, coarse work units)
+                        loop {
+                            let i = long_ref.fetch_add(1, Ordering::Relaxed);
+                            if i >= self.sched.long_tiles.len() {
+                                break;
+                            }
+                            self.run_flex_tile(&self.sched.long_tiles[i], b, fo, privatize, &mut scratch);
+                        }
+                        // stream 2: short tiles (batched grabs — tiles are tiny)
+                        const SHORT_BATCH: usize = 64;
+                        loop {
+                            let i0 = short_ref.fetch_add(SHORT_BATCH, Ordering::Relaxed);
+                            if i0 >= self.sched.short_tiles.len() {
+                                break;
+                            }
+                            let i1 = (i0 + SHORT_BATCH).min(self.sched.short_tiles.len());
+                            for t in &self.sched.short_tiles[i0..i1] {
+                                self.run_flex_tile(t, b, fo, privatize, &mut scratch);
+                            }
+                        }
+                    });
+                }
+            })
+            .map_err(|_| anyhow::anyhow!("executor thread panicked"))?;
+
+            counters.add(&counters.atomic_adds, out.atomic_adds.load(Ordering::Relaxed));
+            counters.add(&counters.atomic_adds, flex_out.atomic_adds.load(Ordering::Relaxed));
+            if let Some(e) = structured_err.into_inner().unwrap() {
+                return Err(e);
+            }
+        }
+        if privatize {
+            // merge pass: one vectorizable sweep
+            for (o, &f) in out_mat.data.iter_mut().zip(&flex_buf) {
+                *o += f;
+            }
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn run_flex_tile(
+        &self,
+        tile: &FlexTile,
+        b: &Dense,
+        out: &SharedOut,
+        privatized: bool,
+        scratch: &mut [f32],
+    ) {
+        // in a private buffer only row-split chunks can race; sharing
+        // the main buffer keeps the schedule's full atomic flags
+        let mut t = *tile;
+        if privatized {
+            t.atomic = t.row_split;
+        }
+        flex::spmm_tile(
+            &t,
+            &self.dist.flex_cols,
+            &self.dist.flex_vals,
+            b,
+            out,
+            scratch,
+            &self.counters,
+        );
+    }
+
+    fn run_structured(&self, b: &Dense, out: &SharedOut, privatized: bool) -> Result<()> {
+        let n_blocks = self.dist.tc.n_blocks();
+        // stream 0 is the only writer of the main buffer when the
+        // flexible streams are privatized: plain stores throughout
+        let plain = vec![false; n_blocks];
+        let atomic_flags: &[bool] = if privatized { &plain } else { &self.block_atomic };
+        match &self.backend {
+            TcBackend::Pjrt(rt) => {
+                let n = b.cols;
+                // buckets available in the manifest for this N
+                let mut buckets: Vec<usize> = rt
+                    .manifest
+                    .artifacts
+                    .iter()
+                    .filter_map(|a| {
+                        let rest = a.name.strip_prefix("spmm_tc_bitmap_")?;
+                        let (g, nn) = rest.split_once('x')?;
+                        (nn == n.to_string()).then(|| g.parse::<usize>().ok()).flatten()
+                    })
+                    .collect();
+                anyhow::ensure!(!buckets.is_empty(), "no spmm_tc_bitmap artifacts for N={n}");
+                buckets.sort_unstable_by(|a, b| b.cmp(a));
+                let mut bufs = PackBufs::default();
+                let mut b0 = 0usize;
+                while b0 < n_blocks {
+                    let bucket = pack::choose_bucket(&buckets, n_blocks - b0);
+                    let b1 = (b0 + bucket).min(n_blocks);
+                    let dense_bytes =
+                        pack::pack_spmm_batch(&self.dist.tc, b0, b1, bucket, b, &mut bufs);
+                    let name = format!("spmm_tc_bitmap_{bucket}x{n}");
+                    let outs = rt.execute_f32(
+                        &name,
+                        &[
+                            Input::U32(&bufs.bm_words),
+                            Input::F32(&bufs.values),
+                            Input::F32(&bufs.gathered),
+                        ],
+                    )?;
+                    pack::scatter_spmm_batch(
+                        &self.dist.tc,
+                        b0,
+                        b1,
+                        n,
+                        self.dist.rows,
+                        &outs[0],
+                        atomic_flags,
+                        out,
+                    );
+                    let c = &self.counters;
+                    c.add(&c.pjrt_calls, 1);
+                    c.add(&c.blocks_executed, bucket as u64);
+                    c.add(&c.flops_structured, (bucket * 8 * 8 * n) as u64);
+                    c.add(&c.bytes_dense, dense_bytes);
+                    c.add(
+                        &c.bytes_sparse,
+                        (b0..b1).map(|blk| 16 + 32 + self.dist.tc.block_values(blk).len() * 4).sum::<usize>()
+                            as u64,
+                    );
+                    c.add(&c.bytes_out, ((b1 - b0) * 8 * n * 4) as u64);
+                    b0 = b1;
+                }
+                Ok(())
+            }
+            TcBackend::NativeBitmap => {
+                structured::spmm_blocks(
+                    &self.dist.tc,
+                    None,
+                    Decode::Bitmap,
+                    atomic_flags,
+                    0,
+                    n_blocks,
+                    self.dist.rows,
+                    b,
+                    out,
+                    &self.counters,
+                );
+                Ok(())
+            }
+            TcBackend::NativeStaged => {
+                structured::spmm_blocks(
+                    &self.dist.tc,
+                    None,
+                    Decode::Staged,
+                    atomic_flags,
+                    0,
+                    n_blocks,
+                    self.dist.rows,
+                    b,
+                    out,
+                    &self.counters,
+                );
+                Ok(())
+            }
+            TcBackend::NativeTraversal => {
+                structured::spmm_blocks(
+                    &self.dist.tc,
+                    self.tcf.as_ref(),
+                    Decode::Traversal,
+                    atomic_flags,
+                    0,
+                    n_blocks,
+                    self.dist.rows,
+                    b,
+                    out,
+                    &self.counters,
+                );
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::util::propcheck::{check, Config};
+    use crate::util::SplitMix64;
+
+    fn check_matches_ref(m: &Csr, n: usize, backend: TcBackend, th: usize, seed: u64) {
+        let mut rng = SplitMix64::new(seed);
+        let b = Dense::random(&mut rng, m.cols, n);
+        let exec = SpmmExecutor::new(
+            m,
+            &DistParams { threshold: th, fill_padding: true },
+            &BalanceParams::default(),
+            backend,
+        );
+        let got = exec.execute(&b).unwrap();
+        let expect = m.spmm_dense_ref(&b);
+        assert!(
+            got.allclose(&expect, 1e-3),
+            "hybrid mismatch: {}",
+            got.max_abs_diff(&expect)
+        );
+    }
+
+    #[test]
+    fn hybrid_native_matches_ref() {
+        check(Config::default().cases(15), "hybrid spmm == ref", |rng| {
+            let rows = rng.range(1, 200);
+            let cols = rng.range(1, 200);
+            let m = gen::uniform_random(rng, rows, cols, 0.08);
+            let th = rng.range(1, 6);
+            check_matches_ref(&m, 16, TcBackend::NativeBitmap, th, rng.next_u64());
+        });
+    }
+
+    #[test]
+    fn hybrid_all_backends_agree() {
+        let mut rng = SplitMix64::new(80);
+        let m = gen::block_diag_noise(&mut rng, 128, 8, 0.4, 0.002);
+        for backend in [
+            TcBackend::NativeBitmap,
+            TcBackend::NativeStaged,
+            TcBackend::NativeTraversal,
+        ] {
+            check_matches_ref(&m, 32, backend, 3, 81);
+        }
+    }
+
+    #[test]
+    fn flex_only_mode() {
+        let mut rng = SplitMix64::new(82);
+        let m = gen::power_law(&mut rng, 300, 6.0, 2.0);
+        let b = Dense::random(&mut rng, 300, 32);
+        let exec = SpmmExecutor::new(
+            &m,
+            &DistParams::flex_only(),
+            &BalanceParams::default(),
+            TcBackend::NativeBitmap,
+        );
+        assert_eq!(exec.dist.tc.n_blocks(), 0);
+        let got = exec.execute(&b).unwrap();
+        assert!(got.allclose(&m.spmm_dense_ref(&b), 1e-3));
+        let s = exec.counters.snapshot();
+        assert_eq!(s.flops_structured, 0);
+        assert_eq!(s.flops_flex as usize, m.nnz() * 32);
+    }
+
+    #[test]
+    fn tc_only_mode() {
+        let mut rng = SplitMix64::new(83);
+        let m = gen::banded(&mut rng, 96, 4, 0.7);
+        let b = Dense::random(&mut rng, 96, 16);
+        let exec = SpmmExecutor::new(
+            &m,
+            &DistParams::tc_only(),
+            &BalanceParams::default(),
+            TcBackend::NativeBitmap,
+        );
+        assert_eq!(exec.dist.stats.nnz_flex, 0);
+        let got = exec.execute(&b).unwrap();
+        assert!(got.allclose(&m.spmm_dense_ref(&b), 1e-3));
+    }
+
+    #[test]
+    fn pjrt_backend_matches_ref() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping pjrt executor test: run `make artifacts`");
+            return;
+        }
+        let rt = Arc::new(crate::runtime::Runtime::open("artifacts").unwrap());
+        let mut rng = SplitMix64::new(84);
+        // enough blocks to exercise batching + tail padding
+        let m = gen::block_diag_noise(&mut rng, 512, 16, 0.5, 0.001);
+        check_matches_ref(&m, 32, TcBackend::Pjrt(rt), 3, 85);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Csr::zeros(16, 16);
+        let b = Dense::ones(16, 8);
+        let exec = SpmmExecutor::new(
+            &m,
+            &DistParams::default(),
+            &BalanceParams::default(),
+            TcBackend::NativeBitmap,
+        );
+        let got = exec.execute(&b).unwrap();
+        assert!(got.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn counters_populated() {
+        let mut rng = SplitMix64::new(86);
+        let m = gen::column_clustered(&mut rng, 256, 256, 4000, 0.5, 5);
+        let b = Dense::random(&mut rng, 256, 16);
+        let exec = SpmmExecutor::new(
+            &m,
+            &DistParams::default(),
+            &BalanceParams::default(),
+            TcBackend::NativeBitmap,
+        );
+        exec.execute(&b).unwrap();
+        let s = exec.counters.snapshot();
+        assert!(s.flops_structured > 0);
+        assert!(s.flops_flex > 0);
+        assert!(s.bytes_dense > 0);
+        // redundancy: structured flops >= 8*8*n per block
+        assert_eq!(s.flops_structured, (exec.dist.tc.n_blocks() * 8 * 8 * 16) as u64);
+    }
+}

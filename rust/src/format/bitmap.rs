@@ -1,0 +1,148 @@
+//! Bitmap encode/decode primitives (host-side Bit-Decoding).
+//!
+//! These mirror, in Rust, exactly what the Pallas kernel does on the
+//! device side (see `python/compile/kernels/spmm_tc.py`): each tile
+//! position finds its value by a prefix popcount over the bitmap. The
+//! host-side versions are used by the native structured executor, by
+//! the packing code, and as the oracle for the kernel tests.
+
+/// Number of set bits strictly below `bit` in `bitmap`.
+///
+/// This is the paper's Bit-Decoding offset computation: thread `t`
+/// masks the bitmap to its lower `t` bits and applies `__popc`.
+#[inline]
+pub fn prefix_popcount(bitmap: u128, bit: usize) -> usize {
+    debug_assert!(bit <= 128);
+    if bit == 0 {
+        return 0;
+    }
+    let mask = if bit >= 128 { u128::MAX } else { (1u128 << bit) - 1 };
+    (bitmap & mask).count_ones() as usize
+}
+
+/// Decode a compressed block into a dense row-major `m x k` tile.
+///
+/// `values` must hold exactly `bitmap.count_ones()` entries in
+/// ascending bit order. `out` must be `m * k` long.
+pub fn decode_block(bitmap: u128, values: &[f32], m: usize, k: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), m * k);
+    debug_assert_eq!(values.len(), bitmap.count_ones() as usize);
+    out.fill(0.0);
+    let mut rest = bitmap;
+    let mut i = 0usize;
+    while rest != 0 {
+        let bit = rest.trailing_zeros() as usize;
+        debug_assert!(bit < m * k);
+        out[bit] = values[i];
+        i += 1;
+        rest &= rest - 1;
+    }
+}
+
+/// Encode a dense row-major `m x k` tile into (bitmap, values).
+pub fn encode_block(tile: &[f32], m: usize, k: usize) -> (u128, Vec<f32>) {
+    debug_assert_eq!(tile.len(), m * k);
+    assert!(m * k <= 128, "block exceeds 128-bit bitmap");
+    let mut bitmap = 0u128;
+    let mut values = Vec::new();
+    for (idx, &v) in tile.iter().enumerate() {
+        if v != 0.0 {
+            bitmap |= 1u128 << idx;
+            values.push(v);
+        }
+    }
+    (bitmap, values)
+}
+
+/// Value at tile position `(r, c)` via Bit-Decoding (0.0 if unset).
+#[inline]
+pub fn decode_at(bitmap: u128, values: &[f32], r: usize, c: usize, k: usize) -> f32 {
+    let bit = r * k + c;
+    if bitmap >> bit & 1 == 0 {
+        0.0
+    } else {
+        values[prefix_popcount(bitmap, bit)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Config};
+
+    #[test]
+    fn prefix_popcount_basic() {
+        let b: u128 = 0b1011_0101;
+        assert_eq!(prefix_popcount(b, 0), 0);
+        assert_eq!(prefix_popcount(b, 1), 1); // bit0 set
+        assert_eq!(prefix_popcount(b, 3), 2); // bits 0,2
+        assert_eq!(prefix_popcount(b, 8), 5);
+        assert_eq!(prefix_popcount(b, 128), 5);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_8x8() {
+        check(Config::default().cases(100), "bitmap roundtrip 8x8", |rng| {
+            let mut tile = vec![0f32; 64];
+            for v in tile.iter_mut() {
+                if rng.chance(0.3) {
+                    *v = rng.f32_range(-2.0, 2.0);
+                    if *v == 0.0 {
+                        *v = 1.0;
+                    }
+                }
+            }
+            let (bm, vals) = encode_block(&tile, 8, 8);
+            let mut back = vec![0f32; 64];
+            decode_block(bm, &vals, 8, 8, &mut back);
+            assert_eq!(tile, back);
+        });
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_8x16() {
+        check(Config::default().cases(60), "bitmap roundtrip 8x16", |rng| {
+            let mut tile = vec![0f32; 128];
+            for v in tile.iter_mut() {
+                if rng.chance(0.2) {
+                    *v = rng.f32_range(0.5, 2.0);
+                }
+            }
+            let (bm, vals) = encode_block(&tile, 8, 16);
+            let mut back = vec![0f32; 128];
+            decode_block(bm, &vals, 8, 16, &mut back);
+            assert_eq!(tile, back);
+        });
+    }
+
+    #[test]
+    fn decode_at_matches_decode_block() {
+        check(Config::default().cases(60), "decode_at == decode_block", |rng| {
+            let mut tile = vec![0f32; 64];
+            for v in tile.iter_mut() {
+                if rng.chance(0.4) {
+                    *v = rng.f32_range(0.1, 1.0);
+                }
+            }
+            let (bm, vals) = encode_block(&tile, 8, 8);
+            for r in 0..8 {
+                for c in 0..8 {
+                    assert_eq!(decode_at(bm, &vals, r, c, 8), tile[r * 8 + c]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn empty_and_full_blocks() {
+        let zero = vec![0f32; 64];
+        let (bm, vals) = encode_block(&zero, 8, 8);
+        assert_eq!(bm, 0);
+        assert!(vals.is_empty());
+
+        let full = vec![1f32; 64];
+        let (bm, vals) = encode_block(&full, 8, 8);
+        assert_eq!(bm.count_ones(), 64);
+        assert_eq!(vals.len(), 64);
+    }
+}

@@ -1,0 +1,178 @@
+//! Structure-of-arrays storage for a batch of TC blocks.
+
+use super::bitmap;
+
+/// Sentinel column index marking an unused (padding) vector slot.
+pub const PAD_COL: u32 = u32::MAX;
+
+/// A batch of bitmap-compressed TC blocks in SoA layout.
+///
+/// Block `b` covers window `window_of[b]` (rows
+/// `window_of[b]*8 .. window_of[b]*8+8` of the sparse matrix), with
+/// `k` vector slots whose source columns are
+/// `cols[b*k .. (b+1)*k]` (`PAD_COL` = empty slot). The nonzero layout
+/// is `bitmaps[b]` (row-major, bit `r*k + c`), and the nonzero values
+/// are `values[val_ptr[b] .. val_ptr[b+1]]` in ascending bit order.
+#[derive(Debug, Clone, Default)]
+pub struct TcBlocks {
+    pub k: usize,
+    pub window_of: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub bitmaps: Vec<u128>,
+    pub val_ptr: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl TcBlocks {
+    pub fn new(k: usize) -> Self {
+        Self { k, window_of: Vec::new(), cols: Vec::new(), bitmaps: Vec::new(), val_ptr: vec![0], values: Vec::new() }
+    }
+
+    #[inline]
+    pub fn n_blocks(&self) -> usize {
+        self.bitmaps.len()
+    }
+
+    /// Total stored nonzeros across all blocks.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Column slots of block `b`.
+    #[inline]
+    pub fn block_cols(&self, b: usize) -> &[u32] {
+        &self.cols[b * self.k..(b + 1) * self.k]
+    }
+
+    /// Value slice of block `b`.
+    #[inline]
+    pub fn block_values(&self, b: usize) -> &[f32] {
+        &self.values[self.val_ptr[b] as usize..self.val_ptr[b + 1] as usize]
+    }
+
+    /// Append a block. `cols` must have length `k` (PAD_COL for empty
+    /// slots); `tile` is the dense row-major 8 x k tile.
+    pub fn push_block(&mut self, window: u32, cols: &[u32], tile: &[f32]) {
+        assert_eq!(cols.len(), self.k);
+        assert_eq!(tile.len(), 8 * self.k);
+        let (bm, vals) = bitmap::encode_block(tile, 8, self.k);
+        self.window_of.push(window);
+        self.cols.extend_from_slice(cols);
+        self.bitmaps.push(bm);
+        self.values.extend_from_slice(&vals);
+        self.val_ptr.push(self.values.len() as u32);
+    }
+
+    /// Decode block `b` into a dense row-major `8 x k` tile.
+    pub fn decode(&self, b: usize, out: &mut [f32]) {
+        bitmap::decode_block(self.bitmaps[b], self.block_values(b), 8, self.k, out);
+    }
+
+    /// Fraction of slots that are zero-padding: 1 - nnz / (blocks * 8k).
+    /// This is the structured path's computational redundancy — the
+    /// quantity Libra's threshold is tuned to bound.
+    pub fn padding_ratio(&self) -> f64 {
+        let capacity = self.n_blocks() * 8 * self.k;
+        if capacity == 0 {
+            return 0.0;
+        }
+        1.0 - self.nnz() as f64 / capacity as f64
+    }
+
+    /// Structural invariants.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.val_ptr.len() == self.n_blocks() + 1, "val_ptr length");
+        anyhow::ensure!(self.cols.len() == self.n_blocks() * self.k, "cols length");
+        anyhow::ensure!(self.window_of.len() == self.n_blocks(), "window_of length");
+        anyhow::ensure!(*self.val_ptr.last().unwrap() as usize == self.values.len(), "val_ptr end");
+        for b in 0..self.n_blocks() {
+            let nnz = (self.val_ptr[b + 1] - self.val_ptr[b]) as usize;
+            anyhow::ensure!(
+                self.bitmaps[b].count_ones() as usize == nnz,
+                "block {b}: bitmap bits != value count"
+            );
+            if 8 * self.k < 128 {
+                anyhow::ensure!(self.bitmaps[b] >> (8 * self.k) == 0, "block {b}: bits beyond 8*k");
+            }
+            // padding slots must have no bits set in their column
+            for (c, &col) in self.block_cols(b).iter().enumerate() {
+                if col == PAD_COL {
+                    for r in 0..8 {
+                        anyhow::ensure!(
+                            self.bitmaps[b] >> (r * self.k + c) & 1 == 0,
+                            "block {b}: bit set in padding slot {c}"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tile_with(k: usize, entries: &[(usize, usize, f32)]) -> Vec<f32> {
+        let mut t = vec![0f32; 8 * k];
+        for &(r, c, v) in entries {
+            t[r * k + c] = v;
+        }
+        t
+    }
+
+    #[test]
+    fn push_and_decode() {
+        let mut blocks = TcBlocks::new(8);
+        let tile = tile_with(8, &[(0, 0, 1.0), (3, 2, 2.0), (7, 7, 3.0)]);
+        let cols = [5, 9, 13, PAD_COL, PAD_COL, PAD_COL, PAD_COL, 21];
+        blocks.push_block(4, &cols, &tile);
+        assert_eq!(blocks.n_blocks(), 1);
+        assert_eq!(blocks.nnz(), 3);
+        assert_eq!(blocks.window_of[0], 4);
+        let mut out = vec![0f32; 64];
+        blocks.decode(0, &mut out);
+        assert_eq!(out, tile);
+        blocks.validate().unwrap();
+    }
+
+    #[test]
+    fn padding_ratio_math() {
+        let mut blocks = TcBlocks::new(8);
+        let tile = tile_with(8, &[(0, 0, 1.0)]);
+        let mut cols = [PAD_COL; 8];
+        cols[0] = 0;
+        blocks.push_block(0, &cols, &tile);
+        // 1 nnz of 64 slots
+        assert!((blocks.padding_ratio() - 63.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_catches_bad_bitmap() {
+        let mut blocks = TcBlocks::new(8);
+        let tile = tile_with(8, &[(0, 0, 1.0)]);
+        let mut cols = [PAD_COL; 8];
+        cols[0] = 0;
+        blocks.push_block(0, &cols, &tile);
+        blocks.bitmaps[0] |= 1 << 9; // bit in a padded column (slot 1)
+        assert!(blocks.validate().is_err());
+    }
+
+    #[test]
+    fn multiple_blocks_value_ranges() {
+        let mut blocks = TcBlocks::new(8);
+        let t1 = tile_with(8, &[(0, 0, 1.0), (1, 0, 2.0)]);
+        let t2 = tile_with(8, &[(2, 3, 4.0)]);
+        let mut c1 = [PAD_COL; 8];
+        c1[0] = 7;
+        let mut c2 = [PAD_COL; 8];
+        c2[3] = 11;
+        blocks.push_block(0, &c1, &t1);
+        blocks.push_block(1, &c2, &t2);
+        assert_eq!(blocks.block_values(0), &[1.0, 2.0]);
+        assert_eq!(blocks.block_values(1), &[4.0]);
+        blocks.validate().unwrap();
+    }
+}

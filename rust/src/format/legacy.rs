@@ -1,0 +1,133 @@
+//! Baseline TC-block formats for the Bit-Decoding ablation (Table 8).
+//!
+//! * **TCF** (TC-GNN): per-block element lists; each element knows its
+//!   row-in-window, and finding a value's position requires traversing
+//!   the preceding elements of the block (the overhead Bit-Decoding
+//!   eliminates for SDDMM write-back).
+//! * **ME-TCF** (DTC-SpMM): memory-efficient variant that decodes
+//!   through a staging buffer (the shared-memory construction step);
+//!   structurally it stores per-element (row, slot) coordinates.
+//!
+//! Both formats represent the same blocks as [`super::TcBlocks`]; the
+//! executor variants in `exec::native` consume each format with its
+//! characteristic access pattern so the ablation measures the format
+//! difference, not a workload difference.
+
+use super::blocks::TcBlocks;
+
+/// TCF-style block storage: explicit (row, slot) coordinate per element.
+#[derive(Debug, Clone, Default)]
+pub struct TcfBlocks {
+    pub k: usize,
+    pub window_of: Vec<u32>,
+    pub cols: Vec<u32>,
+    /// per-element row-in-window (parallel to `values`)
+    pub elem_row: Vec<u8>,
+    /// per-element vector slot (parallel to `values`)
+    pub elem_slot: Vec<u8>,
+    pub val_ptr: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl TcfBlocks {
+    /// Convert from the bitmap format (the element order is preserved).
+    pub fn from_bitmap(blocks: &TcBlocks) -> Self {
+        let k = blocks.k;
+        let mut elem_row = Vec::with_capacity(blocks.nnz());
+        let mut elem_slot = Vec::with_capacity(blocks.nnz());
+        for b in 0..blocks.n_blocks() {
+            let mut rest = blocks.bitmaps[b];
+            while rest != 0 {
+                let bit = rest.trailing_zeros() as usize;
+                elem_row.push((bit / k) as u8);
+                elem_slot.push((bit % k) as u8);
+                rest &= rest - 1;
+            }
+        }
+        Self {
+            k,
+            window_of: blocks.window_of.clone(),
+            cols: blocks.cols.clone(),
+            elem_row,
+            elem_slot,
+            val_ptr: blocks.val_ptr.clone(),
+            values: blocks.values.clone(),
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.val_ptr.len() - 1
+    }
+
+    /// Find the value at (r, c) of block `b` by forward traversal —
+    /// the access pattern TC-GNN pays during SDDMM write-back. Counts
+    /// visited elements into `steps` so benchmarks can report traversal
+    /// overhead.
+    pub fn find_traverse(&self, b: usize, r: usize, c: usize, steps: &mut usize) -> Option<f32> {
+        let (s, e) = (self.val_ptr[b] as usize, self.val_ptr[b + 1] as usize);
+        for i in s..e {
+            *steps += 1;
+            if self.elem_row[i] as usize == r && self.elem_slot[i] as usize == c {
+                return Some(self.values[i]);
+            }
+        }
+        None
+    }
+
+    /// Decode block `b` into a dense 8 x k tile (staging-buffer style).
+    pub fn decode(&self, b: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), 8 * self.k);
+        out.fill(0.0);
+        let (s, e) = (self.val_ptr[b] as usize, self.val_ptr[b + 1] as usize);
+        for i in s..e {
+            out[self.elem_row[i] as usize * self.k + self.elem_slot[i] as usize] = self.values[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::PAD_COL;
+
+    fn sample_blocks() -> TcBlocks {
+        let mut blocks = TcBlocks::new(8);
+        let mut tile = vec![0f32; 64];
+        tile[0] = 1.0; // (0,0)
+        tile[2 * 8 + 3] = 2.0; // (2,3)
+        tile[7 * 8 + 7] = 3.0; // (7,7)
+        let mut cols = [PAD_COL; 8];
+        cols[0] = 0;
+        cols[3] = 5;
+        cols[7] = 9;
+        blocks.push_block(0, &cols, &tile);
+        blocks
+    }
+
+    #[test]
+    fn conversion_preserves_values() {
+        let bm = sample_blocks();
+        let tcf = TcfBlocks::from_bitmap(&bm);
+        assert_eq!(tcf.values, bm.values);
+        assert_eq!(tcf.n_blocks(), 1);
+        let mut d1 = vec![0f32; 64];
+        let mut d2 = vec![0f32; 64];
+        bm.decode(0, &mut d1);
+        tcf.decode(0, &mut d2);
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn traversal_counts_steps() {
+        let tcf = TcfBlocks::from_bitmap(&sample_blocks());
+        let mut steps = 0;
+        assert_eq!(tcf.find_traverse(0, 7, 7, &mut steps), Some(3.0));
+        assert_eq!(steps, 3); // had to walk all preceding elements
+        let mut steps2 = 0;
+        assert_eq!(tcf.find_traverse(0, 0, 0, &mut steps2), Some(1.0));
+        assert_eq!(steps2, 1);
+        let mut steps3 = 0;
+        assert_eq!(tcf.find_traverse(0, 5, 5, &mut steps3), None);
+        assert_eq!(steps3, 3);
+    }
+}

@@ -1,0 +1,25 @@
+//! Storage formats for the structured ("TC block") portion of the
+//! workload: bitmap-compressed TC blocks with Bit-Decoding, plus the
+//! TCF / ME-TCF baseline formats used in the ablation study.
+//!
+//! A **TC block** is an `m x k` tile assembled from nonzero column
+//! vectors of one row window (`m = 8` rows; `k = 8` vector slots for
+//! SpMM, `k = 16` for SDDMM). Only the nonzero values are stored; the
+//! positions are a row-major bitmap, exactly the paper's Bit-Decoding
+//! layout: bit `r*k + c` set ⇔ block element `(r, c)` is nonzero, and
+//! the value of the `i`-th set bit (in ascending bit order) is
+//! `values[i]`.
+
+pub mod bitmap;
+pub mod blocks;
+pub mod legacy;
+
+pub use bitmap::{decode_block, encode_block, prefix_popcount};
+pub use blocks::{TcBlocks, PAD_COL};
+
+/// Rows per window (the paper's SGT window height / MMA `m`).
+pub const WINDOW: usize = 8;
+/// Vector slots per SpMM TC block (MMA `k` after swap-and-transpose).
+pub const SPMM_BLOCK_K: usize = 8;
+/// Vector slots per SDDMM TC block (MMA `n`).
+pub const SDDMM_BLOCK_N: usize = 16;

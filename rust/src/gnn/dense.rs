@@ -1,0 +1,245 @@
+//! Dense compute for the GNN layers: tiled PJRT artifacts with a
+//! native fallback. Node dimension is tiled at `TILE_T` rows to match
+//! the AOT bucket shapes; tails are zero-padded (row-local ops, so
+//! padding is neutral — verified in python/tests/test_model.py).
+
+use super::DenseBackend;
+use crate::runtime::Input;
+use crate::sparse::Dense;
+use anyhow::Result;
+
+/// Row-tile size of the linear artifacts (`aot.py: LINEAR_TILE_T`).
+pub const TILE_T: usize = 2048;
+
+/// `Y = X @ W`, optionally fused with relu.
+pub fn linear(backend: &DenseBackend, x: &Dense, w: &Dense, relu: bool) -> Result<Dense> {
+    anyhow::ensure!(x.cols == w.rows, "linear shape mismatch");
+    match backend {
+        DenseBackend::Native => {
+            let mut y = x.matmul(w);
+            if relu {
+                for v in y.data.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            Ok(y)
+        }
+        DenseBackend::Pjrt(rt) => {
+            let (k, n) = (w.rows, w.cols);
+            let art = if relu {
+                format!("linear_relu_{TILE_T}x{k}x{n}")
+            } else {
+                format!("linear_{TILE_T}x{k}x{n}")
+            };
+            if rt.manifest.find(&art).is_none() {
+                // no artifact bucket for this shape: native fallback
+                return linear(&DenseBackend::Native, x, w, relu);
+            }
+            let mut y = Dense::zeros(x.rows, n);
+            let mut xin = vec![0f32; TILE_T * k];
+            let mut t0 = 0usize;
+            while t0 < x.rows {
+                let t1 = (t0 + TILE_T).min(x.rows);
+                let rows = t1 - t0;
+                xin[..rows * k].copy_from_slice(&x.data[t0 * k..t1 * k]);
+                xin[rows * k..].fill(0.0);
+                let outs = rt.execute_f32(&art, &[Input::F32(&xin), Input::F32(&w.data)])?;
+                y.data[t0 * n..t1 * n].copy_from_slice(&outs[0][..rows * n]);
+                t0 = t1;
+            }
+            Ok(y)
+        }
+    }
+}
+
+/// `dW = Xᵀ @ dY` (tile contributions accumulated).
+pub fn grad_w(backend: &DenseBackend, x: &Dense, dy: &Dense) -> Result<Dense> {
+    anyhow::ensure!(x.rows == dy.rows, "grad_w shape mismatch");
+    match backend {
+        DenseBackend::Native => Ok(x.transpose().matmul(dy)),
+        DenseBackend::Pjrt(rt) => {
+            let (k, n) = (x.cols, dy.cols);
+            let art = format!("grad_w_{TILE_T}x{k}x{n}");
+            if rt.manifest.find(&art).is_none() {
+                return grad_w(&DenseBackend::Native, x, dy);
+            }
+            let mut dw = Dense::zeros(k, n);
+            let mut xin = vec![0f32; TILE_T * k];
+            let mut dyin = vec![0f32; TILE_T * n];
+            let mut t0 = 0usize;
+            while t0 < x.rows {
+                let t1 = (t0 + TILE_T).min(x.rows);
+                let rows = t1 - t0;
+                xin[..rows * k].copy_from_slice(&x.data[t0 * k..t1 * k]);
+                xin[rows * k..].fill(0.0);
+                dyin[..rows * n].copy_from_slice(&dy.data[t0 * n..t1 * n]);
+                dyin[rows * n..].fill(0.0);
+                let outs = rt.execute_f32(&art, &[Input::F32(&xin), Input::F32(&dyin)])?;
+                for (d, &s) in dw.data.iter_mut().zip(&outs[0]) {
+                    *d += s;
+                }
+                t0 = t1;
+            }
+            Ok(dw)
+        }
+    }
+}
+
+/// `dX = dY @ Wᵀ`.
+pub fn grad_x(backend: &DenseBackend, dy: &Dense, w: &Dense) -> Result<Dense> {
+    anyhow::ensure!(dy.cols == w.cols, "grad_x shape mismatch");
+    match backend {
+        DenseBackend::Native => Ok(dy.matmul(&w.transpose())),
+        DenseBackend::Pjrt(rt) => {
+            let (k, n) = (w.rows, w.cols);
+            let art = format!("grad_x_{TILE_T}x{k}x{n}");
+            if rt.manifest.find(&art).is_none() {
+                return grad_x(&DenseBackend::Native, dy, w);
+            }
+            let mut dx = Dense::zeros(dy.rows, k);
+            let mut dyin = vec![0f32; TILE_T * n];
+            let mut t0 = 0usize;
+            while t0 < dy.rows {
+                let t1 = (t0 + TILE_T).min(dy.rows);
+                let rows = t1 - t0;
+                dyin[..rows * n].copy_from_slice(&dy.data[t0 * n..t1 * n]);
+                dyin[rows * n..].fill(0.0);
+                let outs = rt.execute_f32(&art, &[Input::F32(&dyin), Input::F32(&w.data)])?;
+                dx.data[t0 * k..t1 * k].copy_from_slice(&outs[0][..rows * k]);
+                t0 = t1;
+            }
+            Ok(dx)
+        }
+    }
+}
+
+/// relu backward given the forward *output*.
+pub fn relu_bwd(y: &Dense, dy: &Dense) -> Dense {
+    let mut dx = dy.clone();
+    for (d, &yv) in dx.data.iter_mut().zip(&y.data) {
+        if yv <= 0.0 {
+            *d = 0.0;
+        }
+    }
+    dx
+}
+
+/// Mean softmax cross-entropy over masked rows; returns (loss, dlogits).
+pub fn softmax_xent(logits: &Dense, labels: &[u32], mask: &[bool]) -> (f64, Dense) {
+    let (n, c) = (logits.rows, logits.cols);
+    let mut dl = Dense::zeros(n, c);
+    let mut loss = 0f64;
+    let count = mask.iter().filter(|&&m| m).count().max(1) as f64;
+    for i in 0..n {
+        if !mask[i] {
+            continue;
+        }
+        let row = logits.row(i);
+        let zmax = row.iter().cloned().fold(f32::MIN, f32::max);
+        let sum: f32 = row.iter().map(|&z| (z - zmax).exp()).sum();
+        let logsum = sum.ln();
+        let label = labels[i] as usize;
+        loss += -((row[label] - zmax - logsum) as f64);
+        let drow = dl.row_mut(i);
+        for j in 0..c {
+            let p = (row[j] - zmax).exp() / sum;
+            drow[j] = (p - if j == label { 1.0 } else { 0.0 }) / count as f32;
+        }
+    }
+    (loss / count, dl)
+}
+
+/// Accuracy over all (or masked) nodes.
+pub fn accuracy(logits: &Dense, labels: &[u32]) -> f64 {
+    let mut correct = 0usize;
+    for i in 0..logits.rows {
+        let row = logits.row(i);
+        let mut best = 0usize;
+        for j in 1..logits.cols {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        if best as u32 == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / logits.rows.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn rt() -> Option<DenseBackend> {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping pjrt dense test: run `make artifacts`");
+            return None;
+        }
+        Some(DenseBackend::Pjrt(std::sync::Arc::new(
+            crate::runtime::Runtime::open("artifacts").unwrap(),
+        )))
+    }
+
+    #[test]
+    fn pjrt_linear_matches_native_with_tail() {
+        let Some(backend) = rt() else { return };
+        let mut rng = SplitMix64::new(160);
+        // rows > TILE_T to exercise tiling + tail padding
+        let x = Dense::random(&mut rng, TILE_T + 300, 64);
+        let w = Dense::random(&mut rng, 64, 16);
+        let y_pjrt = linear(&backend, &x, &w, false).unwrap();
+        let y_native = linear(&DenseBackend::Native, &x, &w, false).unwrap();
+        assert!(y_pjrt.allclose(&y_native, 1e-3), "diff {}", y_pjrt.max_abs_diff(&y_native));
+        let r_pjrt = linear(&backend, &x, &w, true).unwrap();
+        assert!(r_pjrt.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn pjrt_grads_match_native() {
+        let Some(backend) = rt() else { return };
+        let mut rng = SplitMix64::new(161);
+        let x = Dense::random(&mut rng, 500, 64);
+        let dy = Dense::random(&mut rng, 500, 16);
+        let w = Dense::random(&mut rng, 64, 16);
+        let dw = grad_w(&backend, &x, &dy).unwrap();
+        let dw_n = grad_w(&DenseBackend::Native, &x, &dy).unwrap();
+        assert!(dw.allclose(&dw_n, 1e-2), "dw diff {}", dw.max_abs_diff(&dw_n));
+        let dx = grad_x(&backend, &dy, &w).unwrap();
+        let dx_n = grad_x(&DenseBackend::Native, &dy, &w).unwrap();
+        assert!(dx.allclose(&dx_n, 1e-3), "dx diff {}", dx.max_abs_diff(&dx_n));
+    }
+
+    #[test]
+    fn softmax_xent_gradient_check() {
+        let mut rng = SplitMix64::new(162);
+        let logits = Dense::random(&mut rng, 6, 4);
+        let labels = vec![0u32, 1, 2, 3, 0, 1];
+        let mask = vec![true, true, true, false, true, true];
+        let (loss, dl) = softmax_xent(&logits, &labels, &mask);
+        assert!(loss > 0.0);
+        assert!(dl.row(3).iter().all(|&v| v == 0.0), "masked row must not contribute");
+        // numeric gradient check on one entry
+        let eps = 1e-3;
+        let mut lp = logits.clone();
+        lp[(0, 2)] += eps;
+        let (loss_p, _) = softmax_xent(&lp, &labels, &mask);
+        let num = ((loss_p - loss) / eps as f64) as f32;
+        assert!((num - dl[(0, 2)]).abs() < 1e-2, "numeric {num} vs analytic {}", dl[(0, 2)]);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = Dense::from_vec(2, 2, vec![0.9, 0.1, 0.2, 0.8]);
+        assert_eq!(accuracy(&logits, &[0, 1]), 1.0);
+        assert_eq!(accuracy(&logits, &[1, 0]), 0.0);
+    }
+
+    #[test]
+    fn relu_bwd_masks() {
+        let y = Dense::from_vec(1, 3, vec![0.0, 2.0, 3.0]);
+        let dy = Dense::from_vec(1, 3, vec![1.0, 1.0, 1.0]);
+        assert_eq!(relu_bwd(&y, &dy).data, vec![0.0, 1.0, 1.0]);
+    }
+}

@@ -1,0 +1,77 @@
+//! End-to-end GNN training on the Libra kernels (paper §5.5).
+//!
+//! GCN and AGNN with manual forward/backward passes: sparse
+//! aggregation / attention goes through the hybrid SpMM / SDDMM
+//! executors; dense layer compute goes through the tiled PJRT
+//! artifacts (with a native fallback for artifact-less builds).
+
+pub mod agnn;
+pub mod data;
+pub mod dense;
+pub mod gcn;
+pub mod trainer;
+
+pub use data::GraphData;
+pub use trainer::{TrainConfig, TrainStats};
+
+/// Which backend executes the dense (linear / loss) compute.
+#[derive(Clone)]
+pub enum DenseBackend {
+    Pjrt(std::sync::Arc<crate::runtime::Runtime>),
+    Native,
+}
+
+impl std::fmt::Debug for DenseBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DenseBackend::Pjrt(_) => write!(f, "Pjrt"),
+            DenseBackend::Native => write!(f, "Native"),
+        }
+    }
+}
+
+/// Numeric precision for the precision-convergence study (Fig. 13).
+/// Bf16 emulates bfloat16 by rounding activations/weights after every
+/// dense op (the structured kernels have real bf16 artifact variants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    Bf16,
+}
+
+/// Round an f32 to bf16 precision (truncate mantissa, round-to-nearest-even).
+#[inline]
+pub fn round_bf16(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+    f32::from_bits(rounded & 0xFFFF_0000)
+}
+
+/// Round a whole buffer in place.
+pub fn round_bf16_buf(xs: &mut [f32]) {
+    for x in xs {
+        *x = round_bf16(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_rounding() {
+        assert_eq!(round_bf16(1.0), 1.0);
+        assert_eq!(round_bf16(0.0), 0.0);
+        // bf16 has 8 mantissa bits: 1 + 2^-9 rounds to 1
+        let x = 1.0 + 2f32.powi(-9);
+        assert_eq!(round_bf16(x), 1.0);
+        // 1 + 2^-7 is representable
+        let y = 1.0 + 2f32.powi(-7);
+        assert_eq!(round_bf16(y), y);
+        // relative error bounded by 2^-8
+        for v in [3.14159f32, -271.828, 1e-3, 1e6] {
+            let r = round_bf16(v);
+            assert!(((r - v) / v).abs() < 2f32.powi(-8), "{v} -> {r}");
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! Training loops for the end-to-end evaluation (Figs. 12 & 13) with
+//! Adam, per-epoch timing, and preprocessing-overhead accounting
+//! (paper §5.6).
+
+use super::agnn::Agnn;
+use super::data::GraphData;
+use super::dense::{accuracy, softmax_xent};
+use super::gcn::Gcn;
+use super::{DenseBackend, Precision};
+use crate::dist::DistParams;
+use crate::exec::TcBackend;
+use crate::sparse::Dense;
+use crate::util::Timer;
+use anyhow::Result;
+
+/// Training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    pub hidden: usize,
+    pub layers: usize,
+    pub precision: Precision,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { epochs: 300, lr: 0.01, hidden: 64, layers: 5, precision: Precision::F32, seed: 1 }
+    }
+}
+
+/// Per-run statistics: the numbers Figs. 12/13 and §5.6 report.
+#[derive(Debug, Clone, Default)]
+pub struct TrainStats {
+    pub loss_curve: Vec<f64>,
+    pub acc_curve: Vec<f64>,
+    /// seconds per epoch
+    pub epoch_times: Vec<f64>,
+    /// one-time preprocessing seconds (distribution+balancing+formats)
+    pub prep_time: f64,
+    pub final_accuracy: f64,
+}
+
+impl TrainStats {
+    pub fn total_train_time(&self) -> f64 {
+        self.epoch_times.iter().sum()
+    }
+
+    /// Preprocessing share of total runtime (paper: 0.4% for GCN).
+    pub fn prep_fraction(&self) -> f64 {
+        let total = self.total_train_time() + self.prep_time;
+        if total == 0.0 {
+            return 0.0;
+        }
+        self.prep_time / total
+    }
+}
+
+/// Simple Adam optimizer state for a list of tensors.
+pub struct Adam {
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    t: i32,
+    pub lr: f32,
+}
+
+impl Adam {
+    pub fn new(shapes: &[usize], lr: f32) -> Self {
+        Self {
+            m: shapes.iter().map(|&n| vec![0.0; n]).collect(),
+            v: shapes.iter().map(|&n| vec![0.0; n]).collect(),
+            t: 0,
+            lr,
+        }
+    }
+
+    pub fn step(&mut self, params: &mut [&mut [f32]], grads: &[&[f32]]) {
+        const B1: f32 = 0.9;
+        const B2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        self.t += 1;
+        let bc1 = 1.0 - B1.powi(self.t);
+        let bc2 = 1.0 - B2.powi(self.t);
+        for ((p, g), (m, v)) in
+            params.iter_mut().zip(grads).zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            for i in 0..p.len() {
+                m[i] = B1 * m[i] + (1.0 - B1) * g[i];
+                v[i] = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
+                let mh = m[i] / bc1;
+                let vh = v[i] / bc2;
+                p[i] -= self.lr * mh / (vh.sqrt() + EPS);
+            }
+        }
+    }
+}
+
+/// Train a GCN on `data`; one hybrid-SpMM plan reused for all epochs.
+pub fn train_gcn(
+    data: &GraphData,
+    cfg: &TrainConfig,
+    dist: &DistParams,
+    tc_backend: TcBackend,
+    backend: DenseBackend,
+) -> Result<TrainStats> {
+    let prep_timer = Timer::start();
+    let mut dims = vec![data.features.cols];
+    for _ in 0..cfg.layers - 1 {
+        dims.push(cfg.hidden);
+    }
+    dims.push(data.n_classes);
+    let mut gcn = Gcn::new(&data.adj, &dims, dist, tc_backend, backend, cfg.precision, cfg.seed);
+    let prep_time = prep_timer.elapsed_secs();
+
+    let shapes: Vec<usize> = gcn.weights.iter().map(|w| w.data.len()).collect();
+    let mut adam = Adam::new(&shapes, cfg.lr);
+    let mut stats = TrainStats { prep_time, ..Default::default() };
+
+    for _epoch in 0..cfg.epochs {
+        let t = Timer::start();
+        let fwd = gcn.forward(&data.features)?;
+        let (loss, dlogits) = softmax_xent(&fwd.logits, &data.labels, &data.train_mask);
+        let grads = gcn.backward(&fwd, &dlogits)?;
+        {
+            let mut params: Vec<&mut [f32]> =
+                gcn.weights.iter_mut().map(|w| w.data.as_mut_slice()).collect();
+            let grad_refs: Vec<&[f32]> = grads.iter().map(|g| g.data.as_slice()).collect();
+            adam.step(&mut params, &grad_refs);
+        }
+        stats.epoch_times.push(t.elapsed_secs());
+        stats.loss_curve.push(loss);
+        stats.acc_curve.push(accuracy(&fwd.logits, &data.labels));
+    }
+    stats.final_accuracy = *stats.acc_curve.last().unwrap_or(&0.0);
+    Ok(stats)
+}
+
+/// Train an AGNN on `data`.
+pub fn train_agnn(
+    data: &GraphData,
+    cfg: &TrainConfig,
+    dist: &DistParams,
+    tc_backend: TcBackend,
+    backend: DenseBackend,
+) -> Result<TrainStats> {
+    let prep_timer = Timer::start();
+    let mut agnn = Agnn::new(
+        &data.adj_raw,
+        data.features.cols,
+        cfg.hidden,
+        data.n_classes,
+        cfg.layers.saturating_sub(2).max(1),
+        dist,
+        tc_backend,
+        backend,
+        cfg.seed,
+    );
+    let prep_time = prep_timer.elapsed_secs();
+    let mut adam = Adam::new(
+        &[agnn.w0.data.len(), agnn.w1.data.len(), agnn.betas.len()],
+        cfg.lr,
+    );
+    let mut stats = TrainStats { prep_time, ..Default::default() };
+
+    for _epoch in 0..cfg.epochs {
+        let t = Timer::start();
+        let logits = agnn.forward(&data.features)?;
+        let (loss, dlogits) = softmax_xent(&logits, &data.labels, &data.train_mask);
+        let (dw0, dw1, dbetas) = agnn.backward(&dlogits)?;
+        {
+            let Agnn { w0, w1, betas, .. } = &mut agnn;
+            let mut params: Vec<&mut [f32]> =
+                vec![w0.data.as_mut_slice(), w1.data.as_mut_slice(), betas.as_mut_slice()];
+            let grad_refs: Vec<&[f32]> = vec![&dw0.data, &dw1.data, &dbetas];
+            adam.step(&mut params, &grad_refs);
+        }
+        stats.epoch_times.push(t.elapsed_secs());
+        stats.loss_curve.push(loss);
+        stats.acc_curve.push(accuracy(&logits, &data.labels));
+    }
+    stats.final_accuracy = *stats.acc_curve.last().unwrap_or(&0.0);
+    Ok(stats)
+}
+
+/// Dummy forward-only epoch timing for inference benchmarks.
+pub fn time_gcn_inference(
+    data: &GraphData,
+    cfg: &TrainConfig,
+    dist: &DistParams,
+    tc_backend: TcBackend,
+    backend: DenseBackend,
+    reps: usize,
+) -> Result<(f64, Dense)> {
+    let mut dims = vec![data.features.cols];
+    for _ in 0..cfg.layers - 1 {
+        dims.push(cfg.hidden);
+    }
+    dims.push(data.n_classes);
+    let mut gcn = Gcn::new(&data.adj, &dims, dist, tc_backend, backend, cfg.precision, cfg.seed);
+    let t = Timer::start();
+    let mut out = None;
+    for _ in 0..reps {
+        out = Some(gcn.forward(&data.features)?.logits);
+    }
+    Ok((t.elapsed_secs() / reps as f64, out.unwrap()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::data::planted_partition;
+
+    #[test]
+    fn gcn_trains_to_high_accuracy() {
+        let data = planted_partition("cora_syn_test", 300, 5, 6.0, 0.85, 32, 3);
+        let cfg = TrainConfig { epochs: 60, lr: 0.02, hidden: 16, layers: 3, ..Default::default() };
+        let stats = train_gcn(
+            &data,
+            &cfg,
+            &DistParams::default(),
+            TcBackend::NativeBitmap,
+            DenseBackend::Native,
+        )
+        .unwrap();
+        assert!(stats.final_accuracy > 0.7, "acc {}", stats.final_accuracy);
+        assert!(stats.loss_curve.last().unwrap() < &stats.loss_curve[0]);
+        assert!(stats.prep_time > 0.0);
+        assert_eq!(stats.epoch_times.len(), 60);
+    }
+
+    #[test]
+    fn bf16_converges_like_f32() {
+        // Fig 13: precision must not materially change convergence
+        let data = planted_partition("pubmed_syn_test", 300, 3, 6.0, 0.85, 32, 4);
+        let base = TrainConfig { epochs: 50, lr: 0.02, hidden: 16, layers: 3, ..Default::default() };
+        let f32_stats = train_gcn(
+            &data,
+            &base,
+            &DistParams::default(),
+            TcBackend::NativeBitmap,
+            DenseBackend::Native,
+        )
+        .unwrap();
+        let bf16_cfg = TrainConfig { precision: Precision::Bf16, ..base };
+        let bf16_stats = train_gcn(
+            &data,
+            &bf16_cfg,
+            &DistParams::default(),
+            TcBackend::NativeBitmap,
+            DenseBackend::Native,
+        )
+        .unwrap();
+        assert!(
+            (f32_stats.final_accuracy - bf16_stats.final_accuracy).abs() < 0.1,
+            "f32 {} vs bf16 {}",
+            f32_stats.final_accuracy,
+            bf16_stats.final_accuracy
+        );
+    }
+
+    #[test]
+    fn agnn_trains() {
+        let data = planted_partition("agnn_test", 200, 4, 5.0, 0.85, 24, 5);
+        let cfg = TrainConfig { epochs: 40, lr: 0.02, hidden: 16, layers: 4, ..Default::default() };
+        let stats = train_agnn(
+            &data,
+            &cfg,
+            &DistParams::default(),
+            TcBackend::NativeBitmap,
+            DenseBackend::Native,
+        )
+        .unwrap();
+        assert!(stats.final_accuracy > 0.5, "acc {}", stats.final_accuracy);
+        assert!(stats.loss_curve.last().unwrap() < &stats.loss_curve[0]);
+    }
+
+    #[test]
+    fn prep_fraction_small() {
+        let data = planted_partition("prep_test", 400, 4, 8.0, 0.8, 32, 6);
+        let cfg = TrainConfig { epochs: 30, lr: 0.02, hidden: 16, layers: 3, ..Default::default() };
+        let stats = train_gcn(
+            &data,
+            &cfg,
+            &DistParams::default(),
+            TcBackend::NativeBitmap,
+            DenseBackend::Native,
+        )
+        .unwrap();
+        // preprocessing amortized over epochs must be a small fraction
+        assert!(stats.prep_fraction() < 0.25, "prep fraction {}", stats.prep_fraction());
+    }
+}

@@ -1,0 +1,18 @@
+//! Libra: heterogeneous sparse matrix multiplication (SpMM / SDDMM).
+//!
+//! Reproduction of "Libra: Synergizing CUDA and Tensor Cores for
+//! High-Performance Sparse Matrix Multiplication" on the
+//! Rust + JAX + Pallas (AOT via PJRT) stack.
+
+pub mod balance;
+pub mod bench;
+pub mod baselines;
+pub mod costmodel;
+pub mod exec;
+pub mod prep;
+pub mod runtime;
+pub mod dist;
+pub mod format;
+pub mod gnn;
+pub mod sparse;
+pub mod util;

@@ -1,0 +1,254 @@
+//! Libra CLI: preprocess, run, and inspect hybrid sparse operators.
+//!
+//! Subcommands:
+//!   spmm   --matrix <.mtx|gen:SPEC> [--n 128] [--theta N|auto] [--backend native|pjrt]
+//!   sddmm  --matrix <.mtx|gen:SPEC> [--k 32]  [--theta N|auto] [--backend native|pjrt]
+//!   stats  --matrix <.mtx|gen:SPEC>            sparsity profile + distribution preview
+//!   tune   [--n 128] [--k 32]                  print tuned thresholds per profile
+//!   gnn    [--model gcn|agnn] [--epochs 50]    train on a synthetic citation graph
+//!
+//! `gen:SPEC` synthesizes a matrix, e.g. `gen:powerlaw:4096:12` or
+//! `gen:banded:2048:6`, `gen:uniform:4096:0.001`, `gen:blockdiag:2048:24`.
+
+use anyhow::{bail, Context, Result};
+use libra::balance::BalanceParams;
+use libra::costmodel::{self, HardwareProfile};
+use libra::dist::{DistParams, Op};
+use libra::exec::sddmm::SddmmExecutor;
+use libra::exec::{SpmmExecutor, TcBackend};
+use libra::sparse::{gen, mm_io, Csr, Dense};
+use libra::util::SplitMix64;
+use std::collections::HashMap;
+
+fn main() -> Result<()> {
+    libra::util::logger::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "spmm" => cmd_spmm(&flags),
+        "sddmm" => cmd_sddmm(&flags),
+        "stats" => cmd_stats(&flags),
+        "tune" => cmd_tune(&flags),
+        "gnn" => cmd_gnn(&flags),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try --help)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "libra — heterogeneous sparse matrix multiplication\n\n\
+         usage: libra <spmm|sddmm|stats|tune|gnn> [flags]\n\
+         \x20 spmm   --matrix <path.mtx|gen:SPEC> [--n 128] [--theta auto] [--backend native]\n\
+         \x20 sddmm  --matrix <path.mtx|gen:SPEC> [--k 32]  [--theta auto] [--backend native]\n\
+         \x20 stats  --matrix <path.mtx|gen:SPEC>\n\
+         \x20 tune   [--n 128] [--k 32]\n\
+         \x20 gnn    [--model gcn] [--epochs 50]\n\
+         gen:SPEC: gen:powerlaw:N:DEG | gen:banded:N:BAND | gen:uniform:N:DENSITY | gen:blockdiag:N:BLOCKS"
+    );
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).filter(|v| !v.starts_with("--"));
+            match val {
+                Some(v) => {
+                    map.insert(key.to_string(), v.clone());
+                    i += 2;
+                }
+                None => {
+                    map.insert(key.to_string(), "true".into());
+                    i += 1;
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    map
+}
+
+fn load_matrix(flags: &HashMap<String, String>) -> Result<Csr> {
+    let spec = flags.get("matrix").context("--matrix required")?;
+    if let Some(genspec) = spec.strip_prefix("gen:") {
+        let parts: Vec<&str> = genspec.split(':').collect();
+        let mut rng = SplitMix64::new(
+            flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(42),
+        );
+        let n: usize = parts.get(1).and_then(|s| s.parse().ok()).unwrap_or(4096);
+        Ok(match parts[0] {
+            "powerlaw" => {
+                let deg: f64 = parts.get(2).and_then(|s| s.parse().ok()).unwrap_or(12.0);
+                gen::power_law(&mut rng, n, deg, 2.0)
+            }
+            "banded" => {
+                let band: usize = parts.get(2).and_then(|s| s.parse().ok()).unwrap_or(6);
+                gen::banded(&mut rng, n, band, 0.6)
+            }
+            "uniform" => {
+                let d: f64 = parts.get(2).and_then(|s| s.parse().ok()).unwrap_or(1e-3);
+                gen::uniform_random(&mut rng, n, n, d)
+            }
+            "blockdiag" => {
+                let blocks: usize = parts.get(2).and_then(|s| s.parse().ok()).unwrap_or(24);
+                gen::block_diag_noise(&mut rng, n, blocks, 0.4, 1e-3)
+            }
+            other => bail!("unknown generator '{other}'"),
+        })
+    } else {
+        mm_io::read_mtx_file(spec)
+    }
+}
+
+fn backend(flags: &HashMap<String, String>) -> Result<TcBackend> {
+    match flags.get("backend").map(String::as_str).unwrap_or("native") {
+        "native" => Ok(TcBackend::NativeBitmap),
+        "pjrt" => {
+            let rt = libra::runtime::Runtime::open_default()
+                .context("opening artifacts (run `make artifacts`)")?;
+            Ok(TcBackend::Pjrt(std::sync::Arc::new(rt)))
+        }
+        other => bail!("unknown backend '{other}'"),
+    }
+}
+
+fn theta(flags: &HashMap<String, String>, op: Op, n: usize) -> DistParams {
+    match flags.get("theta").map(String::as_str) {
+        None | Some("auto") => costmodel::substrate_params(op, n),
+        Some(v) => DistParams { threshold: v.parse().unwrap_or(3), fill_padding: true },
+    }
+}
+
+fn cmd_spmm(flags: &HashMap<String, String>) -> Result<()> {
+    let m = load_matrix(flags)?;
+    let n: usize = flags.get("n").and_then(|s| s.parse().ok()).unwrap_or(128);
+    let params = theta(flags, Op::Spmm, n);
+    let exec = SpmmExecutor::new(&m, &params, &BalanceParams::default(), backend(flags)?);
+    println!(
+        "matrix {}x{} nnz={} | theta={} -> {} blocks ({:.1}% padding), {} flex nnz",
+        m.rows,
+        m.cols,
+        m.nnz(),
+        params.threshold,
+        exec.dist.stats.n_blocks,
+        exec.dist.stats.padding_ratio * 100.0,
+        exec.dist.stats.nnz_flex
+    );
+    let mut rng = SplitMix64::new(1);
+    let b = Dense::random(&mut rng, m.cols, n);
+    exec.execute(&b)?; // warm
+    let t = std::time::Instant::now();
+    let reps = 5;
+    for _ in 0..reps {
+        std::hint::black_box(exec.execute(&b)?);
+    }
+    let secs = t.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "spmm N={n}: {:.3} ms, {:.2} GFLOPS, {} pjrt calls",
+        secs * 1e3,
+        2.0 * m.nnz() as f64 * n as f64 / secs / 1e9,
+        exec.counters.snapshot().pjrt_calls
+    );
+    Ok(())
+}
+
+fn cmd_sddmm(flags: &HashMap<String, String>) -> Result<()> {
+    let m = load_matrix(flags)?;
+    let k: usize = flags.get("k").and_then(|s| s.parse().ok()).unwrap_or(32);
+    let params = theta(flags, Op::Sddmm, k);
+    let exec = SddmmExecutor::new(&m, &params, backend(flags)?);
+    let mut rng = SplitMix64::new(2);
+    let a = Dense::random(&mut rng, m.rows, k);
+    let b = Dense::random(&mut rng, m.cols, k);
+    exec.execute(&a, &b)?;
+    let t = std::time::Instant::now();
+    let reps = 5;
+    for _ in 0..reps {
+        std::hint::black_box(exec.execute(&a, &b)?);
+    }
+    let secs = t.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "sddmm K={k}: theta={} | {:.3} ms, {:.2} GFLOPS ({:.1}% nnz structured)",
+        params.threshold,
+        secs * 1e3,
+        2.0 * m.nnz() as f64 * k as f64 / secs / 1e9,
+        exec.dist.stats.tc_fraction() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_stats(flags: &HashMap<String, String>) -> Result<()> {
+    let m = load_matrix(flags)?;
+    let p = libra::sparse::stats::profile(&m);
+    println!("rows={} cols={} nnz={}", p.rows, p.cols, p.nnz);
+    println!("avg row len {:.2} (max {}, std {:.2})", p.avg_row_len, p.max_row_len, p.row_len_std);
+    println!("nonzero 8x1 vectors: {} (mean nnz {:.2})", p.n_vectors, p.mean_vec_nnz);
+    println!("NNZ-1 vector ratio: {:.3}", p.nnz1_ratio);
+    let region = if p.nnz1_ratio > 0.75 {
+        "flexible-engine advantage"
+    } else if p.nnz1_ratio < 0.25 {
+        "structured-engine advantage"
+    } else {
+        "hybrid advantage"
+    };
+    println!("Fig-1 region: {region}");
+    for th in [1usize, 2, 3, 4, 8] {
+        let d = libra::dist::distribute_spmm(&m, &DistParams { threshold: th, fill_padding: true });
+        println!(
+            "  theta={th}: {:.1}% structured, {} blocks, {:.1}% padding",
+            d.stats.tc_fraction() * 100.0,
+            d.stats.n_blocks,
+            d.stats.padding_ratio * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_tune(flags: &HashMap<String, String>) -> Result<()> {
+    let n: usize = flags.get("n").and_then(|s| s.parse().ok()).unwrap_or(128);
+    let k: usize = flags.get("k").and_then(|s| s.parse().ok()).unwrap_or(32);
+    for hw in [HardwareProfile::h100(), HardwareProfile::cpu_substrate()] {
+        println!(
+            "{:>14}: peak ratio {:>5.1}x  theta_spmm(N={n}) = {}  theta_sddmm(K={k}) = {}",
+            hw.name,
+            hw.peak_ratio(),
+            costmodel::analytic_threshold(&hw, Op::Spmm, n),
+            costmodel::analytic_threshold(&hw, Op::Sddmm, k),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gnn(flags: &HashMap<String, String>) -> Result<()> {
+    use libra::gnn::data::planted_partition;
+    use libra::gnn::trainer::{train_agnn, train_gcn, TrainConfig};
+    use libra::gnn::DenseBackend;
+    let model = flags.get("model").map(String::as_str).unwrap_or("gcn");
+    let epochs: usize = flags.get("epochs").and_then(|s| s.parse().ok()).unwrap_or(50);
+    let data = planted_partition("cora_syn", 2708, 7, 6.0, 0.85, 128, 17);
+    let cfg = TrainConfig { epochs, lr: 0.01, hidden: 64, layers: 5, ..Default::default() };
+    let params = costmodel::substrate_params(Op::Spmm, cfg.hidden);
+    let stats = match model {
+        "gcn" => train_gcn(&data, &cfg, &params, TcBackend::NativeBitmap, DenseBackend::Native)?,
+        "agnn" => train_agnn(&data, &cfg, &params, TcBackend::NativeBitmap, DenseBackend::Native)?,
+        other => bail!("unknown model '{other}'"),
+    };
+    println!(
+        "{model}: {} epochs, final acc {:.3}, {:.1} ms/epoch, prep {:.2}%",
+        epochs,
+        stats.final_accuracy,
+        stats.total_train_time() / epochs as f64 * 1e3,
+        stats.prep_fraction() * 100.0
+    );
+    Ok(())
+}

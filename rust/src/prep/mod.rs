@@ -1,0 +1,238 @@
+//! Preprocessing pipeline (paper §4.5, Algorithm 1).
+//!
+//! Runs 2D-aware distribution + load balancing + format translation,
+//! either sequentially or parallelized across window ranges (the
+//! substrate analog of the paper's GPU-accelerated preprocessing vs
+//! the OpenMP CPU baseline in Table 8). Both paths produce bit-for-bit
+//! identical plans; only wall-clock differs.
+
+use crate::balance::{balance_spmm, BalanceParams, SpmmSchedule};
+use crate::dist::spmm::{assemble, distribute_window, SpmmDist, WindowOut};
+use crate::dist::{distribute_sddmm, DistParams, SddmmDist};
+use crate::format::WINDOW;
+use crate::sparse::Csr;
+use crossbeam_utils::thread;
+
+/// Complete preprocessed SpMM plan.
+#[derive(Debug, Clone)]
+pub struct SpmmPlan {
+    pub dist: SpmmDist,
+    pub sched: SpmmSchedule,
+}
+
+/// Preprocessing execution mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrepMode {
+    Sequential,
+    Parallel,
+}
+
+/// Preprocess an SpMM workload.
+pub fn preprocess_spmm(
+    m: &Csr,
+    dist_params: &DistParams,
+    balance_params: &BalanceParams,
+    mode: PrepMode,
+) -> SpmmPlan {
+    let dist = match mode {
+        PrepMode::Sequential => crate::dist::distribute_spmm(m, dist_params),
+        PrepMode::Parallel => distribute_spmm_parallel(m, dist_params),
+    };
+    let sched = balance_spmm(&dist, balance_params);
+    SpmmPlan { dist, sched }
+}
+
+/// Parallel distribution: window ranges on worker threads (Algorithm
+/// 1's thread-per-window mapping), then in-order assembly.
+pub fn distribute_spmm_parallel(m: &Csr, params: &DistParams) -> SpmmDist {
+    let n_windows = m.rows.div_ceil(WINDOW);
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    if n_windows == 0 {
+        return assemble(m.rows, m.cols, m.nnz(), &[]);
+    }
+    let chunk = n_windows.div_ceil(workers);
+    let mut parts: Vec<Vec<WindowOut>> = Vec::new();
+    thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|t| {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(n_windows);
+                s.spawn(move |_| {
+                    (lo..hi.max(lo)).map(|w| distribute_window(m, w, params)).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            parts.push(h.join().unwrap());
+        }
+    })
+    .unwrap();
+    let outs: Vec<WindowOut> = parts.into_iter().flatten().collect();
+    assemble(m.rows, m.cols, m.nnz(), &outs)
+}
+
+/// Preprocess an SDDMM workload. (Distribution is window-local, so the
+/// parallel path chunks windows the same way; SDDMM has no balancing
+/// arrays beyond chunking, which the executor does at dispatch.)
+pub fn preprocess_sddmm(m: &Csr, dist_params: &DistParams, mode: PrepMode) -> SddmmDist {
+    match mode {
+        PrepMode::Sequential => distribute_sddmm(m, dist_params),
+        PrepMode::Parallel => {
+            // window-parallel variant: SDDMM distribution is already
+            // window-local; reuse the sequential kernel on ranges and
+            // merge by concatenation (indices are global already).
+            distribute_sddmm_parallel(m, dist_params)
+        }
+    }
+}
+
+fn distribute_sddmm_parallel(m: &Csr, params: &DistParams) -> SddmmDist {
+    let n_windows = m.rows.div_ceil(WINDOW);
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    if n_windows <= 1 || workers <= 1 {
+        return distribute_sddmm(m, params);
+    }
+    let chunk = n_windows.div_ceil(workers);
+    // run the sequential distributor on row slices aligned to windows
+    let mut parts: Vec<SddmmDist> = Vec::new();
+    thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|t| {
+                let wlo = t * chunk;
+                let whi = ((t + 1) * chunk).min(n_windows);
+                s.spawn(move |_| {
+                    if wlo >= whi {
+                        return None;
+                    }
+                    let rlo = wlo * WINDOW;
+                    let rhi = (whi * WINDOW).min(m.rows);
+                    // a window-aligned row-slice view as its own CSR
+                    let sub = row_slice(m, rlo, rhi);
+                    let mut d = distribute_sddmm(&sub, params);
+                    // re-globalize: windows, rows, csr positions
+                    let base = m.row_ptr[rlo];
+                    for w in d.tc.window_of.iter_mut() {
+                        *w += wlo as u32;
+                    }
+                    for i in d.tc_out_idx.iter_mut() {
+                        *i += base;
+                    }
+                    for r in d.flex_rows.iter_mut() {
+                        *r += rlo as u32;
+                    }
+                    for i in d.flex_out_idx.iter_mut() {
+                        *i += base;
+                    }
+                    Some(d)
+                })
+            })
+            .collect();
+        for h in handles {
+            if let Some(d) = h.join().unwrap() {
+                parts.push(d);
+            }
+        }
+    })
+    .unwrap();
+
+    // concatenate parts (in window order)
+    let mut out = SddmmDist { rows: m.rows, cols: m.cols, ..Default::default() };
+    out.tc = crate::format::TcBlocks::new(crate::format::SDDMM_BLOCK_N);
+    for d in parts {
+        let val_base = out.tc.values.len() as u32;
+        out.tc.window_of.extend(d.tc.window_of);
+        out.tc.cols.extend(d.tc.cols);
+        out.tc.bitmaps.extend(d.tc.bitmaps);
+        out.tc.values.extend(d.tc.values);
+        out.tc.val_ptr.extend(d.tc.val_ptr[1..].iter().map(|&p| p + val_base));
+        out.tc_out_idx.extend(d.tc_out_idx);
+        out.flex_rows.extend(d.flex_rows);
+        out.flex_cols.extend(d.flex_cols);
+        out.flex_vals.extend(d.flex_vals);
+        out.flex_out_idx.extend(d.flex_out_idx);
+    }
+    let nnz_tc = out.tc.nnz();
+    out.stats = crate::dist::DistStats {
+        nnz_total: m.nnz(),
+        nnz_tc,
+        nnz_flex: m.nnz() - nnz_tc,
+        n_blocks: out.tc.n_blocks(),
+        n_windows,
+        padding_ratio: out.tc.padding_ratio(),
+    };
+    out
+}
+
+/// Extract rows `[rlo, rhi)` as an independent CSR (columns unchanged).
+fn row_slice(m: &Csr, rlo: usize, rhi: usize) -> Csr {
+    let s = m.row_ptr[rlo] as usize;
+    let e = m.row_ptr[rhi] as usize;
+    Csr {
+        rows: rhi - rlo,
+        cols: m.cols,
+        row_ptr: m.row_ptr[rlo..=rhi].iter().map(|&p| p - s as u32).collect(),
+        col_idx: m.col_idx[s..e].to_vec(),
+        values: m.values[s..e].to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::util::propcheck::{check, Config};
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn parallel_equals_sequential_spmm() {
+        check(Config::default().cases(15), "parallel == sequential prep", |rng| {
+            let rows = rng.range(1, 400);
+            let m = gen::uniform_random(rng, rows, 200, 0.05);
+            let params = DistParams::default();
+            let seq = crate::dist::distribute_spmm(&m, &params);
+            let par = distribute_spmm_parallel(&m, &params);
+            assert_eq!(seq.tc.bitmaps, par.tc.bitmaps);
+            assert_eq!(seq.tc.cols, par.tc.cols);
+            assert_eq!(seq.tc.values, par.tc.values);
+            assert_eq!(seq.flex_row_ptr, par.flex_row_ptr);
+            assert_eq!(seq.flex_cols, par.flex_cols);
+        });
+    }
+
+    #[test]
+    fn parallel_equals_sequential_sddmm() {
+        check(Config::default().cases(10), "parallel == sequential sddmm", |rng| {
+            let rows = rng.range(1, 300);
+            let m = gen::uniform_random(rng, rows, 150, 0.06);
+            let params = DistParams::sddmm_default();
+            let seq = distribute_sddmm(&m, &params);
+            let par = distribute_sddmm_parallel(&m, &params);
+            assert_eq!(seq.tc.bitmaps, par.tc.bitmaps);
+            assert_eq!(seq.tc_out_idx, par.tc_out_idx);
+            assert_eq!(seq.flex_out_idx, par.flex_out_idx);
+            par.validate_cover(&m).unwrap();
+        });
+    }
+
+    #[test]
+    fn plan_includes_schedule() {
+        let mut rng = SplitMix64::new(150);
+        let m = gen::power_law(&mut rng, 500, 10.0, 2.0);
+        let plan =
+            preprocess_spmm(&m, &DistParams::default(), &BalanceParams::default(), PrepMode::Parallel);
+        assert!(plan.sched.tc_segments.len() + plan.sched.long_tiles.len() + plan.sched.short_tiles.len() > 0);
+        assert_eq!(plan.sched.flex_elems(), plan.dist.flex_vals.len());
+    }
+
+    #[test]
+    fn row_slice_correct() {
+        let mut rng = SplitMix64::new(151);
+        let m = gen::uniform_random(&mut rng, 40, 30, 0.2);
+        let sub = row_slice(&m, 8, 24);
+        sub.validate().unwrap();
+        assert_eq!(sub.rows, 16);
+        for r in 0..16 {
+            assert_eq!(sub.row(r), m.row(r + 8));
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! PJRT client wrapper: compiles HLO-text artifacts once and serves
+//! typed execute calls from the hot path.
+//!
+//! Thread-safety: the `xla` crate's handles are `Rc`-based and not
+//! `Send`/`Sync`, but the underlying PJRT CPU client is thread-safe.
+//! All PJRT state lives behind one `Mutex`, and every operation —
+//! including `Rc` refcount manipulation — happens while holding it,
+//! which makes the `unsafe impl Send/Sync` below sound. (The CPU
+//! client parallelizes *inside* a call, so serializing calls costs
+//! little; the structured stream is a single issuing thread anyway.)
+
+use super::manifest::{ArtifactSpec, DType, Manifest};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A typed input tensor (borrowed host data).
+#[derive(Debug, Clone, Copy)]
+pub enum Input<'a> {
+    F32(&'a [f32]),
+    U32(&'a [u32]),
+    /// Raw bf16 payload (2 bytes/element, little-endian).
+    Bf16(&'a [u16]),
+}
+
+impl Input<'_> {
+    fn numel(&self) -> usize {
+        match self {
+            Input::F32(x) => x.len(),
+            Input::U32(x) => x.len(),
+            Input::Bf16(x) => x.len(),
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            Input::F32(_) => DType::F32,
+            Input::U32(_) => DType::U32,
+            Input::Bf16(_) => DType::Bf16,
+        }
+    }
+
+    fn bytes(&self) -> &[u8] {
+        // Safe reinterpretation of plain-old-data slices.
+        match self {
+            Input::F32(x) => unsafe {
+                std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4)
+            },
+            Input::U32(x) => unsafe {
+                std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4)
+            },
+            Input::Bf16(x) => unsafe {
+                std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 2)
+            },
+        }
+    }
+}
+
+fn element_type(dt: DType) -> xla::ElementType {
+    match dt {
+        DType::F32 => xla::ElementType::F32,
+        DType::U32 => xla::ElementType::U32,
+        DType::Bf16 => xla::ElementType::Bf16,
+    }
+}
+
+/// All non-thread-safe PJRT handles, guarded by the Runtime's mutex.
+struct PjrtState {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// The artifact runtime. Compilation is lazy (first use) and cached.
+/// `execute_f32` may be called from any thread.
+pub struct Runtime {
+    state: Mutex<PjrtState>,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    /// Cumulative PJRT calls (for the profiling benches).
+    pub calls: std::sync::atomic::AtomicU64,
+}
+
+// SAFETY: every access to the Rc-based PJRT handles goes through
+// `state: Mutex<PjrtState>`; no handle or clone escapes the lock.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Open an artifact directory (must contain manifest.json).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Self {
+            state: Mutex::new(PjrtState { client, exes: HashMap::new() }),
+            dir,
+            manifest,
+            calls: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Default artifact dir: `$LIBRA_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("LIBRA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(dir)
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.find(name).with_context(|| format!("unknown artifact {name}"))
+    }
+
+    /// Eagerly compile every artifact matching `filter` (startup warm-up).
+    pub fn warmup(&self, filter: impl Fn(&str) -> bool) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .map(|a| a.name.clone())
+            .filter(|n| filter(n))
+            .collect();
+        let mut state = self.state.lock().unwrap();
+        for n in &names {
+            Self::compile_locked(&mut state, &self.dir, n)?;
+        }
+        Ok(names.len())
+    }
+
+    fn compile_locked<'s>(
+        state: &'s mut PjrtState,
+        dir: &Path,
+        name: &str,
+    ) -> Result<&'s xla::PjRtLoadedExecutable> {
+        if !state.exes.contains_key(name) {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| anyhow::anyhow!("load {name}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = state
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+            state.exes.insert(name.to_string(), exe);
+        }
+        Ok(state.exes.get(name).unwrap())
+    }
+
+    /// Execute an artifact with host inputs; returns each output as a
+    /// flat f32 vector (bf16 outputs are widened).
+    pub fn execute_f32(&self, name: &str, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        let spec = self.spec(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", spec.inputs.len(), inputs.len());
+        }
+        for (i, (inp, ispec)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if inp.numel() != ispec.numel() || inp.dtype() != ispec.dtype {
+                bail!(
+                    "{name}: input {i} mismatch (got {} {:?}, want {} {:?})",
+                    inp.numel(),
+                    inp.dtype(),
+                    ispec.numel(),
+                    ispec.dtype
+                );
+            }
+        }
+        let mut state = self.state.lock().unwrap();
+        // literals are created under the lock (Literal is Rc-free but
+        // the convention keeps all xla objects lock-guarded)
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (inp, ispec)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                element_type(ispec.dtype),
+                &ispec.shape,
+                inp.bytes(),
+            )
+            .map_err(|e| anyhow::anyhow!("literal {name}#{i}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = Self::compile_locked(&mut state, &self.dir, name)?;
+        self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+        let tuple = lit.to_tuple().map_err(|e| anyhow::anyhow!("tuple {name}: {e:?}"))?;
+        let mut outs = Vec::with_capacity(tuple.len());
+        for (o, ospec) in tuple.into_iter().zip(&spec.outputs) {
+            let v = match ospec.dtype {
+                DType::F32 => o.to_vec::<f32>().map_err(|e| anyhow::anyhow!("out: {e:?}"))?,
+                DType::Bf16 => {
+                    let wide = o
+                        .convert(xla::PrimitiveType::F32)
+                        .map_err(|e| anyhow::anyhow!("bf16->f32: {e:?}"))?;
+                    wide.to_vec::<f32>().map_err(|e| anyhow::anyhow!("out: {e:?}"))?
+                }
+                DType::U32 => bail!("u32 outputs unsupported"),
+            };
+            outs.push(v);
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests need `make artifacts` to have run; they are skipped
+    //! (with a notice) when the artifact directory is absent so `cargo
+    //! test` stays green on a fresh checkout.
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = std::path::Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping runtime test: no artifacts/ (run `make artifacts`)");
+            return None;
+        }
+        Some(Runtime::open(dir).unwrap())
+    }
+
+    #[test]
+    fn linear_artifact_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let spec = rt.spec("linear_2048x64x16").unwrap().clone();
+        assert_eq!(spec.inputs[0].shape, vec![2048, 64]);
+        let x: Vec<f32> = (0..2048 * 64).map(|i| ((i % 17) as f32 - 8.0) * 0.1).collect();
+        let w: Vec<f32> = (0..64 * 16).map(|i| ((i % 13) as f32 - 6.0) * 0.05).collect();
+        let outs = rt.execute_f32("linear_2048x64x16", &[Input::F32(&x), Input::F32(&w)]).unwrap();
+        assert_eq!(outs.len(), 1);
+        let y = &outs[0];
+        assert_eq!(y.len(), 2048 * 16);
+        for j in 0..16 {
+            let mut acc = 0f32;
+            for k in 0..64 {
+                acc += x[3 * 64 + k] * w[k * 16 + j];
+            }
+            assert!((acc - y[3 * 16 + j]).abs() < 1e-3, "row3 col{j}: {acc} vs {}", y[3 * 16 + j]);
+        }
+    }
+
+    #[test]
+    fn input_validation() {
+        let Some(rt) = runtime() else { return };
+        let bad = vec![0f32; 10];
+        assert!(rt.execute_f32("linear_2048x64x16", &[Input::F32(&bad), Input::F32(&bad)]).is_err());
+        assert!(rt.spec("nonexistent").is_err());
+    }
+
+    #[test]
+    fn spmm_bitmap_artifact_runs() {
+        let Some(rt) = runtime() else { return };
+        let g = 256;
+        let mut bm = vec![0u32; g * 2];
+        bm[0] = 1;
+        let mut vals = vec![0f32; g * 64];
+        vals[0] = 2.0;
+        let mut b = vec![0f32; g * 8 * 32];
+        for j in 0..32 {
+            b[j] = 1.0;
+        }
+        let outs = rt
+            .execute_f32(
+                "spmm_tc_bitmap_256x32",
+                &[Input::U32(&bm), Input::F32(&vals), Input::F32(&b)],
+            )
+            .unwrap();
+        let y = &outs[0];
+        for j in 0..32 {
+            assert!((y[j] - 2.0).abs() < 1e-5);
+        }
+        assert!(y[32..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn concurrent_execution_is_safe() {
+        let Some(rt) = runtime() else { return };
+        let rt = std::sync::Arc::new(rt);
+        crossbeam_utils::thread::scope(|s| {
+            for t in 0..4 {
+                let rt = rt.clone();
+                s.spawn(move |_| {
+                    let x = vec![t as f32; 2048 * 64];
+                    let w = vec![1.0f32; 64 * 16];
+                    let outs =
+                        rt.execute_f32("linear_2048x64x16", &[Input::F32(&x), Input::F32(&w)]).unwrap();
+                    assert!((outs[0][0] - (t as f32) * 64.0).abs() < 1e-2);
+                });
+            }
+        })
+        .unwrap();
+    }
+}

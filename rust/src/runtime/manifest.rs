@@ -1,0 +1,144 @@
+//! Artifact manifest: the contract between `python/compile/aot.py`
+//! and the Rust runtime (shapes + dtypes per artifact).
+
+use super::json::{parse, Json};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Element type of a tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    U32,
+    Bf16,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "u32" => DType::U32,
+            "bf16" => DType::Bf16,
+            other => bail!("unknown dtype {other}"),
+        })
+    }
+
+    pub fn byte_size(&self) -> usize {
+        match self {
+            DType::F32 | DType::U32 => 4,
+            DType::Bf16 => 2,
+        }
+    }
+}
+
+/// Shape + dtype of one input/output tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact: name + I/O signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.json.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse_str(text: &str) -> Result<Self> {
+        let v = parse(text).context("manifest json")?;
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'artifacts'")?;
+        let mut out = Vec::with_capacity(arts.len());
+        for a in arts {
+            let name = a.get("name").and_then(Json::as_str).context("artifact name")?.to_string();
+            let parse_tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.get(key)
+                    .and_then(Json::as_arr)
+                    .with_context(|| format!("{name}: missing {key}"))?
+                    .iter()
+                    .map(|t| {
+                        let shape = t
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .context("shape")?
+                            .iter()
+                            .map(|d| d.as_usize().context("dim"))
+                            .collect::<Result<Vec<_>>>()?;
+                        let dtype = DType::parse(t.get("dtype").and_then(Json::as_str).context("dtype")?)?;
+                        Ok(TensorSpec { shape, dtype })
+                    })
+                    .collect()
+            };
+            let inputs = parse_tensors("inputs")?;
+            let outputs = parse_tensors("outputs")?;
+            out.push(ArtifactSpec { name, inputs, outputs });
+        }
+        Ok(Manifest { artifacts: out })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        Self::parse_str(&text)
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {"name": "spmm_tc_bitmap_256x32",
+         "inputs": [{"shape": [256, 2], "dtype": "u32"},
+                    {"shape": [256, 64], "dtype": "f32"},
+                    {"shape": [256, 8, 32], "dtype": "f32"}],
+         "outputs": [{"shape": [256, 8, 32], "dtype": "f32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse_str(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("spmm_tc_bitmap_256x32").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].dtype, DType::U32);
+        assert_eq!(a.inputs[2].numel(), 256 * 8 * 32);
+        assert_eq!(a.outputs[0].shape, vec![256, 8, 32]);
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(Manifest::parse_str("{}").is_err());
+        assert!(Manifest::parse_str(r#"{"artifacts": [{"name": "x"}]}"#).is_err());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("bf16").unwrap().byte_size(), 2);
+        assert!(DType::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python is never on the request path — `make artifacts` runs once at
+//! build time; afterwards this module compiles the HLO-text files on
+//! the embedded PJRT CPU client and serves typed `execute` calls.
+
+pub mod client;
+pub mod json;
+pub mod manifest;
+
+pub use client::{Input, Runtime};
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};

@@ -1,0 +1,131 @@
+//! Coordinate-format sparse matrix (construction / interchange format).
+
+use super::csr::Csr;
+
+/// A sparse matrix in coordinate (triplet) form. Duplicates are allowed
+/// until [`Coo::to_csr`], which sums them.
+#[derive(Debug, Clone, Default)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_idx: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, row_idx: Vec::new(), col_idx: Vec::new(), values: Vec::new() }
+    }
+
+    pub fn with_capacity(rows: usize, cols: usize, cap: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            row_idx: Vec::with_capacity(cap),
+            col_idx: Vec::with_capacity(cap),
+            values: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Append an entry. Panics in debug mode if out of bounds.
+    #[inline]
+    pub fn push(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols, "({r},{c}) out of {}x{}", self.rows, self.cols);
+        self.row_idx.push(r as u32);
+        self.col_idx.push(c as u32);
+        self.values.push(v);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Convert to CSR, summing duplicate coordinates.
+    pub fn to_csr(&self) -> Csr {
+        // Counting sort by row, then per-row sort by column and merge dups.
+        let mut row_counts = vec![0u32; self.rows + 1];
+        for &r in &self.row_idx {
+            row_counts[r as usize + 1] += 1;
+        }
+        for i in 0..self.rows {
+            row_counts[i + 1] += row_counts[i];
+        }
+        let mut order: Vec<u32> = vec![0; self.nnz()];
+        let mut cursor = row_counts.clone();
+        for (i, &r) in self.row_idx.iter().enumerate() {
+            let slot = cursor[r as usize];
+            order[slot as usize] = i as u32;
+            cursor[r as usize] += 1;
+        }
+
+        let mut row_ptr = Vec::with_capacity(self.rows + 1);
+        let mut col_idx = Vec::with_capacity(self.nnz());
+        let mut values = Vec::with_capacity(self.nnz());
+        row_ptr.push(0u32);
+        let mut scratch: Vec<(u32, f32)> = Vec::new();
+        for r in 0..self.rows {
+            scratch.clear();
+            let (s, e) = (row_counts[r] as usize, row_counts[r + 1] as usize);
+            for &oi in &order[s..e] {
+                let i = oi as usize;
+                scratch.push((self.col_idx[i], self.values[i]));
+            }
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < scratch.len() {
+                let c = scratch[i].0;
+                let mut v = scratch[i].1;
+                let mut j = i + 1;
+                while j < scratch.len() && scratch[j].0 == c {
+                    v += scratch[j].1;
+                    j += 1;
+                }
+                col_idx.push(c);
+                values.push(v);
+                i = j;
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        Csr { rows: self.rows, cols: self.cols, row_ptr, col_idx, values }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_to_csr() {
+        let coo = Coo::new(3, 4);
+        let csr = coo.to_csr();
+        assert_eq!(csr.rows, 3);
+        assert_eq!(csr.cols, 4);
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.row_ptr, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 1, 1.0);
+        coo.push(0, 1, 2.0);
+        coo.push(1, 0, 3.0);
+        let csr = coo.to_csr();
+        assert_eq!(csr.nnz(), 2);
+        assert_eq!(csr.get(0, 1), Some(3.0));
+        assert_eq!(csr.get(1, 0), Some(3.0));
+        assert_eq!(csr.get(0, 0), None);
+    }
+
+    #[test]
+    fn rows_sorted_by_column() {
+        let mut coo = Coo::new(1, 5);
+        coo.push(0, 4, 1.0);
+        coo.push(0, 0, 2.0);
+        coo.push(0, 2, 3.0);
+        let csr = coo.to_csr();
+        assert_eq!(csr.col_idx, vec![0, 2, 4]);
+        assert_eq!(csr.values, vec![2.0, 3.0, 1.0]);
+    }
+}

@@ -1,0 +1,239 @@
+//! The benchmark corpus: a deterministic, synthetic stand-in for the
+//! paper's 500 SuiteSparse matrices.
+//!
+//! The corpus is constructed so its NNZ-1 column-vector ratio spectrum
+//! covers [0, 1] (the x-axis of the paper's Figure 1) with the same
+//! qualitative split the paper reports: a TCU-advantage band (low
+//! NNZ-1), a wide hybrid band, and a CUDA-core-advantage band (high
+//! NNZ-1). Matrix sizes are scaled for CPU execution.
+
+use super::csr::Csr;
+use super::gen;
+use crate::util::SplitMix64;
+
+/// Family tag for a corpus entry (used when reporting per-pattern stats).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Banded,
+    BlockDiag,
+    PowerLaw,
+    Uniform,
+    ColumnClustered,
+    Rmat,
+}
+
+impl Family {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Banded => "banded",
+            Family::BlockDiag => "block_diag",
+            Family::PowerLaw => "power_law",
+            Family::Uniform => "uniform",
+            Family::ColumnClustered => "column_clustered",
+            Family::Rmat => "rmat",
+        }
+    }
+}
+
+/// A corpus entry: generator spec + lazily generated matrix.
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    pub id: usize,
+    pub name: String,
+    pub family: Family,
+    pub seed: u64,
+    params: Params,
+}
+
+#[derive(Debug, Clone)]
+enum Params {
+    Banded { n: usize, band: usize, fill: f64 },
+    BlockDiag { n: usize, nblocks: usize, fill: f64, noise: f64 },
+    PowerLaw { n: usize, avg_deg: f64, alpha: f64 },
+    Uniform { rows: usize, cols: usize, density: f64 },
+    ColumnClustered { rows: usize, cols: usize, nnz: usize, singleton: f64, run: usize },
+    Rmat { scale: u32, edge_factor: usize },
+}
+
+impl CorpusSpec {
+    /// Materialize the matrix (deterministic per spec).
+    pub fn build(&self) -> Csr {
+        let mut rng = SplitMix64::new(self.seed);
+        match self.params {
+            Params::Banded { n, band, fill } => gen::banded(&mut rng, n, band, fill),
+            Params::BlockDiag { n, nblocks, fill, noise } => {
+                gen::block_diag_noise(&mut rng, n, nblocks, fill, noise)
+            }
+            Params::PowerLaw { n, avg_deg, alpha } => gen::power_law(&mut rng, n, avg_deg, alpha),
+            Params::Uniform { rows, cols, density } => {
+                gen::uniform_random(&mut rng, rows, cols, density)
+            }
+            Params::ColumnClustered { rows, cols, nnz, singleton, run } => {
+                gen::column_clustered(&mut rng, rows, cols, nnz, singleton, run)
+            }
+            Params::Rmat { scale, edge_factor } => gen::rmat(&mut rng, scale, edge_factor),
+        }
+    }
+}
+
+/// Build the corpus spec list.
+///
+/// `size` is the number of matrices (paper: 500; benches default to a
+/// 120-matrix subsample that preserves the family mix and NNZ-1
+/// spectrum so the suite finishes on CPU in reasonable time).
+pub fn corpus(size: usize) -> Vec<CorpusSpec> {
+    let full = full_corpus();
+    if size >= full.len() {
+        return full;
+    }
+    // stride-subsample: keeps the spectrum coverage of the full list
+    let mut out = Vec::with_capacity(size);
+    for i in 0..size {
+        let idx = i * full.len() / size;
+        out.push(full[idx].clone());
+    }
+    out
+}
+
+/// The full 500-matrix corpus.
+pub fn full_corpus() -> Vec<CorpusSpec> {
+    let mut specs = Vec::with_capacity(500);
+    let mut id = 0usize;
+    let mut push = |specs: &mut Vec<CorpusSpec>, family: Family, params: Params| {
+        let seed = 0xC0_FFEE ^ (specs.len() as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        specs.push(CorpusSpec {
+            id,
+            name: format!("{}_{:03}", family.name(), id),
+            family,
+            seed,
+            params,
+        });
+        id += 1;
+    };
+
+    // --- TCU-advantage band: banded / stencil-like, dense vectors (~100) ---
+    for i in 0..50 {
+        let n = 1024 + (i % 10) * 512;
+        let band = 2 + i % 7;
+        let fill = 0.55 + 0.4 * (i % 5) as f64 / 5.0;
+        push(&mut specs, Family::Banded, Params::Banded { n, band, fill });
+    }
+    for i in 0..50 {
+        let n = 768 + (i % 8) * 384;
+        let nblocks = 4 + i % 12;
+        let fill = 0.35 + 0.5 * (i % 6) as f64 / 6.0;
+        let noise = 1e-4 * (1 + i % 4) as f64;
+        push(&mut specs, Family::BlockDiag, Params::BlockDiag { n, nblocks, fill, noise });
+    }
+
+    // --- Hybrid band: column-clustered with mixed singleton fractions (~200) ---
+    for i in 0..200 {
+        let rows = 1024 + (i % 12) * 512;
+        let cols = rows;
+        let nnz = rows * (6 + i % 20);
+        let singleton = 0.15 + 0.7 * (i as f64 / 200.0); // sweeps the spectrum
+        let run = 3 + i % 6;
+        push(
+            &mut specs,
+            Family::ColumnClustered,
+            Params::ColumnClustered { rows, cols, nnz, singleton, run },
+        );
+    }
+
+    // --- Graphs: power-law + RMAT, load-balance stress (~100) ---
+    for i in 0..70 {
+        let n = 2048 + (i % 10) * 1024;
+        let avg_deg = 4.0 + (i % 16) as f64 * 2.0;
+        let alpha = 1.6 + 0.8 * (i % 5) as f64 / 5.0;
+        push(&mut specs, Family::PowerLaw, Params::PowerLaw { n, avg_deg, alpha });
+    }
+    for i in 0..30 {
+        let scale = 10 + (i % 4) as u32;
+        let edge_factor = 8 + i % 12;
+        push(&mut specs, Family::Rmat, Params::Rmat { scale, edge_factor });
+    }
+
+    // --- CUDA-core-advantage band: hypersparse uniform (~100) ---
+    for i in 0..100 {
+        let rows = 2048 + (i % 12) * 1024;
+        let cols = rows;
+        let density = 2e-4 + 8e-4 * (i % 10) as f64 / 10.0;
+        push(&mut specs, Family::Uniform, Params::Uniform { rows, cols, density });
+    }
+
+    assert_eq!(specs.len(), 500);
+    specs
+}
+
+/// Named "case study" matrices mirroring the ones the paper profiles.
+pub mod named {
+    use super::*;
+
+    /// `pkustk01`-like: FEM block structure, the paper's hybrid case study.
+    pub fn pkustk01_like() -> Csr {
+        let mut rng = SplitMix64::new(0x9057_0001);
+        gen::block_diag_noise(&mut rng, 4096, 48, 0.45, 5e-4)
+    }
+
+    /// `mip1`-like: relatively dense column vectors (TCU-advantage).
+    pub fn mip1_like() -> Csr {
+        let mut rng = SplitMix64::new(0x3171);
+        gen::column_clustered(&mut rng, 8192, 8192, 8192 * 40, 0.1, 7)
+    }
+
+    /// `rim`-like: banded with moderately dense vectors.
+    pub fn rim_like() -> Csr {
+        let mut rng = SplitMix64::new(0x7133);
+        gen::banded(&mut rng, 8192, 12, 0.5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::stats;
+
+    #[test]
+    fn full_corpus_is_500() {
+        assert_eq!(full_corpus().len(), 500);
+    }
+
+    #[test]
+    fn subsample_sizes() {
+        assert_eq!(corpus(120).len(), 120);
+        assert_eq!(corpus(10_000).len(), 500);
+        let c = corpus(120);
+        // preserves family diversity
+        let fams: std::collections::HashSet<&str> = c.iter().map(|s| s.family.name()).collect();
+        assert!(fams.len() >= 4, "families: {fams:?}");
+    }
+
+    #[test]
+    fn corpus_spans_nnz1_spectrum() {
+        // build a small sample across the list and check the NNZ-1 ratio
+        // spectrum covers low, mid, and high bands (paper Fig 1)
+        let specs = corpus(24);
+        let ratios: Vec<f64> =
+            specs.iter().map(|s| stats::nnz1_vector_ratio(&s.build(), 8)).collect();
+        let lo = ratios.iter().cloned().fold(f64::MAX, f64::min);
+        let hi = ratios.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(lo < 0.2, "min ratio {lo}");
+        assert!(hi > 0.8, "max ratio {hi}");
+        let mid = ratios.iter().filter(|&&r| (0.25..0.75).contains(&r)).count();
+        assert!(mid >= 3, "mid-band count {mid} of {ratios:?}");
+    }
+
+    #[test]
+    fn specs_build_deterministically() {
+        let s = &corpus(10)[3];
+        assert_eq!(s.build(), s.build());
+    }
+
+    #[test]
+    fn named_matrices_build() {
+        let m = named::mip1_like();
+        assert!(m.nnz() > 100_000);
+        let r = named::rim_like();
+        assert!(r.nnz() > 50_000);
+    }
+}

@@ -1,0 +1,316 @@
+//! Compressed sparse row matrix — the canonical input format for all
+//! Libra pipelines.
+
+use super::coo::Coo;
+use super::dense::Dense;
+
+/// CSR sparse matrix with `u32` indices and `f32` values.
+///
+/// Invariants (checked by [`Csr::validate`]):
+/// * `row_ptr.len() == rows + 1`, `row_ptr[0] == 0`, non-decreasing;
+/// * `col_idx.len() == values.len() == row_ptr[rows]`;
+/// * within each row, column indices are strictly increasing and `< cols`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Default for Csr {
+    /// An empty 0 x 0 matrix (with the valid `row_ptr = [0]`).
+    fn default() -> Self {
+        Self::zeros(0, 0)
+    }
+}
+
+impl Csr {
+    /// An empty `rows x cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, row_ptr: vec![0; rows + 1], col_idx: Vec::new(), values: Vec::new() }
+    }
+
+    /// Build from parts, validating invariants.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<u32>,
+        col_idx: Vec<u32>,
+        values: Vec<f32>,
+    ) -> anyhow::Result<Self> {
+        let m = Self { rows, cols, row_ptr, col_idx, values };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Check all structural invariants.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.row_ptr.len() == self.rows + 1, "row_ptr length");
+        anyhow::ensure!(self.row_ptr[0] == 0, "row_ptr[0] != 0");
+        anyhow::ensure!(
+            *self.row_ptr.last().unwrap() as usize == self.col_idx.len(),
+            "row_ptr end != nnz"
+        );
+        anyhow::ensure!(self.col_idx.len() == self.values.len(), "col/val length mismatch");
+        for r in 0..self.rows {
+            anyhow::ensure!(self.row_ptr[r] <= self.row_ptr[r + 1], "row_ptr decreasing at {r}");
+            let (s, e) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            for i in s..e {
+                anyhow::ensure!((self.col_idx[i] as usize) < self.cols, "col out of range");
+                if i > s {
+                    anyhow::ensure!(self.col_idx[i - 1] < self.col_idx[i], "cols not sorted in row {r}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Number of nonzeros in row `r`.
+    #[inline]
+    pub fn row_len(&self, r: usize) -> usize {
+        (self.row_ptr[r + 1] - self.row_ptr[r]) as usize
+    }
+
+    /// (col, value) slice pair for row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+        (&self.col_idx[s..e], &self.values[s..e])
+    }
+
+    /// Value at (r, c) if present (binary search).
+    pub fn get(&self, r: usize, c: usize) -> Option<f32> {
+        let (cols, vals) = self.row(r);
+        cols.binary_search(&(c as u32)).ok().map(|i| vals[i])
+    }
+
+    /// Density = nnz / (rows * cols).
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Transpose (CSR -> CSR of the transpose).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0u32; self.cols + 1];
+        for &c in &self.col_idx {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.cols {
+            counts[i + 1] += counts[i];
+        }
+        let row_ptr = counts.clone();
+        let mut col_idx = vec![0u32; self.nnz()];
+        let mut values = vec![0f32; self.nnz()];
+        let mut cursor = counts;
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let slot = cursor[c as usize] as usize;
+                col_idx[slot] = r as u32;
+                values[slot] = v;
+                cursor[c as usize] += 1;
+            }
+        }
+        Csr { rows: self.cols, cols: self.rows, row_ptr, col_idx, values }
+    }
+
+    /// Convert to COO triplets.
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::with_capacity(self.rows, self.cols, self.nnz());
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                coo.push(r, c as usize, v);
+            }
+        }
+        coo
+    }
+
+    /// Densify (for small matrices / testing).
+    pub fn to_dense(&self) -> Dense {
+        let mut d = Dense::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                d[(r, c as usize)] = v;
+            }
+        }
+        d
+    }
+
+    /// Reference (single-threaded, row-major) SpMM: `C = self * B`.
+    /// The correctness oracle for every other SpMM path in the repo.
+    pub fn spmm_dense_ref(&self, b: &Dense) -> Dense {
+        assert_eq!(self.cols, b.rows, "spmm shape mismatch");
+        let n = b.cols;
+        let mut c = Dense::zeros(self.rows, n);
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            let out = c.row_mut(r);
+            for (&col, &v) in cols.iter().zip(vals) {
+                let brow = b.row(col as usize);
+                for j in 0..n {
+                    out[j] += v * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// Reference SDDMM: `C_ij = (A_i . B_j) * mask_ij` where the sparsity
+    /// pattern (and scaling values) come from `self`. Returns a CSR with
+    /// the same pattern whose values are `self_ij * dot(a_row_i, b_row_j)`.
+    ///
+    /// `a` is `rows x k`, `b` is `cols x k` (i.e. B is accessed by rows,
+    /// matching the "dense columns" view used in the paper).
+    pub fn sddmm_dense_ref(&self, a: &Dense, b: &Dense) -> Csr {
+        assert_eq!(a.rows, self.rows);
+        assert_eq!(b.rows, self.cols);
+        assert_eq!(a.cols, b.cols);
+        let mut out = self.clone();
+        for r in 0..self.rows {
+            let (s, e) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            let arow = a.row(r);
+            for i in s..e {
+                let c = self.col_idx[i] as usize;
+                let brow = b.row(c);
+                let mut dot = 0f32;
+                for k in 0..a.cols {
+                    dot += arow[k] * brow[k];
+                }
+                out.values[i] = self.values[i] * dot;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Config};
+    use crate::util::SplitMix64;
+
+    fn small() -> Csr {
+        // [1 0 2]
+        // [0 0 0]
+        // [3 4 0]
+        Csr::from_parts(3, 3, vec![0, 2, 2, 4], vec![0, 2, 0, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap()
+    }
+
+    pub(crate) fn random_csr(rng: &mut SplitMix64, rows: usize, cols: usize, density: f64) -> Csr {
+        let mut coo = Coo::new(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.chance(density) {
+                    coo.push(r, c, rng.f32_range(-1.0, 1.0));
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let m = small();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row_len(0), 2);
+        assert_eq!(m.row_len(1), 0);
+        assert_eq!(m.get(2, 1), Some(4.0));
+        assert_eq!(m.get(1, 1), None);
+        assert!((m.density() - 4.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        assert!(Csr::from_parts(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err()); // row_ptr len
+        assert!(Csr::from_parts(1, 2, vec![0, 1], vec![5], vec![1.0]).is_err()); // col range
+        assert!(Csr::from_parts(1, 3, vec![0, 2], vec![1, 1], vec![1.0, 1.0]).is_err()); // dup col
+    }
+
+    #[test]
+    fn transpose_involution() {
+        check(Config::default().cases(30), "transpose twice = id", |rng| {
+            let rows = rng.range(1, 40);
+            let cols = rng.range(1, 40);
+            let m = random_csr(rng, rows, cols, 0.15);
+            let tt = m.transpose().transpose();
+            assert_eq!(m, tt);
+        });
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let m = small();
+        let t = m.transpose();
+        let d = m.to_dense();
+        let td = t.to_dense();
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(d[(r, c)], td[(c, r)]);
+            }
+        }
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        check(Config::default().cases(30), "csr->coo->csr = id", |rng| {
+            let (r, c) = (rng.range(1, 30), rng.range(1, 30));
+            let m = random_csr(rng, r, c, 0.2);
+            assert_eq!(m, m.to_coo().to_csr());
+        });
+    }
+
+    #[test]
+    fn spmm_ref_matches_dense_matmul() {
+        check(Config::default().cases(20), "spmm == dense matmul", |rng| {
+            let (r, c) = (rng.range(1, 20), rng.range(1, 20));
+            let m = random_csr(rng, r, c, 0.3);
+            let n = rng.range(1, 16);
+            let b = Dense::random(rng, m.cols, n);
+            let c1 = m.spmm_dense_ref(&b);
+            let c2 = m.to_dense().matmul(&b);
+            assert!(c1.allclose(&c2, 1e-4), "spmm mismatch");
+        });
+    }
+
+    #[test]
+    fn sddmm_ref_matches_dense() {
+        check(Config::default().cases(20), "sddmm == masked dense", |rng| {
+            let (r, c) = (rng.range(1, 20), rng.range(1, 20));
+            let m = random_csr(rng, r, c, 0.3);
+            let k = rng.range(1, 12);
+            let a = Dense::random(rng, m.rows, k);
+            let b = Dense::random(rng, m.cols, k);
+            let out = m.sddmm_dense_ref(&a, &b);
+            // dense check: out_ij = m_ij * (a_i . b_j)
+            let full = a.matmul(&b.transpose());
+            for r in 0..m.rows {
+                let (cols, vals) = out.row(r);
+                let (_, mvals) = m.row(r);
+                for (i, (&c, &v)) in cols.iter().zip(vals).enumerate() {
+                    let expect = mvals[i] * full[(r, c as usize)];
+                    assert!((v - expect).abs() < 1e-3, "({r},{c}): {v} vs {expect}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn spmm_empty_rows() {
+        let m = Csr::zeros(4, 4);
+        let b = Dense::ones(4, 3);
+        let c = m.spmm_dense_ref(&b);
+        assert!(c.data.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,184 @@
+//! Row-major dense matrix used for operands/outputs of the sparse
+//! kernels and the GNN layers.
+
+use crate::util::SplitMix64;
+use std::ops::{Index, IndexMut};
+
+/// Row-major `f32` dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dense {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Dense {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn ones(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![1.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    /// Uniform random in [-1, 1).
+    pub fn random(rng: &mut SplitMix64, rows: usize, cols: usize) -> Self {
+        let data = (0..rows * cols).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        Self { rows, cols, data }
+    }
+
+    /// Xavier/Glorot-style init for GNN weights.
+    pub fn glorot(rng: &mut SplitMix64, rows: usize, cols: usize) -> Self {
+        let scale = (6.0 / (rows + cols) as f64).sqrt() as f32;
+        let data = (0..rows * cols).map(|_| rng.f32_range(-scale, scale)).collect();
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Dense {
+        let mut t = Dense::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// Naive matmul (oracle for tests; the runtime uses PJRT artifacts).
+    pub fn matmul(&self, other: &Dense) -> Dense {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Dense::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for j in 0..other.cols {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Max |a - b|; panics on shape mismatch.
+    pub fn max_abs_diff(&self, other: &Dense) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative closeness check with combined abs/rel tolerance.
+    pub fn allclose(&self, other: &Dense, tol: f32) -> bool {
+        if (self.rows, self.cols) != (other.rows, other.cols) {
+            return false;
+        }
+        self.data.iter().zip(&other.data).all(|(a, b)| {
+            let diff = (a - b).abs();
+            diff <= tol + tol * a.abs().max(b.abs())
+        })
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn scale_inplace(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add_inplace(&mut self, other: &Dense) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+}
+
+impl Index<(usize, usize)> for Dense {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Dense {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing() {
+        let mut d = Dense::zeros(2, 3);
+        d[(1, 2)] = 5.0;
+        assert_eq!(d[(1, 2)], 5.0);
+        assert_eq!(d.row(1), &[0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut i2 = Dense::zeros(2, 2);
+        i2[(0, 0)] = 1.0;
+        i2[(1, 1)] = 1.0;
+        let a = Dense::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.matmul(&i2), a);
+        assert_eq!(i2.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Dense::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Dense::ones(2, 2);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_shape_and_values() {
+        let a = Dense::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = a.transpose();
+        assert_eq!((t.rows, t.cols), (3, 2));
+        assert_eq!(t[(2, 1)], 6.0);
+        assert_eq!(t[(0, 1)], 4.0);
+    }
+
+    #[test]
+    fn allclose_tolerance() {
+        let a = Dense::from_vec(1, 2, vec![1.0, 2.0]);
+        let b = Dense::from_vec(1, 2, vec![1.0 + 1e-6, 2.0 - 1e-6]);
+        assert!(a.allclose(&b, 1e-4));
+        assert!(!a.allclose(&Dense::zeros(1, 2), 1e-4));
+        assert!(!a.allclose(&Dense::zeros(2, 1), 1e-4));
+    }
+}

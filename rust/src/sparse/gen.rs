@@ -1,0 +1,324 @@
+//! Synthetic sparse matrix generators.
+//!
+//! The paper's kernel evaluation uses 500 SuiteSparse matrices spanning
+//! a wide spectrum of sparsity patterns (Figure 1 sorts them by the
+//! fraction of NNZ-1 column vectors). We can't ship SuiteSparse, so
+//! these generators synthesize a corpus that spans the same axes the
+//! paper's analysis cares about:
+//!
+//! * **column-vector density** (the NNZ-1 ratio driving TCU vs CUDA-core
+//!   advantage) — controlled by clustering nonzeros vertically;
+//! * **row-length skew** (power-law graphs stress load balancing);
+//! * **structure** (banded/stencil matrices from PDEs, block-diagonal
+//!   FEM-like matrices, bipartite rating graphs).
+
+use super::coo::Coo;
+use super::csr::Csr;
+use crate::util::SplitMix64;
+
+/// Uniform (Erdős–Rényi) random matrix with expected `density`.
+pub fn uniform_random(rng: &mut SplitMix64, rows: usize, cols: usize, density: f64) -> Csr {
+    let expected = (rows as f64 * cols as f64 * density).round() as usize;
+    let mut coo = Coo::with_capacity(rows, cols, expected + 16);
+    // sample per-row to keep memory bounded for large matrices
+    let per_row = (cols as f64 * density).max(0.0);
+    for r in 0..rows {
+        // Poisson-ish: floor + bernoulli remainder
+        let base = per_row.floor() as usize;
+        let extra = rng.chance(per_row - base as f64) as usize;
+        let k = (base + extra).min(cols);
+        for c in rng.sample_distinct(cols, k) {
+            coo.push(r, c, rng.f32_range(-1.0, 1.0));
+        }
+    }
+    coo.to_csr()
+}
+
+/// Banded matrix: `band` diagonals around the main diagonal with
+/// per-element fill probability `fill`. Models stencil/PDE matrices —
+/// these have dense column vectors (low NNZ-1 ratio), i.e. the paper's
+/// "TCU advantage" region.
+pub fn banded(rng: &mut SplitMix64, n: usize, band: usize, fill: f64) -> Csr {
+    let mut coo = Coo::new(n, n);
+    for r in 0..n {
+        let lo = r.saturating_sub(band);
+        let hi = (r + band + 1).min(n);
+        for c in lo..hi {
+            if r == c || rng.chance(fill) {
+                coo.push(r, c, rng.f32_range(-1.0, 1.0));
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Power-law graph adjacency via preferential-attachment-flavored column
+/// sampling: row degrees ~ near-constant `avg_deg`, column targets drawn
+/// from a Zipf distribution (a few hub columns). Models social /
+/// citation graphs — the paper's "load balancing matters" region.
+pub fn power_law(rng: &mut SplitMix64, n: usize, avg_deg: f64, alpha: f64) -> Csr {
+    let mut coo = Coo::with_capacity(n, n, (n as f64 * avg_deg) as usize + 16);
+    // permute hub identities so structure isn't trivially at column 0..h
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut perm);
+    for r in 0..n {
+        // row degree itself mildly skewed
+        let deg = if rng.chance(0.02) {
+            (avg_deg * rng.range(5, 40) as f64) as usize
+        } else {
+            let base = avg_deg.floor() as usize;
+            base + rng.chance(avg_deg - base as f64) as usize
+        };
+        let deg = deg.clamp(1, n);
+        let mut seen = std::collections::HashSet::with_capacity(deg * 2);
+        while seen.len() < deg {
+            let c = perm[rng.zipf(n, alpha)] as usize;
+            seen.insert(c);
+        }
+        // sort so value assignment is independent of HashSet iteration order
+        let mut targets: Vec<usize> = seen.into_iter().collect();
+        targets.sort_unstable();
+        for c in targets {
+            coo.push(r, c, rng.f32_range(-1.0, 1.0));
+        }
+    }
+    coo.to_csr()
+}
+
+/// Block-diagonal matrix with `nblocks` dense-ish blocks (fill prob
+/// `fill`) plus sparse off-block noise. Models FEM/circuit matrices
+/// (e.g. pkustk01) — the paper's "hybrid advantage" region: dense blocks
+/// suit TCUs, scattered noise suits CUDA cores.
+pub fn block_diag_noise(
+    rng: &mut SplitMix64,
+    n: usize,
+    nblocks: usize,
+    fill: f64,
+    noise_density: f64,
+) -> Csr {
+    assert!(nblocks >= 1);
+    let bs = n.div_ceil(nblocks);
+    let mut coo = Coo::new(n, n);
+    for b in 0..nblocks {
+        let lo = b * bs;
+        let hi = ((b + 1) * bs).min(n);
+        for r in lo..hi {
+            for c in lo..hi {
+                if rng.chance(fill) {
+                    coo.push(r, c, rng.f32_range(-1.0, 1.0));
+                }
+            }
+        }
+    }
+    // scattered noise outside blocks
+    let noise = (n as f64 * n as f64 * noise_density) as usize;
+    for _ in 0..noise {
+        let r = rng.range(0, n);
+        let c = rng.range(0, n);
+        let b_r = r / bs;
+        let b_c = c / bs;
+        if b_r != b_c {
+            coo.push(r, c, rng.f32_range(-1.0, 1.0));
+        }
+    }
+    coo.to_csr()
+}
+
+/// Column-clustered matrix: a fraction `dense_cols_frac` of columns are
+/// "dense" (each present in vertical runs of length `run`), the rest of
+/// the nonzeros are isolated singletons. Directly dials the NNZ-1
+/// vector ratio from ~0 (all runs) to ~1 (all singletons).
+pub fn column_clustered(
+    rng: &mut SplitMix64,
+    rows: usize,
+    cols: usize,
+    nnz_target: usize,
+    singleton_frac: f64,
+    run: usize,
+) -> Csr {
+    let run = run.max(2);
+    let mut coo = Coo::with_capacity(rows, cols, nnz_target + run);
+    let mut placed = 0usize;
+    while placed < nnz_target {
+        if rng.chance(singleton_frac) {
+            // isolated nonzero: contributes an NNZ-1 vector (w.h.p.)
+            coo.push(rng.range(0, rows), rng.range(0, cols), rng.f32_range(-1.0, 1.0));
+            placed += 1;
+        } else {
+            // vertical run of `run` nonzeros in one column, aligned to
+            // an 8-row window so it forms a dense column vector
+            let c = rng.range(0, cols);
+            let win = rng.range(0, rows.div_ceil(8));
+            let base = win * 8;
+            let len = run.min(8).min(rows - base.min(rows));
+            if len == 0 {
+                continue;
+            }
+            let start = base + rng.range(0, 8usize.saturating_sub(len).max(1));
+            for i in 0..len {
+                let r = (start + i).min(rows - 1);
+                coo.push(r, c, rng.f32_range(-1.0, 1.0));
+                placed += 1;
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// RMAT-style (Kronecker) graph generator — heavy community structure +
+/// skew, the classic GNN benchmark topology.
+pub fn rmat(rng: &mut SplitMix64, scale: u32, edge_factor: usize) -> Csr {
+    let n = 1usize << scale;
+    let edges = n * edge_factor;
+    let (a, b, c) = (0.57, 0.19, 0.19);
+    let mut coo = Coo::with_capacity(n, n, edges);
+    for _ in 0..edges {
+        let (mut r, mut cc) = (0usize, 0usize);
+        for level in (0..scale).rev() {
+            let p = rng.f64();
+            let (dr, dc) = if p < a {
+                (0, 0)
+            } else if p < a + b {
+                (0, 1)
+            } else if p < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            r |= dr << level;
+            cc |= dc << level;
+        }
+        coo.push(r, cc, 1.0);
+    }
+    coo.to_csr()
+}
+
+/// Normalize adjacency for GCN: Â = D^{-1/2} (A + I) D^{-1/2}.
+///
+/// Expects nonnegative edge weights (adjacency semantics); with
+/// nonnegative weights every normalized value is bounded by 1.
+pub fn gcn_normalize(adj: &Csr) -> Csr {
+    debug_assert!(adj.values.iter().all(|&v| v >= 0.0), "gcn_normalize expects nonnegative weights");
+    assert_eq!(adj.rows, adj.cols);
+    let n = adj.rows;
+    // A + I
+    let mut coo = adj.to_coo();
+    for i in 0..n {
+        coo.push(i, i, 1.0);
+    }
+    let a_hat = coo.to_csr();
+    let mut deg = vec![0f64; n];
+    for r in 0..n {
+        let (_, vals) = a_hat.row(r);
+        deg[r] = vals.iter().map(|&v| v as f64).sum();
+    }
+    let inv_sqrt: Vec<f32> = deg.iter().map(|&d| if d > 0.0 { (1.0 / d.sqrt()) as f32 } else { 0.0 }).collect();
+    let mut out = a_hat.clone();
+    for r in 0..n {
+        let (s, e) = (out.row_ptr[r] as usize, out.row_ptr[r + 1] as usize);
+        for i in s..e {
+            let c = out.col_idx[i] as usize;
+            out.values[i] *= inv_sqrt[r] * inv_sqrt[c];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Config};
+
+    #[test]
+    fn uniform_density_approx() {
+        let mut rng = SplitMix64::new(10);
+        let m = uniform_random(&mut rng, 200, 200, 0.05);
+        let d = m.density();
+        assert!((d - 0.05).abs() < 0.01, "density={d}");
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn banded_within_band() {
+        let mut rng = SplitMix64::new(11);
+        let m = banded(&mut rng, 100, 3, 0.8);
+        m.validate().unwrap();
+        for r in 0..100 {
+            let (cols, _) = m.row(r);
+            for &c in cols {
+                assert!((c as i64 - r as i64).abs() <= 3);
+            }
+        }
+        // diagonal always present
+        for r in 0..100 {
+            assert!(m.get(r, r).is_some());
+        }
+    }
+
+    #[test]
+    fn power_law_has_hubs() {
+        let mut rng = SplitMix64::new(12);
+        let m = power_law(&mut rng, 2000, 8.0, 2.0);
+        m.validate().unwrap();
+        let t = m.transpose();
+        let mut indeg: Vec<usize> = (0..2000).map(|r| t.row_len(r)).collect();
+        indeg.sort_unstable_by(|a, b| b.cmp(a));
+        // top column should collect far more than the average degree
+        assert!(indeg[0] > 8 * 10, "max indeg {}", indeg[0]);
+    }
+
+    #[test]
+    fn block_diag_structure() {
+        let mut rng = SplitMix64::new(13);
+        let m = block_diag_noise(&mut rng, 120, 4, 0.6, 0.001);
+        m.validate().unwrap();
+        assert!(m.nnz() > 120 * 120 / 4 / 4); // blocks substantially filled
+    }
+
+    #[test]
+    fn column_clustered_dials_nnz1() {
+        let mut rng = SplitMix64::new(14);
+        let sparse = column_clustered(&mut rng, 512, 512, 4000, 0.95, 6);
+        let dense = column_clustered(&mut rng, 512, 512, 4000, 0.05, 6);
+        let s1 = crate::sparse::stats::nnz1_vector_ratio(&sparse, 8);
+        let s2 = crate::sparse::stats::nnz1_vector_ratio(&dense, 8);
+        assert!(s1 > 0.7, "singleton-heavy ratio {s1}");
+        assert!(s2 < 0.4, "run-heavy ratio {s2}");
+    }
+
+    #[test]
+    fn rmat_shape() {
+        let mut rng = SplitMix64::new(15);
+        let m = rmat(&mut rng, 8, 8);
+        m.validate().unwrap();
+        assert_eq!(m.rows, 256);
+        assert!(m.nnz() > 1000);
+    }
+
+    #[test]
+    fn gcn_normalize_row_scale() {
+        check(Config::default().cases(10), "gcn normalized values bounded", |rng| {
+            let mut m = uniform_random(rng, 50, 50, 0.1);
+            for v in &mut m.values {
+                *v = v.abs().max(0.05); // adjacency: nonnegative weights
+            }
+            let norm = gcn_normalize(&m);
+            norm.validate().unwrap();
+            assert_eq!(norm.rows, 50);
+            // all rows have the self loop
+            for r in 0..50 {
+                assert!(norm.get(r, r).is_some());
+            }
+            for &v in &norm.values {
+                assert!(v.abs() <= 1.0 + 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let m1 = power_law(&mut SplitMix64::new(99), 300, 5.0, 2.0);
+        let m2 = power_law(&mut SplitMix64::new(99), 300, 5.0, 2.0);
+        assert_eq!(m1, m2);
+    }
+}

@@ -1,0 +1,179 @@
+//! MatrixMarket (.mtx) reader/writer — the interchange format of the
+//! SuiteSparse collection the paper evaluates on. Supports the
+//! coordinate format with `real` / `integer` / `pattern` fields and
+//! `general` / `symmetric` symmetry.
+
+use super::coo::Coo;
+use super::csr::Csr;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Field {
+    Real,
+    Integer,
+    Pattern,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Symmetry {
+    General,
+    Symmetric,
+}
+
+/// Parse a MatrixMarket stream into CSR.
+pub fn read_mtx<R: BufRead>(reader: R) -> Result<Csr> {
+    let mut lines = reader.lines();
+    let header = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                if !l.trim().is_empty() {
+                    break l;
+                }
+            }
+            None => bail!("empty mtx stream"),
+        }
+    };
+    let h: Vec<&str> = header.split_whitespace().collect();
+    if h.len() < 5 || h[0] != "%%MatrixMarket" || h[1] != "matrix" {
+        bail!("bad MatrixMarket header: {header}");
+    }
+    if h[2] != "coordinate" {
+        bail!("only coordinate format supported, got {}", h[2]);
+    }
+    let field = match h[3] {
+        "real" => Field::Real,
+        "integer" => Field::Integer,
+        "pattern" => Field::Pattern,
+        other => bail!("unsupported field type {other}"),
+    };
+    let symmetry = match h[4] {
+        "general" => Symmetry::General,
+        "symmetric" => Symmetry::Symmetric,
+        other => bail!("unsupported symmetry {other}"),
+    };
+
+    // skip comments, read size line
+    let size_line = loop {
+        let l = lines.next().context("missing size line")??;
+        let t = l.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        break l;
+    };
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>().context("bad size entry"))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        bail!("size line must have 3 entries, got: {size_line}");
+    }
+    let (rows, cols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut coo = Coo::with_capacity(rows, cols, nnz);
+    let mut seen = 0usize;
+    for l in lines {
+        let l = l?;
+        let t = l.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it.next().context("missing row")?.parse::<usize>()?;
+        let c: usize = it.next().context("missing col")?.parse::<usize>()?;
+        if r == 0 || c == 0 || r > rows || c > cols {
+            bail!("entry ({r},{c}) out of bounds {rows}x{cols}");
+        }
+        let v: f32 = match field {
+            Field::Pattern => 1.0,
+            Field::Real | Field::Integer => it.next().context("missing value")?.parse::<f32>()?,
+        };
+        coo.push(r - 1, c - 1, v);
+        if symmetry == Symmetry::Symmetric && r != c {
+            coo.push(c - 1, r - 1, v);
+        }
+        seen += 1;
+    }
+    if seen != nnz {
+        bail!("expected {nnz} entries, found {seen}");
+    }
+    Ok(coo.to_csr())
+}
+
+/// Read an `.mtx` file from disk.
+pub fn read_mtx_file<P: AsRef<Path>>(path: P) -> Result<Csr> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    read_mtx(BufReader::new(f))
+}
+
+/// Write a CSR matrix as `coordinate real general` MatrixMarket.
+pub fn write_mtx<W: Write>(m: &Csr, mut w: W) -> Result<()> {
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "{} {} {}", m.rows, m.cols, m.nnz())?;
+    for r in 0..m.rows {
+        let (cols, vals) = m.row(r);
+        for (&c, &v) in cols.iter().zip(vals) {
+            writeln!(w, "{} {} {}", r + 1, c + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+/// Write to a file path.
+pub fn write_mtx_file<P: AsRef<Path>>(m: &Csr, path: P) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    write_mtx(m, std::io::BufWriter::new(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Config};
+
+    #[test]
+    fn parse_general_real() {
+        let text = "%%MatrixMarket matrix coordinate real general\n% comment\n3 3 2\n1 1 1.5\n3 2 -2.0\n";
+        let m = read_mtx(text.as_bytes()).unwrap();
+        assert_eq!((m.rows, m.cols, m.nnz()), (3, 3, 2));
+        assert_eq!(m.get(0, 0), Some(1.5));
+        assert_eq!(m.get(2, 1), Some(-2.0));
+    }
+
+    #[test]
+    fn parse_symmetric_pattern() {
+        let text = "%%MatrixMarket matrix coordinate pattern symmetric\n2 2 2\n1 1\n2 1\n";
+        let m = read_mtx(text.as_bytes()).unwrap();
+        assert_eq!(m.nnz(), 3); // (0,0), (1,0), (0,1)
+        assert_eq!(m.get(0, 1), Some(1.0));
+        assert_eq!(m.get(1, 0), Some(1.0));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(read_mtx("not a header\n1 1 0\n".as_bytes()).is_err());
+        assert!(read_mtx("%%MatrixMarket matrix array real general\n1 1\n".as_bytes()).is_err());
+        let oob = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
+        assert!(read_mtx(oob.as_bytes()).is_err());
+        let short = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
+        assert!(read_mtx(short.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        check(Config::default().cases(15), "mtx write/read roundtrip", |rng| {
+            let (r, c) = (rng.range(1, 40), rng.range(1, 40));
+            let m = crate::sparse::gen::uniform_random(rng, r, c, 0.2);
+            let mut buf = Vec::new();
+            write_mtx(&m, &mut buf).unwrap();
+            let back = read_mtx(&buf[..]).unwrap();
+            assert_eq!(m.rows, back.rows);
+            assert_eq!(m.cols, back.cols);
+            assert_eq!(m.nnz(), back.nnz());
+            assert_eq!(m.col_idx, back.col_idx);
+        });
+    }
+}

@@ -1,0 +1,19 @@
+//! Sparse matrix substrate: storage formats, conversions, I/O,
+//! synthetic matrix generators, and sparsity statistics.
+//!
+//! Everything downstream (workload distribution, hybrid execution, the
+//! benchmark corpus) is built on these types. Indices are `u32`
+//! (SuiteSparse-scale matrices fit comfortably) and values are `f32`
+//! to match the kernels' native precision.
+
+pub mod coo;
+pub mod corpus;
+pub mod csr;
+pub mod dense;
+pub mod gen;
+pub mod mm_io;
+pub mod stats;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use dense::Dense;

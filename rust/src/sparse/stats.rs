@@ -1,0 +1,166 @@
+//! Sparsity statistics used by the paper's analysis.
+//!
+//! The central metric is the fraction of **NNZ-1 column vectors**: within
+//! each `m`-row window, nonzeros in a column form a "nonzero column
+//! vector"; vectors with exactly one nonzero represent the worst case
+//! for structured (TCU-style) execution. Figure 1 of the paper sorts
+//! 500 matrices by this ratio to delineate the CUDA-core / hybrid / TCU
+//! advantage regions.
+
+use super::csr::Csr;
+
+/// Full per-matrix sparsity profile.
+#[derive(Debug, Clone)]
+pub struct SparsityProfile {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    pub avg_row_len: f64,
+    pub max_row_len: usize,
+    /// stddev of row lengths (load imbalance indicator)
+    pub row_len_std: f64,
+    /// fraction of nonzero column vectors (window m=8) with exactly 1 nnz
+    pub nnz1_ratio: f64,
+    /// mean nnz per nonzero column vector (= m * rho in the paper)
+    pub mean_vec_nnz: f64,
+    /// total number of nonzero column vectors
+    pub n_vectors: usize,
+}
+
+/// Count, for each window of `m` rows, the nonzero column vectors and
+/// how many of them have exactly one nonzero. Returns (vectors, nnz1).
+pub fn count_vectors(m: &Csr, window: usize) -> (usize, usize) {
+    assert!(window >= 1);
+    let mut vectors = 0usize;
+    let mut nnz1 = 0usize;
+    let nwin = m.rows.div_ceil(window);
+    // histogram per window: column -> count, via sort of the window's cols
+    let mut cols_buf: Vec<u32> = Vec::new();
+    for w in 0..nwin {
+        cols_buf.clear();
+        let lo = w * window;
+        let hi = ((w + 1) * window).min(m.rows);
+        for r in lo..hi {
+            let (cols, _) = m.row(r);
+            cols_buf.extend_from_slice(cols);
+        }
+        cols_buf.sort_unstable();
+        let mut i = 0;
+        while i < cols_buf.len() {
+            let c = cols_buf[i];
+            let mut j = i + 1;
+            while j < cols_buf.len() && cols_buf[j] == c {
+                j += 1;
+            }
+            vectors += 1;
+            if j - i == 1 {
+                nnz1 += 1;
+            }
+            i = j;
+        }
+    }
+    (vectors, nnz1)
+}
+
+/// Ratio of NNZ-1 vectors among all nonzero column vectors (window `m`).
+pub fn nnz1_vector_ratio(m: &Csr, window: usize) -> f64 {
+    let (vectors, nnz1) = count_vectors(m, window);
+    if vectors == 0 {
+        return 0.0;
+    }
+    nnz1 as f64 / vectors as f64
+}
+
+/// Compute the full profile (window fixed at 8 to match the kernels).
+pub fn profile(m: &Csr) -> SparsityProfile {
+    let window = 8;
+    let (n_vectors, nnz1) = count_vectors(m, window);
+    let lens: Vec<usize> = (0..m.rows).map(|r| m.row_len(r)).collect();
+    let avg = if m.rows > 0 { m.nnz() as f64 / m.rows as f64 } else { 0.0 };
+    let var = if m.rows > 0 {
+        lens.iter().map(|&l| (l as f64 - avg).powi(2)).sum::<f64>() / m.rows as f64
+    } else {
+        0.0
+    };
+    SparsityProfile {
+        rows: m.rows,
+        cols: m.cols,
+        nnz: m.nnz(),
+        avg_row_len: avg,
+        max_row_len: lens.iter().copied().max().unwrap_or(0),
+        row_len_std: var.sqrt(),
+        nnz1_ratio: if n_vectors == 0 { 0.0 } else { nnz1 as f64 / n_vectors as f64 },
+        mean_vec_nnz: if n_vectors == 0 { 0.0 } else { m.nnz() as f64 / n_vectors as f64 },
+        n_vectors,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+
+    #[test]
+    fn vectors_counted_per_window() {
+        // 16 rows; col 0 has nnz in rows 0..4 (one vector of nnz 4 in
+        // window 0); col 1 has one nnz in row 0 and one in row 9
+        // (two NNZ-1 vectors, one per window).
+        let mut coo = Coo::new(16, 4);
+        for r in 0..4 {
+            coo.push(r, 0, 1.0);
+        }
+        coo.push(0, 1, 1.0);
+        coo.push(9, 1, 1.0);
+        let m = coo.to_csr();
+        let (vectors, nnz1) = count_vectors(&m, 8);
+        assert_eq!(vectors, 3);
+        assert_eq!(nnz1, 2);
+        assert!((nnz1_vector_ratio(&m, 8) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_matrix_profile() {
+        let m = Csr::zeros(8, 8);
+        let p = profile(&m);
+        assert_eq!(p.nnz, 0);
+        assert_eq!(p.n_vectors, 0);
+        assert_eq!(p.nnz1_ratio, 0.0);
+    }
+
+    #[test]
+    fn diagonal_matrix_all_nnz1() {
+        let mut coo = Coo::new(32, 32);
+        for i in 0..32 {
+            coo.push(i, i, 1.0);
+        }
+        let m = coo.to_csr();
+        assert_eq!(nnz1_vector_ratio(&m, 8), 1.0);
+        let p = profile(&m);
+        assert_eq!(p.n_vectors, 32);
+        assert!((p.mean_vec_nnz - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_column_zero_nnz1() {
+        let mut coo = Coo::new(8, 2);
+        for r in 0..8 {
+            coo.push(r, 0, 1.0);
+        }
+        let m = coo.to_csr();
+        assert_eq!(nnz1_vector_ratio(&m, 8), 0.0);
+    }
+
+    #[test]
+    fn profile_row_stats() {
+        let mut coo = Coo::new(4, 8);
+        for c in 0..8 {
+            coo.push(0, c, 1.0); // one long row
+        }
+        coo.push(1, 0, 1.0);
+        let m = coo.to_csr();
+        let p = profile(&m);
+        assert_eq!(p.max_row_len, 8);
+        assert!((p.avg_row_len - 9.0 / 4.0).abs() < 1e-12);
+        assert!(p.row_len_std > 2.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Small self-contained utilities: deterministic PRNG, a mini
+//! property-testing framework, logging, and timing helpers.
+//!
+//! The build environment is fully offline, so these replace `rand`,
+//! `proptest`, `env_logger` and `criterion` with purpose-built,
+//! dependency-free equivalents.
+
+pub mod logger;
+pub mod prng;
+pub mod propcheck;
+pub mod timer;
+
+pub use prng::SplitMix64;
+pub use timer::Timer;

@@ -1,0 +1,240 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! All synthetic corpora and property tests in this repository are
+//! seeded, so every experiment is exactly reproducible. SplitMix64 is
+//! the generator: tiny state, excellent statistical quality for
+//! non-cryptographic use, and trivially portable.
+
+/// SplitMix64 PRNG (Steele, Lea & Flood 2014).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a generator from a seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Derive an independent child generator (for parallel streams).
+    pub fn fork(&mut self) -> Self {
+        // Advance once and scramble so children don't overlap trivially.
+        let s = self.next_u64();
+        Self::new(s ^ 0x9e37_79b9_7f4a_7c15)
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform u32.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)` (n > 0), bias-free via 128-bit widening.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.f32() * (hi - lo)
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                let v = self.f64();
+                return (-2.0 * u.ln()).sqrt() * (2.0 * std::f64::consts::PI * v).cos();
+            }
+        }
+    }
+
+    /// Bernoulli with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Sample from a power-law (Zipf-like) over `[0, n)` with exponent `alpha`.
+    ///
+    /// Uses inverse-CDF of the continuous Pareto approximation, which is
+    /// accurate enough for generating degree-skewed graphs.
+    pub fn zipf(&mut self, n: usize, alpha: f64) -> usize {
+        debug_assert!(n > 0);
+        if alpha <= 1.0 + 1e-9 {
+            // near-uniform fallback blended with mild skew
+            let u = self.f64();
+            return ((u * u) * n as f64) as usize % n;
+        }
+        let u = self.f64().max(1e-12);
+        let x = u.powf(-1.0 / (alpha - 1.0)); // Pareto >= 1
+        let idx = (x - 1.0).floor() as usize;
+        idx.min(n - 1)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose `k` distinct values from `[0, n)` (k <= n). O(k) expected
+    /// for k << n, falls back to shuffle for dense draws.
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        if k * 3 > n {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            all.sort_unstable();
+            return all;
+        }
+        let mut seen = std::collections::HashSet::with_capacity(k * 2);
+        let mut out = Vec::with_capacity(k);
+        while out.len() < k {
+            let v = self.below(n as u64) as usize;
+            if seen.insert(v) {
+                out.push(v);
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = SplitMix64::new(1);
+        for _ in 0..10_000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = SplitMix64::new(2);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut r = SplitMix64::new(3);
+        let n = 100_000;
+        let s: f64 = (0..n).map(|_| r.f64()).sum();
+        let mean = s / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct_and_sorted() {
+        let mut r = SplitMix64::new(4);
+        for _ in 0..50 {
+            let n = r.range(1, 200);
+            let k = r.range(0, n + 1);
+            let s = r.sample_distinct(n, k);
+            assert_eq!(s.len(), k);
+            for w in s.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(s.iter().all(|&v| v < n));
+        }
+    }
+
+    #[test]
+    fn zipf_in_range_and_skewed() {
+        let mut r = SplitMix64::new(5);
+        let n = 1000;
+        let mut low = 0usize;
+        for _ in 0..10_000 {
+            let v = r.zipf(n, 2.0);
+            assert!(v < n);
+            if v < 10 {
+                low += 1;
+            }
+        }
+        // alpha=2 puts most mass on the smallest indices
+        assert!(low > 5_000, "low={low}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = SplitMix64::new(6);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut ys = xs.clone();
+        ys.sort_unstable();
+        assert_eq!(ys, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SplitMix64::new(7);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn fork_diverges() {
+        let mut a = SplitMix64::new(42);
+        let mut c = a.fork();
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+}

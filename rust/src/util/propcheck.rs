@@ -1,0 +1,115 @@
+//! A miniature property-based testing framework (offline stand-in for
+//! `proptest`).
+//!
+//! Usage:
+//! ```
+//! use libra::util::propcheck::{check, Config};
+//! check(Config::default().cases(64), "sum is commutative", |rng| {
+//!     let a = rng.range(0, 100) as i64;
+//!     let b = rng.range(0, 100) as i64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case receives a fresh deterministic PRNG stream; on failure the
+//! framework reports the case seed so the exact input can be replayed
+//! with `Config::replay(seed)`.
+
+use super::prng::SplitMix64;
+
+/// Default base seed for property runs.
+pub const DEFAULT_SEED: u64 = 0x11b2_a5ee_d000_0001;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub base_seed: u64,
+    pub replay: Option<u64>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 100, base_seed: DEFAULT_SEED, replay: None }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.base_seed = s;
+        self
+    }
+
+    /// Replay a single failing case by its reported seed.
+    pub fn replay(mut self, s: u64) -> Self {
+        self.replay = Some(s);
+        self
+    }
+}
+
+/// Run `prop` for `cfg.cases` deterministic cases. Panics (with the
+/// case seed) on the first failing case.
+pub fn check<F: FnMut(&mut SplitMix64) + std::panic::UnwindSafe + Copy>(
+    cfg: Config,
+    name: &str,
+    prop: F,
+) {
+    if let Some(seed) = cfg.replay {
+        let mut rng = SplitMix64::new(seed);
+        let mut p = prop;
+        p(&mut rng);
+        return;
+    }
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add((case as u64).wrapping_mul(0x9e37_79b9));
+        let result = std::panic::catch_unwind(move || {
+            let mut rng = SplitMix64::new(seed);
+            let mut p = prop;
+            p(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(Config::default().cases(32), "add commutes", |rng| {
+            let a = rng.range(0, 1000) as i64;
+            let b = rng.range(0, 1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check(Config::default().cases(4), "always fails", |_rng| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn replay_runs_single_case() {
+        check(Config::default().replay(0x1234), "replay ok", |rng| {
+            let _ = rng.next_u64();
+        });
+    }
+}

@@ -1,0 +1,191 @@
+//! 2D-aware workload distribution (paper §4.1–4.2) — the heart of
+//! Libra: every nonzero of the sparse operand is routed to exactly one
+//! of the two engines,
+//!
+//! * the **structured engine** (the GPU's tensor cores; here the
+//!   TC-block path executed natively or via PJRT artifacts), which is
+//!   fast but computes full padded tiles, and
+//! * the **flexible engine** (the GPU's CUDA cores; here per-element
+//!   worker threads), which does exactly `nnz` work at a lower
+//!   per-element rate.
+//!
+//! The split is decided along the paper's two dimensions:
+//!
+//! 1. **Locality / data reusability** — how often a loaded dense
+//!    operand is reused. For SpMM the unit is the 8x1 *column vector*
+//!    of one row window (`R_spmm = NNZ/k`, one dense row loaded per
+//!    vector); for SDDMM the unit is the 8x16 *block*
+//!    (`R_sddmm = 2·NNZ/(m+n)`).
+//! 2. **Utilization / practical performance** — a unit only goes to
+//!    the structured engine if its nonzero count reaches the threshold
+//!    θ ([`DistParams::threshold`]) at which the padded-tile redundancy
+//!    is paid for; θ is a hardware property produced by the cost model
+//!    (`costmodel::substrate_params`). Additionally, padding slots of
+//!    partially filled trailing blocks are backfilled with the densest
+//!    sub-threshold vectors ([`DistParams::fill_padding`]) — those
+//!    slots are computed by the structured engine whether used or not,
+//!    so filling them is free work removed from the flexible stream.
+//!
+//! Window invariants shared by both operators:
+//!
+//! * windows are [`crate::format::WINDOW`] (= 8) consecutive rows; the
+//!   last window of a matrix may be shorter;
+//! * distribution is strictly *window-local*: the decision for window
+//!   `w` depends only on rows `8w..8w+8`, which is what makes the
+//!   parallel preprocessing path (`prep::distribute_spmm_parallel`)
+//!   bit-for-bit identical to the sequential one;
+//! * TC blocks are emitted window-major (blocks of window `w` precede
+//!   blocks of window `w+1`), and within a block values are stored in
+//!   ascending bitmap-bit order (row-major), exactly the Bit-Decoding
+//!   layout of [`crate::format::TcBlocks`];
+//! * every CSR element lands in exactly one place — enforced by
+//!   `SpmmDist::validate_cover` / `SddmmDist::validate_cover`.
+
+pub mod sddmm;
+pub mod spmm;
+
+pub use sddmm::{distribute_sddmm, SddmmDist};
+pub use spmm::{distribute_spmm, SpmmDist};
+
+use crate::sparse::Csr;
+
+/// One window element: `(col, local row, value, csr position)`.
+pub(crate) type WindowElem = (u32, u32, f32, u32);
+
+/// Gather rows `[lo, hi)` of `m` as column-major window elements plus
+/// the per-column vector ranges (`[start, end)` runs into the element
+/// list, one per nonzero column of the window) — the shared first step
+/// of both distributors. Rows ascend within each column because a CSR
+/// row contributes at most one element per column.
+pub(crate) fn window_vectors(
+    m: &Csr,
+    lo: usize,
+    hi: usize,
+) -> (Vec<WindowElem>, Vec<(usize, usize)>) {
+    let mut elems: Vec<WindowElem> = Vec::new();
+    for r in lo..hi {
+        let (s, e) = (m.row_ptr[r] as usize, m.row_ptr[r + 1] as usize);
+        for i in s..e {
+            elems.push((m.col_idx[i], (r - lo) as u32, m.values[i], i as u32));
+        }
+    }
+    elems.sort_unstable_by_key(|&(c, r, _, _)| (c, r));
+    let mut vec_ranges: Vec<(usize, usize)> = Vec::new();
+    let mut i = 0;
+    while i < elems.len() {
+        let c = elems[i].0;
+        let mut j = i + 1;
+        while j < elems.len() && elems[j].0 == c {
+            j += 1;
+        }
+        vec_ranges.push((i, j));
+        i = j;
+    }
+    (elems, vec_ranges)
+}
+
+/// The two sparse operators Libra distributes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Sparse x dense -> dense (`C = A · B`).
+    Spmm,
+    /// Sampled dense x dense -> sparse (`C = (A · Bᵀ) ⊙ S`).
+    Sddmm,
+}
+
+/// Distribution parameters.
+///
+/// `threshold` is the paper's θ: the minimum nonzero count at which a
+/// distribution unit (an 8x1 column vector for SpMM, an 8x16 block for
+/// SDDMM) is routed to the structured engine. `usize::MAX` therefore
+/// means "flexible engine only" and `1` means "structured engine
+/// only".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DistParams {
+    /// NNZ threshold θ for the structured engine.
+    pub threshold: usize,
+    /// Backfill padding slots of the trailing partial TC block with the
+    /// densest sub-threshold vectors (SpMM utilization dimension;
+    /// ignored by SDDMM, whose unit is already the whole block).
+    pub fill_padding: bool,
+}
+
+impl Default for DistParams {
+    /// The paper's tuned SpMM optimum on H100 (Fig. 11): θ = 3.
+    fn default() -> Self {
+        Self { threshold: 3, fill_padding: true }
+    }
+}
+
+impl DistParams {
+    /// The paper's tuned SDDMM optimum on H100 (Fig. 11): θ ≈ 24
+    /// nonzeros per 8x16 block.
+    pub fn sddmm_default() -> Self {
+        Self { threshold: 24, fill_padding: true }
+    }
+
+    /// Route everything to the flexible engine (no TC blocks).
+    pub fn flex_only() -> Self {
+        Self { threshold: usize::MAX, fill_padding: false }
+    }
+
+    /// Route everything to the structured engine (no flexible work).
+    pub fn tc_only() -> Self {
+        Self { threshold: 1, fill_padding: true }
+    }
+}
+
+/// Summary of one distribution decision, reported by the CLI, the
+/// examples and the benches.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DistStats {
+    /// Nonzeros in the input matrix.
+    pub nnz_total: usize,
+    /// Nonzeros routed to the structured (TC-block) engine.
+    pub nnz_tc: usize,
+    /// Nonzeros routed to the flexible engine.
+    pub nnz_flex: usize,
+    /// TC blocks emitted.
+    pub n_blocks: usize,
+    /// Row windows in the matrix (`rows.div_ceil(8)`).
+    pub n_windows: usize,
+    /// Zero-padding fraction of the TC blocks — the structured
+    /// redundancy the threshold bounds (see
+    /// `crate::format::TcBlocks::padding_ratio`).
+    pub padding_ratio: f64,
+}
+
+impl DistStats {
+    /// Fraction of nonzeros on the structured engine (0 for an empty
+    /// matrix).
+    pub fn tc_fraction(&self) -> f64 {
+        if self.nnz_total == 0 {
+            0.0
+        } else {
+            self.nnz_tc as f64 / self.nnz_total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_presets() {
+        let d = DistParams::default();
+        assert_eq!(d.threshold, 3);
+        assert!(d.fill_padding);
+        assert_eq!(DistParams::sddmm_default().threshold, 24);
+        assert_eq!(DistParams::flex_only().threshold, usize::MAX);
+        assert_eq!(DistParams::tc_only().threshold, 1);
+    }
+
+    #[test]
+    fn tc_fraction_handles_empty() {
+        let s = DistStats::default();
+        assert_eq!(s.tc_fraction(), 0.0);
+        let s = DistStats { nnz_total: 10, nnz_tc: 4, ..Default::default() };
+        assert!((s.tc_fraction() - 0.4).abs() < 1e-12);
+    }
+}

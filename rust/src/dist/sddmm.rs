@@ -1,0 +1,272 @@
+//! SDDMM distribution: per-window, per-block split (paper §4.1).
+//!
+//! SDDMM reuse happens along a different dimension than SpMM: one 8x16
+//! TC block samples the product of 8 rows of `A` against 16 column
+//! vectors of `B`, so the dense-operand reuse ratio is
+//! `R_sddmm = 2·NNZ/(m+n)` and the distribution unit is the whole
+//! block. Each window's nonzero column vectors are packed 16 per block
+//! in ascending column order; a block whose nonzero count reaches θ is
+//! executed on the structured engine (dense MMA + in-kernel sampling),
+//! anything below streams through the flexible engine as individual
+//! dot products.
+//!
+//! Because SDDMM writes each nonzero exactly once, the plan carries an
+//! *output index* per element (`tc_out_idx` / `flex_out_idx`): the CSR
+//! position the computed sample is written to. Distribution is
+//! window-local, so `prep::preprocess_sddmm` can run it on row slices
+//! and concatenate.
+
+use super::{DistParams, DistStats};
+use crate::format::{TcBlocks, PAD_COL, SDDMM_BLOCK_N, WINDOW};
+use crate::sparse::Csr;
+
+/// A distributed SDDMM workload.
+///
+/// The structured part is `tc` (8x16 bitmap blocks, window-major) with
+/// `tc_out_idx` giving each stored value's CSR write-back position (in
+/// ascending bitmap-bit order per block, as the executors produce
+/// them). The flexible part is a flat element list: global row,
+/// column, pattern value, and CSR write-back position per element.
+#[derive(Debug, Clone, Default)]
+pub struct SddmmDist {
+    pub rows: usize,
+    pub cols: usize,
+    /// Structured part: bitmap-compressed 8x16 blocks, window-major.
+    pub tc: TcBlocks,
+    /// CSR write-back position per stored TC value.
+    pub tc_out_idx: Vec<u32>,
+    /// Flexible elements: global row per element.
+    pub flex_rows: Vec<u32>,
+    pub flex_cols: Vec<u32>,
+    /// Pattern values (the sample scale factors).
+    pub flex_vals: Vec<f32>,
+    /// CSR write-back position per flexible element.
+    pub flex_out_idx: Vec<u32>,
+    pub stats: DistStats,
+}
+
+impl SddmmDist {
+    /// Check the exactly-once cover invariant against the source
+    /// matrix: every CSR position is written by exactly one element of
+    /// exactly one stream, and rows/columns/values all match.
+    pub fn validate_cover(&self, m: &Csr) -> anyhow::Result<()> {
+        self.tc.validate()?;
+        anyhow::ensure!(self.rows == m.rows && self.cols == m.cols, "shape mismatch");
+        anyhow::ensure!(self.tc_out_idx.len() == self.tc.values.len(), "tc_out_idx length");
+        anyhow::ensure!(
+            self.flex_rows.len() == self.flex_cols.len()
+                && self.flex_rows.len() == self.flex_vals.len()
+                && self.flex_rows.len() == self.flex_out_idx.len(),
+            "flex array length mismatch"
+        );
+        let mut seen = vec![false; m.nnz()];
+        for (&pos, &v) in self.tc_out_idx.iter().zip(&self.tc.values) {
+            let p = pos as usize;
+            anyhow::ensure!(p < seen.len(), "tc out idx {p} out of range");
+            anyhow::ensure!(!seen[p], "csr position {p} written twice");
+            seen[p] = true;
+            anyhow::ensure!(m.values[p] == v, "tc value mismatch at csr pos {p}");
+        }
+        for i in 0..self.flex_rows.len() {
+            let p = self.flex_out_idx[i] as usize;
+            anyhow::ensure!(p < seen.len(), "flex out idx {p} out of range");
+            anyhow::ensure!(!seen[p], "csr position {p} written twice");
+            seen[p] = true;
+            anyhow::ensure!(m.col_idx[p] == self.flex_cols[i], "flex col mismatch at {i}");
+            anyhow::ensure!(m.values[p] == self.flex_vals[i], "flex value mismatch at {i}");
+            let r = self.flex_rows[i] as usize;
+            anyhow::ensure!(r < m.rows, "flex row {r} out of range");
+            anyhow::ensure!(
+                p >= m.row_ptr[r] as usize && p < m.row_ptr[r + 1] as usize,
+                "flex element {i} not in row {r}"
+            );
+        }
+        anyhow::ensure!(seen.iter().all(|&x| x), "uncovered csr positions");
+        anyhow::ensure!(self.stats.nnz_tc + self.stats.nnz_flex == m.nnz(), "stats nnz mismatch");
+        Ok(())
+    }
+}
+
+/// 2D-aware SDDMM distribution over all windows of `m`.
+///
+/// Window-local and deterministic; `params.fill_padding` is accepted
+/// for signature symmetry but has no effect here (the unit is already
+/// the whole block, so there are no sub-unit padding slots to fill).
+pub fn distribute_sddmm(m: &Csr, params: &DistParams) -> SddmmDist {
+    let n_windows = m.rows.div_ceil(WINDOW);
+    let mut out = SddmmDist {
+        rows: m.rows,
+        cols: m.cols,
+        tc: TcBlocks::new(SDDMM_BLOCK_N),
+        ..Default::default()
+    };
+    for w in 0..n_windows {
+        let lo = w * WINDOW;
+        let hi = ((w + 1) * WINDOW).min(m.rows);
+        let (elems, vec_ranges) = super::window_vectors(m, lo, hi);
+        if elems.is_empty() {
+            continue;
+        }
+
+        // pack vectors 16 per candidate block (ascending column order);
+        // route each block by its total nonzero count vs θ
+        let mut flex: Vec<(u32, u32, f32, u32)> = Vec::new(); // (r, c, v, pos)
+        for chunk in vec_ranges.chunks(SDDMM_BLOCK_N) {
+            let block_nnz: usize = chunk.iter().map(|&(s, e)| e - s).sum();
+            if block_nnz >= params.threshold {
+                let mut cols = [PAD_COL; SDDMM_BLOCK_N];
+                let mut grid = [None::<(f32, u32)>; WINDOW * SDDMM_BLOCK_N];
+                for (slot, &(s, e)) in chunk.iter().enumerate() {
+                    cols[slot] = elems[s].0;
+                    for &(_, r, v, pos) in &elems[s..e] {
+                        grid[r as usize * SDDMM_BLOCK_N + slot] = Some((v, pos));
+                    }
+                }
+                let mut bm = 0u128;
+                for (bit, cell) in grid.iter().enumerate() {
+                    if let Some((v, pos)) = *cell {
+                        bm |= 1u128 << bit;
+                        out.tc.values.push(v);
+                        out.tc_out_idx.push(pos);
+                    }
+                }
+                out.tc.window_of.push(w as u32);
+                out.tc.cols.extend_from_slice(&cols);
+                out.tc.bitmaps.push(bm);
+                out.tc.val_ptr.push(out.tc.values.len() as u32);
+            } else {
+                for &(s, e) in chunk {
+                    for &(c, r, v, pos) in &elems[s..e] {
+                        flex.push((r, c, v, pos));
+                    }
+                }
+            }
+        }
+        // flexible stream: local-row-major, ascending columns (= CSR
+        // order within the window)
+        flex.sort_unstable_by_key(|&(r, c, _, _)| (r, c));
+        for &(r, c, v, pos) in &flex {
+            out.flex_rows.push(lo as u32 + r);
+            out.flex_cols.push(c);
+            out.flex_vals.push(v);
+            out.flex_out_idx.push(pos);
+        }
+    }
+    let nnz_tc = out.tc.nnz();
+    out.stats = DistStats {
+        nnz_total: m.nnz(),
+        nnz_tc,
+        nnz_flex: m.nnz() - nnz_tc,
+        n_blocks: out.tc.n_blocks(),
+        n_windows,
+        padding_ratio: out.tc.padding_ratio(),
+    };
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, Coo};
+    use crate::util::propcheck::{check, Config};
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn cover_property() {
+        check(Config::default().cases(40), "sddmm dist covers matrix", |rng| {
+            let rows = rng.range(1, 180);
+            let cols = rng.range(1, 150);
+            let m = gen::uniform_random(rng, rows, cols, 0.08);
+            let th = if rng.chance(0.1) { usize::MAX } else { rng.range(1, 64) };
+            let d = distribute_sddmm(&m, &DistParams { threshold: th, fill_padding: true });
+            d.validate_cover(&m).unwrap();
+        });
+    }
+
+    #[test]
+    fn threshold_extremes() {
+        let mut rng = SplitMix64::new(210);
+        let m = gen::power_law(&mut rng, 256, 10.0, 2.0);
+        let all_tc = distribute_sddmm(&m, &DistParams { threshold: 1, fill_padding: true });
+        assert_eq!(all_tc.stats.nnz_flex, 0);
+        assert_eq!(all_tc.stats.nnz_tc, m.nnz());
+        let all_flex = distribute_sddmm(&m, &DistParams::flex_only());
+        assert_eq!(all_flex.tc.n_blocks(), 0);
+        assert_eq!(all_flex.stats.nnz_flex, m.nnz());
+        all_tc.validate_cover(&m).unwrap();
+        all_flex.validate_cover(&m).unwrap();
+    }
+
+    #[test]
+    fn out_idx_points_at_matching_elements() {
+        let mut rng = SplitMix64::new(211);
+        let m = gen::block_diag_noise(&mut rng, 96, 8, 0.5, 0.005);
+        let d = distribute_sddmm(&m, &DistParams::sddmm_default());
+        // per-block: decoded (row, col) of value i must be the CSR
+        // element at tc_out_idx[i]
+        for b in 0..d.tc.n_blocks() {
+            let win = d.tc.window_of[b] as usize;
+            let cols = d.tc.block_cols(b);
+            let base = d.tc.val_ptr[b] as usize;
+            let mut rest = d.tc.bitmaps[b];
+            let mut i = 0;
+            while rest != 0 {
+                let bit = rest.trailing_zeros() as usize;
+                let (r, c) = (bit / SDDMM_BLOCK_N, bit % SDDMM_BLOCK_N);
+                let pos = d.tc_out_idx[base + i] as usize;
+                let row = win * WINDOW + r;
+                assert!(pos >= m.row_ptr[row] as usize && pos < m.row_ptr[row + 1] as usize);
+                assert_eq!(m.col_idx[pos], cols[c]);
+                i += 1;
+                rest &= rest - 1;
+            }
+        }
+    }
+
+    #[test]
+    fn block_threshold_is_per_block_not_per_vector() {
+        // 16 singleton columns in one window: each vector has nnz 1,
+        // but the block has nnz 16 and clears θ = 16 as a unit.
+        let mut coo = Coo::new(8, 16);
+        for c in 0..16 {
+            coo.push(c % 8, c, 1.0 + c as f32);
+        }
+        let m = coo.to_csr();
+        let d = distribute_sddmm(&m, &DistParams { threshold: 16, fill_padding: true });
+        assert_eq!(d.tc.n_blocks(), 1);
+        assert_eq!(d.stats.nnz_flex, 0);
+        let d = distribute_sddmm(&m, &DistParams { threshold: 17, fill_padding: true });
+        assert_eq!(d.tc.n_blocks(), 0);
+        assert_eq!(d.stats.nnz_flex, 16);
+    }
+
+    #[test]
+    fn empty_and_tail_windows() {
+        let m = Csr::zeros(20, 10);
+        let d = distribute_sddmm(&m, &DistParams::sddmm_default());
+        assert_eq!(d.stats.n_windows, 3);
+        assert_eq!(d.tc.n_blocks(), 0);
+        d.validate_cover(&m).unwrap();
+
+        let mut coo = Coo::new(10, 6);
+        for c in 0..6 {
+            coo.push(9, c, 1.0);
+        }
+        let m = coo.to_csr();
+        let d = distribute_sddmm(&m, &DistParams { threshold: 1, fill_padding: true });
+        assert!(d.tc.window_of.iter().all(|&w| w == 1));
+        d.validate_cover(&m).unwrap();
+    }
+
+    #[test]
+    fn blocks_are_window_major_and_16_wide() {
+        let mut rng = SplitMix64::new(212);
+        let m = gen::uniform_random(&mut rng, 120, 90, 0.15);
+        let d = distribute_sddmm(&m, &DistParams { threshold: 4, fill_padding: true });
+        assert_eq!(d.tc.k, SDDMM_BLOCK_N);
+        for b in 1..d.tc.n_blocks() {
+            assert!(d.tc.window_of[b - 1] <= d.tc.window_of[b]);
+        }
+        d.validate_cover(&m).unwrap();
+    }
+}

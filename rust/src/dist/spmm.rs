@@ -1,0 +1,465 @@
+//! SpMM distribution: per-window, per-column-vector split (paper §4.1).
+//!
+//! Within each 8-row window the nonzeros are grouped into 8x1 *column
+//! vectors* (all nonzeros of one column). A vector with at least θ
+//! nonzeros is stored in a bitmap-compressed TC block for the
+//! structured engine; the rest stream through the flexible engine in
+//! CSR order. When `fill_padding` is set, the empty slots of the
+//! window's trailing partial block are backfilled with the densest
+//! sub-threshold vectors (the utilization dimension: those slots cost
+//! the structured engine nothing extra).
+//!
+//! The window kernel is exposed as [`distribute_window`] +
+//! [`assemble`] so callers can fan windows out across threads
+//! (`prep::distribute_spmm_parallel`) or override the per-window
+//! parameters (the SparseTIR-like coarse baseline) and still produce a
+//! plan bit-for-bit identical to the sequential [`distribute_spmm`].
+
+use super::{DistParams, DistStats};
+use crate::format::{TcBlocks, PAD_COL, SPMM_BLOCK_K, WINDOW};
+use crate::sparse::Csr;
+
+/// A distributed SpMM workload: the structured part as TC blocks, the
+/// flexible part as a CSR-like element stream, plus the source-index
+/// maps that let values be refreshed in place.
+#[derive(Debug, Clone)]
+pub struct SpmmDist {
+    pub rows: usize,
+    pub cols: usize,
+    /// Structured part: bitmap-compressed 8x8 blocks, window-major.
+    pub tc: TcBlocks,
+    /// CSR position of each stored TC value (parallel to `tc.values`).
+    pub tc_src_idx: Vec<u32>,
+    /// Flexible part, rows x (per-row element runs): `row_ptr`-style
+    /// offsets into `flex_cols` / `flex_vals` (length `rows + 1`).
+    pub flex_row_ptr: Vec<u32>,
+    pub flex_cols: Vec<u32>,
+    pub flex_vals: Vec<f32>,
+    /// CSR position of each flexible element (parallel to `flex_vals`).
+    pub flex_src_idx: Vec<u32>,
+    pub stats: DistStats,
+}
+
+impl SpmmDist {
+    /// Refresh all stored values from `vals` (one value per CSR
+    /// element, in CSR order), keeping the pattern and the distribution
+    /// fixed. This is the AGNN hot path: the α matrix changes every
+    /// step but its pattern — and hence the whole plan — does not.
+    pub fn set_values(&mut self, vals: &[f32]) {
+        assert_eq!(vals.len(), self.stats.nnz_total, "value count != pattern nnz");
+        for (v, &src) in self.tc.values.iter_mut().zip(&self.tc_src_idx) {
+            *v = vals[src as usize];
+        }
+        for (v, &src) in self.flex_vals.iter_mut().zip(&self.flex_src_idx) {
+            *v = vals[src as usize];
+        }
+    }
+
+    /// Check the exactly-once cover invariant against the source
+    /// matrix: every CSR element appears in exactly one of the two
+    /// streams, with matching value, column, and row.
+    pub fn validate_cover(&self, m: &Csr) -> anyhow::Result<()> {
+        self.tc.validate()?;
+        anyhow::ensure!(self.rows == m.rows && self.cols == m.cols, "shape mismatch");
+        anyhow::ensure!(self.flex_row_ptr.len() == self.rows + 1, "flex_row_ptr length");
+        anyhow::ensure!(
+            self.flex_cols.len() == self.flex_vals.len()
+                && self.flex_cols.len() == self.flex_src_idx.len(),
+            "flex array length mismatch"
+        );
+        anyhow::ensure!(self.tc_src_idx.len() == self.tc.values.len(), "tc_src_idx length");
+        anyhow::ensure!(
+            *self.flex_row_ptr.last().unwrap() as usize == self.flex_vals.len(),
+            "flex_row_ptr end"
+        );
+        let mut seen = vec![false; m.nnz()];
+        for (&src, &v) in self.tc_src_idx.iter().zip(&self.tc.values) {
+            let s = src as usize;
+            anyhow::ensure!(s < seen.len(), "tc src {s} out of range");
+            anyhow::ensure!(!seen[s], "csr element {s} covered twice");
+            seen[s] = true;
+            anyhow::ensure!(m.values[s] == v, "tc value mismatch at csr pos {s}");
+        }
+        for r in 0..self.rows {
+            let (s, e) = (self.flex_row_ptr[r] as usize, self.flex_row_ptr[r + 1] as usize);
+            for i in s..e {
+                let src = self.flex_src_idx[i] as usize;
+                anyhow::ensure!(src < seen.len(), "flex src {src} out of range");
+                anyhow::ensure!(!seen[src], "csr element {src} covered twice");
+                seen[src] = true;
+                anyhow::ensure!(m.col_idx[src] == self.flex_cols[i], "flex col mismatch at {i}");
+                anyhow::ensure!(m.values[src] == self.flex_vals[i], "flex value mismatch at {i}");
+                anyhow::ensure!(
+                    src >= m.row_ptr[r] as usize && src < m.row_ptr[r + 1] as usize,
+                    "flex element {i} not in row {r}"
+                );
+            }
+        }
+        anyhow::ensure!(seen.iter().all(|&x| x), "uncovered csr elements");
+        anyhow::ensure!(self.stats.nnz_tc + self.stats.nnz_flex == m.nnz(), "stats nnz mismatch");
+        Ok(())
+    }
+}
+
+/// One window's distribution result, ready for in-order [`assemble`].
+///
+/// TC blocks are stored flattened (`block_cols` holds
+/// [`SPMM_BLOCK_K`] slots per block), values in ascending bitmap-bit
+/// order; flexible elements are stored local-row-major with ascending
+/// columns, with per-local-row counts in `flex_row_len`.
+#[derive(Debug, Clone)]
+pub struct WindowOut {
+    pub window: u32,
+    pub block_cols: Vec<u32>,
+    pub bitmaps: Vec<u128>,
+    pub values: Vec<f32>,
+    pub tc_src_idx: Vec<u32>,
+    /// Flexible element count per local row (length = rows in window).
+    pub flex_row_len: Vec<u32>,
+    pub flex_cols: Vec<u32>,
+    pub flex_vals: Vec<f32>,
+    pub flex_src_idx: Vec<u32>,
+}
+
+/// Distribute one window (`w < rows.div_ceil(WINDOW)`) of `m`.
+///
+/// Pure and window-local: the result depends only on rows
+/// `8w..min(8w+8, rows)` and `params`, never on other windows — the
+/// property the parallel preprocessing path relies on.
+pub fn distribute_window(m: &Csr, w: usize, params: &DistParams) -> WindowOut {
+    let lo = w * WINDOW;
+    let hi = ((w + 1) * WINDOW).min(m.rows);
+    let mut out = WindowOut {
+        window: w as u32,
+        block_cols: Vec::new(),
+        bitmaps: Vec::new(),
+        values: Vec::new(),
+        tc_src_idx: Vec::new(),
+        flex_row_len: vec![0u32; hi.saturating_sub(lo)],
+        flex_cols: Vec::new(),
+        flex_vals: Vec::new(),
+        flex_src_idx: Vec::new(),
+    };
+
+    let (elems, vec_ranges) = super::window_vectors(m, lo, hi);
+    if elems.is_empty() {
+        return out;
+    }
+
+    // locality dimension: vectors with nnz >= θ feed the structured
+    // engine, in ascending column order
+    let mut tc_vecs: Vec<usize> = Vec::new();
+    let mut flex_vecs: Vec<usize> = Vec::new();
+    for (vi, &(s, e)) in vec_ranges.iter().enumerate() {
+        if e - s >= params.threshold {
+            tc_vecs.push(vi);
+        } else {
+            flex_vecs.push(vi);
+        }
+    }
+
+    // utilization dimension: backfill the trailing partial block's
+    // padding slots with the densest sub-threshold vectors
+    if params.fill_padding && !tc_vecs.is_empty() && !flex_vecs.is_empty() {
+        let free = tc_vecs.len().div_ceil(SPMM_BLOCK_K) * SPMM_BLOCK_K - tc_vecs.len();
+        if free > 0 {
+            flex_vecs.sort_by_key(|&vi| {
+                let (s, e) = vec_ranges[vi];
+                (std::cmp::Reverse(e - s), elems[s].0)
+            });
+            let take = free.min(flex_vecs.len());
+            tc_vecs.extend(flex_vecs.drain(..take));
+        }
+    }
+
+    // emit TC blocks: SPMM_BLOCK_K vector slots per block, values in
+    // ascending bitmap-bit (row-major) order
+    for chunk in tc_vecs.chunks(SPMM_BLOCK_K) {
+        let mut cols = [PAD_COL; SPMM_BLOCK_K];
+        let mut grid = [None::<(f32, u32)>; WINDOW * SPMM_BLOCK_K];
+        for (slot, &vi) in chunk.iter().enumerate() {
+            let (s, e) = vec_ranges[vi];
+            cols[slot] = elems[s].0;
+            for &(_, r, v, pos) in &elems[s..e] {
+                grid[r as usize * SPMM_BLOCK_K + slot] = Some((v, pos));
+            }
+        }
+        let mut bm = 0u128;
+        for (bit, cell) in grid.iter().enumerate() {
+            if let Some((v, pos)) = *cell {
+                bm |= 1u128 << bit;
+                out.values.push(v);
+                out.tc_src_idx.push(pos);
+            }
+        }
+        out.block_cols.extend_from_slice(&cols);
+        out.bitmaps.push(bm);
+    }
+
+    // emit the flexible stream, local-row-major, ascending columns
+    let mut flex: Vec<(u32, u32, f32, u32)> = Vec::new(); // (r, c, v, pos)
+    for &vi in &flex_vecs {
+        let (s, e) = vec_ranges[vi];
+        for &(c, r, v, pos) in &elems[s..e] {
+            flex.push((r, c, v, pos));
+        }
+    }
+    flex.sort_unstable_by_key(|&(r, c, _, _)| (r, c));
+    for &(r, c, v, pos) in &flex {
+        out.flex_row_len[r as usize] += 1;
+        out.flex_cols.push(c);
+        out.flex_vals.push(v);
+        out.flex_src_idx.push(pos);
+    }
+    out
+}
+
+/// Merge per-window results (which must be in ascending window order,
+/// one entry per nonempty window at most) into a full plan.
+///
+/// `nnz_total` is the source matrix's nonzero count, carried into the
+/// stats; concatenation order makes the TC blocks window-major and the
+/// flexible stream globally CSR-ordered.
+pub fn assemble(rows: usize, cols: usize, nnz_total: usize, outs: &[WindowOut]) -> SpmmDist {
+    let n_windows = rows.div_ceil(WINDOW);
+    let mut tc = TcBlocks::new(SPMM_BLOCK_K);
+    let mut tc_src_idx: Vec<u32> = Vec::new();
+    let mut flex_row_ptr = vec![0u32; rows + 1];
+    let mut flex_cols: Vec<u32> = Vec::new();
+    let mut flex_vals: Vec<f32> = Vec::new();
+    let mut flex_src_idx: Vec<u32> = Vec::new();
+    for o in outs {
+        let base_row = o.window as usize * WINDOW;
+        let mut acc = *tc.val_ptr.last().unwrap();
+        for &bm in &o.bitmaps {
+            tc.window_of.push(o.window);
+            tc.bitmaps.push(bm);
+            acc += bm.count_ones();
+            tc.val_ptr.push(acc);
+        }
+        tc.cols.extend_from_slice(&o.block_cols);
+        tc.values.extend_from_slice(&o.values);
+        tc_src_idx.extend_from_slice(&o.tc_src_idx);
+        for (i, &len) in o.flex_row_len.iter().enumerate() {
+            flex_row_ptr[base_row + i + 1] = len;
+        }
+        flex_cols.extend_from_slice(&o.flex_cols);
+        flex_vals.extend_from_slice(&o.flex_vals);
+        flex_src_idx.extend_from_slice(&o.flex_src_idx);
+    }
+    for r in 0..rows {
+        flex_row_ptr[r + 1] += flex_row_ptr[r];
+    }
+    let nnz_tc = tc.nnz();
+    let stats = DistStats {
+        nnz_total,
+        nnz_tc,
+        nnz_flex: flex_vals.len(),
+        n_blocks: tc.n_blocks(),
+        n_windows,
+        padding_ratio: tc.padding_ratio(),
+    };
+    SpmmDist { rows, cols, tc, tc_src_idx, flex_row_ptr, flex_cols, flex_vals, flex_src_idx, stats }
+}
+
+/// Sequential 2D-aware SpMM distribution over all windows.
+pub fn distribute_spmm(m: &Csr, params: &DistParams) -> SpmmDist {
+    let n_windows = m.rows.div_ceil(WINDOW);
+    let outs: Vec<WindowOut> =
+        (0..n_windows).map(|w| distribute_window(m, w, params)).collect();
+    assemble(m.rows, m.cols, m.nnz(), &outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::bitmap;
+    use crate::sparse::{gen, Coo};
+    use crate::util::propcheck::{check, Config};
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn cover_property() {
+        check(Config::default().cases(40), "spmm dist covers matrix", |rng| {
+            let rows = rng.range(1, 200);
+            let cols = rng.range(1, 150);
+            let m = gen::uniform_random(rng, rows, cols, 0.08);
+            let params = DistParams {
+                threshold: if rng.chance(0.1) { usize::MAX } else { rng.range(1, 9) },
+                fill_padding: rng.chance(0.5),
+            };
+            let d = distribute_spmm(&m, &params);
+            d.validate_cover(&m).unwrap();
+        });
+    }
+
+    #[test]
+    fn threshold_extremes() {
+        let mut rng = SplitMix64::new(200);
+        let m = gen::power_law(&mut rng, 300, 8.0, 2.0);
+        let all_tc = distribute_spmm(&m, &DistParams { threshold: 1, fill_padding: false });
+        assert_eq!(all_tc.stats.nnz_flex, 0);
+        assert_eq!(all_tc.stats.nnz_tc, m.nnz());
+        let all_flex = distribute_spmm(&m, &DistParams::flex_only());
+        assert_eq!(all_flex.tc.n_blocks(), 0);
+        assert_eq!(all_flex.stats.nnz_flex, m.nnz());
+        all_tc.validate_cover(&m).unwrap();
+        all_flex.validate_cover(&m).unwrap();
+    }
+
+    #[test]
+    fn blocks_decode_to_source_positions() {
+        let mut rng = SplitMix64::new(201);
+        let m = gen::block_diag_noise(&mut rng, 64, 8, 0.5, 0.01);
+        let d = distribute_spmm(&m, &DistParams::default());
+        let mut tile = vec![0f32; WINDOW * SPMM_BLOCK_K];
+        for b in 0..d.tc.n_blocks() {
+            d.tc.decode(b, &mut tile);
+            let win = d.tc.window_of[b] as usize;
+            for (slot, &col) in d.tc.block_cols(b).iter().enumerate() {
+                for r in 0..WINDOW {
+                    let v = tile[r * SPMM_BLOCK_K + slot];
+                    if col == PAD_COL {
+                        assert_eq!(v, 0.0);
+                        continue;
+                    }
+                    let row = win * WINDOW + r;
+                    if row >= m.rows {
+                        assert_eq!(v, 0.0);
+                        continue;
+                    }
+                    // every decoded nonzero must exist in the source
+                    if v != 0.0 {
+                        assert_eq!(m.get(row, col as usize), Some(v));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fill_padding_absorbs_sub_threshold_vectors() {
+        // one dense column (nnz 8) + three singleton columns in one
+        // window: threshold 4 keeps only the dense column, but the
+        // block has 7 free slots — filling absorbs all singletons.
+        let mut coo = Coo::new(8, 8);
+        for r in 0..8 {
+            coo.push(r, 0, 1.0);
+        }
+        coo.push(1, 3, 2.0);
+        coo.push(2, 5, 3.0);
+        coo.push(3, 6, 4.0);
+        let m = coo.to_csr();
+        let unfilled = distribute_spmm(&m, &DistParams { threshold: 4, fill_padding: false });
+        assert_eq!(unfilled.stats.nnz_tc, 8);
+        assert_eq!(unfilled.stats.nnz_flex, 3);
+        let filled = distribute_spmm(&m, &DistParams { threshold: 4, fill_padding: true });
+        assert_eq!(filled.stats.nnz_tc, 11);
+        assert_eq!(filled.stats.nnz_flex, 0);
+        assert_eq!(filled.tc.n_blocks(), 1);
+        filled.validate_cover(&m).unwrap();
+        unfilled.validate_cover(&m).unwrap();
+    }
+
+    #[test]
+    fn fill_padding_never_adds_blocks() {
+        check(Config::default().cases(25), "fill keeps block count", |rng| {
+            let m = gen::uniform_random(rng, rng.range(1, 120), rng.range(1, 120), 0.1);
+            let th = rng.range(2, 8);
+            let off = distribute_spmm(&m, &DistParams { threshold: th, fill_padding: false });
+            let on = distribute_spmm(&m, &DistParams { threshold: th, fill_padding: true });
+            assert_eq!(off.tc.n_blocks(), on.tc.n_blocks());
+            assert!(on.stats.nnz_tc >= off.stats.nnz_tc);
+            assert!(on.stats.padding_ratio <= off.stats.padding_ratio + 1e-12);
+        });
+    }
+
+    #[test]
+    fn blocks_are_window_major() {
+        let mut rng = SplitMix64::new(202);
+        let m = gen::uniform_random(&mut rng, 200, 100, 0.12);
+        let d = distribute_spmm(&m, &DistParams { threshold: 2, fill_padding: true });
+        for b in 1..d.tc.n_blocks() {
+            assert!(d.tc.window_of[b - 1] <= d.tc.window_of[b]);
+        }
+    }
+
+    #[test]
+    fn values_are_bit_ascending() {
+        let mut rng = SplitMix64::new(203);
+        let m = gen::banded(&mut rng, 48, 3, 0.8);
+        let d = distribute_spmm(&m, &DistParams { threshold: 1, fill_padding: false });
+        for b in 0..d.tc.n_blocks() {
+            let bm = d.tc.bitmaps[b];
+            let vals = d.tc.block_values(b);
+            let win = d.tc.window_of[b] as usize;
+            let cols = d.tc.block_cols(b);
+            let mut rest = bm;
+            let mut i = 0;
+            while rest != 0 {
+                let bit = rest.trailing_zeros() as usize;
+                let (r, c) = (bit / SPMM_BLOCK_K, bit % SPMM_BLOCK_K);
+                assert_eq!(bitmap::prefix_popcount(bm, bit), i);
+                assert_eq!(m.get(win * WINDOW + r, cols[c] as usize), Some(vals[i]));
+                i += 1;
+                rest &= rest - 1;
+            }
+        }
+    }
+
+    #[test]
+    fn set_values_remaps_both_streams() {
+        let mut rng = SplitMix64::new(204);
+        let m = gen::uniform_random(&mut rng, 60, 60, 0.1);
+        let mut d = distribute_spmm(&m, &DistParams::default());
+        let new_vals: Vec<f32> = (0..m.nnz()).map(|i| i as f32).collect();
+        d.set_values(&new_vals);
+        for (i, &src) in d.tc_src_idx.iter().enumerate() {
+            assert_eq!(d.tc.values[i], src as f32);
+        }
+        for (i, &src) in d.flex_src_idx.iter().enumerate() {
+            assert_eq!(d.flex_vals[i], src as f32);
+        }
+    }
+
+    #[test]
+    fn empty_and_tail_windows() {
+        let m = Csr::zeros(13, 7);
+        let d = distribute_spmm(&m, &DistParams::default());
+        assert_eq!(d.stats.n_windows, 2);
+        assert_eq!(d.tc.n_blocks(), 0);
+        assert_eq!(d.flex_row_ptr, vec![0u32; 14]);
+        d.validate_cover(&m).unwrap();
+
+        // 9 rows -> 2 windows, second has one row
+        let mut coo = Coo::new(9, 4);
+        for c in 0..4 {
+            coo.push(8, c, (c + 1) as f32);
+        }
+        let m = coo.to_csr();
+        let d = distribute_spmm(&m, &DistParams { threshold: 1, fill_padding: false });
+        assert_eq!(d.stats.nnz_tc, 4);
+        assert!(d.tc.window_of.iter().all(|&w| w == 1));
+        d.validate_cover(&m).unwrap();
+    }
+
+    #[test]
+    fn window_kernel_composes_identically() {
+        let mut rng = SplitMix64::new(205);
+        let m = gen::power_law(&mut rng, 257, 6.0, 2.0);
+        let params = DistParams::default();
+        let seq = distribute_spmm(&m, &params);
+        let outs: Vec<WindowOut> = (0..m.rows.div_ceil(WINDOW))
+            .map(|w| distribute_window(&m, w, &params))
+            .collect();
+        let manual = assemble(m.rows, m.cols, m.nnz(), &outs);
+        assert_eq!(seq.tc.bitmaps, manual.tc.bitmaps);
+        assert_eq!(seq.tc.cols, manual.tc.cols);
+        assert_eq!(seq.tc.values, manual.tc.values);
+        assert_eq!(seq.tc.val_ptr, manual.tc.val_ptr);
+        assert_eq!(seq.tc_src_idx, manual.tc_src_idx);
+        assert_eq!(seq.flex_row_ptr, manual.flex_row_ptr);
+        assert_eq!(seq.flex_cols, manual.flex_cols);
+        assert_eq!(seq.flex_src_idx, manual.flex_src_idx);
+    }
+}

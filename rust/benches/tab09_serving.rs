@@ -1,0 +1,108 @@
+//! Table 9 (serving): cold vs warm-cache serving throughput across
+//! worker-pool sizes.
+//!
+//! Replays the same zipf-skewed multi-tenant trace twice per pool
+//! size: once with the plan cache disabled (every request pays full
+//! distribution + balancing) and once with it enabled (first touch per
+//! pattern preprocesses, every repeat rides the `set_values` fast
+//! path). The warm column should be strictly above the cold column —
+//! the serving-layer analog of the paper's preprocessing-amortization
+//! argument (§4.5, Table 8 row 5).
+
+use libra::bench::Table;
+use libra::dist::DistParams;
+use libra::exec::TcBackend;
+use libra::serve::{Engine, EngineConfig, MetricsReport, Request, SchedParams};
+use libra::sparse::{gen, Csr, Dense};
+use libra::util::SplitMix64;
+
+fn trace_patterns(patterns: usize, size: usize, rng: &mut SplitMix64) -> Vec<Csr> {
+    (0..patterns)
+        .map(|i| match i % 3 {
+            0 => gen::power_law(rng, size, 8.0, 2.0),
+            1 => gen::uniform_random(rng, size, size, (8.0 / size as f64).min(1.0)),
+            _ => gen::block_diag_noise(rng, size, (size / 64).max(1), 0.4, 1e-3),
+        })
+        .collect()
+}
+
+/// Replay the trace; returns (requests/sec, report).
+fn run_trace(
+    workers: usize,
+    cache_bytes: usize,
+    mats: &[Csr],
+    b: &Dense,
+    requests: usize,
+    seed: u64,
+) -> (f64, MetricsReport) {
+    let engine = Engine::new(EngineConfig {
+        sched: SchedParams { workers, max_batch: 8 },
+        cache_bytes,
+        backend: TcBackend::NativeBitmap,
+    });
+    let mut rng = SplitMix64::new(seed);
+    // closed loop: cap in-flight requests at 4x the pool size
+    let window = (workers * 4).max(8);
+    let mut in_flight = std::collections::VecDeque::with_capacity(window);
+    let t0 = std::time::Instant::now();
+    for _ in 0..requests {
+        if in_flight.len() >= window {
+            let t: libra::serve::Ticket = in_flight.pop_front().unwrap();
+            t.wait().result.unwrap();
+        }
+        let which = rng.zipf(mats.len(), 1.8);
+        let mut m = mats[which].clone();
+        for v in m.values.iter_mut() {
+            *v = rng.f32_range(-1.0, 1.0);
+        }
+        let req = Request::spmm(m, b.clone()).with_dist(DistParams::default());
+        in_flight.push_back(engine.submit_async(req));
+    }
+    for t in in_flight {
+        t.wait().result.unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (requests as f64 / wall.max(1e-9), engine.report())
+}
+
+fn main() {
+    let (patterns, size, requests) = match std::env::var("LIBRA_BENCH").as_deref() {
+        Ok("smoke") => (4, 512, 40),
+        Ok("full") => (8, 2048, 400),
+        _ => (6, 1024, 120),
+    };
+    let mut rng = SplitMix64::new(7);
+    let mats = trace_patterns(patterns, size, &mut rng);
+    let b = Dense::random(&mut rng, size, 64);
+    println!(
+        "serving trace: {patterns} patterns ({size}x{size}), {requests} requests, N=64, zipf 1.8"
+    );
+
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let mut t = Table::new(
+        "Table 9: serving throughput, cold vs warm plan cache",
+        &["workers", "cold req/s", "warm req/s", "speedup", "warm hit rate", "warm occupancy"],
+    );
+    let mut warm_always_faster = true;
+    let mut w = 1;
+    while w <= cores.min(8) {
+        let (cold_rps, _cold_rep) = run_trace(w, 0, &mats, &b, requests, 11);
+        let (warm_rps, warm_rep) = run_trace(w, 1 << 30, &mats, &b, requests, 11);
+        warm_always_faster &= warm_rps > cold_rps;
+        t.add(vec![
+            w.to_string(),
+            format!("{cold_rps:.1}"),
+            format!("{warm_rps:.1}"),
+            format!("{:.2}x", warm_rps / cold_rps.max(1e-9)),
+            format!("{:.1}%", warm_rep.cache.hit_rate() * 100.0),
+            format!("{:.0}%", warm_rep.occupancy * 100.0),
+        ]);
+        w *= 2;
+    }
+    t.print();
+    println!(
+        "\nwarm cache {} cold on every pool size (cold pays distribution + balancing per \
+         request; warm amortizes them to one set_values refresh after first touch per pattern)",
+        if warm_always_faster { "beat" } else { "did NOT beat" }
+    );
+}

@@ -343,6 +343,87 @@ mod tests {
     }
 
     #[test]
+    fn empty_matrix_yields_empty_schedule() {
+        // serving edge case: a tenant submits an all-zero pattern
+        let m = crate::sparse::Csr::zeros(20, 12);
+        let d = distribute_spmm(&m, &DistParams::default());
+        d.validate_cover(&m).unwrap();
+        for p in [BalanceParams::default(), BalanceParams::disabled()] {
+            let sched = balance_spmm(&d, &p);
+            schedule_covers(&d, &sched);
+            assert!(sched.tc_segments.is_empty());
+            assert!(sched.long_tiles.is_empty() && sched.short_tiles.is_empty());
+            assert_eq!(sched.atomic_windows, 0);
+            assert_eq!(sched.flex_elems(), 0);
+        }
+    }
+
+    #[test]
+    fn single_sub_threshold_window_is_flex_only() {
+        // one window whose column vectors are all below θ: everything
+        // lands in the flexible stream, and with one writer per row no
+        // segment needs atomics
+        let mut coo = crate::sparse::Coo::new(8, 8);
+        for r in 0..8 {
+            coo.push(r, r, 1.0 + r as f32);
+            coo.push(r, (r + 3) % 8, 2.0);
+        }
+        let m = coo.to_csr();
+        let d = distribute_spmm(&m, &DistParams { threshold: 4, fill_padding: true });
+        assert_eq!(d.tc.n_blocks(), 0);
+        assert_eq!(d.stats.nnz_flex, m.nnz());
+        d.validate_cover(&m).unwrap();
+        let sched = balance_spmm(&d, &BalanceParams::default());
+        schedule_covers(&d, &sched);
+        assert!(sched.tc_segments.is_empty());
+        assert_eq!(sched.atomic_windows, 0);
+        assert!(sched.long_tiles.iter().chain(&sched.short_tiles).all(|t| !t.atomic));
+        assert_eq!(sched.flex_elems(), m.nnz());
+    }
+
+    #[test]
+    fn all_tc_window_has_no_flexible_tiles() {
+        // one window that routes entirely to the structured engine
+        let mut coo = crate::sparse::Coo::new(8, 16);
+        for c in 0..16 {
+            for r in 0..8 {
+                coo.push(r, c, (r * 16 + c) as f32 + 1.0);
+            }
+        }
+        let m = coo.to_csr();
+        let d = distribute_spmm(&m, &DistParams { threshold: 3, fill_padding: true });
+        assert_eq!(d.stats.nnz_flex, 0);
+        assert_eq!(d.tc.n_blocks(), 2);
+        d.validate_cover(&m).unwrap();
+        let sched = balance_spmm(&d, &BalanceParams::default());
+        schedule_covers(&d, &sched);
+        assert!(sched.long_tiles.is_empty() && sched.short_tiles.is_empty());
+        // 2 blocks <= Ts: one segment, single writer, no atomics
+        assert_eq!(sched.tc_segments.len(), 1);
+        assert!(!sched.tc_segments[0].atomic);
+        assert_eq!(sched.atomic_windows, 0);
+    }
+
+    #[test]
+    fn disabled_balancing_still_covers_exactly_once() {
+        // the ablation path must preserve the cover + tile-row
+        // invariants that the serving fast path relies on
+        check(Config::default().cases(15), "disabled balance covers", |rng| {
+            let m = gen::uniform_random(rng, rng.range(1, 120), rng.range(1, 90), 0.1);
+            let params = DistParams { threshold: rng.range(1, 6), fill_padding: true };
+            let d = distribute_spmm(&m, &params);
+            d.validate_cover(&m).unwrap();
+            let sched = balance_spmm(&d, &BalanceParams::disabled());
+            schedule_covers(&d, &sched);
+            assert_eq!(sched.flex_elems(), d.flex_vals.len());
+            // disabled => segments are never decomposed
+            for t in &sched.long_tiles {
+                assert!(!t.row_split);
+            }
+        });
+    }
+
+    #[test]
     fn disabled_balancing_one_segment_per_window() {
         let mut rng = SplitMix64::new(41);
         let m = gen::power_law(&mut rng, 512, 16.0, 2.2);

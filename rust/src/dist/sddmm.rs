@@ -46,6 +46,36 @@ pub struct SddmmDist {
 }
 
 impl SddmmDist {
+    /// Refresh all stored pattern values from `vals` (one value per CSR
+    /// element, in CSR order), keeping the pattern and the distribution
+    /// fixed — the serving fast path for same-pattern SDDMM traffic.
+    /// (`tc_out_idx`/`flex_out_idx` are CSR positions, so they double
+    /// as source indices for the refresh.)
+    pub fn set_values(&mut self, vals: &[f32]) {
+        assert_eq!(vals.len(), self.stats.nnz_total, "value count != pattern nnz");
+        for (v, &pos) in self.tc.values.iter_mut().zip(&self.tc_out_idx) {
+            *v = vals[pos as usize];
+        }
+        for (v, &pos) in self.flex_vals.iter_mut().zip(&self.flex_out_idx) {
+            *v = vals[pos as usize];
+        }
+    }
+
+    /// Estimated resident size of this plan in bytes (array payloads
+    /// only) — the unit the serving layer's plan cache budgets by.
+    pub fn plan_bytes(&self) -> usize {
+        self.tc.window_of.len() * 4
+            + self.tc.cols.len() * 4
+            + self.tc.bitmaps.len() * 16
+            + self.tc.val_ptr.len() * 4
+            + self.tc.values.len() * 4
+            + self.tc_out_idx.len() * 4
+            + self.flex_rows.len() * 4
+            + self.flex_cols.len() * 4
+            + self.flex_vals.len() * 4
+            + self.flex_out_idx.len() * 4
+    }
+
     /// Check the exactly-once cover invariant against the source
     /// matrix: every CSR position is written by exactly one element of
     /// exactly one stream, and rows/columns/values all match.
@@ -255,6 +285,24 @@ mod tests {
         let m = coo.to_csr();
         let d = distribute_sddmm(&m, &DistParams { threshold: 1, fill_padding: true });
         assert!(d.tc.window_of.iter().all(|&w| w == 1));
+        d.validate_cover(&m).unwrap();
+    }
+
+    #[test]
+    fn set_values_remaps_both_streams() {
+        let mut rng = SplitMix64::new(213);
+        let m = gen::uniform_random(&mut rng, 60, 60, 0.1);
+        let mut d = distribute_sddmm(&m, &DistParams::sddmm_default());
+        let new_vals: Vec<f32> = (0..m.nnz()).map(|i| i as f32).collect();
+        d.set_values(&new_vals);
+        for (i, &pos) in d.tc_out_idx.iter().enumerate() {
+            assert_eq!(d.tc.values[i], pos as f32);
+        }
+        for (i, &pos) in d.flex_out_idx.iter().enumerate() {
+            assert_eq!(d.flex_vals[i], pos as f32);
+        }
+        // refreshing with the source values restores the cover invariant
+        d.set_values(&m.values);
         d.validate_cover(&m).unwrap();
     }
 

@@ -55,6 +55,21 @@ impl SpmmDist {
         }
     }
 
+    /// Estimated resident size of this plan in bytes (array payloads
+    /// only) — the unit the serving layer's plan cache budgets by.
+    pub fn plan_bytes(&self) -> usize {
+        self.tc.window_of.len() * 4
+            + self.tc.cols.len() * 4
+            + self.tc.bitmaps.len() * 16
+            + self.tc.val_ptr.len() * 4
+            + self.tc.values.len() * 4
+            + self.tc_src_idx.len() * 4
+            + self.flex_row_ptr.len() * 4
+            + self.flex_cols.len() * 4
+            + self.flex_vals.len() * 4
+            + self.flex_src_idx.len() * 4
+    }
+
     /// Check the exactly-once cover invariant against the source
     /// matrix: every CSR element appears in exactly one of the two
     /// streams, with matching value, column, and row.

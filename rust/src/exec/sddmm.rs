@@ -36,6 +36,13 @@ pub struct SddmmExecutor {
 impl SddmmExecutor {
     pub fn new(m: &Csr, dist_params: &DistParams, backend: TcBackend) -> Self {
         let dist = crate::dist::distribute_sddmm(m, dist_params);
+        Self::from_dist(dist, m.clone(), backend)
+    }
+
+    /// Build from an existing distribution and its source pattern.
+    /// Distribution does not run here — the serving layer's warm-cache
+    /// fast path hands in a cached plan plus a value-refreshed pattern.
+    pub fn from_dist(dist: SddmmDist, pattern: Csr, backend: TcBackend) -> Self {
         let tcf = matches!(backend, TcBackend::NativeTraversal)
             .then(|| TcfBlocks::from_bitmap(&dist.tc));
         Self {
@@ -44,7 +51,17 @@ impl SddmmExecutor {
             backend,
             flex_threads: super::default_flex_threads(),
             counters: Counters::new(),
-            pattern: m.clone(),
+            pattern,
+        }
+    }
+
+    /// Refresh all stored pattern values (CSR order, same pattern),
+    /// keeping the distribution fixed.
+    pub fn set_values(&mut self, vals: &[f32]) {
+        self.dist.set_values(vals);
+        self.pattern.values.copy_from_slice(vals);
+        if let Some(tcf) = &mut self.tcf {
+            *tcf = TcfBlocks::from_bitmap(&self.dist.tc);
         }
     }
 
@@ -258,6 +275,26 @@ mod tests {
         let mut rng = SplitMix64::new(95);
         let m = gen::block_diag_noise(&mut rng, 256, 12, 0.5, 0.001);
         check_matches_ref(&m, 32, TcBackend::Pjrt(rt), 24, 96);
+    }
+
+    #[test]
+    fn set_values_matches_fresh_executor() {
+        let mut rng = SplitMix64::new(97);
+        let m = gen::uniform_random(&mut rng, 70, 70, 0.1);
+        let a = Dense::random(&mut rng, 70, 12);
+        let b = Dense::random(&mut rng, 70, 12);
+        let params = DistParams::sddmm_default();
+        for backend in [TcBackend::NativeBitmap, TcBackend::NativeTraversal] {
+            let mut refreshed = SddmmExecutor::new(&m, &params, backend.clone());
+            let vals: Vec<f32> = (0..m.nnz()).map(|i| (i % 11) as f32 - 5.0).collect();
+            refreshed.set_values(&vals);
+            let mut m2 = m.clone();
+            m2.values = vals;
+            let fresh = SddmmExecutor::new(&m2, &params, backend);
+            let got = refreshed.execute(&a, &b).unwrap();
+            let want = fresh.execute(&a, &b).unwrap();
+            assert_eq!(got.values, want.values, "set_values diverged from fresh build");
+        }
     }
 
     #[test]

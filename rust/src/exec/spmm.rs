@@ -63,6 +63,15 @@ impl SpmmExecutor {
     /// Build from an existing distribution (used by `prep`).
     pub fn from_dist(dist: SpmmDist, balance_params: &BalanceParams, backend: TcBackend) -> Self {
         let sched = crate::balance::balance_spmm(&dist, balance_params);
+        Self::from_plan(crate::prep::SpmmPlan { dist, sched }, backend)
+    }
+
+    /// Build from a fully preprocessed plan. Neither distribution nor
+    /// balancing runs here — this is the serving layer's warm-cache
+    /// fast path, where the plan comes out of `serve::PlanCache` and
+    /// only the per-block atomic flags (O(n_blocks)) are derived.
+    pub fn from_plan(plan: crate::prep::SpmmPlan, backend: TcBackend) -> Self {
+        let crate::prep::SpmmPlan { dist, sched } = plan;
         let mut block_atomic = vec![true; dist.tc.n_blocks()];
         for seg in &sched.tc_segments {
             for b in seg.block_start..seg.block_end {
@@ -79,6 +88,15 @@ impl SpmmExecutor {
             backend,
             flex_threads: super::default_flex_threads(),
             counters: Counters::new(),
+        }
+    }
+
+    /// Refresh all stored values from `vals` (CSR order, same pattern),
+    /// keeping the distribution, schedule, and atomic flags fixed.
+    pub fn set_values(&mut self, vals: &[f32]) {
+        self.dist.set_values(vals);
+        if let Some(tcf) = &mut self.tcf {
+            *tcf = TcfBlocks::from_bitmap(&self.dist.tc);
         }
     }
 
@@ -411,6 +429,55 @@ mod tests {
         // enough blocks to exercise batching + tail padding
         let m = gen::block_diag_noise(&mut rng, 512, 16, 0.5, 0.001);
         check_matches_ref(&m, 32, TcBackend::Pjrt(rt), 3, 85);
+    }
+
+    #[test]
+    fn executor_is_send_and_sync() {
+        // The serving layer moves executors across worker threads and
+        // shares them behind Arcs; keep that a compile-time guarantee.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<SpmmExecutor>();
+        assert_send_sync::<crate::exec::sddmm::SddmmExecutor>();
+    }
+
+    #[test]
+    fn from_plan_equals_from_dist() {
+        let mut rng = SplitMix64::new(87);
+        let m = gen::power_law(&mut rng, 200, 8.0, 2.0);
+        let b = Dense::random(&mut rng, 200, 16);
+        let plan = crate::prep::preprocess_spmm(
+            &m,
+            &DistParams::default(),
+            &BalanceParams::default(),
+            crate::prep::PrepMode::Sequential,
+        );
+        let via_plan = SpmmExecutor::from_plan(plan.clone(), TcBackend::NativeBitmap);
+        let via_dist = SpmmExecutor::from_dist(
+            plan.dist.clone(),
+            &BalanceParams::default(),
+            TcBackend::NativeBitmap,
+        );
+        assert_eq!(via_plan.block_atomic, via_dist.block_atomic);
+        let mut a = via_plan.execute(&b).unwrap();
+        let c = via_dist.execute(&b).unwrap();
+        assert!(a.allclose(&c, 1e-5));
+        // set_values with fresh values matches a cold rebuild bit-for-bit
+        let vals: Vec<f32> = (0..m.nnz()).map(|i| (i % 17) as f32 - 8.0).collect();
+        let mut m2 = m.clone();
+        m2.values = vals.clone();
+        let mut warm = SpmmExecutor::from_plan(plan, TcBackend::NativeBitmap);
+        warm.set_values(&vals);
+        warm.flex_threads = 1;
+        let mut cold = SpmmExecutor::new(
+            &m2,
+            &DistParams::default(),
+            &BalanceParams::default(),
+            TcBackend::NativeBitmap,
+        );
+        cold.flex_threads = 1;
+        a = warm.execute(&b).unwrap();
+        let c2 = cold.execute(&b).unwrap();
+        assert_eq!(a.data, c2.data);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Libra CLI: preprocess, run, and inspect hybrid sparse operators.
+//! Libra CLI: preprocess, run, serve, and inspect hybrid sparse operators.
 //!
 //! Subcommands:
 //!   spmm   --matrix <.mtx|gen:SPEC> [--n 128] [--theta N|auto] [--backend native|pjrt]
@@ -6,9 +6,11 @@
 //!   stats  --matrix <.mtx|gen:SPEC>            sparsity profile + distribution preview
 //!   tune   [--n 128] [--k 32]                  print tuned thresholds per profile
 //!   gnn    [--model gcn|agnn] [--epochs 50]    train on a synthetic citation graph
+//!   serve  [--patterns 6] [--requests 120] [--workers W] closed-loop serving-trace replay
 //!
 //! `gen:SPEC` synthesizes a matrix, e.g. `gen:powerlaw:4096:12` or
 //! `gen:banded:2048:6`, `gen:uniform:4096:0.001`, `gen:blockdiag:2048:24`.
+//! Unknown flags are an error; each subcommand lists what it accepts.
 
 use anyhow::{bail, Context, Result};
 use libra::balance::BalanceParams;
@@ -16,6 +18,7 @@ use libra::costmodel::{self, HardwareProfile};
 use libra::dist::{DistParams, Op};
 use libra::exec::sddmm::SddmmExecutor;
 use libra::exec::{SpmmExecutor, TcBackend};
+use libra::serve::{Engine, EngineConfig, Request, SchedParams};
 use libra::sparse::{gen, mm_io, Csr, Dense};
 use libra::util::SplitMix64;
 use std::collections::HashMap;
@@ -27,13 +30,20 @@ fn main() -> Result<()> {
         print_usage();
         return Ok(());
     };
-    let flags = parse_flags(&args[1..]);
+    let rest = &args[1..];
     match cmd.as_str() {
-        "spmm" => cmd_spmm(&flags),
-        "sddmm" => cmd_sddmm(&flags),
-        "stats" => cmd_stats(&flags),
-        "tune" => cmd_tune(&flags),
-        "gnn" => cmd_gnn(&flags),
+        "spmm" => cmd_spmm(&parse_flags(rest, &["matrix", "n", "theta", "backend", "seed"])?),
+        "sddmm" => cmd_sddmm(&parse_flags(rest, &["matrix", "k", "theta", "backend", "seed"])?),
+        "stats" => cmd_stats(&parse_flags(rest, &["matrix", "seed"])?),
+        "tune" => cmd_tune(&parse_flags(rest, &["n", "k"])?),
+        "gnn" => cmd_gnn(&parse_flags(rest, &["model", "epochs"])?),
+        "serve" => cmd_serve(&parse_flags(
+            rest,
+            &[
+                "patterns", "requests", "workers", "n", "size", "theta", "backend", "seed",
+                "cache-mb", "batch",
+            ],
+        )?),
         "--help" | "-h" | "help" => {
             print_usage();
             Ok(())
@@ -45,37 +55,48 @@ fn main() -> Result<()> {
 fn print_usage() {
     println!(
         "libra — heterogeneous sparse matrix multiplication\n\n\
-         usage: libra <spmm|sddmm|stats|tune|gnn> [flags]\n\
-         \x20 spmm   --matrix <path.mtx|gen:SPEC> [--n 128] [--theta auto] [--backend native]\n\
-         \x20 sddmm  --matrix <path.mtx|gen:SPEC> [--k 32]  [--theta auto] [--backend native]\n\
-         \x20 stats  --matrix <path.mtx|gen:SPEC>\n\
+         usage: libra <spmm|sddmm|stats|tune|gnn|serve> [flags]\n\
+         \x20 spmm   --matrix <path.mtx|gen:SPEC> [--n 128] [--theta N|auto] [--backend native|pjrt] [--seed 42]\n\
+         \x20 sddmm  --matrix <path.mtx|gen:SPEC> [--k 32]  [--theta N|auto] [--backend native|pjrt] [--seed 42]\n\
+         \x20 stats  --matrix <path.mtx|gen:SPEC> [--seed 42]\n\
          \x20 tune   [--n 128] [--k 32]\n\
-         \x20 gnn    [--model gcn] [--epochs 50]\n\
-         gen:SPEC: gen:powerlaw:N:DEG | gen:banded:N:BAND | gen:uniform:N:DENSITY | gen:blockdiag:N:BLOCKS"
+         \x20 gnn    [--model gcn|agnn] [--epochs 50]\n\
+         \x20 serve  [--patterns 6] [--requests 120] [--workers W] [--n 64] [--size 1024]\n\
+         \x20        [--theta N|auto] [--backend native|pjrt] [--seed 42] [--cache-mb 256] [--batch 8]\n\
+         gen:SPEC: gen:powerlaw:N:DEG | gen:banded:N:BAND | gen:uniform:N:DENSITY | gen:blockdiag:N:BLOCKS\n\
+         (--seed controls gen:SPEC synthesis and the serve trace; unknown flags are rejected)"
     );
 }
 
-fn parse_flags(args: &[String]) -> HashMap<String, String> {
+/// Parse `--flag value` / `--flag` pairs, rejecting anything not in
+/// `allowed` — an unknown or misspelled flag bails with its name
+/// instead of being silently ignored.
+fn parse_flags(args: &[String], allowed: &[&str]) -> Result<HashMap<String, String>> {
     let mut map = HashMap::new();
     let mut i = 0;
     while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
-            let val = args.get(i + 1).filter(|v| !v.starts_with("--"));
-            match val {
-                Some(v) => {
-                    map.insert(key.to_string(), v.clone());
-                    i += 2;
-                }
-                None => {
-                    map.insert(key.to_string(), "true".into());
-                    i += 1;
-                }
+        let Some(key) = args[i].strip_prefix("--") else {
+            bail!("unexpected argument '{}' (flags look like --name [value])", args[i]);
+        };
+        if !allowed.contains(&key) {
+            bail!(
+                "unknown flag '--{key}' for this subcommand (accepted: {})",
+                allowed.iter().map(|f| format!("--{f}")).collect::<Vec<_>>().join(", ")
+            );
+        }
+        let val = args.get(i + 1).filter(|v| !v.starts_with("--"));
+        match val {
+            Some(v) => {
+                map.insert(key.to_string(), v.clone());
+                i += 2;
             }
-        } else {
-            i += 1;
+            None => {
+                map.insert(key.to_string(), "true".into());
+                i += 1;
+            }
         }
     }
-    map
+    Ok(map)
 }
 
 fn load_matrix(flags: &HashMap<String, String>) -> Result<Csr> {
@@ -122,17 +143,22 @@ fn backend(flags: &HashMap<String, String>) -> Result<TcBackend> {
     }
 }
 
-fn theta(flags: &HashMap<String, String>, op: Op, n: usize) -> DistParams {
+fn theta(flags: &HashMap<String, String>, op: Op, n: usize) -> Result<DistParams> {
     match flags.get("theta").map(String::as_str) {
-        None | Some("auto") => costmodel::substrate_params(op, n),
-        Some(v) => DistParams { threshold: v.parse().unwrap_or(3), fill_padding: true },
+        None | Some("auto") => Ok(costmodel::substrate_params(op, n)),
+        Some(v) => {
+            let threshold: usize = v.parse().map_err(|_| {
+                anyhow::anyhow!("invalid value '{v}' for --theta (positive integer or 'auto')")
+            })?;
+            Ok(DistParams { threshold, fill_padding: true })
+        }
     }
 }
 
 fn cmd_spmm(flags: &HashMap<String, String>) -> Result<()> {
     let m = load_matrix(flags)?;
     let n: usize = flags.get("n").and_then(|s| s.parse().ok()).unwrap_or(128);
-    let params = theta(flags, Op::Spmm, n);
+    let params = theta(flags, Op::Spmm, n)?;
     let exec = SpmmExecutor::new(&m, &params, &BalanceParams::default(), backend(flags)?);
     println!(
         "matrix {}x{} nnz={} | theta={} -> {} blocks ({:.1}% padding), {} flex nnz",
@@ -165,7 +191,7 @@ fn cmd_spmm(flags: &HashMap<String, String>) -> Result<()> {
 fn cmd_sddmm(flags: &HashMap<String, String>) -> Result<()> {
     let m = load_matrix(flags)?;
     let k: usize = flags.get("k").and_then(|s| s.parse().ok()).unwrap_or(32);
-    let params = theta(flags, Op::Sddmm, k);
+    let params = theta(flags, Op::Sddmm, k)?;
     let exec = SddmmExecutor::new(&m, &params, backend(flags)?);
     let mut rng = SplitMix64::new(2);
     let a = Dense::random(&mut rng, m.rows, k);
@@ -250,5 +276,84 @@ fn cmd_gnn(flags: &HashMap<String, String>) -> Result<()> {
         stats.total_train_time() / epochs as f64 * 1e3,
         stats.prep_fraction() * 100.0
     );
+    Ok(())
+}
+
+/// Closed-loop serving driver: synthesizes a multi-tenant request
+/// trace (a few distinct sparsity patterns, zipf-skewed popularity,
+/// fresh values per request) and replays it against `serve::Engine`,
+/// then prints the metrics report — hit rate, latency split, and
+/// worker occupancy.
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    // a value that fails to parse is an error, matching the strict
+    // flag-name handling (never silently fall back to a default)
+    fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, k: &str, d: T) -> Result<T> {
+        match flags.get(k) {
+            None => Ok(d),
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("invalid value '{s}' for --{k}")),
+        }
+    }
+    let patterns = get(flags, "patterns", 6)?.max(1);
+    let requests: usize = get(flags, "requests", 120)?;
+    let workers = get(flags, "workers", SchedParams::default().workers)?.max(1);
+    let n = get(flags, "n", 64)?.max(1);
+    let size = get(flags, "size", 1024)?.max(16);
+    let cache_mb: usize = get(flags, "cache-mb", 256)?;
+    let batch = get(flags, "batch", 8)?.max(1);
+    let seed: u64 = get(flags, "seed", 42)?;
+
+    let mut rng = SplitMix64::new(seed);
+    let mats: Vec<Csr> = (0..patterns)
+        .map(|i| match i % 3 {
+            0 => gen::power_law(&mut rng, size, 8.0, 2.0),
+            1 => gen::uniform_random(&mut rng, size, size, (8.0 / size as f64).min(1.0)),
+            _ => gen::block_diag_noise(&mut rng, size, (size / 64).max(1), 0.4, 1e-3),
+        })
+        .collect();
+    let params = theta(flags, Op::Spmm, n)?;
+    println!(
+        "serve: {patterns} patterns ({size}x{size}), {requests} requests, N={n}, theta={}, \
+         {workers} workers, cache {cache_mb} MiB, batch {batch}",
+        params.threshold
+    );
+
+    let engine = Engine::new(EngineConfig {
+        sched: SchedParams { workers, max_batch: batch },
+        cache_bytes: cache_mb << 20,
+        backend: backend(flags)?,
+    });
+    let b = Dense::random(&mut rng, size, n);
+
+    // closed loop: at most `window` requests in flight, so queue-wait
+    // reflects steady state instead of a t=0 flood
+    let window = (workers * 4).max(8);
+    let mut in_flight = std::collections::VecDeque::with_capacity(window);
+    let mut errors = 0usize;
+    let t0 = std::time::Instant::now();
+    for _ in 0..requests {
+        if in_flight.len() >= window {
+            let t: libra::serve::Ticket = in_flight.pop_front().unwrap();
+            errors += t.wait().result.is_err() as usize;
+        }
+        let which = rng.zipf(patterns, 1.8);
+        let mut m = mats[which].clone();
+        for v in m.values.iter_mut() {
+            *v = rng.f32_range(-1.0, 1.0);
+        }
+        in_flight.push_back(engine.submit_async(Request::spmm(m, b.clone()).with_dist(params)));
+    }
+    for t in in_flight {
+        errors += t.wait().result.is_err() as usize;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "replayed {requests} requests in {:.2}s ({:.1} req/s end-to-end)\n",
+        wall,
+        requests as f64 / wall.max(1e-9)
+    );
+    println!("{}", engine.report());
+    if errors > 0 {
+        bail!("{errors} requests failed");
+    }
     Ok(())
 }

@@ -20,6 +20,18 @@ pub struct SpmmPlan {
     pub sched: SpmmSchedule,
 }
 
+impl SpmmPlan {
+    /// Estimated resident bytes of the plan (distribution arrays plus
+    /// schedule segments) — the eviction unit of `serve::PlanCache`.
+    pub fn plan_bytes(&self) -> usize {
+        let seg = std::mem::size_of::<crate::balance::TcSegment>();
+        let tile = std::mem::size_of::<crate::balance::FlexTile>();
+        self.dist.plan_bytes()
+            + self.sched.tc_segments.len() * seg
+            + (self.sched.long_tiles.len() + self.sched.short_tiles.len()) * tile
+    }
+}
+
 /// Preprocessing execution mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PrepMode {

@@ -1,0 +1,334 @@
+//! Structure-keyed plan cache.
+//!
+//! Preprocessing (distribution + balancing + format translation) is a
+//! pure function of the sparsity *pattern* and the tuning parameters,
+//! while serving traffic re-executes the same pattern thousands of
+//! times with fresh values. The cache keys complete plans by
+//! [`PlanKey`] — pattern fingerprint plus every parameter the plan
+//! depends on — so a hit replaces the whole preprocessing pipeline with
+//! an O(nnz) `set_values` refresh.
+//!
+//! Entries are shared as `Arc`s: a hit hands the caller a snapshot it
+//! clones and value-refreshes privately, so concurrent workers never
+//! contend on plan contents, only on the (short) map lock. Eviction is
+//! LRU by estimated plan bytes against a configurable budget; a budget
+//! of 0 disables caching entirely (every lookup misses), which is how
+//! the cold-path benches are driven.
+
+use crate::balance::BalanceParams;
+use crate::dist::{DistParams, Op, SddmmDist};
+use crate::prep::SpmmPlan;
+use crate::sparse::{Csr, PatternFingerprint};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Everything a cached plan's bits depend on: the structural
+/// fingerprint plus distribution and (for SpMM) balancing parameters.
+/// Two requests with equal keys are served by the identical plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub fp: PatternFingerprint,
+    pub op: Op,
+    /// θ, from [`DistParams::threshold`].
+    pub threshold: usize,
+    pub fill_padding: bool,
+    /// Balancing parameters (SpMM; fixed zeros for SDDMM, whose
+    /// chunking happens at dispatch and needs no cached state).
+    pub ts: usize,
+    pub cs: usize,
+    pub short_len: usize,
+    pub balance_enabled: bool,
+}
+
+impl PlanKey {
+    pub fn spmm(fp: PatternFingerprint, d: &DistParams, b: &BalanceParams) -> Self {
+        Self {
+            fp,
+            op: Op::Spmm,
+            threshold: d.threshold,
+            fill_padding: d.fill_padding,
+            ts: b.ts,
+            cs: b.cs,
+            short_len: b.short_len,
+            balance_enabled: b.enabled,
+        }
+    }
+
+    pub fn sddmm(fp: PatternFingerprint, d: &DistParams) -> Self {
+        Self {
+            fp,
+            op: Op::Sddmm,
+            threshold: d.threshold,
+            // distribute_sddmm accepts-but-ignores fill_padding (the
+            // unit is already the whole block): normalize it out of
+            // the key so identical plans share one entry
+            fill_padding: false,
+            ts: 0,
+            cs: 0,
+            short_len: 0,
+            balance_enabled: false,
+        }
+    }
+}
+
+/// Cached SDDMM state: the distribution plus the pattern CSR whose
+/// `row_ptr`/`col_idx` the output reuses.
+#[derive(Debug, Clone)]
+pub struct SddmmEntry {
+    pub dist: SddmmDist,
+    pub pattern: Csr,
+}
+
+impl SddmmEntry {
+    pub fn bytes(&self) -> usize {
+        self.dist.plan_bytes()
+            + self.pattern.row_ptr.len() * 4
+            + self.pattern.col_idx.len() * 4
+            + self.pattern.values.len() * 4
+    }
+}
+
+/// A cached, shareable plan.
+#[derive(Debug, Clone)]
+pub enum CachedPlan {
+    Spmm(Arc<SpmmPlan>),
+    Sddmm(Arc<SddmmEntry>),
+}
+
+impl CachedPlan {
+    /// Estimated resident bytes (the LRU budget unit).
+    pub fn bytes(&self) -> usize {
+        match self {
+            CachedPlan::Spmm(p) => p.plan_bytes(),
+            CachedPlan::Sddmm(e) => e.bytes(),
+        }
+    }
+}
+
+/// Cumulative cache statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    /// Inserts refused because the plan alone exceeds the budget
+    /// (including every insert when the cache is disabled).
+    pub rejected: u64,
+}
+
+impl CacheStats {
+    /// Hit fraction of all lookups (0.0 when none have happened).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Entry {
+    plan: CachedPlan,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<PlanKey, Entry>,
+    tick: u64,
+    bytes: usize,
+    stats: CacheStats,
+}
+
+/// Thread-safe LRU plan cache with a byte budget.
+pub struct PlanCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+}
+
+impl PlanCache {
+    /// A cache holding at most `capacity_bytes` of estimated plan data.
+    pub fn new(capacity_bytes: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                tick: 0,
+                bytes: 0,
+                stats: CacheStats::default(),
+            }),
+            capacity: capacity_bytes,
+        }
+    }
+
+    /// A cache that never stores anything (cold-path driver).
+    pub fn disabled() -> Self {
+        Self::new(0)
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity
+    }
+
+    /// Look up a plan, recording a hit or miss and refreshing LRU age.
+    pub fn get(&self, key: &PlanKey) -> Option<CachedPlan> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let found = match inner.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                Some(e.plan.clone())
+            }
+            None => None,
+        };
+        if found.is_some() {
+            inner.stats.hits += 1;
+        } else {
+            inner.stats.misses += 1;
+        }
+        found
+    }
+
+    /// Insert a plan, evicting least-recently-used entries until it
+    /// fits. Returns false (and stores nothing) if the plan alone
+    /// exceeds the budget.
+    pub fn insert(&self, key: PlanKey, plan: CachedPlan) -> bool {
+        let bytes = plan.bytes();
+        let mut inner = self.inner.lock().unwrap();
+        if bytes > self.capacity {
+            inner.stats.rejected += 1;
+            return false;
+        }
+        if let Some(old) = inner.map.remove(&key) {
+            inner.bytes -= old.bytes;
+        }
+        while inner.bytes + bytes > self.capacity {
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("over budget with empty cache");
+            let evicted = inner.map.remove(&victim).unwrap();
+            inner.bytes -= evicted.bytes;
+            inner.stats.evictions += 1;
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.bytes += bytes;
+        inner.stats.insertions += 1;
+        inner.map.insert(key, Entry { plan, bytes, last_used: tick });
+        true
+    }
+
+    /// Snapshot of the cumulative statistics.
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Number of resident plans.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().map.is_empty()
+    }
+
+    /// Current estimated resident bytes.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prep::{preprocess_spmm, PrepMode};
+    use crate::sparse::gen;
+    use crate::util::SplitMix64;
+
+    fn plan_for(seed: u64, rows: usize) -> (PlanKey, CachedPlan) {
+        let mut rng = SplitMix64::new(seed);
+        let m = gen::uniform_random(&mut rng, rows, rows, 0.05);
+        let d = DistParams::default();
+        let b = BalanceParams::default();
+        let plan = preprocess_spmm(&m, &d, &b, PrepMode::Sequential);
+        (
+            PlanKey::spmm(m.pattern_fingerprint(), &d, &b),
+            CachedPlan::Spmm(Arc::new(plan)),
+        )
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let cache = PlanCache::new(1 << 20);
+        let (k, p) = plan_for(1, 64);
+        assert!(cache.get(&k).is_none());
+        assert!(cache.insert(k, p));
+        assert!(cache.get(&k).is_some());
+        assert!(cache.get(&k).is_some());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.insertions, s.evictions), (2, 1, 1, 0));
+        assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(cache.len(), 1);
+        assert!(cache.resident_bytes() > 0);
+    }
+
+    #[test]
+    fn lru_eviction_by_bytes() {
+        let (k1, p1) = plan_for(1, 64);
+        let (k2, p2) = plan_for(2, 64);
+        let (k3, p3) = plan_for(3, 64);
+        // budget for roughly two plans of this size
+        let cache = PlanCache::new(p1.bytes() + p2.bytes() + p3.bytes() / 2);
+        assert!(cache.insert(k1, p1));
+        assert!(cache.insert(k2, p2));
+        assert!(cache.get(&k1).is_some()); // k2 is now the LRU entry
+        assert!(cache.insert(k3, p3));
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.get(&k1).is_some());
+        assert!(cache.get(&k2).is_none(), "LRU entry should have been evicted");
+        assert!(cache.get(&k3).is_some());
+        assert!(cache.resident_bytes() <= cache.capacity_bytes());
+    }
+
+    #[test]
+    fn disabled_cache_rejects_everything() {
+        let cache = PlanCache::disabled();
+        let (k, p) = plan_for(4, 32);
+        assert!(!cache.insert(k, p));
+        assert!(cache.get(&k).is_none());
+        let s = cache.stats();
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.insertions, 0);
+        assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn reinsert_replaces_in_place() {
+        let cache = PlanCache::new(1 << 20);
+        let (k, p) = plan_for(5, 48);
+        let bytes = p.bytes();
+        assert!(cache.insert(k, p.clone()));
+        assert!(cache.insert(k, p));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.resident_bytes(), bytes);
+        assert_eq!(cache.stats().evictions, 0);
+    }
+
+    #[test]
+    fn key_separates_params_and_ops() {
+        let mut rng = SplitMix64::new(6);
+        let m = gen::uniform_random(&mut rng, 40, 40, 0.1);
+        let fp = m.pattern_fingerprint();
+        let d1 = DistParams::default();
+        let d2 = DistParams { threshold: 5, ..d1 };
+        let b = BalanceParams::default();
+        assert_ne!(PlanKey::spmm(fp, &d1, &b), PlanKey::spmm(fp, &d2, &b));
+        assert_ne!(PlanKey::spmm(fp, &d1, &b), PlanKey::sddmm(fp, &d1));
+        assert_eq!(PlanKey::spmm(fp, &d1, &b), PlanKey::spmm(fp, &d1, &b));
+    }
+}

@@ -1,0 +1,199 @@
+//! Serving metrics: request latency decomposition, prep-path counts,
+//! and worker occupancy.
+//!
+//! Counters are lock-free atomics updated by the worker pool; a
+//! [`ServeMetrics::report`] call folds them (plus the cache's own
+//! stats) into a plain [`MetricsReport`] snapshot. Latency is split the
+//! way the serving pipeline is: **queue** (submit → a worker picks the
+//! job up), **prep** (plan resolution: full preprocessing on a miss, a
+//! `set_values` refresh on a hit), and **exec** (hybrid executor run).
+//! Occupancy is busy worker-seconds over elapsed wall-clock ×
+//! pool size — the serving analog of the paper's §4.4 concern that
+//! neither engine stream sits idle.
+
+use super::cache::CacheStats;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Cumulative serving counters (shared across the worker pool).
+#[derive(Debug)]
+pub struct ServeMetrics {
+    start: Instant,
+    /// Requests fully processed (including failed ones).
+    pub requests: AtomicU64,
+    /// Requests answered with an error.
+    pub errors: AtomicU64,
+    /// Cold plan resolutions: full distribution + balancing ran.
+    pub prep_full: AtomicU64,
+    /// Warm resolutions: cached plan + `set_values` refresh only.
+    pub prep_fast: AtomicU64,
+    /// Admission batches drained (≥ 1 request each; same-pattern
+    /// requests admitted together count once).
+    pub batches: AtomicU64,
+    /// Summed per-request queue wait, nanoseconds.
+    pub queue_nanos: AtomicU64,
+    /// Summed per-request plan-resolution time, nanoseconds.
+    pub prep_nanos: AtomicU64,
+    /// Summed per-request execution time, nanoseconds.
+    pub exec_nanos: AtomicU64,
+    /// Summed busy time across workers, nanoseconds.
+    pub busy_nanos: AtomicU64,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self {
+            start: Instant::now(),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            prep_full: AtomicU64::new(0),
+            prep_fast: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            queue_nanos: AtomicU64::new(0),
+            prep_nanos: AtomicU64::new(0),
+            exec_nanos: AtomicU64::new(0),
+            busy_nanos: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn add(&self, field: &AtomicU64, v: u64) {
+        field.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Seconds since the metrics (i.e. the engine) came up.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Fold the counters into a plain snapshot. `workers` is the pool
+    /// size (for occupancy); `cache` is the plan cache's own view.
+    pub fn report(&self, workers: usize, cache: CacheStats) -> MetricsReport {
+        let load = |f: &AtomicU64| f.load(Ordering::Relaxed);
+        let requests = load(&self.requests);
+        let elapsed = self.elapsed_secs();
+        let mean_ms = |nanos: u64| {
+            if requests == 0 {
+                0.0
+            } else {
+                nanos as f64 / requests as f64 / 1e6
+            }
+        };
+        MetricsReport {
+            requests,
+            errors: load(&self.errors),
+            prep_full: load(&self.prep_full),
+            prep_fast: load(&self.prep_fast),
+            batches: load(&self.batches),
+            mean_queue_ms: mean_ms(load(&self.queue_nanos)),
+            mean_prep_ms: mean_ms(load(&self.prep_nanos)),
+            mean_exec_ms: mean_ms(load(&self.exec_nanos)),
+            occupancy: if elapsed > 0.0 && workers > 0 {
+                (load(&self.busy_nanos) as f64 / 1e9 / (elapsed * workers as f64)).min(1.0)
+            } else {
+                0.0
+            },
+            throughput_rps: if elapsed > 0.0 { requests as f64 / elapsed } else { 0.0 },
+            elapsed_secs: elapsed,
+            workers,
+            cache,
+        }
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Plain snapshot of the serving state, as returned by
+/// `serve::Engine::report`.
+#[derive(Debug, Clone, Copy)]
+pub struct MetricsReport {
+    pub requests: u64,
+    pub errors: u64,
+    pub prep_full: u64,
+    pub prep_fast: u64,
+    pub batches: u64,
+    pub mean_queue_ms: f64,
+    pub mean_prep_ms: f64,
+    pub mean_exec_ms: f64,
+    /// Busy worker-time fraction in [0, 1].
+    pub occupancy: f64,
+    pub throughput_rps: f64,
+    pub elapsed_secs: f64,
+    pub workers: usize,
+    pub cache: CacheStats,
+}
+
+impl std::fmt::Display for MetricsReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "requests {} ({} errors) in {:.2}s -> {:.1} req/s on {} workers ({:.0}% occupancy)",
+            self.requests,
+            self.errors,
+            self.elapsed_secs,
+            self.throughput_rps,
+            self.workers,
+            self.occupancy * 100.0
+        )?;
+        writeln!(
+            f,
+            "latency per request: queue {:.3} ms | prep {:.3} ms | exec {:.3} ms",
+            self.mean_queue_ms, self.mean_prep_ms, self.mean_exec_ms
+        )?;
+        writeln!(
+            f,
+            "plan cache: {:.1}% hit rate ({} hits / {} misses), {} insertions, {} evictions",
+            self.cache.hit_rate() * 100.0,
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.insertions,
+            self.cache.evictions
+        )?;
+        write!(
+            f,
+            "prep paths: {} full (cold), {} set_values (warm), {} admission batches",
+            self.prep_full, self.prep_fast, self.batches
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_folds_counters() {
+        let m = ServeMetrics::new();
+        m.add(&m.requests, 4);
+        m.add(&m.queue_nanos, 8_000_000);
+        m.add(&m.prep_nanos, 4_000_000);
+        m.add(&m.exec_nanos, 2_000_000);
+        m.add(&m.prep_full, 1);
+        m.add(&m.prep_fast, 3);
+        let r = m.report(2, CacheStats { hits: 3, misses: 1, ..Default::default() });
+        assert_eq!(r.requests, 4);
+        assert!((r.mean_queue_ms - 2.0).abs() < 1e-9);
+        assert!((r.mean_prep_ms - 1.0).abs() < 1e-9);
+        assert!((r.mean_exec_ms - 0.5).abs() < 1e-9);
+        assert!((r.cache.hit_rate() - 0.75).abs() < 1e-12);
+        assert!(r.occupancy >= 0.0 && r.occupancy <= 1.0);
+        assert!(r.throughput_rps > 0.0);
+        // Display renders without panicking and mentions the hit rate
+        let text = format!("{r}");
+        assert!(text.contains("75.0% hit rate"));
+    }
+
+    #[test]
+    fn empty_report_is_finite() {
+        let m = ServeMetrics::new();
+        let r = m.report(0, CacheStats::default());
+        assert_eq!(r.requests, 0);
+        assert_eq!(r.mean_queue_ms, 0.0);
+        assert_eq!(r.occupancy, 0.0);
+        assert!(r.throughput_rps.is_finite());
+    }
+}

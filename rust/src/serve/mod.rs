@@ -1,0 +1,35 @@
+//! Multi-tenant serving layer: plan cache + occupancy-aware scheduling.
+//!
+//! Libra's preprocessing (2D-aware distribution §4.1–4.2, hybrid load
+//! balancing §4.3, format translation) is a pure function of a
+//! matrix's sparsity *pattern* — paid once — while serving traffic
+//! (GNN inference/training, attention over fixed graphs) re-executes
+//! the same pattern thousands of times with fresh values. This module
+//! turns a preprocessed plan into a reusable, concurrently-shared
+//! asset:
+//!
+//! * [`cache`] — plans keyed by a structural fingerprint
+//!   ([`crate::sparse::PatternFingerprint`]) plus every parameter they
+//!   depend on; LRU-evicted by estimated bytes. A hit replaces the
+//!   whole preprocessing pipeline with an O(nnz) `set_values` refresh.
+//! * [`session`] — the [`Engine::submit`] API: requests carry an op
+//!   kind, a matrix (or a handle to a cached pattern + new values),
+//!   dense operands, and optional θ / balancing overrides.
+//! * [`sched`] — a fixed worker pool over one shared FIFO queue with
+//!   batched admission for same-pattern requests and an occupancy
+//!   tracker that divides the machine's threads among busy workers
+//!   (the paper's §4.4 utilization idea lifted across requests).
+//! * [`metrics`] — queue/prep/exec latency split, hit rate, worker
+//!   occupancy; snapshot via [`Engine::report`].
+
+pub mod cache;
+pub mod metrics;
+pub mod sched;
+pub mod session;
+
+pub use cache::{CacheStats, CachedPlan, PlanCache, PlanKey, SddmmEntry};
+pub use metrics::{MetricsReport, ServeMetrics};
+pub use sched::{Occupancy, SchedParams, SharedQueue};
+pub use session::{
+    Engine, EngineConfig, OpInputs, Output, Payload, Request, Response, Ticket, Timing,
+};

@@ -1,0 +1,232 @@
+//! Occupancy-aware request scheduling.
+//!
+//! The paper's §4.4 task mapping keeps both engines of *one* operator
+//! busy; serving extends the same idea across *requests*. A fixed pool
+//! of workers drains one shared FIFO queue:
+//!
+//! * **FIFO admission** keeps large requests from starving — a giant
+//!   matrix enqueued first is picked up first, never bypassed
+//!   indefinitely by a stream of small ones;
+//! * **batched admission** ([`SharedQueue::pop_batch`]) pulls pending
+//!   same-key (same pattern + parameters) requests together with the
+//!   one at the head, so one worker serves the whole batch through the
+//!   cache's `set_values` fast path back-to-back (full preprocessing
+//!   runs at most once per batch — on the batch's first request if the
+//!   pattern is new; near-simultaneous misses on *different* workers
+//!   can still each pay it, a deliberate simplicity trade-off);
+//! * **occupancy-aware width** ([`Occupancy`]) divides the machine's
+//!   threads among busy workers at admission time: a lone large request
+//!   fans its flexible streams across every core (no underutilization),
+//!   while a loaded pool hands later admissions proportionally smaller
+//!   slices. The allotment is fixed per request — earlier wide requests
+//!   keep their width until they finish, so ramp-up can transiently
+//!   oversubscribe before settling.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Worker-pool parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedParams {
+    /// Pool size (concurrent requests in flight).
+    pub workers: usize,
+    /// Max same-key requests admitted as one batch.
+    pub max_batch: usize,
+}
+
+impl Default for SchedParams {
+    fn default() -> Self {
+        let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        // half the cores run requests; each request's executor spreads
+        // its flexible streams over the Occupancy allotment
+        Self { workers: (cores / 2).max(1), max_batch: 8 }
+    }
+}
+
+struct QueueState<T> {
+    jobs: VecDeque<T>,
+    closed: bool,
+}
+
+/// A shared MPMC FIFO with same-key batch draining.
+pub struct SharedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    cv: Condvar,
+}
+
+impl<T> SharedQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue an item and wake one waiting worker.
+    pub fn push(&self, item: T) {
+        let mut st = self.state.lock().unwrap();
+        st.jobs.push_back(item);
+        drop(st);
+        self.cv.notify_one();
+    }
+
+    /// Pending items (racy; for reporting only).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.lock().unwrap().jobs.is_empty()
+    }
+
+    /// Close the queue: workers drain what is left, then `pop_batch`
+    /// returns `None`.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until an item is available (or the queue is closed and
+    /// empty — then `None`). Returns the head item plus up to
+    /// `max_batch - 1` later items with the same key, removed from
+    /// anywhere in the queue: the batched-admission path for
+    /// same-pattern traffic. Other items keep their relative order.
+    pub fn pop_batch<K, F>(&self, max_batch: usize, key: F) -> Option<Vec<T>>
+    where
+        K: PartialEq,
+        F: Fn(&T) -> K,
+    {
+        let mut st = self.state.lock().unwrap();
+        while st.jobs.is_empty() && !st.closed {
+            st = self.cv.wait(st).unwrap();
+        }
+        let first = st.jobs.pop_front()?;
+        let k0 = key(&first);
+        let mut batch = vec![first];
+        let cap = max_batch.max(1);
+        let mut i = 0;
+        while i < st.jobs.len() && batch.len() < cap {
+            if key(&st.jobs[i]) == k0 {
+                batch.push(st.jobs.remove(i).unwrap());
+            } else {
+                i += 1;
+            }
+        }
+        Some(batch)
+    }
+}
+
+impl<T> Default for SharedQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Tracks busy workers and divides the machine's threads among them.
+pub struct Occupancy {
+    active: AtomicUsize,
+    threads: usize,
+}
+
+impl Occupancy {
+    /// `threads` is the total thread budget to divide (normally
+    /// `available_parallelism`).
+    pub fn new(threads: usize) -> Self {
+        Self { active: AtomicUsize::new(0), threads: threads.max(1) }
+    }
+
+    /// Mark one worker busy; returns the flexible-stream thread
+    /// allotment for the request it is about to run: an even share of
+    /// the budget among all currently-busy workers, at least 1.
+    pub fn begin(&self) -> usize {
+        let busy = self.active.fetch_add(1, Ordering::Relaxed) + 1;
+        (self.threads / busy).max(1)
+    }
+
+    /// Mark one worker idle again.
+    pub fn end(&self) {
+        self.active.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Currently busy workers (racy; for reporting only).
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_without_batching() {
+        let q: SharedQueue<i32> = SharedQueue::new();
+        q.push(1);
+        q.push(2);
+        q.push(3);
+        assert_eq!(q.pop_batch(1, |&x| x), Some(vec![1]));
+        assert_eq!(q.pop_batch(1, |&x| x), Some(vec![2]));
+        q.close();
+        assert_eq!(q.pop_batch(1, |&x| x), Some(vec![3]));
+        assert_eq!(q.pop_batch(1, |&x| x), None);
+    }
+
+    #[test]
+    fn same_key_batch_drains_from_anywhere() {
+        // key = value parity; head is odd, so all queued odds join it
+        let q: SharedQueue<i32> = SharedQueue::new();
+        for v in [1, 2, 3, 4, 5] {
+            q.push(v);
+        }
+        assert_eq!(q.pop_batch(8, |&x| x % 2), Some(vec![1, 3, 5]));
+        // the evens kept their order
+        assert_eq!(q.pop_batch(8, |&x| x % 2), Some(vec![2, 4]));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn batch_size_is_bounded() {
+        let q: SharedQueue<i32> = SharedQueue::new();
+        for _ in 0..10 {
+            q.push(7);
+        }
+        assert_eq!(q.pop_batch(4, |&x| x).unwrap().len(), 4);
+        assert_eq!(q.len(), 6);
+        assert_eq!(q.pop_batch(0, |&x| x).unwrap().len(), 1); // clamped to 1
+    }
+
+    #[test]
+    fn close_wakes_blocked_workers() {
+        let q: Arc<SharedQueue<i32>> = Arc::new(SharedQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_batch(1, |&x| x));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+        // push after close still drains (graceful shutdown of stragglers)
+        q.push(9);
+        assert_eq!(q.pop_batch(1, |&x| x), Some(vec![9]));
+    }
+
+    #[test]
+    fn occupancy_divides_threads() {
+        let occ = Occupancy::new(8);
+        assert_eq!(occ.begin(), 8); // lone request gets the machine
+        assert_eq!(occ.begin(), 4); // two in flight -> half each
+        assert_eq!(occ.begin(), 2);
+        assert_eq!(occ.active(), 3);
+        occ.end();
+        occ.end();
+        assert_eq!(occ.begin(), 4); // back to two busy workers
+        occ.end();
+        occ.end();
+        assert_eq!(occ.active(), 0);
+        // allotment never reaches 0, even oversubscribed
+        let tiny = Occupancy::new(1);
+        for _ in 0..5 {
+            assert_eq!(tiny.begin(), 1);
+        }
+    }
+}

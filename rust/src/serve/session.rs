@@ -1,0 +1,805 @@
+//! The serving session API: [`Engine::submit`].
+//!
+//! An [`Engine`] owns a plan cache, a shared request queue, and a fixed
+//! worker pool. A [`Request`] carries an op kind with its dense
+//! operands, a sparse payload — either a full matrix or a
+//! [`Payload::Handle`] (pattern fingerprint + fresh values) — and
+//! optional `DistParams`/`BalanceParams` overrides (θ defaults to the
+//! cost model's substrate tuning per op and feature width).
+//!
+//! Request lifecycle:
+//!
+//! 1. `submit` fingerprints the payload, derives the [`PlanKey`], and
+//!    enqueues a job (`submit_async` returns a [`Ticket`] instead of
+//!    blocking);
+//! 2. a worker admits the job — together with any queued same-key jobs
+//!    (batched admission) — and resolves the plan: cache **hit** →
+//!    clone the shared plan and `set_values` (no distribution, no
+//!    balancing); **miss** → full preprocessing, then the plan is
+//!    published to the cache;
+//! 3. the hybrid executor runs with a flexible-stream width set by the
+//!    occupancy tracker, and the [`Response`] (output, timing split,
+//!    hit flag) is handed back to the waiting submitter.
+
+use super::cache::{CachedPlan, PlanCache, PlanKey, SddmmEntry};
+use super::metrics::{MetricsReport, ServeMetrics};
+use super::sched::{Occupancy, SchedParams, SharedQueue};
+use crate::balance::BalanceParams;
+use crate::costmodel;
+use crate::dist::{DistParams, Op};
+use crate::exec::sddmm::SddmmExecutor;
+use crate::exec::{SpmmExecutor, TcBackend};
+use crate::sparse::{Csr, Dense, PatternFingerprint};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// The sparse operand of a request.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// A full CSR matrix; served cold on a cache miss, warm on a hit.
+    Matrix(Csr),
+    /// A previously-served pattern plus fresh values (CSR order). Only
+    /// valid while the plan is cached — the zero-copy client protocol
+    /// for high-frequency same-pattern traffic (e.g. AGNN's α matrix).
+    Handle { fp: PatternFingerprint, values: Vec<f32> },
+}
+
+impl Payload {
+    fn fingerprint(&self) -> PatternFingerprint {
+        match self {
+            Payload::Matrix(m) => m.pattern_fingerprint(),
+            Payload::Handle { fp, .. } => *fp,
+        }
+    }
+}
+
+/// Op kind plus its dense operands.
+#[derive(Debug, Clone)]
+pub enum OpInputs {
+    /// `C = A · B`: B is `A.cols x n`.
+    Spmm { b: Dense },
+    /// `C = (A · Bᵀ) ⊙ S`: A is `rows x k`, B is `cols x k`.
+    Sddmm { a: Dense, b: Dense },
+}
+
+/// One serving request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub payload: Payload,
+    pub inputs: OpInputs,
+    /// θ override; `None` asks the cost model for the substrate tuning.
+    pub dist: Option<DistParams>,
+    /// Balancing override (SpMM only); `None` uses the defaults.
+    pub balance: Option<BalanceParams>,
+}
+
+impl Request {
+    pub fn spmm(m: Csr, b: Dense) -> Self {
+        Self {
+            payload: Payload::Matrix(m),
+            inputs: OpInputs::Spmm { b },
+            dist: None,
+            balance: None,
+        }
+    }
+
+    pub fn sddmm(m: Csr, a: Dense, b: Dense) -> Self {
+        Self {
+            payload: Payload::Matrix(m),
+            inputs: OpInputs::Sddmm { a, b },
+            dist: None,
+            balance: None,
+        }
+    }
+
+    /// SpMM against a cached pattern (fresh values, CSR order).
+    pub fn spmm_handle(fp: PatternFingerprint, values: Vec<f32>, b: Dense) -> Self {
+        Self {
+            payload: Payload::Handle { fp, values },
+            inputs: OpInputs::Spmm { b },
+            dist: None,
+            balance: None,
+        }
+    }
+
+    /// SDDMM against a cached pattern (fresh values, CSR order).
+    pub fn sddmm_handle(fp: PatternFingerprint, values: Vec<f32>, a: Dense, b: Dense) -> Self {
+        Self {
+            payload: Payload::Handle { fp, values },
+            inputs: OpInputs::Sddmm { a, b },
+            dist: None,
+            balance: None,
+        }
+    }
+
+    pub fn with_dist(mut self, d: DistParams) -> Self {
+        self.dist = Some(d);
+        self
+    }
+
+    pub fn with_balance(mut self, b: BalanceParams) -> Self {
+        self.balance = Some(b);
+        self
+    }
+
+    /// The plan key this request resolves to: fingerprint plus the
+    /// *effective* parameters (overrides or cost-model defaults).
+    pub fn plan_key(&self) -> PlanKey {
+        let fp = self.payload.fingerprint();
+        match &self.inputs {
+            OpInputs::Spmm { b } => {
+                let d = self.dist.unwrap_or_else(|| costmodel::substrate_params(Op::Spmm, b.cols));
+                let bal = self.balance.unwrap_or_default();
+                PlanKey::spmm(fp, &d, &bal)
+            }
+            OpInputs::Sddmm { a, .. } => {
+                let d = self.dist.unwrap_or_else(|| costmodel::substrate_params(Op::Sddmm, a.cols));
+                PlanKey::sddmm(fp, &d)
+            }
+        }
+    }
+}
+
+/// A request's product.
+#[derive(Debug, Clone)]
+pub enum Output {
+    /// SpMM result.
+    Dense(Dense),
+    /// SDDMM result (pattern of the request, sampled values).
+    Sparse(Csr),
+}
+
+impl Output {
+    pub fn into_dense(self) -> Option<Dense> {
+        match self {
+            Output::Dense(d) => Some(d),
+            Output::Sparse(_) => None,
+        }
+    }
+
+    pub fn into_sparse(self) -> Option<Csr> {
+        match self {
+            Output::Sparse(s) => Some(s),
+            Output::Dense(_) => None,
+        }
+    }
+}
+
+/// Per-request latency decomposition (seconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Timing {
+    /// Submit → a worker picked the job up.
+    pub queue_secs: f64,
+    /// Plan resolution (full prep on a miss, `set_values` on a hit).
+    pub prep_secs: f64,
+    /// Hybrid executor run.
+    pub exec_secs: f64,
+}
+
+/// The answer to one [`Request`].
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub result: anyhow::Result<Output>,
+    /// True iff the plan came from the cache (`set_values` fast path).
+    pub cache_hit: bool,
+    pub timing: Timing,
+}
+
+/// One-shot completion slot a submitter blocks on.
+struct ResponseSlot {
+    cell: Mutex<Option<Response>>,
+    cv: Condvar,
+}
+
+impl ResponseSlot {
+    fn new() -> Self {
+        Self { cell: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn put(&self, r: Response) {
+        *self.cell.lock().unwrap() = Some(r);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> Response {
+        let mut guard = self.cv.wait_while(self.cell.lock().unwrap(), |c| c.is_none()).unwrap();
+        guard.take().unwrap()
+    }
+}
+
+/// Handle to an in-flight request (from [`Engine::submit_async`]).
+pub struct Ticket {
+    id: u64,
+    slot: Arc<ResponseSlot>,
+}
+
+impl Ticket {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the response is ready.
+    pub fn wait(self) -> Response {
+        self.slot.wait()
+    }
+}
+
+struct Job {
+    id: u64,
+    key: PlanKey,
+    req: Request,
+    enqueued: Instant,
+    slot: Arc<ResponseSlot>,
+}
+
+/// Engine construction parameters.
+#[derive(Clone)]
+pub struct EngineConfig {
+    pub sched: SchedParams,
+    /// Plan-cache budget in bytes (0 disables caching — cold path).
+    pub cache_bytes: usize,
+    /// Structured-engine backend shared by all workers.
+    pub backend: TcBackend,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            sched: SchedParams::default(),
+            cache_bytes: 256 << 20,
+            backend: TcBackend::NativeBitmap,
+        }
+    }
+}
+
+/// The multi-tenant serving engine: plan cache + worker pool.
+pub struct Engine {
+    cache: Arc<PlanCache>,
+    queue: Arc<SharedQueue<Job>>,
+    metrics: Arc<ServeMetrics>,
+    occupancy: Arc<Occupancy>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+    sched: SchedParams,
+}
+
+impl Engine {
+    /// Start the worker pool.
+    pub fn new(cfg: EngineConfig) -> Self {
+        let cache = Arc::new(PlanCache::new(cfg.cache_bytes));
+        let queue: Arc<SharedQueue<Job>> = Arc::new(SharedQueue::new());
+        let metrics = Arc::new(ServeMetrics::new());
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        let occupancy = Arc::new(Occupancy::new(threads));
+        let n_workers = cfg.sched.workers.max(1);
+        let workers = (0..n_workers)
+            .map(|_| {
+                let queue = queue.clone();
+                let cache = cache.clone();
+                let metrics = metrics.clone();
+                let occupancy = occupancy.clone();
+                let backend = cfg.backend.clone();
+                let max_batch = cfg.sched.max_batch;
+                std::thread::spawn(move || {
+                    worker_loop(&queue, &cache, &metrics, &occupancy, backend, max_batch)
+                })
+            })
+            .collect();
+        Self {
+            cache,
+            queue,
+            metrics,
+            occupancy,
+            workers,
+            next_id: AtomicU64::new(0),
+            sched: SchedParams { workers: n_workers, ..cfg.sched },
+        }
+    }
+
+    /// Serve one request, blocking until its response is ready.
+    pub fn submit(&self, req: Request) -> Response {
+        self.submit_async(req).wait()
+    }
+
+    /// Enqueue a request; the returned [`Ticket`] collects the
+    /// response. Submitting many tickets before waiting is how a
+    /// closed-loop client keeps the pool saturated.
+    pub fn submit_async(&self, req: Request) -> Ticket {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let key = req.plan_key();
+        let slot = Arc::new(ResponseSlot::new());
+        self.queue.push(Job { id, key, req, enqueued: Instant::now(), slot: slot.clone() });
+        Ticket { id, slot }
+    }
+
+    /// Metrics snapshot (latency split, hit rate, occupancy, …).
+    pub fn report(&self) -> MetricsReport {
+        self.metrics.report(self.sched.workers, self.cache.stats())
+    }
+
+    /// The engine's plan cache (stats, capacity, residency).
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    /// Requests waiting in the queue (racy; for reporting).
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Workers currently serving a request (racy; for reporting).
+    pub fn busy_workers(&self) -> usize {
+        self.occupancy.active()
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    queue: &SharedQueue<Job>,
+    cache: &PlanCache,
+    metrics: &ServeMetrics,
+    occupancy: &Occupancy,
+    backend: TcBackend,
+    max_batch: usize,
+) {
+    while let Some(batch) = queue.pop_batch(max_batch, |j: &Job| j.key) {
+        let busy = Instant::now();
+        let flex_threads = occupancy.begin();
+        metrics.add(&metrics.batches, 1);
+        for job in batch {
+            process_job(job, cache, metrics, backend.clone(), flex_threads);
+        }
+        occupancy.end();
+        metrics.add(&metrics.busy_nanos, busy.elapsed().as_nanos() as u64);
+    }
+}
+
+fn process_job(
+    job: Job,
+    cache: &PlanCache,
+    metrics: &ServeMetrics,
+    backend: TcBackend,
+    flex_threads: usize,
+) {
+    let Job { id, key, req, enqueued, slot } = job;
+    let Request { payload, inputs, .. } = req;
+    let mut timing = Timing { queue_secs: enqueued.elapsed().as_secs_f64(), ..Default::default() };
+    let mut cache_hit = false;
+    // A panicking request must not take the worker (and every waiting
+    // submitter) down with it; surface it as an error response instead.
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        execute_one(key, payload, inputs, cache, metrics, backend, flex_threads, &mut timing, &mut cache_hit)
+    }));
+    let result = match outcome {
+        Ok(r) => r,
+        Err(_) => Err(anyhow::anyhow!("request {id} panicked in the worker")),
+    };
+    metrics.add(&metrics.requests, 1);
+    if result.is_err() {
+        metrics.add(&metrics.errors, 1);
+    }
+    metrics.add(&metrics.queue_nanos, (timing.queue_secs * 1e9) as u64);
+    metrics.add(&metrics.prep_nanos, (timing.prep_secs * 1e9) as u64);
+    metrics.add(&metrics.exec_nanos, (timing.exec_secs * 1e9) as u64);
+    slot.put(Response { id, result, cache_hit, timing });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn execute_one(
+    key: PlanKey,
+    payload: Payload,
+    inputs: OpInputs,
+    cache: &PlanCache,
+    metrics: &ServeMetrics,
+    backend: TcBackend,
+    flex_threads: usize,
+    timing: &mut Timing,
+    cache_hit: &mut bool,
+) -> anyhow::Result<Output> {
+    // the key carries every parameter the plan depends on
+    let dparams = DistParams { threshold: key.threshold, fill_padding: key.fill_padding };
+    let t = Instant::now();
+    match inputs {
+        OpInputs::Spmm { b } => {
+            let mut exec = resolve_spmm(key, payload, &dparams, cache, metrics, backend, cache_hit)?;
+            exec.flex_threads = flex_threads;
+            timing.prep_secs = t.elapsed().as_secs_f64();
+            let t = Instant::now();
+            let out = exec.execute(&b)?;
+            timing.exec_secs = t.elapsed().as_secs_f64();
+            Ok(Output::Dense(out))
+        }
+        OpInputs::Sddmm { a, b } => {
+            let mut exec = resolve_sddmm(key, payload, &dparams, cache, metrics, backend, cache_hit)?;
+            exec.flex_threads = flex_threads;
+            timing.prep_secs = t.elapsed().as_secs_f64();
+            let t = Instant::now();
+            let out = exec.execute(&a, &b)?;
+            timing.exec_secs = t.elapsed().as_secs_f64();
+            Ok(Output::Sparse(out))
+        }
+    }
+}
+
+/// Resolve an SpMM executor: warm (cached plan + `set_values`, no
+/// distribution or balancing) or cold (full prep, plan published).
+fn resolve_spmm(
+    key: PlanKey,
+    payload: Payload,
+    dparams: &DistParams,
+    cache: &PlanCache,
+    metrics: &ServeMetrics,
+    backend: TcBackend,
+    cache_hit: &mut bool,
+) -> anyhow::Result<SpmmExecutor> {
+    let bparams = BalanceParams {
+        ts: key.ts,
+        cs: key.cs,
+        short_len: key.short_len,
+        enabled: key.balance_enabled,
+    };
+    match payload {
+        Payload::Matrix(m) => {
+            if let Some(CachedPlan::Spmm(plan)) = cache.get(&key) {
+                *cache_hit = true;
+                metrics.add(&metrics.prep_fast, 1);
+                let mut p = (*plan).clone();
+                p.dist.set_values(&m.values);
+                return Ok(SpmmExecutor::from_plan(p, backend));
+            }
+            metrics.add(&metrics.prep_full, 1);
+            let plan = crate::prep::preprocess_spmm(
+                &m,
+                dparams,
+                &bparams,
+                crate::prep::PrepMode::Sequential,
+            );
+            if plan.plan_bytes() <= cache.capacity_bytes() {
+                let shared = Arc::new(plan);
+                cache.insert(key, CachedPlan::Spmm(shared.clone()));
+                Ok(SpmmExecutor::from_plan((*shared).clone(), backend))
+            } else {
+                // the cache would reject it (disabled or over-budget):
+                // skip the publish and the second plan copy entirely
+                Ok(SpmmExecutor::from_plan(plan, backend))
+            }
+        }
+        Payload::Handle { fp, values } => match cache.get(&key) {
+            Some(CachedPlan::Spmm(plan)) => {
+                anyhow::ensure!(
+                    values.len() == plan.dist.stats.nnz_total,
+                    "handle carries {} values but cached pattern has {} nonzeros",
+                    values.len(),
+                    plan.dist.stats.nnz_total
+                );
+                *cache_hit = true;
+                metrics.add(&metrics.prep_fast, 1);
+                // refresh values before construction so the traversal
+                // backend's TcfBlocks conversion runs exactly once
+                let mut p = (*plan).clone();
+                p.dist.set_values(&values);
+                Ok(SpmmExecutor::from_plan(p, backend))
+            }
+            _ => anyhow::bail!(
+                "pattern handle {:#018x} ({}x{}, nnz {}) is not in the plan cache; resubmit the full matrix",
+                fp.hash,
+                fp.rows,
+                fp.cols,
+                fp.nnz
+            ),
+        },
+    }
+}
+
+/// Resolve an SDDMM executor (same warm/cold split as SpMM).
+fn resolve_sddmm(
+    key: PlanKey,
+    payload: Payload,
+    dparams: &DistParams,
+    cache: &PlanCache,
+    metrics: &ServeMetrics,
+    backend: TcBackend,
+    cache_hit: &mut bool,
+) -> anyhow::Result<SddmmExecutor> {
+    match payload {
+        Payload::Matrix(m) => {
+            if let Some(CachedPlan::Sddmm(entry)) = cache.get(&key) {
+                *cache_hit = true;
+                metrics.add(&metrics.prep_fast, 1);
+                // the submitted matrix *is* the cached pattern with the
+                // fresh values: refresh only the distribution and reuse
+                // the matrix as the output pattern (no deep clone)
+                let mut dist = entry.dist.clone();
+                dist.set_values(&m.values);
+                return Ok(SddmmExecutor::from_dist(dist, m, backend));
+            }
+            metrics.add(&metrics.prep_full, 1);
+            let dist = crate::dist::distribute_sddmm(&m, dparams);
+            let entry = SddmmEntry { dist, pattern: m };
+            if entry.bytes() <= cache.capacity_bytes() {
+                let shared = Arc::new(entry);
+                cache.insert(key, CachedPlan::Sddmm(shared.clone()));
+                Ok(SddmmExecutor::from_dist(
+                    shared.dist.clone(),
+                    shared.pattern.clone(),
+                    backend,
+                ))
+            } else {
+                // cache would reject it: skip the publish and the copy
+                Ok(SddmmExecutor::from_dist(entry.dist, entry.pattern, backend))
+            }
+        }
+        Payload::Handle { fp, values } => match cache.get(&key) {
+            Some(CachedPlan::Sddmm(entry)) => {
+                anyhow::ensure!(
+                    values.len() == entry.dist.stats.nnz_total,
+                    "handle carries {} values but cached pattern has {} nonzeros",
+                    values.len(),
+                    entry.dist.stats.nnz_total
+                );
+                *cache_hit = true;
+                metrics.add(&metrics.prep_fast, 1);
+                // refresh values before construction (single TcfBlocks
+                // build under the traversal backend)
+                let mut e = (*entry).clone();
+                e.dist.set_values(&values);
+                e.pattern.values.copy_from_slice(&values);
+                Ok(SddmmExecutor::from_dist(e.dist, e.pattern, backend))
+            }
+            _ => anyhow::bail!(
+                "pattern handle {:#018x} ({}x{}, nnz {}) is not in the plan cache; resubmit the full matrix",
+                fp.hash,
+                fp.rows,
+                fp.cols,
+                fp.nnz
+            ),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prep::{preprocess_spmm, PrepMode};
+    use crate::sparse::gen;
+    use crate::util::propcheck::{check, Config};
+    use crate::util::SplitMix64;
+
+    fn engine(workers: usize, cache_bytes: usize) -> Engine {
+        Engine::new(EngineConfig {
+            sched: SchedParams { workers, max_batch: 8 },
+            cache_bytes,
+            backend: TcBackend::NativeBitmap,
+        })
+    }
+
+    /// Same pattern with fresh values.
+    fn revalued(m: &Csr, rng: &mut SplitMix64) -> Csr {
+        let mut m2 = m.clone();
+        for v in m2.values.iter_mut() {
+            *v = rng.f32_range(-2.0, 2.0);
+        }
+        m2
+    }
+
+    #[test]
+    fn warm_path_skips_distribution_and_balancing() {
+        let eng = engine(1, 64 << 20);
+        let mut rng = SplitMix64::new(500);
+        let m1 = gen::power_law(&mut rng, 300, 8.0, 2.0);
+        let b = Dense::random(&mut rng, 300, 32);
+        let m2 = revalued(&m1, &mut rng);
+
+        let r1 = eng.submit(Request::spmm(m1.clone(), b.clone()));
+        assert!(!r1.cache_hit);
+        assert!(r1.result.unwrap().into_dense().unwrap().allclose(&m1.spmm_dense_ref(&b), 1e-3));
+
+        let r2 = eng.submit(Request::spmm(m2.clone(), b.clone()));
+        assert!(r2.cache_hit, "same pattern must hit the plan cache");
+        assert!(r2.result.unwrap().into_dense().unwrap().allclose(&m2.spmm_dense_ref(&b), 1e-3));
+
+        // the asserted acceptance criterion: the warm request ran no
+        // distribution / balancing — only the set_values fast path
+        let rep = eng.report();
+        assert_eq!(rep.prep_full, 1, "exactly one cold prep");
+        assert_eq!(rep.prep_fast, 1, "warm request must take the fast path");
+        assert_eq!(rep.cache.hits, 1);
+        assert_eq!(rep.cache.misses, 1);
+        assert_eq!(rep.requests, 2);
+        assert_eq!(rep.errors, 0);
+        assert!(rep.batches >= 1);
+    }
+
+    #[test]
+    fn handle_requests_and_misses() {
+        let eng = engine(2, 64 << 20);
+        let mut rng = SplitMix64::new(501);
+        let m = gen::uniform_random(&mut rng, 120, 100, 0.08);
+        let fp = m.pattern_fingerprint();
+        let b = Dense::random(&mut rng, 100, 16);
+
+        // a handle for a never-seen pattern is an error, not a panic
+        let miss = eng.submit(Request::spmm_handle(fp, m.values.clone(), b.clone()));
+        assert!(miss.result.is_err());
+
+        // seed the cache, then the handle path works with fresh values
+        eng.submit(Request::spmm(m.clone(), b.clone())).result.unwrap();
+        let vals: Vec<f32> = (0..m.nnz()).map(|i| (i % 7) as f32 - 3.0).collect();
+        let r = eng.submit(Request::spmm_handle(fp, vals.clone(), b.clone()));
+        assert!(r.cache_hit);
+        let mut m2 = m.clone();
+        m2.values = vals;
+        assert!(r.result.unwrap().into_dense().unwrap().allclose(&m2.spmm_dense_ref(&b), 1e-3));
+
+        // wrong value count is a shape error, not a panic
+        let bad = eng.submit(Request::spmm_handle(fp, vec![1.0; 3], b));
+        assert!(bad.result.is_err());
+        assert_eq!(eng.report().errors, 2);
+    }
+
+    #[test]
+    fn sddmm_round_trip_and_warm_path() {
+        let eng = engine(2, 64 << 20);
+        let mut rng = SplitMix64::new(502);
+        let m1 = gen::uniform_random(&mut rng, 90, 110, 0.1);
+        let a = Dense::random(&mut rng, 90, 16);
+        let b = Dense::random(&mut rng, 110, 16);
+        let m2 = revalued(&m1, &mut rng);
+
+        let r1 = eng.submit(Request::sddmm(m1.clone(), a.clone(), b.clone()));
+        let out1 = r1.result.unwrap().into_sparse().unwrap();
+        let want1 = m1.sddmm_dense_ref(&a, &b);
+        for (g, w) in out1.values.iter().zip(&want1.values) {
+            assert!((g - w).abs() < 1e-2 + 1e-3 * w.abs());
+        }
+
+        let r2 = eng.submit(Request::sddmm(m2.clone(), a.clone(), b.clone()));
+        assert!(r2.cache_hit);
+        let out2 = r2.result.unwrap().into_sparse().unwrap();
+        let want2 = m2.sddmm_dense_ref(&a, &b);
+        for (g, w) in out2.values.iter().zip(&want2.values) {
+            assert!((g - w).abs() < 1e-2 + 1e-3 * w.abs());
+        }
+        assert_eq!(eng.report().prep_fast, 1);
+    }
+
+    #[test]
+    fn disabled_cache_never_hits() {
+        let eng = engine(1, 0);
+        let mut rng = SplitMix64::new(503);
+        let m = gen::uniform_random(&mut rng, 64, 64, 0.1);
+        let b = Dense::random(&mut rng, 64, 8);
+        for _ in 0..3 {
+            let r = eng.submit(Request::spmm(m.clone(), b.clone()));
+            assert!(!r.cache_hit);
+            r.result.unwrap();
+        }
+        let rep = eng.report();
+        assert_eq!(rep.prep_full, 3);
+        assert_eq!(rep.prep_fast, 0);
+        assert_eq!(rep.cache.hits, 0);
+    }
+
+    #[test]
+    fn concurrent_mixed_tenants() {
+        // several patterns × several async requests, out-of-order waits
+        let eng = engine(3, 128 << 20);
+        let mut rng = SplitMix64::new(504);
+        let mats: Vec<Csr> = (0..4)
+            .map(|i| gen::uniform_random(&mut rng, 80 + 8 * i, 96, 0.07))
+            .collect();
+        let b = Dense::random(&mut rng, 96, 16);
+        // round 0 warms every pattern (waited before the flood, so the
+        // later fast-path counts are deterministic)
+        let warmup: Vec<Ticket> =
+            mats.iter().map(|m| eng.submit_async(Request::spmm(m.clone(), b.clone()))).collect();
+        for t in warmup {
+            t.wait().result.unwrap();
+        }
+        let mut tickets = Vec::new();
+        let mut expected = Vec::new();
+        for _round in 0..2 {
+            for m in &mats {
+                let m = revalued(m, &mut rng);
+                expected.push(m.spmm_dense_ref(&b));
+                tickets.push(eng.submit_async(Request::spmm(m, b.clone())));
+            }
+        }
+        for (t, want) in tickets.into_iter().zip(&expected) {
+            let r = t.wait();
+            assert!(r.result.unwrap().into_dense().unwrap().allclose(want, 1e-3));
+        }
+        let rep = eng.report();
+        assert_eq!(rep.requests, 12);
+        assert_eq!(rep.prep_full, 4, "one cold prep per distinct pattern");
+        assert_eq!(rep.prep_fast, 8, "every repeat must ride the fast path");
+        assert_eq!(rep.errors, 0);
+        assert!(rep.occupancy > 0.0);
+    }
+
+    #[test]
+    fn fast_path_is_bit_identical_to_cold_prep() {
+        // Satellite property: for random CSR patterns, cache-hit +
+        // set_values produces *bit-identical* output to a cold
+        // preprocess_spmm + execute of the revalued matrix. Single
+        // flexible worker on both sides keeps float accumulation order
+        // deterministic (row-split tiles CAS in queue order).
+        check(Config::default().cases(12), "warm serve == cold prep", |rng| {
+            let rows = rng.range(1, 150);
+            let cols = rng.range(1, 120);
+            let m1 = gen::uniform_random(rng, rows, cols, 0.08);
+            let n = rng.range(1, 24);
+            let b = Dense::random(rng, cols, n);
+            let d = DistParams { threshold: rng.range(1, 6), fill_padding: rng.chance(0.5) };
+            let bal = BalanceParams::default();
+            let mut m2 = m1.clone();
+            for v in m2.values.iter_mut() {
+                *v = rng.f32_range(-2.0, 2.0);
+            }
+
+            let cache = PlanCache::new(1 << 26);
+            let metrics = ServeMetrics::new();
+            let key = PlanKey::spmm(m1.pattern_fingerprint(), &d, &bal);
+            let mut hit = false;
+            // cold resolve publishes the plan
+            resolve_spmm(key, Payload::Matrix(m1), &d, &cache, &metrics, TcBackend::NativeBitmap, &mut hit)
+                .unwrap();
+            assert!(!hit);
+            // warm resolve: cache hit + set_values only
+            let mut warm = resolve_spmm(
+                key,
+                Payload::Matrix(m2.clone()),
+                &d,
+                &cache,
+                &metrics,
+                TcBackend::NativeBitmap,
+                &mut hit,
+            )
+            .unwrap();
+            assert!(hit);
+
+            // reference: full cold preprocessing of the revalued matrix
+            let mut cold = SpmmExecutor::from_plan(
+                preprocess_spmm(&m2, &d, &bal, PrepMode::Sequential),
+                TcBackend::NativeBitmap,
+            );
+            // identical plans...
+            assert_eq!(warm.dist.tc.bitmaps, cold.dist.tc.bitmaps);
+            assert_eq!(warm.dist.tc.values, cold.dist.tc.values);
+            assert_eq!(warm.dist.flex_vals, cold.dist.flex_vals);
+            assert_eq!(warm.dist.flex_cols, cold.dist.flex_cols);
+            // ...and bit-identical outputs
+            warm.flex_threads = 1;
+            cold.flex_threads = 1;
+            let got = warm.execute(&b).unwrap();
+            let want = cold.execute(&b).unwrap();
+            assert_eq!(got.data, want.data, "warm fast path diverged from cold prep");
+        });
+    }
+
+    #[test]
+    fn theta_override_separates_cache_entries() {
+        let eng = engine(1, 64 << 20);
+        let mut rng = SplitMix64::new(505);
+        let m = gen::uniform_random(&mut rng, 64, 64, 0.15);
+        let b = Dense::random(&mut rng, 64, 8);
+        let flex = DistParams::flex_only();
+        let tc = DistParams::tc_only();
+        let r1 = eng.submit(Request::spmm(m.clone(), b.clone()).with_dist(flex));
+        let r2 = eng.submit(Request::spmm(m.clone(), b.clone()).with_dist(tc));
+        assert!(!r1.cache_hit && !r2.cache_hit, "different θ must not share plans");
+        let r3 = eng.submit(Request::spmm(m, b).with_dist(flex));
+        assert!(r3.cache_hit);
+        assert_eq!(eng.cache().len(), 2);
+    }
+}

@@ -1,0 +1,141 @@
+//! Structural fingerprints of CSR sparsity patterns.
+//!
+//! Libra's preprocessing (distribution + balancing + format
+//! translation) depends only on the *pattern* of a matrix — its shape,
+//! `row_ptr`, and `col_idx` — never on the values. A
+//! [`PatternFingerprint`] captures exactly that dependency set in a few
+//! words, so a serving layer can key cached plans by it and route
+//! same-pattern requests to the `set_values` fast path.
+//!
+//! The hash is 128 bits over the index arrays: a 64-bit FNV-1a plus an
+//! independent 64-bit multiply-xorshift (Murmur3-finalizer-style)
+//! stream, so a collision must defeat two structurally different hash
+//! functions at once on top of matching shape and nnz. This guards the
+//! serving fast path — a fingerprint hit reuses another request's plan
+//! wholesale — against accidental and low-effort adversarial
+//! collisions (FNV-1a alone is not collision-resistant). Shape and nnz
+//! are kept alongside the hashes (not just mixed in) so lookups can
+//! also cheaply sanity-check a handle's value buffer length.
+
+use super::Csr;
+
+/// Structural identity of a CSR sparsity pattern.
+///
+/// Two matrices with equal fingerprints have (up to a simultaneous
+/// collision of two independent 64-bit hashes) identical shape,
+/// `row_ptr`, and `col_idx` — and therefore produce bit-identical
+/// plans under equal parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PatternFingerprint {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    /// FNV-1a hash of `row_ptr` followed by `col_idx`.
+    pub hash: u64,
+    /// Independent multiply-xorshift hash of the same words.
+    pub hash2: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+const MIX_SEED: u64 = 0x9e37_79b9_7f4a_7c15;
+const MIX_MUL: u64 = 0xff51_afd7_ed55_8ccd;
+
+#[inline]
+fn fnv1a_u32s(mut h: u64, words: &[u32]) -> u64 {
+    for &w in words {
+        for byte in w.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+#[inline]
+fn mix_u32s(mut h: u64, words: &[u32]) -> u64 {
+    for &w in words {
+        h = (h ^ w as u64).wrapping_mul(MIX_MUL);
+        h ^= h >> 33;
+    }
+    h
+}
+
+/// Fingerprint the pattern of `m` (values are ignored).
+pub fn fingerprint(m: &Csr) -> PatternFingerprint {
+    let mut h = FNV_OFFSET;
+    h = fnv1a_u32s(h, &m.row_ptr);
+    h = fnv1a_u32s(h, &m.col_idx);
+    let mut h2 = MIX_SEED;
+    h2 = mix_u32s(h2, &m.row_ptr);
+    // a length-dependent separator so (row_ptr, col_idx) boundaries
+    // cannot alias across arrays
+    h2 = (h2 ^ m.col_idx.len() as u64).wrapping_mul(MIX_MUL);
+    h2 = mix_u32s(h2, &m.col_idx);
+    PatternFingerprint { rows: m.rows, cols: m.cols, nnz: m.nnz(), hash: h, hash2: h2 }
+}
+
+impl Csr {
+    /// Structural fingerprint of this matrix's sparsity pattern
+    /// (see [`fingerprint`]).
+    pub fn pattern_fingerprint(&self) -> PatternFingerprint {
+        fingerprint(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, Coo};
+    use crate::util::propcheck::{check, Config};
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn value_independent() {
+        check(Config::default().cases(30), "fingerprint ignores values", |rng| {
+            let m = gen::uniform_random(rng, rng.range(1, 80), rng.range(1, 80), 0.1);
+            let mut m2 = m.clone();
+            for v in m2.values.iter_mut() {
+                *v += 1.0;
+            }
+            assert_eq!(m.pattern_fingerprint(), m2.pattern_fingerprint());
+        });
+    }
+
+    #[test]
+    fn sensitive_to_pattern() {
+        let mut rng = SplitMix64::new(300);
+        let m = gen::uniform_random(&mut rng, 50, 50, 0.15);
+        let fp = m.pattern_fingerprint();
+        // moving one element to a different column changes the hash
+        let mut coo = m.to_coo();
+        let (r, c) = (coo.row_idx[0] as usize, coo.col_idx[0] as usize);
+        let c2 = (c + 1) % 50;
+        if m.get(r, c2).is_none() {
+            coo.col_idx[0] = c2 as u32;
+            let moved = coo.to_csr();
+            assert_ne!(fp, moved.pattern_fingerprint());
+        }
+        // transpose of a non-square pattern differs in shape alone
+        let rect = gen::uniform_random(&mut rng, 30, 60, 0.1);
+        assert_ne!(rect.pattern_fingerprint(), rect.transpose().pattern_fingerprint());
+    }
+
+    #[test]
+    fn shape_disambiguates_empty() {
+        let a = Csr::zeros(4, 8);
+        let b = Csr::zeros(8, 4);
+        assert_ne!(a.pattern_fingerprint(), b.pattern_fingerprint());
+        assert_eq!(a.pattern_fingerprint(), Csr::zeros(4, 8).pattern_fingerprint());
+    }
+
+    #[test]
+    fn known_distinct_small_patterns() {
+        // same nnz and shape, different column placement
+        let mut a = Coo::new(2, 2);
+        a.push(0, 0, 1.0);
+        let mut b = Coo::new(2, 2);
+        b.push(0, 1, 1.0);
+        assert_ne!(a.to_csr().pattern_fingerprint(), b.to_csr().pattern_fingerprint());
+    }
+}

@@ -10,6 +10,7 @@ pub mod coo;
 pub mod corpus;
 pub mod csr;
 pub mod dense;
+pub mod fingerprint;
 pub mod gen;
 pub mod mm_io;
 pub mod stats;
@@ -17,3 +18,4 @@ pub mod stats;
 pub use coo::Coo;
 pub use csr::Csr;
 pub use dense::Dense;
+pub use fingerprint::PatternFingerprint;

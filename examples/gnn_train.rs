@@ -39,7 +39,8 @@ fn main() -> anyhow::Result<()> {
     };
 
     // ---- GCN: 5 layers (128 -> 64 -> 64 -> 64 -> 16 classes pad) ----
-    let cfg = TrainConfig { epochs, lr: 0.01, hidden: 64, layers: 5, precision: Precision::F32, seed: 7 };
+    let cfg =
+        TrainConfig { epochs, lr: 0.01, hidden: 64, layers: 5, precision: Precision::F32, seed: 7 };
     let params = costmodel::substrate_params(Op::Spmm, cfg.hidden);
     println!("\n== GCN ({} layers, {} epochs, theta={}) ==", cfg.layers, epochs, params.threshold);
     let stats = train_gcn(&data, &cfg, &params, TcBackend::NativeBitmap, dense.clone())?;
@@ -56,7 +57,14 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- AGNN ----
-    let acfg = TrainConfig { epochs: epochs.min(120), lr: 0.01, hidden: 64, layers: 4, precision: Precision::F32, seed: 9 };
+    let acfg = TrainConfig {
+        epochs: epochs.min(120),
+        lr: 0.01,
+        hidden: 64,
+        layers: 4,
+        precision: Precision::F32,
+        seed: 9,
+    };
     println!("\n== AGNN ({} prop layers, {} epochs) ==", acfg.layers - 2, acfg.epochs);
     let astats = train_agnn(&data, &acfg, &params, TcBackend::NativeBitmap, dense)?;
     for (e, (loss, acc)) in astats.loss_curve.iter().zip(&astats.acc_curve).enumerate() {

@@ -52,7 +52,8 @@ fn main() -> anyhow::Result<()> {
     let k = 32;
     let a = Dense::random(&mut rng, m.rows, k);
     let b2 = Dense::random(&mut rng, m.cols, k);
-    let sd = SddmmExecutor::new(&m, &costmodel::substrate_params(Op::Sddmm, k), TcBackend::NativeBitmap);
+    let sd =
+        SddmmExecutor::new(&m, &costmodel::substrate_params(Op::Sddmm, k), TcBackend::NativeBitmap);
     let t = std::time::Instant::now();
     let out = sd.execute(&a, &b2)?;
     println!("SDDMM: {} sampled values in {:.2} ms", out.nnz(), t.elapsed().as_secs_f64() * 1e3);

@@ -74,5 +74,9 @@ fn main() {
         ]);
     }
     t2.print();
-    println!("\nbest configuration: theta={} ({:.2} ms) — hybrid sweet spot (paper: 67.6% TC share fastest, 1.4x over best single-resource)", best.1, best.0 * 1000.0);
+    println!(
+        "\nbest configuration: theta={} ({:.2} ms) — hybrid sweet spot (paper: 67.6% TC share fastest, 1.4x over best single-resource)",
+        best.1,
+        best.0 * 1000.0
+    );
 }

@@ -51,8 +51,12 @@ fn main() {
     ]);
 
     // Libra hybrid (native + PJRT variants)
-    let libra_native =
-        SpmmExecutor::new(&m, &DistParams::default(), &BalanceParams::default(), TcBackend::NativeBitmap);
+    let libra_native = SpmmExecutor::new(
+        &m,
+        &DistParams::default(),
+        &BalanceParams::default(),
+        TcBackend::NativeBitmap,
+    );
     let secs = bench::time_median(|| {
         std::hint::black_box(libra_native.execute(&b).unwrap());
     });

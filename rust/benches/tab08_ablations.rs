@@ -47,7 +47,10 @@ fn main() {
         }
     }
     println!("\n== Table 8 row 1: load balancing ==");
-    println!("effective on {lb_effective}/{} matrices (paper: 212/500, power-law dominated)", mats.len());
+    println!(
+        "effective on {lb_effective}/{} matrices (paper: 212/500, power-law dominated)",
+        mats.len()
+    );
     if !lb_speedups.is_empty() {
         println!("{}", SpeedupDist::header());
         println!("{}", SpeedupDist::from(&lb_speedups).row("lb on vs off"));
@@ -96,10 +99,20 @@ fn main() {
     for bm in &mats {
         let m = &bm.m;
         let t = Timer::start();
-        let seq = prep::preprocess_spmm(m, &DistParams::default(), &BalanceParams::default(), PrepMode::Sequential);
+        let seq = prep::preprocess_spmm(
+            m,
+            &DistParams::default(),
+            &BalanceParams::default(),
+            PrepMode::Sequential,
+        );
         let t_seq = t.elapsed_secs();
         let t = Timer::start();
-        let par = prep::preprocess_spmm(m, &DistParams::default(), &BalanceParams::default(), PrepMode::Parallel);
+        let par = prep::preprocess_spmm(
+            m,
+            &DistParams::default(),
+            &BalanceParams::default(),
+            PrepMode::Parallel,
+        );
         let t_par = t.elapsed_secs();
         assert_eq!(seq.dist.tc.bitmaps, par.dist.tc.bitmaps);
         prep_speedups.push(t_seq / t_par.max(1e-9));

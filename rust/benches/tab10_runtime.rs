@@ -1,0 +1,127 @@
+//! Table 10 (runtime): per-call overhead amortization — spawn-per-call
+//! scoped threads vs the persistent worker pool, with and without
+//! workspace reuse.
+//!
+//! The paper's Table 8 argues hybrid schemes must amortize their
+//! preprocessing/launch overhead; this bench measures the *execution
+//! launch* half of that claim on the substrate. For each worker width
+//! it times repeated `execute_into` iterations on the same plan:
+//!
+//! * **scoped** — fresh scoped threads and fresh buffers per call (the
+//!   pre-pool behavior; `Threading::Scoped` + throwaway workspaces);
+//! * **pooled** — the persistent `WorkerPool` plus one reused
+//!   `Workspace` (the default runtime).
+//!
+//! Small matrices make the overhead visible (the kernel work is tiny,
+//! so spawn/join and allocation dominate); the large matrix shows the
+//! two converging as compute swamps launch cost. Pooled should beat
+//! scoped on every small-matrix row.
+
+use libra::balance::BalanceParams;
+use libra::bench::Table;
+use libra::dist::DistParams;
+use libra::exec::{SpmmExecutor, TcBackend, Threading, WorkerPool, Workspace};
+use libra::sparse::{gen, Csr, Dense};
+use libra::util::SplitMix64;
+use std::sync::Arc;
+
+fn build(m: &Csr, threading: Threading, flex_threads: usize) -> SpmmExecutor {
+    let mut e = SpmmExecutor::new(
+        m,
+        &DistParams::default(),
+        &BalanceParams::default(),
+        TcBackend::NativeBitmap,
+    );
+    e.threading = threading;
+    e.flex_threads = flex_threads;
+    e
+}
+
+/// Mean seconds per call over `iters` executions.
+fn time_calls(
+    exec: &SpmmExecutor,
+    b: &Dense,
+    out: &mut Dense,
+    iters: usize,
+    ws: Option<&mut Workspace>,
+) -> f64 {
+    let t = std::time::Instant::now();
+    match ws {
+        Some(ws) => {
+            for _ in 0..iters {
+                out.data.fill(0.0);
+                exec.execute_into_with(b, out, ws).unwrap();
+            }
+        }
+        None => {
+            for _ in 0..iters {
+                out.data.fill(0.0);
+                // fresh workspace per call: buffers are reallocated
+                // exactly like the pre-workspace hot path did
+                let mut fresh = Workspace::new();
+                exec.execute_into_with(b, out, &mut fresh).unwrap();
+            }
+        }
+    }
+    t.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let (iters, small_n, large_n) = match std::env::var("LIBRA_BENCH").as_deref() {
+        Ok("smoke") => (30, 256, 1024),
+        Ok("full") => (400, 256, 4096),
+        _ => (120, 256, 2048),
+    };
+    let mut rng = SplitMix64::new(10);
+    let cases = [
+        ("small powerlaw", gen::power_law(&mut rng, small_n, 8.0, 2.0), 32usize),
+        ("small blockdiag", gen::block_diag_noise(&mut rng, small_n, 8, 0.4, 2e-3), 32),
+        ("large powerlaw", gen::power_law(&mut rng, large_n, 10.0, 2.0), 64),
+    ];
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    println!(
+        "runtime amortization: {iters} iterations per cell, {cores} cores \
+         (scoped = spawn-per-call + fresh buffers, pooled = persistent pool + reused workspace)"
+    );
+
+    let mut t = Table::new(
+        "Table 10: per-call overhead, spawn-per-call vs persistent runtime",
+        &["matrix", "workers", "scoped us/call", "pooled us/call", "speedup"],
+    );
+    let mut small_pooled_wins = true;
+    for (name, m, n) in &cases {
+        let b = Dense::random(&mut rng, m.cols, *n);
+        let mut out = Dense::zeros(m.rows, *n);
+        let mut w = 1usize;
+        while w <= cores.min(8) {
+            // private pool per width so the row measures exactly w
+            // helpers (+ the caller), matching the scoped thread count
+            let pool = Arc::new(WorkerPool::new(w));
+            let scoped = build(m, Threading::Scoped, w);
+            let pooled = build(m, Threading::Pooled(pool), w);
+            let mut ws = Workspace::new();
+            // warm both paths (first pooled call sizes the workspace)
+            time_calls(&scoped, &b, &mut out, 3, None);
+            time_calls(&pooled, &b, &mut out, 3, Some(&mut ws));
+            let s_scoped = time_calls(&scoped, &b, &mut out, iters, None);
+            let s_pooled = time_calls(&pooled, &b, &mut out, iters, Some(&mut ws));
+            if name.starts_with("small") {
+                small_pooled_wins &= s_pooled < s_scoped;
+            }
+            t.add(vec![
+                name.to_string(),
+                w.to_string(),
+                format!("{:.1}", s_scoped * 1e6),
+                format!("{:.1}", s_pooled * 1e6),
+                format!("{:.2}x", s_scoped / s_pooled.max(1e-12)),
+            ]);
+            w *= 2;
+        }
+    }
+    t.print();
+    println!(
+        "\npersistent runtime {} spawn-per-call on every small-matrix row \
+         (pool amortizes thread spawn/join; workspace amortizes privatization + scratch allocation)",
+        if small_pooled_wins { "beat" } else { "did NOT beat" }
+    );
+}

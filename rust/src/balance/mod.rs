@@ -196,13 +196,25 @@ pub fn balance_spmm(dist: &SpmmDist, params: &BalanceParams) -> SpmmSchedule {
                     x = end;
                 }
             } else {
-                sched.long_tiles.push(FlexTile { elem_start: s, elem_end: e, row, atomic, row_split: false });
+                sched.long_tiles.push(FlexTile {
+                    elem_start: s,
+                    elem_end: e,
+                    row,
+                    atomic,
+                    row_split: false,
+                });
             }
         }
 
         // short tiles (never decomposed)
         for &(row, s, e) in &short_rows {
-            sched.short_tiles.push(FlexTile { elem_start: s, elem_end: e, row, atomic, row_split: false });
+            sched.short_tiles.push(FlexTile {
+                elem_start: s,
+                elem_end: e,
+                row,
+                atomic,
+                row_split: false,
+            });
         }
     }
     sched
@@ -246,7 +258,10 @@ mod tests {
         check(Config::default().cases(30), "schedule covers workload", |rng| {
             let (rr, cc) = (rng.range(1, 150), rng.range(1, 100));
             let m = gen::uniform_random(rng, rr, cc, 0.1);
-            let d = distribute_spmm(&m, &DistParams { threshold: rng.range(1, 6), fill_padding: true });
+            let d = distribute_spmm(
+                &m,
+                &DistParams { threshold: rng.range(1, 6), fill_padding: true },
+            );
             let p = BalanceParams {
                 ts: rng.range(1, 8),
                 cs: rng.range(2, 40),

@@ -62,8 +62,10 @@ impl SpmmImpl for SparseTirLikeSpmm {
                 }
                 cols.sort_unstable();
                 cols.dedup();
-                let mean_vec_nnz = if cols.is_empty() { 0.0 } else { nnz as f64 / cols.len() as f64 };
-                let params = if mean_vec_nnz >= self.window_threshold { &tc_params } else { &flex_params };
+                let mean_vec_nnz =
+                    if cols.is_empty() { 0.0 } else { nnz as f64 / cols.len() as f64 };
+                let params =
+                    if mean_vec_nnz >= self.window_threshold { &tc_params } else { &flex_params };
                 distribute_window(m, w, params)
             })
             .collect();

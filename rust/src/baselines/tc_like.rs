@@ -123,7 +123,8 @@ mod tests {
         let a = Dense::random(&mut rng, 64, 8);
         let b = Dense::random(&mut rng, 64, 8);
         let expect = m.sddmm_dense_ref(&a, &b);
-        for mut imp in [TcOnlySddmm::tcgnn_like(), TcOnlySddmm::dtc_like(), TcOnlySddmm::flash_like()] {
+        let imps = [TcOnlySddmm::tcgnn_like(), TcOnlySddmm::dtc_like(), TcOnlySddmm::flash_like()];
+        for mut imp in imps {
             imp.prepare(&m);
             let got = imp.execute(&a, &b);
             for (g, w) in got.iter().zip(&expect.values) {

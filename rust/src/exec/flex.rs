@@ -15,7 +15,9 @@ use crate::sparse::Dense;
 /// Execute one SpMM flexible tile: `C[row] += sum_i v_i * B[col_i]`.
 ///
 /// `cols`/`vals` are the full flexible element arrays of the plan; the
-/// tile selects its range. `scratch` must be at least `b.cols` long.
+/// tile selects its range. `scratch` must be at least `b.cols` long —
+/// the executors hand each stream task its own reusable slot from the
+/// call's [`crate::exec::Workspace`] so the hot loop never allocates.
 #[inline]
 pub fn spmm_tile(
     tile: &FlexTile,

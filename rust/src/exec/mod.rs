@@ -7,17 +7,34 @@
 //! accumulate into one shared output buffer; segments flagged by the
 //! load balancer use atomic adds, single-writer segments use plain
 //! stores (the paper's atomicAdd-only-when-needed optimization).
+//!
+//! ## Persistent runtime
+//!
+//! The streams run on a **persistent worker pool** ([`pool`]) instead
+//! of per-call scoped threads, and every transient buffer lives in a
+//! reusable [`Workspace`] ([`workspace`]): spawn/join and allocation
+//! overhead is paid once, not per call — the amortization the paper's
+//! Table 8 demands of hybrid schemes. Each executor entry point has a
+//! `*_with` variant taking `&mut Workspace`
+//! (`SpmmExecutor::execute_into_with`,
+//! `SddmmExecutor::execute_values_with`); the original signatures
+//! remain as thin wrappers over a thread-local default workspace.
+//! `bench tab10_runtime` measures the per-call amortization.
 
 pub mod counters;
 pub mod flex;
 pub mod output;
 pub mod pack;
+pub mod pool;
 pub mod sddmm;
 pub mod spmm;
 pub mod structured;
+pub mod workspace;
 
 pub use counters::Counters;
+pub use pool::{global_pool, Threading, WorkerPool};
 pub use spmm::{SpmmExecutor, TcBackendKind};
+pub use workspace::Workspace;
 
 use crate::runtime::Runtime;
 use std::sync::Arc;

@@ -9,8 +9,9 @@
 use crate::format::{TcBlocks, PAD_COL, WINDOW};
 use crate::sparse::Dense;
 
-/// Reusable packing buffers (allocated once per executor, reused per
-/// batch — keeps the hot loop allocation-free).
+/// Reusable packing buffers (owned by the call's
+/// [`crate::exec::Workspace`], reused across batches *and* calls —
+/// keeps the hot loop allocation-free).
 #[derive(Debug, Default)]
 pub struct PackBufs {
     pub bm_words: Vec<u32>,
@@ -222,7 +223,8 @@ mod tests {
         for g in 0..bucket {
             let bm = bufs.bm_words[g * 2] as u128 | ((bufs.bm_words[g * 2 + 1] as u128) << 32);
             let nnz = bm.count_ones() as usize;
-            crate::format::bitmap::decode_block(bm, &bufs.values[g * 64..g * 64 + nnz], 8, 8, &mut tile);
+            let vals = &bufs.values[g * 64..g * 64 + nnz];
+            crate::format::bitmap::decode_block(bm, vals, 8, 8, &mut tile);
             for r in 0..8 {
                 for c in 0..8 {
                     let v = tile[r * 8 + c];

@@ -1,0 +1,383 @@
+//! Persistent worker pool for the execution hot path.
+//!
+//! Before this module existed, every `SpmmExecutor::execute_into` and
+//! `SddmmExecutor::execute` spawned fresh scoped threads — per call,
+//! per GNN layer, per epoch, per serving request. The paper's Table 8
+//! argues that hybrid schemes live or die by amortizing exactly this
+//! class of per-invocation overhead; the pool pays the thread
+//! spawn/join cost once per process instead of once per call. Parked
+//! workers wake on a condvar, drain *stream tasks* (structured stream,
+//! flexible streams — the task split the balancer produced), and park
+//! again.
+//!
+//! ## Scoped semantics on persistent threads
+//!
+//! [`WorkerPool::run`] gives the pool the semantics of
+//! `crossbeam_utils::thread::scope` without the per-call spawn: the
+//! task closure's lifetime is erased, a job is queued, the *caller
+//! thread works through task indices alongside the pool workers*, and
+//! `run` only returns once every task has completed. Borrowed captures
+//! (the executor, the operands, the output buffer, the workspace)
+//! therefore remain valid for as long as any worker can touch them,
+//! and a pool of size zero still completes every job (the caller does
+//! all the work itself). Because the caller participates and tasks
+//! never block on the pool, `run` cannot deadlock even when every
+//! worker is busy with other jobs.
+//!
+//! [`Threading`] selects between the shared pool (the default), the
+//! legacy spawn-per-call scoped path (kept as the `tab10_runtime`
+//! bench baseline and for equivalence tests), and fully inline
+//! execution on the caller thread.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// One queued fan-out: a lifetime-erased task body plus progress
+/// counters. The raw closure pointer is only dereferenced while
+/// `done < n_tasks`, which `WorkerPool::run` guarantees outlives the
+/// borrow it erased.
+struct Job {
+    task: *const (dyn Fn(usize) + Sync),
+    n_tasks: usize,
+    /// Next task index to claim (may grow past `n_tasks`).
+    next: AtomicUsize,
+    /// Tasks fully finished.
+    done: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+// Safety: the closure behind `task` is `Sync` (shared by reference
+// across workers) and outlives the job per the `run` contract above.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.n_tasks
+    }
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Wakes parked workers when a job arrives or the pool shuts down.
+    work_cv: Condvar,
+    /// Wakes callers blocked in `run` when their job's last task ends.
+    done_cv: Condvar,
+}
+
+struct PoolState {
+    queue: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
+/// A fixed set of parked worker threads executing fan-out jobs.
+///
+/// Construction spawns the workers once; they live until the pool is
+/// dropped. Concurrent `run` calls from different threads are fine:
+/// jobs queue up and every caller makes progress on its own job even
+/// if all pool workers are occupied elsewhere.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `n_workers` parked threads. Zero is legal:
+    /// every `run` then executes entirely on the caller thread.
+    pub fn new(n_workers: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let workers = (0..n_workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("libra-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Parked worker threads owned by the pool.
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Execute `f(0), f(1), …, f(n_tasks - 1)`, each exactly once,
+    /// across the pool workers and the caller thread. Blocks until all
+    /// tasks finished; a panicking task is reported as an error after
+    /// the remaining tasks complete.
+    pub fn run(&self, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) -> anyhow::Result<()> {
+        if n_tasks == 0 {
+            return Ok(());
+        }
+        if self.workers.is_empty() || n_tasks == 1 {
+            // nothing to fan out (or nobody to help): run inline,
+            // skipping the queue and both condvars entirely
+            return run_inline(n_tasks, f);
+        }
+        // Safety: `run` blocks until `done == n_tasks`, and no worker
+        // dereferences the pointer after claiming an index >= n_tasks,
+        // so the erased borrow strictly outlives every use.
+        let short: *const (dyn Fn(usize) + Sync + '_) = f;
+        let task = unsafe {
+            std::mem::transmute::<
+                *const (dyn Fn(usize) + Sync + '_),
+                *const (dyn Fn(usize) + Sync + 'static),
+            >(short)
+        };
+        let job = Arc::new(Job {
+            task,
+            n_tasks,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.queue.push_back(job.clone());
+        }
+        self.shared.work_cv.notify_all();
+        // the caller is a worker too: claim tasks until none are left
+        run_job_tasks(&job, &self.shared);
+        // wait for stragglers still inside their last task
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while job.done.load(Ordering::Acquire) < job.n_tasks {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+        }
+        anyhow::ensure!(!job.panicked.load(Ordering::Relaxed), "executor task panicked");
+        Ok(())
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                // retire exhausted jobs (their tasks are all claimed;
+                // the erased pointer must not be dereferenced again)
+                while st.queue.front().is_some_and(|j| j.exhausted()) {
+                    st.queue.pop_front();
+                }
+                if let Some(j) = st.queue.front() {
+                    break j.clone();
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        run_job_tasks(&job, shared);
+    }
+}
+
+/// Claim and execute tasks of `job` until none remain.
+fn run_job_tasks(job: &Job, shared: &PoolShared) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n_tasks {
+            return;
+        }
+        // Safety: `i < n_tasks`, so per the `run` contract the closure
+        // is still alive (its `run` call has not returned yet).
+        let f = unsafe { &*job.task };
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))).is_err() {
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+        let finished = job.done.fetch_add(1, Ordering::AcqRel) + 1;
+        if finished == job.n_tasks {
+            // lock before notifying so the caller cannot miss the wake
+            // between its counter check and its condvar wait
+            let _guard = shared.state.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+fn run_inline(n_tasks: usize, f: &(dyn Fn(usize) + Sync)) -> anyhow::Result<()> {
+    let mut panicked = false;
+    for i in 0..n_tasks {
+        panicked |= std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))).is_err();
+    }
+    anyhow::ensure!(!panicked, "executor task panicked");
+    Ok(())
+}
+
+/// The process-wide shared pool the executors default to. Sized to
+/// `default_flex_threads()` (cores minus one): the caller thread
+/// participates in every `run`, so together they cover the machine.
+pub fn global_pool() -> &'static Arc<WorkerPool> {
+    static POOL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+    POOL.get_or_init(|| Arc::new(WorkerPool::new(super::default_flex_threads())))
+}
+
+/// How an executor maps its concurrent streams onto threads.
+#[derive(Clone)]
+pub enum Threading {
+    /// Reuse a persistent pool across calls (the default — shared
+    /// process-wide via [`global_pool`], or a private pool).
+    Pooled(Arc<WorkerPool>),
+    /// Spawn fresh scoped threads per call (the pre-pool behavior;
+    /// kept as the `tab10_runtime` bench baseline and the equivalence
+    /// oracle in tests).
+    Scoped,
+    /// Run every stream sequentially on the caller thread.
+    Inline,
+}
+
+impl Threading {
+    /// The shared process-wide pool.
+    pub fn pooled() -> Self {
+        Threading::Pooled(global_pool().clone())
+    }
+
+    /// Execute `f(0..n_tasks)` under this strategy; returns an error
+    /// if any task panicked (after the rest completed).
+    pub fn run(&self, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) -> anyhow::Result<()> {
+        match self {
+            Threading::Pooled(pool) => pool.run(n_tasks, f),
+            Threading::Scoped => {
+                if n_tasks == 0 {
+                    return Ok(());
+                }
+                crossbeam_utils::thread::scope(|s| {
+                    for i in 0..n_tasks {
+                        s.spawn(move |_| f(i));
+                    }
+                })
+                .map_err(|_| anyhow::anyhow!("executor task panicked"))
+            }
+            Threading::Inline => run_inline(n_tasks, f),
+        }
+    }
+}
+
+impl Default for Threading {
+    fn default() -> Self {
+        Threading::pooled()
+    }
+}
+
+impl std::fmt::Debug for Threading {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Threading::Pooled(p) => write!(f, "Pooled({} workers)", p.n_workers()),
+            Threading::Scoped => write!(f, "Scoped"),
+            Threading::Inline => write!(f, "Inline"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = WorkerPool::new(3);
+        for n_tasks in [0usize, 1, 2, 7, 64] {
+            let hits: Vec<AtomicUsize> = (0..n_tasks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n_tasks, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "n_tasks={n_tasks}");
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_on_caller() {
+        let pool = WorkerPool::new(0);
+        let sum = AtomicU64::new(0);
+        pool.run(10, &|i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn reused_across_many_calls() {
+        let pool = WorkerPool::new(2);
+        let total = AtomicU64::new(0);
+        for _ in 0..200 {
+            pool.run(4, &|i| {
+                total.fetch_add(i as u64 + 1, Ordering::Relaxed);
+            })
+            .unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 200 * 10);
+    }
+
+    #[test]
+    fn concurrent_callers_share_the_pool() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let total = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = pool.clone();
+                let total = total.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..50 {
+                        let local = AtomicU64::new(0);
+                        pool.run(6, &|i| {
+                            local.fetch_add(i as u64, Ordering::Relaxed);
+                        })
+                        .unwrap();
+                        total.fetch_add(local.load(Ordering::Relaxed), Ordering::Relaxed);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 50 * 15);
+    }
+
+    #[test]
+    fn panic_is_reported_not_propagated() {
+        let pool = WorkerPool::new(2);
+        let err = pool.run(4, &|i| {
+            if i == 2 {
+                panic!("boom");
+            }
+        });
+        assert!(err.is_err());
+        // the pool survives and keeps serving
+        pool.run(4, &|_| {}).unwrap();
+    }
+
+    #[test]
+    fn threading_strategies_all_complete() {
+        let pooled = Threading::Pooled(Arc::new(WorkerPool::new(2)));
+        for t in [pooled, Threading::Scoped, Threading::Inline] {
+            let sum = AtomicU64::new(0);
+            t.run(8, &|i| {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            })
+            .unwrap();
+            assert_eq!(sum.load(Ordering::Relaxed), 28, "{t:?}");
+        }
+    }
+}

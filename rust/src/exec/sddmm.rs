@@ -9,15 +9,17 @@ use super::counters::Counters;
 use super::flex;
 use super::output::SharedOut;
 use super::pack::{self, PackBufs};
+use super::pool::Threading;
 use super::structured::{self, Decode};
+use super::workspace::{self, Workspace};
 use super::TcBackend;
 use crate::dist::{DistParams, SddmmDist};
 use crate::format::legacy::TcfBlocks;
 use crate::runtime::Input;
 use crate::sparse::{Csr, Dense};
 use anyhow::Result;
-use crossbeam_utils::thread;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Elements per flexible work unit (the SDDMM tile chunk).
 const FLEX_CHUNK: usize = 512;
@@ -27,7 +29,11 @@ pub struct SddmmExecutor {
     pub dist: SddmmDist,
     pub tcf: Option<TcfBlocks>,
     pub backend: TcBackend,
+    /// flexible-stream width (concurrent flexible tasks per call)
     pub flex_threads: usize,
+    /// how the streams are mapped onto threads (persistent pool by
+    /// default; `Scoped` restores the spawn-per-call behavior)
+    pub threading: Threading,
     pub counters: Counters,
     /// pattern of the sparse matrix (row_ptr/col_idx reused for output)
     pub pattern: Csr,
@@ -50,6 +56,7 @@ impl SddmmExecutor {
             tcf,
             backend,
             flex_threads: super::default_flex_threads(),
+            threading: Threading::default(),
             counters: Counters::new(),
             pattern,
         }
@@ -66,59 +73,84 @@ impl SddmmExecutor {
     }
 
     /// `C = (A · Bᵀ) ⊙ S` where S is the sparse pattern (values scale
-    /// the samples). `a` is rows x K, `b` is cols x K.
+    /// the samples). `a` is rows x K, `b` is cols x K. Reuses this
+    /// thread's default [`Workspace`].
     pub fn execute(&self, a: &Dense, b: &Dense) -> Result<Csr> {
-        anyhow::ensure!(a.rows == self.dist.rows, "A rows");
-        anyhow::ensure!(b.rows == self.dist.cols, "B rows");
-        anyhow::ensure!(a.cols == b.cols, "feature dims differ");
+        workspace::with_default(|ws| self.execute_with(a, b, ws))
+    }
+
+    /// [`SddmmExecutor::execute`] with a caller-owned workspace.
+    pub fn execute_with(&self, a: &Dense, b: &Dense, ws: &mut Workspace) -> Result<Csr> {
+        // validate before paying the O(nnz) output-pattern clone
+        self.check_shapes(a, b)?;
         let mut out = self.pattern.clone();
         out.values.fill(0.0);
         {
             let shared = SharedOut::new(&mut out.values);
-            self.execute_values(a, b, &shared)?;
+            self.execute_values_with(a, b, &shared, ws)?;
         }
         Ok(out)
     }
 
-    /// Execute into a raw values buffer (len = nnz).
+    fn check_shapes(&self, a: &Dense, b: &Dense) -> Result<()> {
+        anyhow::ensure!(a.rows == self.dist.rows, "A rows");
+        anyhow::ensure!(b.rows == self.dist.cols, "B rows");
+        anyhow::ensure!(a.cols == b.cols, "feature dims differ");
+        Ok(())
+    }
+
+    /// Execute into a raw values buffer (len = nnz), reusing this
+    /// thread's default [`Workspace`].
     pub fn execute_values(&self, a: &Dense, b: &Dense, out: &SharedOut) -> Result<()> {
+        workspace::with_default(|ws| self.execute_values_with(a, b, out, ws))
+    }
+
+    /// Execute into a raw values buffer with a caller-owned workspace
+    /// (the `_with_workspace` entry point — the zero-allocation SDDMM
+    /// hot path when the caller also owns the output values buffer).
+    pub fn execute_values_with(
+        &self,
+        a: &Dense,
+        b: &Dense,
+        out: &SharedOut,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        self.check_shapes(a, b)?;
         let n_blocks = self.dist.tc.n_blocks();
-        let structured_err: std::sync::Mutex<Option<anyhow::Error>> = std::sync::Mutex::new(None);
+        let structured_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
         let cursor = AtomicUsize::new(0);
         let n_flex = self.dist.flex_vals.len();
+        let pack_bufs = ws.pack_bufs();
 
-        thread::scope(|s| {
-            if n_blocks > 0 {
-                let err_ref = &structured_err;
-                s.spawn(move |_| {
-                    if let Err(e) = self.run_structured(a, b, out) {
-                        *err_ref.lock().unwrap() = Some(e);
-                    }
-                });
+        let structured_tasks = (n_blocks > 0) as usize;
+        let flex_tasks = if n_flex > 0 { self.flex_threads.max(1) } else { 0 };
+        let task = |t: usize| {
+            if t < structured_tasks {
+                if let Err(e) = self.run_structured(a, b, out, pack_bufs) {
+                    *structured_err.lock().unwrap() = Some(e);
+                }
+                return;
             }
-            for _ in 0..self.flex_threads {
-                let cursor_ref = &cursor;
-                s.spawn(move |_| loop {
-                    let i0 = cursor_ref.fetch_add(FLEX_CHUNK, Ordering::Relaxed);
-                    if i0 >= n_flex {
-                        break;
-                    }
-                    let i1 = (i0 + FLEX_CHUNK).min(n_flex);
-                    flex::sddmm_range(
-                        i0..i1,
-                        &self.dist.flex_rows,
-                        &self.dist.flex_cols,
-                        &self.dist.flex_vals,
-                        &self.dist.flex_out_idx,
-                        a,
-                        b,
-                        out,
-                        &self.counters,
-                    );
-                });
+            loop {
+                let i0 = cursor.fetch_add(FLEX_CHUNK, Ordering::Relaxed);
+                if i0 >= n_flex {
+                    break;
+                }
+                let i1 = (i0 + FLEX_CHUNK).min(n_flex);
+                flex::sddmm_range(
+                    i0..i1,
+                    &self.dist.flex_rows,
+                    &self.dist.flex_cols,
+                    &self.dist.flex_vals,
+                    &self.dist.flex_out_idx,
+                    a,
+                    b,
+                    out,
+                    &self.counters,
+                );
             }
-        })
-        .map_err(|_| anyhow::anyhow!("sddmm executor thread panicked"))?;
+        };
+        self.threading.run(structured_tasks + flex_tasks, &task)?;
 
         if let Some(e) = structured_err.into_inner().unwrap() {
             return Err(e);
@@ -126,7 +158,13 @@ impl SddmmExecutor {
         Ok(())
     }
 
-    fn run_structured(&self, a: &Dense, b: &Dense, out: &SharedOut) -> Result<()> {
+    fn run_structured(
+        &self,
+        a: &Dense,
+        b: &Dense,
+        out: &SharedOut,
+        pack_bufs: &Mutex<PackBufs>,
+    ) -> Result<()> {
         let n_blocks = self.dist.tc.n_blocks();
         match &self.backend {
             TcBackend::Pjrt(rt) => {
@@ -143,13 +181,14 @@ impl SddmmExecutor {
                     .collect();
                 anyhow::ensure!(!buckets.is_empty(), "no sddmm_tc_bitmap artifacts for K={k}");
                 buckets.sort_unstable_by(|x, y| y.cmp(x));
-                let mut bufs = PackBufs::default();
+                let mut bufs = workspace::lock(pack_bufs);
+                let bufs = &mut *bufs;
                 let mut b0 = 0usize;
                 while b0 < n_blocks {
                     let bucket = pack::choose_bucket(&buckets, n_blocks - b0);
                     let b1 = (b0 + bucket).min(n_blocks);
                     let dense_bytes =
-                        pack::pack_sddmm_batch(&self.dist.tc, b0, b1, bucket, a, b, &mut bufs);
+                        pack::pack_sddmm_batch(&self.dist.tc, b0, b1, bucket, a, b, bufs);
                     let name = format!("sddmm_tc_bitmap_{bucket}x{k}");
                     let outs = rt.execute_f32(
                         &name,
@@ -160,7 +199,14 @@ impl SddmmExecutor {
                             Input::F32(&bufs.scale),
                         ],
                     )?;
-                    pack::scatter_sddmm_batch(&self.dist.tc, &self.dist.tc_out_idx, b0, b1, &outs[0], out);
+                    pack::scatter_sddmm_batch(
+                        &self.dist.tc,
+                        &self.dist.tc_out_idx,
+                        b0,
+                        b1,
+                        &outs[0],
+                        out,
+                    );
                     let c = &self.counters;
                     c.add(&c.pjrt_calls, 1);
                     c.add(&c.blocks_executed, bucket as u64);
@@ -222,7 +268,8 @@ mod tests {
         let mut rng = SplitMix64::new(seed);
         let a = Dense::random(&mut rng, m.rows, k);
         let b = Dense::random(&mut rng, m.cols, k);
-        let exec = SddmmExecutor::new(m, &DistParams { threshold: th, fill_padding: true }, backend);
+        let exec =
+            SddmmExecutor::new(m, &DistParams { threshold: th, fill_padding: true }, backend);
         let got = exec.execute(&a, &b).unwrap();
         let expect = m.sddmm_dense_ref(&a, &b);
         for (i, (&g, &w)) in got.values.iter().zip(&expect.values).enumerate() {
@@ -305,5 +352,58 @@ mod tests {
         let exec = SddmmExecutor::new(&m, &DistParams::sddmm_default(), TcBackend::NativeBitmap);
         let got = exec.execute(&a, &b).unwrap();
         assert_eq!(got.nnz(), 0);
+    }
+
+    #[test]
+    fn pooled_workspace_reuse_is_bit_identical_to_scoped() {
+        // Acceptance property: pooled + workspace-reusing SDDMM is
+        // bit-identical to the spawn-per-call scoped-thread path.
+        // (SDDMM writes every nonzero exactly once, so this holds for
+        // any flexible width; one stream is used for symmetry with the
+        // SpMM property.)
+        let pool = Arc::new(crate::exec::WorkerPool::new(2));
+        check(Config::default().cases(12), "pooled sddmm == scoped sddmm", |rng| {
+            let rows = rng.range(1, 120);
+            let cols = rng.range(1, 120);
+            let m = gen::uniform_random(rng, rows, cols, 0.1);
+            let k = rng.range(1, 20);
+            let a = Dense::random(rng, rows, k);
+            let b = Dense::random(rng, cols, k);
+            let d = DistParams { threshold: rng.range(1, 48), fill_padding: true };
+            let mut scoped = SddmmExecutor::new(&m, &d, TcBackend::NativeBitmap);
+            scoped.flex_threads = 1;
+            scoped.threading = crate::exec::Threading::Scoped;
+            let mut pooled = SddmmExecutor::new(&m, &d, TcBackend::NativeBitmap);
+            pooled.flex_threads = 1;
+            pooled.threading = crate::exec::Threading::Pooled(pool.clone());
+            let want = scoped.execute(&a, &b).unwrap();
+            let mut ws = crate::exec::Workspace::new();
+            for rep in 0..3 {
+                let got = pooled.execute_with(&a, &b, &mut ws).unwrap();
+                assert_eq!(got.values, want.values, "rep {rep} diverged from scoped path");
+            }
+        });
+    }
+
+    #[test]
+    fn counters_identical_across_threading_modes() {
+        let mut rng = SplitMix64::new(98);
+        let m = gen::uniform_random(&mut rng, 128, 128, 0.1);
+        let a = Dense::random(&mut rng, 128, 12);
+        let b = Dense::random(&mut rng, 128, 12);
+        let params = DistParams::sddmm_default();
+        let snapshot = |threading: crate::exec::Threading, flex_threads: usize| {
+            let mut e = SddmmExecutor::new(&m, &params, TcBackend::NativeBitmap);
+            e.threading = threading;
+            e.flex_threads = flex_threads;
+            e.execute(&a, &b).unwrap();
+            e.counters.snapshot()
+        };
+        let inline = snapshot(crate::exec::Threading::Inline, 1);
+        assert_eq!(inline, snapshot(crate::exec::Threading::Scoped, 2));
+        assert_eq!(
+            inline,
+            snapshot(crate::exec::Threading::Pooled(Arc::new(crate::exec::WorkerPool::new(3))), 4)
+        );
     }
 }

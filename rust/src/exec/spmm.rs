@@ -10,7 +10,9 @@ use super::counters::Counters;
 use super::flex;
 use super::output::SharedOut;
 use super::pack::{self, PackBufs};
+use super::pool::Threading;
 use super::structured::{self, Decode};
+use super::workspace::{self, StructuredBufs, Workspace};
 use super::TcBackend;
 use crate::balance::{BalanceParams, FlexTile, SpmmSchedule};
 use crate::dist::{DistParams, SpmmDist};
@@ -18,9 +20,8 @@ use crate::format::legacy::TcfBlocks;
 use crate::runtime::Input;
 use crate::sparse::{Csr, Dense};
 use anyhow::Result;
-use crossbeam_utils::thread;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Selects the structured backend by name (CLI / config integration).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,8 +44,11 @@ pub struct SpmmExecutor {
     /// TCF conversion, built lazily for the traversal ablation
     pub tcf: Option<TcfBlocks>,
     pub backend: TcBackend,
-    /// flexible-stream worker threads
+    /// flexible-stream width (concurrent flexible tasks per call)
     pub flex_threads: usize,
+    /// how the streams are mapped onto threads (persistent pool by
+    /// default; `Scoped` restores the spawn-per-call behavior)
+    pub threading: Threading,
     pub counters: Counters,
 }
 
@@ -87,6 +91,7 @@ impl SpmmExecutor {
             tcf,
             backend,
             flex_threads: super::default_flex_threads(),
+            threading: Threading::default(),
             counters: Counters::new(),
         }
     }
@@ -107,7 +112,15 @@ impl SpmmExecutor {
         Ok(out)
     }
 
-    /// Execute into an existing (zeroed) output buffer.
+    /// Execute into an existing (zeroed) output buffer, reusing this
+    /// thread's default [`Workspace`].
+    pub fn execute_into(&self, b: &Dense, out_mat: &mut Dense) -> Result<()> {
+        workspace::with_default(|ws| self.execute_into_with(b, out_mat, ws))
+    }
+
+    /// Execute into an existing (zeroed) output buffer with a
+    /// caller-owned workspace (the `_with_workspace` entry point: all
+    /// transient buffers come from — and persist in — `ws`).
     ///
     /// Cross-engine write conflicts (the paper's atomicAdd case) are
     /// resolved by *buffer privatization* — the CPU analog of selective
@@ -116,70 +129,74 @@ impl SpmmExecutor {
     /// the structured scatter and flexible tiles both use plain
     /// vectorizable stores. CAS atomics remain only for row-split
     /// flexible chunks racing each other (`FlexTile::row_split`).
-    pub fn execute_into(&self, b: &Dense, out_mat: &mut Dense) -> Result<()> {
+    pub fn execute_into_with(
+        &self,
+        b: &Dense,
+        out_mat: &mut Dense,
+        ws: &mut Workspace,
+    ) -> Result<()> {
         anyhow::ensure!(b.rows == self.dist.cols, "B rows {} != A cols {}", b.rows, self.dist.cols);
         anyhow::ensure!(out_mat.rows == self.dist.rows && out_mat.cols == b.cols, "bad out shape");
         let n_blocks = self.dist.tc.n_blocks();
         let has_flex = !self.sched.long_tiles.is_empty() || !self.sched.short_tiles.is_empty();
         let privatize = n_blocks > 0 && has_flex;
         let counters = &self.counters;
+        let n = b.cols;
 
-        let mut flex_buf = if privatize { vec![0f32; out_mat.data.len()] } else { Vec::new() };
+        // one task for the structured stream plus the flexible width
+        let structured_tasks = (n_blocks > 0) as usize;
+        let flex_tasks = if has_flex { self.flex_threads.max(1) } else { 0 };
+        let (flex_buf, scratch, structured_bufs, pack_bufs) =
+            ws.split_spmm(privatize.then(|| out_mat.data.len()), flex_tasks, n);
         {
             let out = SharedOut::new(&mut out_mat.data);
-            let flex_out = if privatize { SharedOut::new(&mut flex_buf) } else { out.alias() };
+            let flex_out = if privatize { SharedOut::new(flex_buf) } else { out.alias() };
 
             // Tile queues for the flexible streams (streams 1 and 2).
             let long_cursor = AtomicUsize::new(0);
             let short_cursor = AtomicUsize::new(0);
-            let structured_err: std::sync::Mutex<Option<anyhow::Error>> = std::sync::Mutex::new(None);
+            let structured_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
 
-            thread::scope(|s| {
-                // --- stream 0: structured engine (single issuing thread:
-                // plain stores; block atomic flags only matter when the
-                // flexible streams share the same buffer) ---
-                if n_blocks > 0 {
-                    let out_ref = &out;
-                    let err_ref = &structured_err;
-                    s.spawn(move |_| {
-                        let res = self.run_structured(b, out_ref, privatize);
-                        if let Err(e) = res {
-                            *err_ref.lock().unwrap() = Some(e);
-                        }
-                    });
+            let task = |t: usize| {
+                if t < structured_tasks {
+                    // --- stream 0: structured engine (single issuing
+                    // task: plain stores; block atomic flags only
+                    // matter when the flexible streams share the same
+                    // buffer) ---
+                    let res =
+                        self.run_structured(b, &out, privatize, structured_bufs, pack_bufs);
+                    if let Err(e) = res {
+                        *structured_err.lock().unwrap() = Some(e);
+                    }
+                    return;
                 }
-                // --- streams 1 & 2: flexible engines ---
-                let n = b.cols;
-                for _ in 0..self.flex_threads {
-                    let fo = &flex_out;
-                    let long_ref = &long_cursor;
-                    let short_ref = &short_cursor;
-                    s.spawn(move |_| {
-                        let mut scratch = vec![0f32; n];
-                        // stream 1: long tiles (chunked, coarse work units)
-                        loop {
-                            let i = long_ref.fetch_add(1, Ordering::Relaxed);
-                            if i >= self.sched.long_tiles.len() {
-                                break;
-                            }
-                            self.run_flex_tile(&self.sched.long_tiles[i], b, fo, privatize, &mut scratch);
-                        }
-                        // stream 2: short tiles (batched grabs — tiles are tiny)
-                        const SHORT_BATCH: usize = 64;
-                        loop {
-                            let i0 = short_ref.fetch_add(SHORT_BATCH, Ordering::Relaxed);
-                            if i0 >= self.sched.short_tiles.len() {
-                                break;
-                            }
-                            let i1 = (i0 + SHORT_BATCH).min(self.sched.short_tiles.len());
-                            for t in &self.sched.short_tiles[i0..i1] {
-                                self.run_flex_tile(t, b, fo, privatize, &mut scratch);
-                            }
-                        }
-                    });
+                // --- streams 1 & 2: flexible engines. Each task owns
+                // one workspace scratch slot (slot i is only locked by
+                // task i: uncontended, one acquisition per call). ---
+                let mut scratch = workspace::lock(&scratch[t - structured_tasks]);
+                // stream 1: long tiles (chunked, coarse work units)
+                loop {
+                    let i = long_cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= self.sched.long_tiles.len() {
+                        break;
+                    }
+                    let tile = &self.sched.long_tiles[i];
+                    self.run_flex_tile(tile, b, &flex_out, privatize, &mut scratch);
                 }
-            })
-            .map_err(|_| anyhow::anyhow!("executor thread panicked"))?;
+                // stream 2: short tiles (batched grabs — tiles are tiny)
+                const SHORT_BATCH: usize = 64;
+                loop {
+                    let i0 = short_cursor.fetch_add(SHORT_BATCH, Ordering::Relaxed);
+                    if i0 >= self.sched.short_tiles.len() {
+                        break;
+                    }
+                    let i1 = (i0 + SHORT_BATCH).min(self.sched.short_tiles.len());
+                    for tile in &self.sched.short_tiles[i0..i1] {
+                        self.run_flex_tile(tile, b, &flex_out, privatize, &mut scratch);
+                    }
+                }
+            };
+            self.threading.run(structured_tasks + flex_tasks, &task)?;
 
             counters.add(&counters.atomic_adds, out.atomic_adds.load(Ordering::Relaxed));
             counters.add(&counters.atomic_adds, flex_out.atomic_adds.load(Ordering::Relaxed));
@@ -189,7 +206,7 @@ impl SpmmExecutor {
         }
         if privatize {
             // merge pass: one vectorizable sweep
-            for (o, &f) in out_mat.data.iter_mut().zip(&flex_buf) {
+            for (o, &f) in out_mat.data.iter_mut().zip(flex_buf.iter()) {
                 *o += f;
             }
         }
@@ -222,7 +239,14 @@ impl SpmmExecutor {
         );
     }
 
-    fn run_structured(&self, b: &Dense, out: &SharedOut, privatized: bool) -> Result<()> {
+    fn run_structured(
+        &self,
+        b: &Dense,
+        out: &SharedOut,
+        privatized: bool,
+        structured_bufs: &Mutex<StructuredBufs>,
+        pack_bufs: &Mutex<PackBufs>,
+    ) -> Result<()> {
         let n_blocks = self.dist.tc.n_blocks();
         // stream 0 is the only writer of the main buffer when the
         // flexible streams are privatized: plain stores throughout
@@ -244,13 +268,14 @@ impl SpmmExecutor {
                     .collect();
                 anyhow::ensure!(!buckets.is_empty(), "no spmm_tc_bitmap artifacts for N={n}");
                 buckets.sort_unstable_by(|a, b| b.cmp(a));
-                let mut bufs = PackBufs::default();
+                let mut bufs = workspace::lock(pack_bufs);
+                let bufs = &mut *bufs;
                 let mut b0 = 0usize;
                 while b0 < n_blocks {
                     let bucket = pack::choose_bucket(&buckets, n_blocks - b0);
                     let b1 = (b0 + bucket).min(n_blocks);
                     let dense_bytes =
-                        pack::pack_spmm_batch(&self.dist.tc, b0, b1, bucket, b, &mut bufs);
+                        pack::pack_spmm_batch(&self.dist.tc, b0, b1, bucket, b, bufs);
                     let name = format!("spmm_tc_bitmap_{bucket}x{n}");
                     let outs = rt.execute_f32(
                         &name,
@@ -277,19 +302,25 @@ impl SpmmExecutor {
                     c.add(&c.bytes_dense, dense_bytes);
                     c.add(
                         &c.bytes_sparse,
-                        (b0..b1).map(|blk| 16 + 32 + self.dist.tc.block_values(blk).len() * 4).sum::<usize>()
-                            as u64,
+                        (b0..b1)
+                            .map(|blk| 16 + 32 + self.dist.tc.block_values(blk).len() * 4)
+                            .sum::<usize>() as u64,
                     );
                     c.add(&c.bytes_out, ((b1 - b0) * 8 * n * 4) as u64);
                     b0 = b1;
                 }
                 Ok(())
             }
-            TcBackend::NativeBitmap => {
-                structured::spmm_blocks(
+            TcBackend::NativeBitmap | TcBackend::NativeStaged | TcBackend::NativeTraversal => {
+                let (tcf, decode) = match &self.backend {
+                    TcBackend::NativeBitmap => (None, Decode::Bitmap),
+                    TcBackend::NativeStaged => (None, Decode::Staged),
+                    _ => (self.tcf.as_ref(), Decode::Traversal),
+                };
+                structured::spmm_blocks_with(
                     &self.dist.tc,
-                    None,
-                    Decode::Bitmap,
+                    tcf,
+                    decode,
                     atomic_flags,
                     0,
                     n_blocks,
@@ -297,36 +328,7 @@ impl SpmmExecutor {
                     b,
                     out,
                     &self.counters,
-                );
-                Ok(())
-            }
-            TcBackend::NativeStaged => {
-                structured::spmm_blocks(
-                    &self.dist.tc,
-                    None,
-                    Decode::Staged,
-                    atomic_flags,
-                    0,
-                    n_blocks,
-                    self.dist.rows,
-                    b,
-                    out,
-                    &self.counters,
-                );
-                Ok(())
-            }
-            TcBackend::NativeTraversal => {
-                structured::spmm_blocks(
-                    &self.dist.tc,
-                    self.tcf.as_ref(),
-                    Decode::Traversal,
-                    atomic_flags,
-                    0,
-                    n_blocks,
-                    self.dist.rows,
-                    b,
-                    out,
-                    &self.counters,
+                    &mut workspace::lock(structured_bufs),
                 );
                 Ok(())
             }
@@ -492,6 +494,70 @@ mod tests {
         );
         let got = exec.execute(&b).unwrap();
         assert!(got.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn pooled_workspace_reuse_is_bit_identical_to_scoped() {
+        // Acceptance property: pooled + workspace-reusing execution is
+        // bit-identical to the spawn-per-call scoped-thread path. One
+        // flexible stream keeps float accumulation order deterministic
+        // on both sides; the same workspace serves every iteration.
+        let pool = Arc::new(crate::exec::WorkerPool::new(2));
+        check(Config::default().cases(12), "pooled spmm == scoped spmm", |rng| {
+            let rows = rng.range(1, 160);
+            let cols = rng.range(1, 120);
+            let m = gen::uniform_random(rng, rows, cols, 0.08);
+            let n = rng.range(1, 24);
+            let b = Dense::random(rng, cols, n);
+            let d = DistParams { threshold: rng.range(1, 6), fill_padding: rng.chance(0.5) };
+            let mut scoped =
+                SpmmExecutor::new(&m, &d, &BalanceParams::default(), TcBackend::NativeBitmap);
+            scoped.flex_threads = 1;
+            scoped.threading = Threading::Scoped;
+            let mut pooled =
+                SpmmExecutor::new(&m, &d, &BalanceParams::default(), TcBackend::NativeBitmap);
+            pooled.flex_threads = 1;
+            pooled.threading = Threading::Pooled(pool.clone());
+            let want = scoped.execute(&b).unwrap();
+            let mut ws = Workspace::new();
+            let mut out = Dense::zeros(m.rows, n);
+            for rep in 0..3 {
+                out.data.fill(0.0);
+                pooled.execute_into_with(&b, &mut out, &mut ws).unwrap();
+                assert_eq!(out.data, want.data, "rep {rep} diverged from scoped path");
+            }
+        });
+    }
+
+    #[test]
+    fn counters_identical_across_threading_modes() {
+        // Satellite: Counters under concurrent pooled execution —
+        // identical totals for sequential (inline), scoped-thread, and
+        // pooled paths, including a multi-stream pooled run.
+        let mut rng = SplitMix64::new(88);
+        let m = gen::column_clustered(&mut rng, 256, 256, 4000, 0.5, 5);
+        let b = Dense::random(&mut rng, 256, 16);
+        let build = || {
+            SpmmExecutor::new(
+                &m,
+                &DistParams::default(),
+                &BalanceParams::default(),
+                TcBackend::NativeBitmap,
+            )
+        };
+        let snapshot = |threading: Threading, flex_threads: usize| {
+            let mut e = build();
+            e.threading = threading;
+            e.flex_threads = flex_threads;
+            e.execute(&b).unwrap();
+            e.counters.snapshot()
+        };
+        let inline = snapshot(Threading::Inline, 1);
+        assert!(inline.flops_structured > 0 && inline.flops_flex > 0, "need both engines");
+        assert_eq!(inline, snapshot(Threading::Scoped, 2));
+        let pooled = Threading::Pooled(Arc::new(crate::exec::WorkerPool::new(3)));
+        assert_eq!(inline, snapshot(pooled, 4));
+        assert_eq!(inline, snapshot(Threading::default(), 2));
     }
 
     #[test]

@@ -6,6 +6,7 @@
 
 use super::counters::Counters;
 use super::output::SharedOut;
+use super::workspace::StructuredBufs;
 use crate::format::{bitmap, legacy::TcfBlocks, TcBlocks, PAD_COL, WINDOW};
 use crate::sparse::Dense;
 
@@ -25,7 +26,8 @@ pub enum Decode {
 
 /// Execute SpMM for blocks `[b0, b1)` of `tc` against `b`, accumulating
 /// into `out`. `atomic[b]` gates per-block accumulation mode.
-/// `rows` bounds tail-window scatter.
+/// `rows` bounds tail-window scatter. Allocates its staging buffers
+/// per call; the hot path uses [`spmm_blocks_with`] and a workspace.
 #[allow(clippy::too_many_arguments)]
 pub fn spmm_blocks(
     tc: &TcBlocks,
@@ -39,10 +41,32 @@ pub fn spmm_blocks(
     out: &SharedOut,
     counters: &Counters,
 ) {
+    let mut bufs = StructuredBufs::default();
+    spmm_blocks_with(tc, tcf, decode, atomic, b0, b1, rows, b, out, counters, &mut bufs);
+}
+
+/// [`spmm_blocks`] with caller-owned staging buffers (the
+/// `_with_workspace` entry point — buffers are grown once and reused
+/// across calls).
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_blocks_with(
+    tc: &TcBlocks,
+    tcf: Option<&TcfBlocks>,
+    decode: Decode,
+    atomic: &[bool],
+    b0: usize,
+    b1: usize,
+    rows: usize,
+    b: &Dense,
+    out: &SharedOut,
+    counters: &Counters,
+    bufs: &mut StructuredBufs,
+) {
     let k = tc.k;
     let n = b.cols;
-    let mut tile = vec![0f32; WINDOW * k];
-    let mut acc = vec![0f32; WINDOW * n];
+    bufs.ensure(WINDOW * k, WINDOW * n);
+    let tile = &mut bufs.tile[..WINDOW * k];
+    let acc = &mut bufs.acc[..WINDOW * n];
     for blk in b0..b1 {
         let win = tc.window_of[blk] as usize;
         let cols = tc.block_cols(blk);
@@ -73,7 +97,7 @@ pub fn spmm_blocks(
                 // stage the dense tile (the shared-memory construction),
                 // then run the full dense 8xK x KxN product including
                 // the padded zeros — the structured redundancy.
-                bitmap::decode_block(bm, vals, WINDOW, k, &mut tile);
+                bitmap::decode_block(bm, vals, WINDOW, k, tile);
                 counters.add(&counters.staged_decodes, 1);
                 for (c, &col) in cols.iter().enumerate() {
                     if col == PAD_COL {
@@ -110,7 +134,7 @@ pub fn spmm_blocks(
                 counters.add(&counters.traversal_steps, steps as u64);
             }
         }
-        scatter_window(win, rows, n, &acc, atomic[blk], out);
+        scatter_window(win, rows, n, acc, atomic[blk], out);
         count_block(counters, tc, blk, n);
     }
 }
@@ -243,13 +267,18 @@ mod tests {
         let mut out_buf = vec![0f32; 64 * 16];
         let counters = Counters::new();
         let flags = vec![false; d.tc.n_blocks()];
+        let nb = d.tc.n_blocks();
         {
             let out = SharedOut::new(&mut out_buf);
-            spmm_blocks(&d.tc, Some(&tcf), decode, &flags, 0, d.tc.n_blocks(), 64, &b, &out, &counters);
+            spmm_blocks(&d.tc, Some(&tcf), decode, &flags, 0, nb, 64, &b, &out, &counters);
         }
         let expect = m.spmm_dense_ref(&b);
         let got = Dense::from_vec(64, 16, out_buf);
-        assert!(got.allclose(&expect, 1e-4), "decode {decode:?} mismatch: {}", got.max_abs_diff(&expect));
+        assert!(
+            got.allclose(&expect, 1e-4),
+            "decode {decode:?} mismatch: {}",
+            got.max_abs_diff(&expect)
+        );
     }
 
     #[test]
@@ -279,11 +308,12 @@ mod tests {
         let c2 = Counters::new();
         let mut buf1 = vec![0f32; 64 * 8];
         let mut buf2 = vec![0f32; 64 * 8];
+        let nb = d.tc.n_blocks();
         {
             let o1 = SharedOut::new(&mut buf1);
-            spmm_blocks(&d.tc, Some(&tcf), Decode::Bitmap, &flags, 0, d.tc.n_blocks(), 64, &b, &o1, &c1);
+            spmm_blocks(&d.tc, Some(&tcf), Decode::Bitmap, &flags, 0, nb, 64, &b, &o1, &c1);
             let o2 = SharedOut::new(&mut buf2);
-            spmm_blocks(&d.tc, Some(&tcf), Decode::Traversal, &flags, 0, d.tc.n_blocks(), 64, &b, &o2, &c2);
+            spmm_blocks(&d.tc, Some(&tcf), Decode::Traversal, &flags, 0, nb, 64, &b, &o2, &c2);
         }
         assert_eq!(c1.snapshot().traversal_steps, 0);
         assert!(c2.snapshot().traversal_steps > d.tc.nnz() as u64);

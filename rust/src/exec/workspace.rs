@@ -1,0 +1,273 @@
+//! Reusable execution workspaces: every transient buffer the hybrid
+//! executors need, owned in one place and reused across calls.
+//!
+//! The pre-workspace hot path allocated a full-output-size
+//! privatization buffer plus one scratch row per flexible stream on
+//! *every* `execute_into` — per GNN layer, per epoch, per serving
+//! request. A [`Workspace`] owns all of it:
+//!
+//! * the privatized flexible-stream output buffer (SpMM's
+//!   cross-engine conflict resolution),
+//! * one scratch row per flexible stream task (long-tile
+//!   accumulators),
+//! * the structured engine's staging tile + window accumulator
+//!   ([`StructuredBufs`]),
+//! * the PJRT batch packing buffers ([`PackBufs`]).
+//!
+//! Buffers grow on demand and are never shrunk, so a workspace sized
+//! by its first call (or up front via [`Workspace::for_spmm`]) stays
+//! allocation-free for every following iteration on the same plan.
+//!
+//! ## The `_with_workspace` API
+//!
+//! Every executor entry point comes in two flavors: the original
+//! signature (`execute`, `execute_into`, `execute_values`), which
+//! borrows a thread-local default workspace via [`with_default`], and
+//! an explicit `*_with` variant taking `&mut Workspace` for callers
+//! that own one — serving workers hold one per worker thread, the GNN
+//! models hold one per model. Both flavors reuse buffers across
+//! calls; the explicit form additionally makes residency accountable
+//! ([`Workspace::resident_bytes`], reported by the serving metrics).
+
+use super::pack::PackBufs;
+use std::cell::RefCell;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock a workspace mutex, shrugging off poisoning: every buffer is
+/// fully re-initialized (cleared / resized / zeroed) at the start of
+/// each use, so a panic mid-call cannot leave observable inconsistent
+/// state — and a caught executor panic must not convert into a later
+/// `unwrap` panic that takes down a serving worker or the thread-local
+/// default workspace.
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The structured engine's per-call buffers: the staged decode tile
+/// (`WINDOW x k`) and the per-window output accumulator (`WINDOW x n`).
+#[derive(Debug, Default)]
+pub struct StructuredBufs {
+    pub tile: Vec<f32>,
+    pub acc: Vec<f32>,
+}
+
+impl StructuredBufs {
+    /// Grow the buffers to at least the given lengths.
+    pub fn ensure(&mut self, tile_len: usize, acc_len: usize) {
+        if self.tile.len() < tile_len {
+            self.tile.resize(tile_len, 0.0);
+        }
+        if self.acc.len() < acc_len {
+            self.acc.resize(acc_len, 0.0);
+        }
+    }
+
+    fn resident_bytes(&self) -> usize {
+        (self.tile.capacity() + self.acc.capacity()) * 4
+    }
+}
+
+/// Reusable buffers for one executor call stream; see the module docs.
+///
+/// The per-task scratch slots are wrapped in `Mutex`es so the shared
+/// task closure can hand each stream its own accumulator row; slot `i`
+/// is only ever locked by task `i`, so the locks are uncontended (one
+/// acquisition per task per call).
+#[derive(Debug, Default)]
+pub struct Workspace {
+    flex_buf: Vec<f32>,
+    scratch: Vec<Mutex<Vec<f32>>>,
+    structured: Mutex<StructuredBufs>,
+    pack: Mutex<PackBufs>,
+}
+
+impl Workspace {
+    /// An empty workspace; buffers grow on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A workspace pre-sized for repeated SpMM execution of `plan`
+    /// with `n` output columns and `flex_tasks` flexible streams —
+    /// the sizing [`crate::prep::SpmmPlan::workspace_bytes`] prices.
+    pub fn for_spmm(plan: &crate::prep::SpmmPlan, n: usize, flex_tasks: usize) -> Self {
+        let mut ws = Self::new();
+        let n_blocks = plan.dist.tc.n_blocks();
+        let has_flex = !plan.sched.long_tiles.is_empty() || !plan.sched.short_tiles.is_empty();
+        if n_blocks > 0 && has_flex {
+            ws.flex_buf.resize(plan.dist.rows * n, 0.0);
+        }
+        if has_flex {
+            ws.ensure_scratch(flex_tasks, n);
+        }
+        if n_blocks > 0 {
+            lock(&ws.structured)
+                .ensure(crate::format::WINDOW * plan.dist.tc.k, crate::format::WINDOW * n);
+        }
+        ws
+    }
+
+    /// Bytes currently held by this workspace's buffers — allocated
+    /// *capacity*, not live length, since `clear()`-style reuse keeps
+    /// allocations pinned (the honest residency number `trim` and the
+    /// serving metrics act on).
+    pub fn resident_bytes(&self) -> usize {
+        let scratch: usize = self.scratch.iter().map(|s| lock(s).capacity() * 4).sum();
+        let pack = {
+            let p = lock(&self.pack);
+            (p.bm_words.capacity() + p.values.capacity()) * 4
+                + (p.gathered.capacity() + p.scale.capacity()) * 4
+        };
+        self.flex_buf.capacity() * 4 + scratch + lock(&self.structured).resident_bytes() + pack
+    }
+
+    /// Grow the per-task scratch pool to `tasks` slots of at least
+    /// `n` elements each.
+    pub(crate) fn ensure_scratch(&mut self, tasks: usize, n: usize) {
+        while self.scratch.len() < tasks {
+            self.scratch.push(Mutex::new(Vec::new()));
+        }
+        for slot in self.scratch.iter_mut().take(tasks) {
+            let v = slot.get_mut().unwrap_or_else(PoisonError::into_inner);
+            if v.len() < n {
+                v.resize(n, 0.0);
+            }
+        }
+    }
+
+    /// Split the workspace into the borrows one SpMM call needs:
+    /// the (zeroed) privatization buffer when `flex_buf_len` is set,
+    /// the per-task scratch slots, and the structured/pack buffers.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn split_spmm(
+        &mut self,
+        flex_buf_len: Option<usize>,
+        flex_tasks: usize,
+        n: usize,
+    ) -> (&mut Vec<f32>, &[Mutex<Vec<f32>>], &Mutex<StructuredBufs>, &Mutex<PackBufs>) {
+        self.flex_buf.clear();
+        if let Some(len) = flex_buf_len {
+            // clear + resize zeroes exactly `len` slots, reusing the
+            // allocation (the per-call cost privatization cannot avoid)
+            self.flex_buf.resize(len, 0.0);
+        }
+        self.ensure_scratch(flex_tasks, n);
+        (&mut self.flex_buf, &self.scratch[..flex_tasks], &self.structured, &self.pack)
+    }
+
+    /// The PJRT packing buffers (all an SDDMM call needs: the native
+    /// SDDMM kernels stage nothing and the flexible stream is
+    /// scratch-free).
+    pub(crate) fn pack_bufs(&self) -> &Mutex<PackBufs> {
+        &self.pack
+    }
+
+    /// Drop every buffer if residency exceeds `max_bytes`. Bounds the
+    /// *implicit* thread-local workspace (a single huge matrix must
+    /// not pin its privatization buffer on the thread forever); a
+    /// workspace you own explicitly is never trimmed behind your back.
+    pub fn trim(&mut self, max_bytes: usize) {
+        if self.resident_bytes() > max_bytes {
+            *self = Workspace::new();
+        }
+    }
+}
+
+/// Residency cap for the thread-local default workspace used by the
+/// non-`_with` executor entry points. Steady-state hot loops stay far
+/// below this (and so keep full reuse); a one-off giant call frees its
+/// buffers on the way out instead of pinning them for the process
+/// lifetime.
+const DEFAULT_WS_CAP_BYTES: usize = 64 << 20;
+
+thread_local! {
+    static DEFAULT_WS: RefCell<Workspace> = RefCell::new(Workspace::new());
+}
+
+/// Run `f` with this thread's default workspace — the buffer the
+/// non-`_with` executor entry points reuse across calls. Must not be
+/// re-entered from inside `f` (executor calls never nest). The default
+/// workspace is trimmed back to empty whenever a call leaves it above
+/// `DEFAULT_WS_CAP_BYTES`.
+pub fn with_default<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
+    DEFAULT_WS.with(|ws| {
+        let ws = &mut *ws.borrow_mut();
+        let r = f(ws);
+        ws.trim(DEFAULT_WS_CAP_BYTES);
+        r
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_grows_and_persists() {
+        let mut ws = Workspace::new();
+        ws.ensure_scratch(3, 16);
+        assert_eq!(ws.scratch.len(), 3);
+        ws.ensure_scratch(2, 32); // wider rows, fewer tasks: first 2 grow
+        assert_eq!(ws.scratch.len(), 3);
+        assert_eq!(ws.scratch[0].lock().unwrap().len(), 32);
+        assert_eq!(ws.scratch[2].lock().unwrap().len(), 16);
+        assert_eq!(ws.resident_bytes(), (32 + 32 + 16) * 4);
+    }
+
+    #[test]
+    fn split_zeroes_the_flex_buffer() {
+        let mut ws = Workspace::new();
+        {
+            let (flex, _, _, _) = ws.split_spmm(Some(8), 1, 4);
+            flex.iter_mut().for_each(|v| *v = 7.0);
+        }
+        let (flex, scratch, _, _) = ws.split_spmm(Some(8), 1, 4);
+        assert!(flex.iter().all(|&v| v == 0.0));
+        assert_eq!(scratch.len(), 1);
+    }
+
+    #[test]
+    fn default_workspace_is_reused_per_thread() {
+        let first = with_default(|ws| {
+            ws.ensure_scratch(1, 64);
+            ws.resident_bytes()
+        });
+        let second = with_default(|ws| ws.resident_bytes());
+        assert_eq!(first, second);
+        assert!(first >= 64 * 4);
+    }
+
+    #[test]
+    fn poisoned_locks_recover() {
+        // a caught executor panic must not cascade into unwrap panics
+        // on the next use of the same workspace (serve workers and the
+        // thread-local default live across requests)
+        let mut ws = Workspace::new();
+        ws.ensure_scratch(1, 8);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = ws.scratch[0].lock().unwrap();
+            panic!("poison the slot");
+        }));
+        assert!(ws.scratch[0].is_poisoned());
+        assert_eq!(ws.resident_bytes(), 8 * 4, "resident_bytes must shrug off poison");
+        ws.ensure_scratch(1, 16);
+        assert_eq!(ws.resident_bytes(), 16 * 4, "ensure_scratch must shrug off poison");
+    }
+
+    #[test]
+    fn trim_bounds_residency() {
+        let mut ws = Workspace::new();
+        ws.ensure_scratch(2, 1024);
+        ws.trim(usize::MAX); // under the cap: untouched
+        assert_eq!(ws.resident_bytes(), 2 * 1024 * 4);
+        ws.trim(1024); // over the cap: everything freed
+        assert_eq!(ws.resident_bytes(), 0);
+        // the thread-local default applies the cap after each use
+        let big = with_default(|ws| {
+            ws.ensure_scratch(1, (super::DEFAULT_WS_CAP_BYTES / 4) + 1);
+            ws.resident_bytes()
+        });
+        assert!(big > super::DEFAULT_WS_CAP_BYTES);
+        assert_eq!(with_default(|ws| ws.resident_bytes()), 0, "oversized default must trim");
+    }
+}

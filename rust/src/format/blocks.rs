@@ -25,7 +25,14 @@ pub struct TcBlocks {
 
 impl TcBlocks {
     pub fn new(k: usize) -> Self {
-        Self { k, window_of: Vec::new(), cols: Vec::new(), bitmaps: Vec::new(), val_ptr: vec![0], values: Vec::new() }
+        Self {
+            k,
+            window_of: Vec::new(),
+            cols: Vec::new(),
+            bitmaps: Vec::new(),
+            val_ptr: vec![0],
+            values: Vec::new(),
+        }
     }
 
     #[inline]

@@ -25,13 +25,20 @@ use super::dense;
 use super::DenseBackend;
 use crate::balance::BalanceParams;
 use crate::dist::DistParams;
+use crate::exec::output::SharedOut;
 use crate::exec::sddmm::SddmmExecutor;
-use crate::exec::{SpmmExecutor, TcBackend};
+use crate::exec::{SpmmExecutor, TcBackend, Workspace};
 use crate::sparse::{Csr, Dense};
 use crate::util::SplitMix64;
 use anyhow::Result;
 
 /// AGNN model bound to one graph.
+///
+/// Like [`super::gcn::Gcn`], every per-step buffer is persistent: the
+/// layer caches, the hidden-state ping-pong buffers, the edge-value
+/// scratch vectors, and the executor [`Workspace`] are sized once and
+/// reused across epochs; both SpMM plans and the SDDMM plan are built
+/// once on the pattern and only value-refreshed (`set_values`).
 pub struct Agnn {
     pub w0: Dense,
     pub w1: Dense,
@@ -50,6 +57,15 @@ pub struct Agnn {
     cache: Vec<LayerCache>,
     cache_h0pre: Dense,
     cache_x: Dense,
+    // persistent buffers (hidden-state ping-pong + backward scratch)
+    buf_h: Dense,
+    buf_tmp: Dense,
+    buf_dh: Dense,
+    buf_dalpha: Vec<f32>,
+    buf_de: Vec<f32>,
+    buf_alpha_t: Vec<f32>,
+    /// execution workspace shared by every hybrid-kernel call
+    ws: Workspace,
 }
 
 struct LayerCache {
@@ -61,6 +77,17 @@ struct LayerCache {
     /// normalized h rows (kept for the full-gradient extension)
     #[allow(dead_code)]
     hnorm: Dense,
+}
+
+impl LayerCache {
+    fn empty() -> Self {
+        Self {
+            h: Dense::zeros(0, 0),
+            alpha: Vec::new(),
+            cos: Vec::new(),
+            hnorm: Dense::zeros(0, 0),
+        }
+    }
 }
 
 impl Agnn {
@@ -83,7 +110,8 @@ impl Agnn {
         }
         let spmm = SpmmExecutor::new(&pattern, dist, &BalanceParams::default(), tc_backend.clone());
         let pattern_t = pattern.transpose();
-        let spmm_t = SpmmExecutor::new(&pattern_t, dist, &BalanceParams::default(), tc_backend.clone());
+        let spmm_t =
+            SpmmExecutor::new(&pattern_t, dist, &BalanceParams::default(), tc_backend.clone());
         // csr index -> index in transposed csr
         let t_perm = transpose_permutation(&pattern);
         let sddmm = SddmmExecutor::new(&pattern, &DistParams::sddmm_default(), tc_backend);
@@ -100,82 +128,132 @@ impl Agnn {
             cache: Vec::new(),
             cache_h0pre: Dense::zeros(0, 0),
             cache_x: Dense::zeros(0, 0),
+            buf_h: Dense::zeros(0, 0),
+            buf_tmp: Dense::zeros(0, 0),
+            buf_dh: Dense::zeros(0, 0),
+            buf_dalpha: Vec::new(),
+            buf_de: Vec::new(),
+            buf_alpha_t: Vec::new(),
+            ws: Workspace::new(),
         }
     }
 
     pub fn forward(&mut self, x: &Dense) -> Result<Dense> {
-        self.cache.clear();
-        self.cache_x = x.clone();
-        let mut h = dense::linear(&self.backend, x, &self.w0, true)?;
-        self.cache_h0pre = h.clone(); // post-relu h0 (relu mask source)
-        for l in 0..self.betas.len() {
-            let hnorm = normalize_rows(&h);
-            // cos similarities on edges (hybrid SDDMM; pattern values = 1)
-            let cos_csr = self.sddmm.execute(&hnorm, &hnorm)?;
-            let cos = cos_csr.values;
-            // e = β·cos, α = row softmax
-            let alpha = row_softmax_scaled(&self.pattern, &cos, self.betas[l]);
-            // H' = α H (hybrid SpMM with refreshed values)
-            self.spmm.dist.set_values(&alpha);
-            let h_next = self.spmm.execute(&h)?;
-            self.cache.push(LayerCache { h: h.clone(), alpha, cos, hnorm });
-            h = h_next;
+        let n_prop = self.betas.len();
+        if self.cache.len() != n_prop {
+            self.cache = (0..n_prop).map(|_| LayerCache::empty()).collect();
         }
-        dense::linear(&self.backend, &h, &self.w1, false)
+        self.cache_x.copy_from(x);
+        dense::linear_into(&self.backend, x, &self.w0, true, &mut self.cache_h0pre)?;
+        self.buf_h.copy_from(&self.cache_h0pre); // post-relu h0
+        for l in 0..n_prop {
+            {
+                let Agnn { cache, buf_h, .. } = self;
+                let c = &mut cache[l];
+                c.h.copy_from(buf_h);
+                c.hnorm.copy_from(buf_h);
+                normalize_rows_inplace(&mut c.hnorm);
+            }
+            {
+                // cos similarities on edges (hybrid SDDMM; pattern
+                // values = 1), straight into the cache's value buffer
+                let Agnn { sddmm, cache, ws, .. } = self;
+                let c = &mut cache[l];
+                c.cos.clear();
+                c.cos.resize(sddmm.pattern.nnz(), 0.0);
+                let out = SharedOut::new(&mut c.cos);
+                sddmm.execute_values_with(&c.hnorm, &c.hnorm, &out, ws)?;
+            }
+            {
+                // e = β·cos, α = row softmax
+                let Agnn { pattern, cache, betas, .. } = self;
+                let c = &mut cache[l];
+                row_softmax_scaled_into(pattern, &c.cos, betas[l], &mut c.alpha);
+            }
+            {
+                // H' = α H (hybrid SpMM with refreshed values)
+                let Agnn { spmm, cache, buf_h, buf_tmp, ws, .. } = self;
+                spmm.dist.set_values(&cache[l].alpha);
+                buf_tmp.reshape_zeroed(spmm.dist.rows, buf_h.cols);
+                spmm.execute_into_with(buf_h, buf_tmp, ws)?;
+                std::mem::swap(buf_h, buf_tmp);
+            }
+        }
+        dense::linear(&self.backend, &self.buf_h, &self.w1, false)
     }
 
     /// Backward; returns (dW0, dW1, dbetas). Needs the final hidden
     /// state, so recomputes it cheaply from the last cache entry.
     pub fn backward(&mut self, dlogits: &Dense) -> Result<(Dense, Dense, Vec<f32>)> {
-        // final hidden H_L = α_{L-1} H_{L-1}
-        let h_last = if let Some(last) = self.cache.last() {
-            self.spmm.dist.set_values(&last.alpha);
-            self.spmm.execute(&last.h)?
-        } else {
-            self.cache_h0pre.clone()
-        };
-        let dw1 = dense::grad_w(&self.backend, &h_last, dlogits)?;
-        let mut dh = dense::grad_x(&self.backend, dlogits, &self.w1)?;
+        {
+            // final hidden H_L = α_{L-1} H_{L-1}, into buf_tmp
+            let Agnn { spmm, cache, cache_h0pre, buf_tmp, ws, .. } = self;
+            if let Some(last) = cache.last() {
+                spmm.dist.set_values(&last.alpha);
+                buf_tmp.reshape_zeroed(spmm.dist.rows, last.h.cols);
+                spmm.execute_into_with(&last.h, buf_tmp, ws)?;
+            } else {
+                buf_tmp.copy_from(cache_h0pre);
+            }
+        }
+        let dw1 = dense::grad_w(&self.backend, &self.buf_tmp, dlogits)?;
+        {
+            let Agnn { backend, w1, buf_dh, .. } = self;
+            dense::grad_x_into(backend, dlogits, w1, buf_dh)?;
+        }
         let mut dbetas = vec![0f32; self.betas.len()];
 
         for l in (0..self.betas.len()).rev() {
-            let cache = &self.cache[l];
-            // dα_ij = dH'_i · h_j  (SDDMM on the pattern)
-            let dalpha_csr = self.sddmm.execute(&dh, &cache.h)?;
-            let dalpha = dalpha_csr.values;
-            // softmax backward: de_ij = α_ij (dα_ij - Σ_k α_ik dα_ik)
-            let de = softmax_bwd(&self.pattern, &cache.alpha, &dalpha);
-            // dβ = Σ de_ij cos_ij
-            dbetas[l] = de.iter().zip(&cache.cos).map(|(d, c)| d * c).sum();
-            // dH via the aggregation term: dH_prev = αᵀ dH'
-            let alpha_t = permute(&cache.alpha, &self.t_perm);
-            self.spmm_t.dist.set_values(&alpha_t);
-            dh = self.spmm_t.execute(&dh)?;
-            // (∂cos/∂H term dropped; see module docs)
+            {
+                // dα_ij = dH'_i · h_j  (SDDMM on the pattern)
+                let Agnn { sddmm, cache, buf_dh, buf_dalpha, ws, .. } = self;
+                buf_dalpha.clear();
+                buf_dalpha.resize(sddmm.pattern.nnz(), 0.0);
+                let out = SharedOut::new(buf_dalpha);
+                sddmm.execute_values_with(buf_dh, &cache[l].h, &out, ws)?;
+            }
+            {
+                // softmax backward: de_ij = α_ij (dα_ij - Σ_k α_ik dα_ik)
+                let Agnn { pattern, cache, buf_dalpha, buf_de, .. } = self;
+                let c = &cache[l];
+                softmax_bwd_into(pattern, &c.alpha, buf_dalpha, buf_de);
+                // dβ = Σ de_ij cos_ij
+                dbetas[l] = buf_de.iter().zip(&c.cos).map(|(d, cv)| d * cv).sum();
+            }
+            {
+                // dH via the aggregation term: dH_prev = αᵀ dH'
+                let Agnn { spmm_t, cache, t_perm, buf_alpha_t, buf_dh, buf_tmp, ws, .. } = self;
+                permute_into(&cache[l].alpha, t_perm, buf_alpha_t);
+                spmm_t.dist.set_values(buf_alpha_t);
+                buf_tmp.reshape_zeroed(spmm_t.dist.rows, buf_dh.cols);
+                spmm_t.execute_into_with(buf_dh, buf_tmp, ws)?;
+                std::mem::swap(buf_dh, buf_tmp);
+                // (∂cos/∂H term dropped; see module docs)
+            }
         }
         // embed layer backward: H0 = relu(X W0)
-        let dh0 = dense::relu_bwd(&self.cache_h0pre, &dh);
-        let dw0 = dense::grad_w(&self.backend, &self.cache_x, &dh0)?;
+        dense::relu_bwd_inplace(&self.cache_h0pre, &mut self.buf_dh);
+        let dw0 = dense::grad_w(&self.backend, &self.cache_x, &self.buf_dh)?;
         Ok((dw0, dw1, dbetas))
     }
 }
 
-/// Row-normalize (L2) a matrix.
-fn normalize_rows(h: &Dense) -> Dense {
-    let mut out = h.clone();
+/// Row-normalize (L2) a matrix in place.
+fn normalize_rows_inplace(h: &mut Dense) {
     for r in 0..h.rows {
-        let row = out.row_mut(r);
+        let row = h.row_mut(r);
         let norm: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-12);
         for v in row {
             *v /= norm;
         }
     }
-    out
 }
 
-/// α = row-softmax of (β · cos) over the CSR pattern.
-fn row_softmax_scaled(pattern: &Csr, cos: &[f32], beta: f32) -> Vec<f32> {
-    let mut alpha = vec![0f32; cos.len()];
+/// α = row-softmax of (β · cos) over the CSR pattern, into a reusable
+/// buffer.
+fn row_softmax_scaled_into(pattern: &Csr, cos: &[f32], beta: f32, alpha: &mut Vec<f32>) {
+    alpha.clear();
+    alpha.resize(cos.len(), 0.0);
     for r in 0..pattern.rows {
         let (s, e) = (pattern.row_ptr[r] as usize, pattern.row_ptr[r + 1] as usize);
         if s == e {
@@ -195,12 +273,13 @@ fn row_softmax_scaled(pattern: &Csr, cos: &[f32], beta: f32) -> Vec<f32> {
             *a /= sum;
         }
     }
-    alpha
 }
 
-/// Row-wise softmax backward over the CSR pattern.
-fn softmax_bwd(pattern: &Csr, alpha: &[f32], dalpha: &[f32]) -> Vec<f32> {
-    let mut de = vec![0f32; alpha.len()];
+/// Row-wise softmax backward over the CSR pattern, into a reusable
+/// buffer.
+fn softmax_bwd_into(pattern: &Csr, alpha: &[f32], dalpha: &[f32], de: &mut Vec<f32>) {
+    de.clear();
+    de.resize(alpha.len(), 0.0);
     for r in 0..pattern.rows {
         let (s, e) = (pattern.row_ptr[r] as usize, pattern.row_ptr[r + 1] as usize);
         let dot: f32 = (s..e).map(|i| alpha[i] * dalpha[i]).sum();
@@ -208,7 +287,6 @@ fn softmax_bwd(pattern: &Csr, alpha: &[f32], dalpha: &[f32]) -> Vec<f32> {
             de[i] = alpha[i] * (dalpha[i] - dot);
         }
     }
-    de
 }
 
 /// For each csr position of `m`, its position in `m.transpose()`.
@@ -233,12 +311,20 @@ fn transpose_permutation(m: &Csr) -> Vec<u32> {
     perm
 }
 
+#[cfg(test)]
 fn permute(vals: &[f32], perm: &[u32]) -> Vec<f32> {
-    let mut out = vec![0f32; vals.len()];
+    let mut out = Vec::new();
+    permute_into(vals, perm, &mut out);
+    out
+}
+
+/// Scatter `vals` through `perm` into a reusable buffer (every slot is
+/// written — `perm` is a permutation — so no zeroing is needed).
+fn permute_into(vals: &[f32], perm: &[u32], out: &mut Vec<f32>) {
+    out.resize(vals.len(), 0.0);
     for (i, &p) in perm.iter().enumerate() {
         out[p as usize] = vals[i];
     }
-    out
 }
 
 #[cfg(test)]

@@ -13,16 +13,30 @@ pub const TILE_T: usize = 2048;
 
 /// `Y = X @ W`, optionally fused with relu.
 pub fn linear(backend: &DenseBackend, x: &Dense, w: &Dense, relu: bool) -> Result<Dense> {
+    let mut y = Dense::zeros(0, 0);
+    linear_into(backend, x, w, relu, &mut y)?;
+    Ok(y)
+}
+
+/// [`linear`] into a reusable output buffer (reshaped here) — the
+/// per-epoch hot path; the GNN layers cache `y` across forwards.
+pub fn linear_into(
+    backend: &DenseBackend,
+    x: &Dense,
+    w: &Dense,
+    relu: bool,
+    y: &mut Dense,
+) -> Result<()> {
     anyhow::ensure!(x.cols == w.rows, "linear shape mismatch");
     match backend {
         DenseBackend::Native => {
-            let mut y = x.matmul(w);
+            x.matmul_into(w, y);
             if relu {
                 for v in y.data.iter_mut() {
                     *v = v.max(0.0);
                 }
             }
-            Ok(y)
+            Ok(())
         }
         DenseBackend::Pjrt(rt) => {
             let (k, n) = (w.rows, w.cols);
@@ -33,9 +47,9 @@ pub fn linear(backend: &DenseBackend, x: &Dense, w: &Dense, relu: bool) -> Resul
             };
             if rt.manifest.find(&art).is_none() {
                 // no artifact bucket for this shape: native fallback
-                return linear(&DenseBackend::Native, x, w, relu);
+                return linear_into(&DenseBackend::Native, x, w, relu, y);
             }
-            let mut y = Dense::zeros(x.rows, n);
+            y.reshape_zeroed(x.rows, n);
             let mut xin = vec![0f32; TILE_T * k];
             let mut t0 = 0usize;
             while t0 < x.rows {
@@ -47,23 +61,50 @@ pub fn linear(backend: &DenseBackend, x: &Dense, w: &Dense, relu: bool) -> Resul
                 y.data[t0 * n..t1 * n].copy_from_slice(&outs[0][..rows * n]);
                 t0 = t1;
             }
-            Ok(y)
+            Ok(())
         }
     }
 }
 
 /// `dW = Xᵀ @ dY` (tile contributions accumulated).
 pub fn grad_w(backend: &DenseBackend, x: &Dense, dy: &Dense) -> Result<Dense> {
+    let mut dw = Dense::zeros(0, 0);
+    grad_w_into(backend, x, dy, &mut dw)?;
+    Ok(dw)
+}
+
+/// [`grad_w`] into a reusable output buffer (reshaped here). The
+/// native path accumulates over rows in ascending order — the same
+/// order `x.transpose().matmul(dy)` used, without the transpose copy.
+pub fn grad_w_into(backend: &DenseBackend, x: &Dense, dy: &Dense, dw: &mut Dense) -> Result<()> {
     anyhow::ensure!(x.rows == dy.rows, "grad_w shape mismatch");
     match backend {
-        DenseBackend::Native => Ok(x.transpose().matmul(dy)),
+        DenseBackend::Native => {
+            let (k, n) = (x.cols, dy.cols);
+            dw.reshape_zeroed(k, n);
+            for i in 0..x.rows {
+                let xrow = x.row(i);
+                let dyrow = dy.row(i);
+                for kk in 0..k {
+                    let a = xrow[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let drow = &mut dw.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        drow[j] += a * dyrow[j];
+                    }
+                }
+            }
+            Ok(())
+        }
         DenseBackend::Pjrt(rt) => {
             let (k, n) = (x.cols, dy.cols);
             let art = format!("grad_w_{TILE_T}x{k}x{n}");
             if rt.manifest.find(&art).is_none() {
-                return grad_w(&DenseBackend::Native, x, dy);
+                return grad_w_into(&DenseBackend::Native, x, dy, dw);
             }
-            let mut dw = Dense::zeros(k, n);
+            dw.reshape_zeroed(k, n);
             let mut xin = vec![0f32; TILE_T * k];
             let mut dyin = vec![0f32; TILE_T * n];
             let mut t0 = 0usize;
@@ -80,23 +121,49 @@ pub fn grad_w(backend: &DenseBackend, x: &Dense, dy: &Dense) -> Result<Dense> {
                 }
                 t0 = t1;
             }
-            Ok(dw)
+            Ok(())
         }
     }
 }
 
 /// `dX = dY @ Wᵀ`.
 pub fn grad_x(backend: &DenseBackend, dy: &Dense, w: &Dense) -> Result<Dense> {
+    let mut dx = Dense::zeros(0, 0);
+    grad_x_into(backend, dy, w, &mut dx)?;
+    Ok(dx)
+}
+
+/// [`grad_x`] into a reusable output buffer (reshaped here). The
+/// native path accumulates over `dy` columns in ascending order — the
+/// same order `dy.matmul(&w.transpose())` used, without the transpose.
+pub fn grad_x_into(backend: &DenseBackend, dy: &Dense, w: &Dense, dx: &mut Dense) -> Result<()> {
     anyhow::ensure!(dy.cols == w.cols, "grad_x shape mismatch");
     match backend {
-        DenseBackend::Native => Ok(dy.matmul(&w.transpose())),
+        DenseBackend::Native => {
+            let (k, n) = (w.rows, w.cols);
+            dx.reshape_zeroed(dy.rows, k);
+            for i in 0..dy.rows {
+                let dyrow = dy.row(i);
+                let drow = &mut dx.data[i * k..(i + 1) * k];
+                for j in 0..n {
+                    let v = dyrow[j];
+                    if v == 0.0 {
+                        continue;
+                    }
+                    for kk in 0..k {
+                        drow[kk] += v * w.data[kk * n + j];
+                    }
+                }
+            }
+            Ok(())
+        }
         DenseBackend::Pjrt(rt) => {
             let (k, n) = (w.rows, w.cols);
             let art = format!("grad_x_{TILE_T}x{k}x{n}");
             if rt.manifest.find(&art).is_none() {
-                return grad_x(&DenseBackend::Native, dy, w);
+                return grad_x_into(&DenseBackend::Native, dy, w, dx);
             }
-            let mut dx = Dense::zeros(dy.rows, k);
+            dx.reshape_zeroed(dy.rows, k);
             let mut dyin = vec![0f32; TILE_T * n];
             let mut t0 = 0usize;
             while t0 < dy.rows {
@@ -108,7 +175,7 @@ pub fn grad_x(backend: &DenseBackend, dy: &Dense, w: &Dense) -> Result<Dense> {
                 dx.data[t0 * k..t1 * k].copy_from_slice(&outs[0][..rows * k]);
                 t0 = t1;
             }
-            Ok(dx)
+            Ok(())
         }
     }
 }
@@ -116,18 +183,31 @@ pub fn grad_x(backend: &DenseBackend, dy: &Dense, w: &Dense) -> Result<Dense> {
 /// relu backward given the forward *output*.
 pub fn relu_bwd(y: &Dense, dy: &Dense) -> Dense {
     let mut dx = dy.clone();
-    for (d, &yv) in dx.data.iter_mut().zip(&y.data) {
+    relu_bwd_inplace(y, &mut dx);
+    dx
+}
+
+/// [`relu_bwd`] applied in place: zero `dy` where `y` was clamped.
+pub fn relu_bwd_inplace(y: &Dense, dy: &mut Dense) {
+    for (d, &yv) in dy.data.iter_mut().zip(&y.data) {
         if yv <= 0.0 {
             *d = 0.0;
         }
     }
-    dx
 }
 
 /// Mean softmax cross-entropy over masked rows; returns (loss, dlogits).
 pub fn softmax_xent(logits: &Dense, labels: &[u32], mask: &[bool]) -> (f64, Dense) {
+    let mut dl = Dense::zeros(0, 0);
+    let loss = softmax_xent_into(logits, labels, mask, &mut dl);
+    (loss, dl)
+}
+
+/// [`softmax_xent`] with a reusable gradient buffer (reshaped and
+/// zeroed here); returns the loss.
+pub fn softmax_xent_into(logits: &Dense, labels: &[u32], mask: &[bool], dl: &mut Dense) -> f64 {
     let (n, c) = (logits.rows, logits.cols);
-    let mut dl = Dense::zeros(n, c);
+    dl.reshape_zeroed(n, c);
     let mut loss = 0f64;
     let count = mask.iter().filter(|&&m| m).count().max(1) as f64;
     for i in 0..n {
@@ -146,7 +226,7 @@ pub fn softmax_xent(logits: &Dense, labels: &[u32], mask: &[bool]) -> (f64, Dens
             drow[j] = (p - if j == label { 1.0 } else { 0.0 }) / count as f32;
         }
     }
-    (loss / count, dl)
+    loss / count
 }
 
 /// Accuracy over all (or masked) nodes.
@@ -241,5 +321,37 @@ mod tests {
         let y = Dense::from_vec(1, 3, vec![0.0, 2.0, 3.0]);
         let dy = Dense::from_vec(1, 3, vec![1.0, 1.0, 1.0]);
         assert_eq!(relu_bwd(&y, &dy).data, vec![0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn native_grads_match_transpose_matmul_bitwise() {
+        // the direct accumulation loops must reproduce the old
+        // transpose-then-matmul formulation exactly (same fp order)
+        let mut rng = SplitMix64::new(163);
+        let x = Dense::random(&mut rng, 37, 9);
+        let dy = Dense::random(&mut rng, 37, 5);
+        let w = Dense::random(&mut rng, 9, 5);
+        let dw = grad_w(&DenseBackend::Native, &x, &dy).unwrap();
+        assert_eq!(dw.data, x.transpose().matmul(&dy).data);
+        let dx = grad_x(&DenseBackend::Native, &dy, &w).unwrap();
+        assert_eq!(dx.data, dy.matmul(&w.transpose()).data);
+    }
+
+    #[test]
+    fn into_variants_reuse_stale_buffers() {
+        let mut rng = SplitMix64::new(164);
+        let x = Dense::random(&mut rng, 10, 6);
+        let w = Dense::random(&mut rng, 6, 4);
+        let mut y = Dense::from_vec(1, 2, vec![9.0, 9.0]); // stale
+        linear_into(&DenseBackend::Native, &x, &w, true, &mut y).unwrap();
+        assert_eq!(y, linear(&DenseBackend::Native, &x, &w, true).unwrap());
+        let labels = vec![0u32; 10];
+        let mask = vec![true; 10];
+        let logits = Dense::random(&mut rng, 10, 4);
+        let mut dl = y.clone(); // wrong shape on purpose
+        let loss = softmax_xent_into(&logits, &labels, &mask, &mut dl);
+        let (loss_ref, dl_ref) = softmax_xent(&logits, &labels, &mask);
+        assert_eq!(loss, loss_ref);
+        assert_eq!(dl, dl_ref);
     }
 }

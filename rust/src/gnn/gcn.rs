@@ -8,20 +8,33 @@ use super::dense;
 use super::{DenseBackend, Precision};
 use crate::balance::BalanceParams;
 use crate::dist::DistParams;
-use crate::exec::{SpmmExecutor, TcBackend};
+use crate::exec::{SpmmExecutor, TcBackend, Workspace};
 use crate::sparse::Dense;
 use crate::util::SplitMix64;
 use anyhow::Result;
 
 /// A GCN model bound to one graph.
+///
+/// Per-epoch buffers are persistent: the layer caches, the backward
+/// scratch, and the executor [`Workspace`] are sized by the first
+/// forward/backward and reused for every following epoch. The
+/// aggregation and backward paths allocate nothing per epoch; the only
+/// recurring allocation is the small `N x classes` logits buffer each
+/// forward moves out to its caller.
 pub struct Gcn {
     pub weights: Vec<Dense>,
     pub spmm: SpmmExecutor,
     pub backend: DenseBackend,
     pub precision: Precision,
-    /// caches from the last forward (inputs X_l, aggregated Z_l, post-act H_l)
+    /// per-layer inputs H_l; slot `n_layers` holds the logits
     cache_x: Vec<Dense>,
+    /// per-layer aggregated Z_l = Â H_l
     cache_z: Vec<Dense>,
+    /// backward gradient buffers (dY and dZ), reused across layers
+    buf_dy: Dense,
+    buf_dz: Dense,
+    /// execution workspace shared by every `execute_into_with` call
+    ws: Workspace,
 }
 
 /// Per-step forward output.
@@ -47,58 +60,95 @@ impl Gcn {
             .map(|d| Dense::glorot(&mut rng, d[0], d[1]))
             .collect();
         let spmm = SpmmExecutor::new(adj, dist, &BalanceParams::default(), tc_backend);
-        Self { weights, spmm, backend, precision, cache_x: Vec::new(), cache_z: Vec::new() }
+        Self {
+            weights,
+            spmm,
+            backend,
+            precision,
+            cache_x: Vec::new(),
+            cache_z: Vec::new(),
+            buf_dy: Dense::zeros(0, 0),
+            buf_dz: Dense::zeros(0, 0),
+            ws: Workspace::new(),
+        }
     }
 
     pub fn n_layers(&self) -> usize {
         self.weights.len()
     }
 
-    fn maybe_round(&self, x: &mut Dense) {
-        if self.precision == Precision::Bf16 {
-            super::round_bf16_buf(&mut x.data);
-        }
-    }
-
-    /// Forward pass; caches intermediates for backward.
+    /// Forward pass; caches intermediates for backward. Every buffer
+    /// (layer caches, aggregation outputs, workspace) is reused across
+    /// epochs — no `Dense::zeros` per forward.
     pub fn forward(&mut self, features: &Dense) -> Result<GcnForward> {
-        self.cache_x.clear();
-        self.cache_z.clear();
-        let mut h = features.clone();
-        self.maybe_round(&mut h);
-        let last = self.n_layers() - 1;
-        for (l, w) in self.weights.iter().enumerate() {
-            self.cache_x.push(h.clone());
-            let mut z = self.spmm.execute(&h)?; // aggregation (hybrid kernels)
-            self.maybe_round(&mut z);
-            self.cache_z.push(z.clone());
-            let mut y = dense::linear(&self.backend, &z, w, l != last)?;
-            self.maybe_round(&mut y);
-            h = y;
+        let layers = self.n_layers();
+        let last = layers - 1;
+        if self.cache_x.len() != layers + 1 {
+            self.cache_x = (0..layers + 1).map(|_| Dense::zeros(0, 0)).collect();
+            self.cache_z = (0..layers).map(|_| Dense::zeros(0, 0)).collect();
         }
-        Ok(GcnForward { logits: h })
+        self.cache_x[0].copy_from(features);
+        round(self.precision, &mut self.cache_x[0]);
+        for l in 0..layers {
+            {
+                // Z_l = Â H_l (aggregation on the hybrid kernels)
+                let Gcn { spmm, cache_x, cache_z, ws, .. } = self;
+                let x = &cache_x[l];
+                let z = &mut cache_z[l];
+                z.reshape_zeroed(spmm.dist.rows, x.cols);
+                spmm.execute_into_with(x, z, ws)?;
+            }
+            round(self.precision, &mut self.cache_z[l]);
+            {
+                // H_{l+1} = relu(Z_l W_l) (no relu on the last layer)
+                let Gcn { weights, backend, cache_x, cache_z, .. } = self;
+                let (_, tail) = cache_x.split_at_mut(l + 1);
+                dense::linear_into(backend, &cache_z[l], &weights[l], l != last, &mut tail[0])?;
+            }
+            round(self.precision, &mut self.cache_x[l + 1]);
+        }
+        // move the logits out instead of cloning: backward never reads
+        // cache_x[layers] (relu masks stop at cache_x[layers - 1]) and
+        // the next forward regrows the slot via linear_into
+        let logits = std::mem::replace(&mut self.cache_x[layers], Dense::zeros(0, 0));
+        Ok(GcnForward { logits })
     }
 
     /// Backward from dlogits; returns per-layer weight gradients.
     pub fn backward(&mut self, fwd: &GcnForward, dlogits: &Dense) -> Result<Vec<Dense>> {
         let last = self.n_layers() - 1;
         let mut grads: Vec<Dense> = Vec::with_capacity(self.n_layers());
-        let mut dy = dlogits.clone();
+        self.buf_dy.copy_from(dlogits);
         for l in (0..self.n_layers()).rev() {
             if l != last {
-                // dX_{l+1} arrived in dy; apply relu mask of H_{l+1}
-                // (H_{l+1} is cache_x[l+1])
-                dy = dense::relu_bwd(&self.cache_x[l + 1], &dy);
+                // dX_{l+1} arrived in buf_dy; apply relu mask of
+                // H_{l+1} (which is cache_x[l+1])
+                dense::relu_bwd_inplace(&self.cache_x[l + 1], &mut self.buf_dy);
             }
-            let dw = dense::grad_w(&self.backend, &self.cache_z[l], &dy)?;
-            let dz = dense::grad_x(&self.backend, &dy, &self.weights[l])?;
-            // dX_l = Âᵀ dZ = Â dZ (symmetric normalization)
-            dy = self.spmm.execute(&dz)?;
+            let mut dw = Dense::zeros(0, 0);
+            dense::grad_w_into(&self.backend, &self.cache_z[l], &self.buf_dy, &mut dw)?;
+            {
+                let Gcn { weights, backend, buf_dy, buf_dz, .. } = self;
+                dense::grad_x_into(backend, buf_dy, &weights[l], buf_dz)?;
+            }
+            {
+                // dX_l = Âᵀ dZ = Â dZ (symmetric normalization)
+                let Gcn { spmm, buf_dy, buf_dz, ws, .. } = self;
+                buf_dy.reshape_zeroed(spmm.dist.rows, buf_dz.cols);
+                spmm.execute_into_with(buf_dz, buf_dy, ws)?;
+            }
             grads.push(dw);
         }
         grads.reverse();
         let _ = fwd;
         Ok(grads)
+    }
+}
+
+/// Round a buffer to bf16 precision when the model asks for it.
+fn round(precision: Precision, x: &mut Dense) {
+    if precision == Precision::Bf16 {
+        super::round_bf16_buf(&mut x.data);
     }
 }
 

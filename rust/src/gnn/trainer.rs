@@ -4,7 +4,7 @@
 
 use super::agnn::Agnn;
 use super::data::GraphData;
-use super::dense::{accuracy, softmax_xent};
+use super::dense::{accuracy, softmax_xent_into};
 use super::gcn::Gcn;
 use super::{DenseBackend, Precision};
 use crate::dist::DistParams;
@@ -117,10 +117,13 @@ pub fn train_gcn(
     let mut adam = Adam::new(&shapes, cfg.lr);
     let mut stats = TrainStats { prep_time, ..Default::default() };
 
+    // gradient buffer reused across epochs (models reuse their own
+    // caches and workspaces internally)
+    let mut dlogits = Dense::zeros(0, 0);
     for _epoch in 0..cfg.epochs {
         let t = Timer::start();
         let fwd = gcn.forward(&data.features)?;
-        let (loss, dlogits) = softmax_xent(&fwd.logits, &data.labels, &data.train_mask);
+        let loss = softmax_xent_into(&fwd.logits, &data.labels, &data.train_mask, &mut dlogits);
         let grads = gcn.backward(&fwd, &dlogits)?;
         {
             let mut params: Vec<&mut [f32]> =
@@ -163,10 +166,11 @@ pub fn train_agnn(
     );
     let mut stats = TrainStats { prep_time, ..Default::default() };
 
+    let mut dlogits = Dense::zeros(0, 0);
     for _epoch in 0..cfg.epochs {
         let t = Timer::start();
         let logits = agnn.forward(&data.features)?;
-        let (loss, dlogits) = softmax_xent(&logits, &data.labels, &data.train_mask);
+        let loss = softmax_xent_into(&logits, &data.labels, &data.train_mask, &mut dlogits);
         let (dw0, dw1, dbetas) = agnn.backward(&dlogits)?;
         {
             let Agnn { w0, w1, betas, .. } = &mut agnn;
@@ -233,7 +237,8 @@ mod tests {
     fn bf16_converges_like_f32() {
         // Fig 13: precision must not materially change convergence
         let data = planted_partition("pubmed_syn_test", 300, 3, 6.0, 0.85, 32, 4);
-        let base = TrainConfig { epochs: 50, lr: 0.02, hidden: 16, layers: 3, ..Default::default() };
+        let base =
+            TrainConfig { epochs: 50, lr: 0.02, hidden: 16, layers: 3, ..Default::default() };
         let f32_stats = train_gcn(
             &data,
             &base,

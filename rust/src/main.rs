@@ -32,8 +32,12 @@ fn main() -> Result<()> {
     };
     let rest = &args[1..];
     match cmd.as_str() {
-        "spmm" => cmd_spmm(&parse_flags(rest, &["matrix", "n", "theta", "backend", "seed"])?),
-        "sddmm" => cmd_sddmm(&parse_flags(rest, &["matrix", "k", "theta", "backend", "seed"])?),
+        "spmm" => {
+            cmd_spmm(&parse_flags(rest, &["matrix", "n", "theta", "backend", "seed", "json"])?)
+        }
+        "sddmm" => {
+            cmd_sddmm(&parse_flags(rest, &["matrix", "k", "theta", "backend", "seed", "json"])?)
+        }
         "stats" => cmd_stats(&parse_flags(rest, &["matrix", "seed"])?),
         "tune" => cmd_tune(&parse_flags(rest, &["n", "k"])?),
         "gnn" => cmd_gnn(&parse_flags(rest, &["model", "epochs"])?),
@@ -56,8 +60,8 @@ fn print_usage() {
     println!(
         "libra — heterogeneous sparse matrix multiplication\n\n\
          usage: libra <spmm|sddmm|stats|tune|gnn|serve> [flags]\n\
-         \x20 spmm   --matrix <path.mtx|gen:SPEC> [--n 128] [--theta N|auto] [--backend native|pjrt] [--seed 42]\n\
-         \x20 sddmm  --matrix <path.mtx|gen:SPEC> [--k 32]  [--theta N|auto] [--backend native|pjrt] [--seed 42]\n\
+         \x20 spmm   --matrix <path.mtx|gen:SPEC> [--n 128] [--theta N|auto] [--backend native|pjrt] [--seed 42] [--json]\n\
+         \x20 sddmm  --matrix <path.mtx|gen:SPEC> [--k 32]  [--theta N|auto] [--backend native|pjrt] [--seed 42] [--json]\n\
          \x20 stats  --matrix <path.mtx|gen:SPEC> [--seed 42]\n\
          \x20 tune   [--n 128] [--k 32]\n\
          \x20 gnn    [--model gcn|agnn] [--epochs 50]\n\
@@ -158,18 +162,21 @@ fn theta(flags: &HashMap<String, String>, op: Op, n: usize) -> Result<DistParams
 fn cmd_spmm(flags: &HashMap<String, String>) -> Result<()> {
     let m = load_matrix(flags)?;
     let n: usize = flags.get("n").and_then(|s| s.parse().ok()).unwrap_or(128);
+    let json = flags.contains_key("json");
     let params = theta(flags, Op::Spmm, n)?;
     let exec = SpmmExecutor::new(&m, &params, &BalanceParams::default(), backend(flags)?);
-    println!(
-        "matrix {}x{} nnz={} | theta={} -> {} blocks ({:.1}% padding), {} flex nnz",
-        m.rows,
-        m.cols,
-        m.nnz(),
-        params.threshold,
-        exec.dist.stats.n_blocks,
-        exec.dist.stats.padding_ratio * 100.0,
-        exec.dist.stats.nnz_flex
-    );
+    if !json {
+        println!(
+            "matrix {}x{} nnz={} | theta={} -> {} blocks ({:.1}% padding), {} flex nnz",
+            m.rows,
+            m.cols,
+            m.nnz(),
+            params.threshold,
+            exec.dist.stats.n_blocks,
+            exec.dist.stats.padding_ratio * 100.0,
+            exec.dist.stats.nnz_flex
+        );
+    }
     let mut rng = SplitMix64::new(1);
     let b = Dense::random(&mut rng, m.cols, n);
     exec.execute(&b)?; // warm
@@ -179,18 +186,39 @@ fn cmd_spmm(flags: &HashMap<String, String>) -> Result<()> {
         std::hint::black_box(exec.execute(&b)?);
     }
     let secs = t.elapsed().as_secs_f64() / reps as f64;
-    println!(
-        "spmm N={n}: {:.3} ms, {:.2} GFLOPS, {} pjrt calls",
-        secs * 1e3,
-        2.0 * m.nnz() as f64 * n as f64 / secs / 1e9,
-        exec.counters.snapshot().pjrt_calls
-    );
+    let gflops = 2.0 * m.nnz() as f64 * n as f64 / secs / 1e9;
+    if json {
+        // machine-readable bench point (one JSON object per run)
+        println!(
+            "{{\"op\":\"spmm\",\"rows\":{},\"cols\":{},\"nnz\":{},\"n\":{n},\"theta\":{},\
+             \"blocks\":{},\"padding_ratio\":{:.6},\"nnz_flex\":{},\"ms\":{:.6},\
+             \"gflops\":{:.4},\"pjrt_calls\":{}}}",
+            m.rows,
+            m.cols,
+            m.nnz(),
+            params.threshold,
+            exec.dist.stats.n_blocks,
+            exec.dist.stats.padding_ratio,
+            exec.dist.stats.nnz_flex,
+            secs * 1e3,
+            gflops,
+            exec.counters.snapshot().pjrt_calls
+        );
+    } else {
+        println!(
+            "spmm N={n}: {:.3} ms, {:.2} GFLOPS, {} pjrt calls",
+            secs * 1e3,
+            gflops,
+            exec.counters.snapshot().pjrt_calls
+        );
+    }
     Ok(())
 }
 
 fn cmd_sddmm(flags: &HashMap<String, String>) -> Result<()> {
     let m = load_matrix(flags)?;
     let k: usize = flags.get("k").and_then(|s| s.parse().ok()).unwrap_or(32);
+    let json = flags.contains_key("json");
     let params = theta(flags, Op::Sddmm, k)?;
     let exec = SddmmExecutor::new(&m, &params, backend(flags)?);
     let mut rng = SplitMix64::new(2);
@@ -203,13 +231,28 @@ fn cmd_sddmm(flags: &HashMap<String, String>) -> Result<()> {
         std::hint::black_box(exec.execute(&a, &b)?);
     }
     let secs = t.elapsed().as_secs_f64() / reps as f64;
-    println!(
-        "sddmm K={k}: theta={} | {:.3} ms, {:.2} GFLOPS ({:.1}% nnz structured)",
-        params.threshold,
-        secs * 1e3,
-        2.0 * m.nnz() as f64 * k as f64 / secs / 1e9,
-        exec.dist.stats.tc_fraction() * 100.0
-    );
+    let gflops = 2.0 * m.nnz() as f64 * k as f64 / secs / 1e9;
+    if json {
+        println!(
+            "{{\"op\":\"sddmm\",\"rows\":{},\"cols\":{},\"nnz\":{},\"k\":{k},\"theta\":{},\
+             \"tc_fraction\":{:.6},\"ms\":{:.6},\"gflops\":{:.4}}}",
+            m.rows,
+            m.cols,
+            m.nnz(),
+            params.threshold,
+            exec.dist.stats.tc_fraction(),
+            secs * 1e3,
+            gflops
+        );
+    } else {
+        println!(
+            "sddmm K={k}: theta={} | {:.3} ms, {:.2} GFLOPS ({:.1}% nnz structured)",
+            params.threshold,
+            secs * 1e3,
+            gflops,
+            exec.dist.stats.tc_fraction() * 100.0
+        );
+    }
     Ok(())
 }
 

@@ -30,6 +30,31 @@ impl SpmmPlan {
             + self.sched.tc_segments.len() * seg
             + (self.sched.long_tiles.len() + self.sched.short_tiles.len()) * tile
     }
+
+    /// Bytes of execution workspace one call on this plan needs, for
+    /// `n` output columns and `flex_tasks` flexible streams: the
+    /// privatized flexible output buffer (only when both engines are
+    /// active), one scratch row per flexible stream, and the
+    /// structured engine's staging tile + window accumulator. This is
+    /// exactly what `exec::Workspace::for_spmm` allocates — plans are
+    /// cheap to cache, but executing them is not free in memory, and
+    /// the serving layer reports this number instead of pretending a
+    /// resident plan is the whole footprint.
+    pub fn workspace_bytes(&self, n: usize, flex_tasks: usize) -> usize {
+        let n_blocks = self.dist.tc.n_blocks();
+        let has_flex = !self.sched.long_tiles.is_empty() || !self.sched.short_tiles.is_empty();
+        let mut bytes = 0usize;
+        if n_blocks > 0 && has_flex {
+            bytes += self.dist.rows * n * 4; // privatization buffer
+        }
+        if has_flex {
+            bytes += flex_tasks * n * 4; // per-stream scratch rows
+        }
+        if n_blocks > 0 {
+            bytes += (WINDOW * self.dist.tc.k + WINDOW * n) * 4; // tile + acc
+        }
+        bytes
+    }
 }
 
 /// Preprocessing execution mode.
@@ -57,20 +82,28 @@ pub fn preprocess_spmm(
 /// Parallel distribution: window ranges on worker threads (Algorithm
 /// 1's thread-per-window mapping), then in-order assembly.
 pub fn distribute_spmm_parallel(m: &Csr, params: &DistParams) -> SpmmDist {
-    let n_windows = m.rows.div_ceil(WINDOW);
     let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    distribute_spmm_parallel_with(m, params, workers)
+}
+
+/// [`distribute_spmm_parallel`] with an explicit worker budget. Only
+/// non-empty window ranges are spawned: with `workers > n_windows` the
+/// chunk walk stops at `n_windows`, so small matrices on wide machines
+/// never pay for empty spawns (regression-tested below).
+pub fn distribute_spmm_parallel_with(m: &Csr, params: &DistParams, workers: usize) -> SpmmDist {
+    let n_windows = m.rows.div_ceil(WINDOW);
     if n_windows == 0 {
         return assemble(m.rows, m.cols, m.nnz(), &[]);
     }
-    let chunk = n_windows.div_ceil(workers);
+    let chunk = n_windows.div_ceil(workers.max(1));
     let mut parts: Vec<Vec<WindowOut>> = Vec::new();
     thread::scope(|s| {
-        let handles: Vec<_> = (0..workers)
-            .map(|t| {
-                let lo = t * chunk;
-                let hi = ((t + 1) * chunk).min(n_windows);
+        let handles: Vec<_> = (0..n_windows)
+            .step_by(chunk)
+            .map(|lo| {
+                let hi = (lo + chunk).min(n_windows);
                 s.spawn(move |_| {
-                    (lo..hi.max(lo)).map(|w| distribute_window(m, w, params)).collect::<Vec<_>>()
+                    (lo..hi).map(|w| distribute_window(m, w, params)).collect::<Vec<_>>()
                 })
             })
             .collect();
@@ -227,12 +260,59 @@ mod tests {
     }
 
     #[test]
+    fn more_workers_than_windows() {
+        // regression: the old chunking spawned empty `lo..hi.max(lo)`
+        // ranges when workers > n_windows; the rewrite must both skip
+        // them and still produce the sequential plan bit-for-bit
+        let mut rng = SplitMix64::new(155);
+        for rows in [1usize, 7, 8, 9, 15, 17] {
+            let m = gen::uniform_random(&mut rng, rows, 40, 0.2);
+            let seq = crate::dist::distribute_spmm(&m, &DistParams::default());
+            for workers in [1usize, 3, 8, 64] {
+                let par = distribute_spmm_parallel_with(&m, &DistParams::default(), workers);
+                assert_eq!(seq.tc.bitmaps, par.tc.bitmaps, "rows={rows} workers={workers}");
+                assert_eq!(seq.tc.cols, par.tc.cols);
+                assert_eq!(seq.flex_row_ptr, par.flex_row_ptr);
+                assert_eq!(seq.flex_vals, par.flex_vals);
+                par.validate_cover(&m).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_bytes_matches_workspace_sizing() {
+        let mut rng = SplitMix64::new(156);
+        // hybrid (both engines), flex-only, and tc-only plans
+        for (m, params) in [
+            (gen::power_law(&mut rng, 200, 8.0, 2.0), DistParams::default()),
+            (gen::power_law(&mut rng, 120, 6.0, 2.0), DistParams::flex_only()),
+            (gen::banded(&mut rng, 96, 4, 0.7), DistParams::tc_only()),
+        ] {
+            let plan =
+                preprocess_spmm(&m, &params, &BalanceParams::default(), PrepMode::Sequential);
+            for (n, tasks) in [(16usize, 1usize), (64, 4)] {
+                let ws = crate::exec::Workspace::for_spmm(&plan, n, tasks);
+                assert_eq!(
+                    ws.resident_bytes(),
+                    plan.workspace_bytes(n, tasks),
+                    "n={n} tasks={tasks}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn plan_includes_schedule() {
         let mut rng = SplitMix64::new(150);
         let m = gen::power_law(&mut rng, 500, 10.0, 2.0);
-        let plan =
-            preprocess_spmm(&m, &DistParams::default(), &BalanceParams::default(), PrepMode::Parallel);
-        assert!(plan.sched.tc_segments.len() + plan.sched.long_tiles.len() + plan.sched.short_tiles.len() > 0);
+        let plan = preprocess_spmm(
+            &m,
+            &DistParams::default(),
+            &BalanceParams::default(),
+            PrepMode::Parallel,
+        );
+        let sched = &plan.sched;
+        assert!(sched.tc_segments.len() + sched.long_tiles.len() + sched.short_tiles.len() > 0);
         assert_eq!(plan.sched.flex_elems(), plan.dist.flex_vals.len());
     }
 

@@ -243,7 +243,8 @@ mod tests {
     fn input_validation() {
         let Some(rt) = runtime() else { return };
         let bad = vec![0f32; 10];
-        assert!(rt.execute_f32("linear_2048x64x16", &[Input::F32(&bad), Input::F32(&bad)]).is_err());
+        let res = rt.execute_f32("linear_2048x64x16", &[Input::F32(&bad), Input::F32(&bad)]);
+        assert!(res.is_err());
         assert!(rt.spec("nonexistent").is_err());
     }
 
@@ -282,8 +283,9 @@ mod tests {
                 s.spawn(move |_| {
                     let x = vec![t as f32; 2048 * 64];
                     let w = vec![1.0f32; 64 * 16];
-                    let outs =
-                        rt.execute_f32("linear_2048x64x16", &[Input::F32(&x), Input::F32(&w)]).unwrap();
+                    let outs = rt
+                        .execute_f32("linear_2048x64x16", &[Input::F32(&x), Input::F32(&w)])
+                        .unwrap();
                     assert!((outs[0][0] - (t as f32) * 64.0).abs() < 1e-2);
                 });
             }

@@ -81,7 +81,8 @@ impl Manifest {
                             .iter()
                             .map(|d| d.as_usize().context("dim"))
                             .collect::<Result<Vec<_>>>()?;
-                        let dtype = DType::parse(t.get("dtype").and_then(Json::as_str).context("dtype")?)?;
+                        let s = t.get("dtype").and_then(Json::as_str).context("dtype")?;
+                        let dtype = DType::parse(s)?;
                         Ok(TensorSpec { shape, dtype })
                     })
                     .collect()

@@ -38,6 +38,11 @@ pub struct ServeMetrics {
     pub exec_nanos: AtomicU64,
     /// Summed busy time across workers, nanoseconds.
     pub busy_nanos: AtomicU64,
+    /// Largest per-worker execution-workspace residency observed
+    /// (bytes) — the honest memory cost of *running* cached plans,
+    /// on top of what the plan cache itself holds
+    /// (`prep::SpmmPlan::workspace_bytes` is the a-priori estimate).
+    pub peak_worker_workspace_bytes: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -53,12 +58,18 @@ impl ServeMetrics {
             prep_nanos: AtomicU64::new(0),
             exec_nanos: AtomicU64::new(0),
             busy_nanos: AtomicU64::new(0),
+            peak_worker_workspace_bytes: AtomicU64::new(0),
         }
     }
 
     #[inline]
     pub fn add(&self, field: &AtomicU64, v: u64) {
         field.fetch_add(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn max(&self, field: &AtomicU64, v: u64) {
+        field.fetch_max(v, Ordering::Relaxed);
     }
 
     /// Seconds since the metrics (i.e. the engine) came up.
@@ -96,6 +107,7 @@ impl ServeMetrics {
             throughput_rps: if elapsed > 0.0 { requests as f64 / elapsed } else { 0.0 },
             elapsed_secs: elapsed,
             workers,
+            peak_worker_workspace_bytes: load(&self.peak_worker_workspace_bytes),
             cache,
         }
     }
@@ -124,6 +136,8 @@ pub struct MetricsReport {
     pub throughput_rps: f64,
     pub elapsed_secs: f64,
     pub workers: usize,
+    /// Peak per-worker execution-workspace residency, bytes.
+    pub peak_worker_workspace_bytes: u64,
     pub cache: CacheStats,
 }
 
@@ -153,10 +167,15 @@ impl std::fmt::Display for MetricsReport {
             self.cache.insertions,
             self.cache.evictions
         )?;
-        write!(
+        writeln!(
             f,
             "prep paths: {} full (cold), {} set_values (warm), {} admission batches",
             self.prep_full, self.prep_fast, self.batches
+        )?;
+        write!(
+            f,
+            "resident memory: peak worker workspace {:.1} KiB (plans budgeted by the cache)",
+            self.peak_worker_workspace_bytes as f64 / 1024.0
         )
     }
 }

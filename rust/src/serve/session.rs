@@ -18,8 +18,11 @@
 //!    balancing); **miss** → full preprocessing, then the plan is
 //!    published to the cache;
 //! 3. the hybrid executor runs with a flexible-stream width set by the
-//!    occupancy tracker, and the [`Response`] (output, timing split,
-//!    hit flag) is handed back to the waiting submitter.
+//!    occupancy tracker — its streams on the shared persistent
+//!    `exec::WorkerPool` (no per-request thread spawning), its buffers
+//!    from the worker's persistent `exec::Workspace` (no per-request
+//!    allocation) — and the [`Response`] (output, timing split, hit
+//!    flag) is handed back to the waiting submitter.
 
 use super::cache::{CachedPlan, PlanCache, PlanKey, SddmmEntry};
 use super::metrics::{MetricsReport, ServeMetrics};
@@ -28,7 +31,7 @@ use crate::balance::BalanceParams;
 use crate::costmodel;
 use crate::dist::{DistParams, Op};
 use crate::exec::sddmm::SddmmExecutor;
-use crate::exec::{SpmmExecutor, TcBackend};
+use crate::exec::{SpmmExecutor, TcBackend, Workspace};
 use crate::sparse::{Csr, Dense, PatternFingerprint};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -352,15 +355,21 @@ fn worker_loop(
     backend: TcBackend,
     max_batch: usize,
 ) {
+    // One persistent workspace per serving worker: privatization
+    // buffers, scratch rows, and pack buffers survive across requests,
+    // and the hybrid streams themselves run on the shared persistent
+    // exec pool — no per-request thread spawning anywhere on the path.
+    let mut ws = Workspace::new();
     while let Some(batch) = queue.pop_batch(max_batch, |j: &Job| j.key) {
         let busy = Instant::now();
         let flex_threads = occupancy.begin();
         metrics.add(&metrics.batches, 1);
         for job in batch {
-            process_job(job, cache, metrics, backend.clone(), flex_threads);
+            process_job(job, cache, metrics, backend.clone(), flex_threads, &mut ws);
         }
         occupancy.end();
         metrics.add(&metrics.busy_nanos, busy.elapsed().as_nanos() as u64);
+        metrics.max(&metrics.peak_worker_workspace_bytes, ws.resident_bytes() as u64);
     }
 }
 
@@ -370,6 +379,7 @@ fn process_job(
     metrics: &ServeMetrics,
     backend: TcBackend,
     flex_threads: usize,
+    ws: &mut Workspace,
 ) {
     let Job { id, key, req, enqueued, slot } = job;
     let Request { payload, inputs, .. } = req;
@@ -378,7 +388,18 @@ fn process_job(
     // A panicking request must not take the worker (and every waiting
     // submitter) down with it; surface it as an error response instead.
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        execute_one(key, payload, inputs, cache, metrics, backend, flex_threads, &mut timing, &mut cache_hit)
+        execute_one(
+            key,
+            payload,
+            inputs,
+            cache,
+            metrics,
+            backend,
+            flex_threads,
+            &mut timing,
+            &mut cache_hit,
+            ws,
+        )
     }));
     let result = match outcome {
         Ok(r) => r,
@@ -405,26 +426,30 @@ fn execute_one(
     flex_threads: usize,
     timing: &mut Timing,
     cache_hit: &mut bool,
+    ws: &mut Workspace,
 ) -> anyhow::Result<Output> {
     // the key carries every parameter the plan depends on
     let dparams = DistParams { threshold: key.threshold, fill_padding: key.fill_padding };
     let t = Instant::now();
     match inputs {
         OpInputs::Spmm { b } => {
-            let mut exec = resolve_spmm(key, payload, &dparams, cache, metrics, backend, cache_hit)?;
+            let mut exec =
+                resolve_spmm(key, payload, &dparams, cache, metrics, backend, cache_hit)?;
             exec.flex_threads = flex_threads;
             timing.prep_secs = t.elapsed().as_secs_f64();
             let t = Instant::now();
-            let out = exec.execute(&b)?;
+            let mut out = Dense::zeros(exec.dist.rows, b.cols);
+            exec.execute_into_with(&b, &mut out, ws)?;
             timing.exec_secs = t.elapsed().as_secs_f64();
             Ok(Output::Dense(out))
         }
         OpInputs::Sddmm { a, b } => {
-            let mut exec = resolve_sddmm(key, payload, &dparams, cache, metrics, backend, cache_hit)?;
+            let mut exec =
+                resolve_sddmm(key, payload, &dparams, cache, metrics, backend, cache_hit)?;
             exec.flex_threads = flex_threads;
             timing.prep_secs = t.elapsed().as_secs_f64();
             let t = Instant::now();
-            let out = exec.execute(&a, &b)?;
+            let out = exec.execute_with(&a, &b, ws)?;
             timing.exec_secs = t.elapsed().as_secs_f64();
             Ok(Output::Sparse(out))
         }
@@ -618,6 +643,9 @@ mod tests {
         assert_eq!(rep.requests, 2);
         assert_eq!(rep.errors, 0);
         assert!(rep.batches >= 1);
+        // the worker's persistent workspace held flexible-stream
+        // buffers after serving (honest resident-memory accounting)
+        assert!(rep.peak_worker_workspace_bytes > 0, "workspace residency must be reported");
     }
 
     #[test]
@@ -752,8 +780,16 @@ mod tests {
             let key = PlanKey::spmm(m1.pattern_fingerprint(), &d, &bal);
             let mut hit = false;
             // cold resolve publishes the plan
-            resolve_spmm(key, Payload::Matrix(m1), &d, &cache, &metrics, TcBackend::NativeBitmap, &mut hit)
-                .unwrap();
+            resolve_spmm(
+                key,
+                Payload::Matrix(m1),
+                &d,
+                &cache,
+                &metrics,
+                TcBackend::NativeBitmap,
+                &mut hit,
+            )
+            .unwrap();
             assert!(!hit);
             // warm resolve: cache hit + set_values only
             let mut warm = resolve_spmm(

@@ -31,7 +31,12 @@ impl Coo {
     /// Append an entry. Panics in debug mode if out of bounds.
     #[inline]
     pub fn push(&mut self, r: usize, c: usize, v: f32) {
-        debug_assert!(r < self.rows && c < self.cols, "({r},{c}) out of {}x{}", self.rows, self.cols);
+        debug_assert!(
+            r < self.rows && c < self.cols,
+            "({r},{c}) out of {}x{}",
+            self.rows,
+            self.cols
+        );
         self.row_idx.push(r as u32);
         self.col_idx.push(c as u32);
         self.values.push(v);

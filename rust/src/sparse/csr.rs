@@ -60,7 +60,10 @@ impl Csr {
             for i in s..e {
                 anyhow::ensure!((self.col_idx[i] as usize) < self.cols, "col out of range");
                 if i > s {
-                    anyhow::ensure!(self.col_idx[i - 1] < self.col_idx[i], "cols not sorted in row {r}");
+                    anyhow::ensure!(
+                        self.col_idx[i - 1] < self.col_idx[i],
+                        "cols not sorted in row {r}"
+                    );
                 }
             }
         }

@@ -39,6 +39,24 @@ impl Dense {
         Self { rows, cols, data }
     }
 
+    /// Reshape to `rows x cols` and zero every element, reusing the
+    /// existing allocation when it is large enough — the buffer-reuse
+    /// primitive behind the `_into` compute paths.
+    pub fn reshape_zeroed(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Become a copy of `src`, reusing the existing allocation.
+    pub fn copy_from(&mut self, src: &Dense) {
+        self.rows = src.rows;
+        self.cols = src.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&src.data);
+    }
+
     #[inline]
     pub fn row(&self, r: usize) -> &[f32] {
         &self.data[r * self.cols..(r + 1) * self.cols]
@@ -61,8 +79,16 @@ impl Dense {
 
     /// Naive matmul (oracle for tests; the runtime uses PJRT artifacts).
     pub fn matmul(&self, other: &Dense) -> Dense {
+        let mut out = Dense::zeros(0, 0);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// [`Dense::matmul`] into a reusable output buffer (reshaped and
+    /// zeroed here; same accumulation order as `matmul`).
+    pub fn matmul_into(&self, other: &Dense, out: &mut Dense) {
         assert_eq!(self.cols, other.rows);
-        let mut out = Dense::zeros(self.rows, other.cols);
+        out.reshape_zeroed(self.rows, other.cols);
         for i in 0..self.rows {
             for k in 0..self.cols {
                 let a = self.data[i * self.cols + k];
@@ -76,7 +102,6 @@ impl Dense {
                 }
             }
         }
-        out
     }
 
     /// Max |a - b|; panics on shape mismatch.
@@ -171,6 +196,26 @@ mod tests {
         assert_eq!((t.rows, t.cols), (3, 2));
         assert_eq!(t[(2, 1)], 6.0);
         assert_eq!(t[(0, 1)], 4.0);
+    }
+
+    #[test]
+    fn reshape_and_copy_reuse() {
+        let mut d = Dense::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        d.reshape_zeroed(1, 3);
+        assert_eq!((d.rows, d.cols), (1, 3));
+        assert!(d.data.iter().all(|&v| v == 0.0));
+        let src = Dense::from_vec(2, 1, vec![5.0, 6.0]);
+        d.copy_from(&src);
+        assert_eq!(d, src);
+    }
+
+    #[test]
+    fn matmul_into_matches_matmul() {
+        let a = Dense::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Dense::from_vec(2, 3, vec![1.0, 0.0, 2.0, 0.0, 1.0, 1.0]);
+        let mut out = Dense::from_vec(1, 1, vec![9.0]); // stale shape + data
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out, a.matmul(&b));
     }
 
     #[test]

@@ -198,7 +198,10 @@ pub fn rmat(rng: &mut SplitMix64, scale: u32, edge_factor: usize) -> Csr {
 /// Expects nonnegative edge weights (adjacency semantics); with
 /// nonnegative weights every normalized value is bounded by 1.
 pub fn gcn_normalize(adj: &Csr) -> Csr {
-    debug_assert!(adj.values.iter().all(|&v| v >= 0.0), "gcn_normalize expects nonnegative weights");
+    debug_assert!(
+        adj.values.iter().all(|&v| v >= 0.0),
+        "gcn_normalize expects nonnegative weights"
+    );
     assert_eq!(adj.rows, adj.cols);
     let n = adj.rows;
     // A + I
@@ -212,7 +215,8 @@ pub fn gcn_normalize(adj: &Csr) -> Csr {
         let (_, vals) = a_hat.row(r);
         deg[r] = vals.iter().map(|&v| v as f64).sum();
     }
-    let inv_sqrt: Vec<f32> = deg.iter().map(|&d| if d > 0.0 { (1.0 / d.sqrt()) as f32 } else { 0.0 }).collect();
+    let inv_sqrt: Vec<f32> =
+        deg.iter().map(|&d| if d > 0.0 { (1.0 / d.sqrt()) as f32 } else { 0.0 }).collect();
     let mut out = a_hat.clone();
     for r in 0..n {
         let (s, e) = (out.row_ptr[r] as usize, out.row_ptr[r + 1] as usize);

@@ -13,14 +13,14 @@ use libra::gnn::trainer::{train_agnn, train_gcn, TrainConfig};
 use libra::gnn::DenseBackend;
 
 fn main() {
-    let scale = match std::env::var("LIBRA_BENCH").as_deref() {
-        Ok("smoke") => 0.03,
-        Ok("full") => 1.0,
+    let scale = match libra::bench::scale() {
+        "smoke" => 0.03,
+        "full" => 1.0,
         _ => 0.15,
     };
-    let epochs = match std::env::var("LIBRA_BENCH").as_deref() {
-        Ok("smoke") => 2,
-        Ok("full") => 20,
+    let epochs = match libra::bench::scale() {
+        "smoke" => 2,
+        "full" => 20,
         _ => 5,
     };
     let rt = bench::open_runtime();

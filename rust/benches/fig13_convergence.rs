@@ -10,11 +10,14 @@ use libra::gnn::trainer::{train_gcn, TrainConfig};
 use libra::gnn::{DenseBackend, Precision};
 
 fn main() {
-    let epochs = match std::env::var("LIBRA_BENCH").as_deref() {
-        Ok("smoke") => 30,
-        _ => 120,
+    // smoke shrinks the graphs, not just the epochs: CI's bench-smoke
+    // job runs this on a shared runner on every push
+    let (epochs, size_scale) = match libra::bench::scale() {
+        "smoke" => (30, 0.1),
+        _ => (120, 1.0),
     };
     for (name, n, classes) in [("cora_syn", 2708, 7), ("pubmed_syn", 4000, 3)] {
+        let n = ((n as f64 * size_scale) as usize).max(256);
         let data = planted_partition(name, n, classes, 6.0, 0.85, 64, 21);
         let mut t = Table::new(
             &format!("Fig 13: GCN convergence on {name} (acc @ epoch)"),

@@ -66,9 +66,9 @@ fn run_trace(
 }
 
 fn main() {
-    let (patterns, size, requests) = match std::env::var("LIBRA_BENCH").as_deref() {
-        Ok("smoke") => (4, 512, 40),
-        Ok("full") => (8, 2048, 400),
+    let (patterns, size, requests) = match libra::bench::scale() {
+        "smoke" => (4, 512, 40),
+        "full" => (8, 2048, 400),
         _ => (6, 1024, 120),
     };
     let mut rng = SplitMix64::new(7);

@@ -67,9 +67,9 @@ fn time_calls(
 }
 
 fn main() {
-    let (iters, small_n, large_n) = match std::env::var("LIBRA_BENCH").as_deref() {
-        Ok("smoke") => (30, 256, 1024),
-        Ok("full") => (400, 256, 4096),
+    let (iters, small_n, large_n) = match libra::bench::scale() {
+        "smoke" => (30, 256, 1024),
+        "full" => (400, 256, 4096),
         _ => (120, 256, 2048),
     };
     let mut rng = SplitMix64::new(10);

@@ -6,9 +6,34 @@ use crate::sparse::corpus::CorpusSpec;
 use crate::sparse::Csr;
 use crate::util::timer;
 
+/// True when `LIBRA_BENCH_SMOKE=1`: CI's bench-smoke mode. Every bench
+/// binary honors it (tiny corpus, one iteration) so the whole suite
+/// *runs* — not just compiles — on every push, cheaply enough to
+/// record a perf trajectory as workflow artifacts.
+pub fn smoke() -> bool {
+    matches!(std::env::var("LIBRA_BENCH_SMOKE").as_deref(), Ok("1"))
+}
+
+/// Effective bench scale: `LIBRA_BENCH_SMOKE=1` forces `"smoke"`,
+/// otherwise `LIBRA_BENCH=smoke|default|full` decides.
+pub fn scale() -> &'static str {
+    if smoke() {
+        return "smoke";
+    }
+    match std::env::var("LIBRA_BENCH").as_deref() {
+        Ok("smoke") => "smoke",
+        Ok("full") => "full",
+        _ => "default",
+    }
+}
+
 /// Environment-controlled bench scale:
-/// `LIBRA_BENCH=smoke|default|full` (12 / 120 / 500 matrices).
+/// `LIBRA_BENCH=smoke|default|full` (12 / 120 / 500 matrices);
+/// `LIBRA_BENCH_SMOKE=1` overrides to a tiny 4-matrix corpus.
 pub fn corpus_size() -> usize {
+    if smoke() {
+        return 4;
+    }
     match std::env::var("LIBRA_BENCH").as_deref() {
         Ok("smoke") => 12,
         Ok("full") => 500,
@@ -16,8 +41,12 @@ pub fn corpus_size() -> usize {
     }
 }
 
-/// Iterations per measurement at the current scale.
+/// Iterations per measurement at the current scale
+/// (`LIBRA_BENCH_SMOKE=1` overrides to a single iteration).
 pub fn bench_iters() -> usize {
+    if smoke() {
+        return 1;
+    }
     match std::env::var("LIBRA_BENCH").as_deref() {
         Ok("smoke") => 2,
         Ok("full") => 5,
@@ -183,6 +212,26 @@ mod tests {
         let mut t = Table::new("test", &["a", "b"]);
         t.add(vec!["1".into(), "2".into()]);
         t.print();
+    }
+
+    #[test]
+    fn smoke_env_shrinks_every_knob() {
+        // LIBRA_BENCH_SMOKE=1 must force the tiny-corpus/1-iteration
+        // mode regardless of LIBRA_BENCH (this is what CI's bench-smoke
+        // job sets). Env mutation is process-global, so this test owns
+        // both variables for its whole body.
+        std::env::remove_var("LIBRA_BENCH_SMOKE");
+        std::env::set_var("LIBRA_BENCH", "full");
+        assert_eq!(scale(), "full");
+        assert_eq!(corpus_size(), 500);
+        std::env::set_var("LIBRA_BENCH_SMOKE", "1");
+        assert!(smoke());
+        assert_eq!(scale(), "smoke");
+        assert_eq!(corpus_size(), 4);
+        assert_eq!(bench_iters(), 1);
+        std::env::remove_var("LIBRA_BENCH_SMOKE");
+        std::env::remove_var("LIBRA_BENCH");
+        assert_eq!(scale(), "default");
     }
 
     #[test]

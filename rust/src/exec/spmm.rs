@@ -18,7 +18,7 @@ use crate::balance::{BalanceParams, FlexTile, SpmmSchedule};
 use crate::dist::{DistParams, SpmmDist};
 use crate::format::legacy::TcfBlocks;
 use crate::runtime::Input;
-use crate::sparse::{Csr, Dense};
+use crate::sparse::{Csr, Dense, GraphBatch};
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -116,6 +116,43 @@ impl SpmmExecutor {
     /// thread's default [`Workspace`].
     pub fn execute_into(&self, b: &Dense, out_mat: &mut Dense) -> Result<()> {
         workspace::with_default(|ws| self.execute_into_with(b, out_mat, ws))
+    }
+
+    /// Execute a whole [`GraphBatch`] in one hybrid call, reusing this
+    /// thread's default [`Workspace`].
+    pub fn execute_batch(&self, batch: &GraphBatch, bs: &[Dense]) -> Result<Vec<Dense>> {
+        workspace::with_default(|ws| self.execute_batch_with(batch, bs, ws))
+    }
+
+    /// Execute a whole [`GraphBatch`] (the executor must have been
+    /// built from the batch's supermatrix, e.g. via
+    /// `prep::preprocess_spmm_batch` + [`SpmmExecutor::from_plan`]) in
+    /// *one* hybrid call: the per-member `B` operands are staged into
+    /// one stacked matrix, a single `execute_into_with` drives both
+    /// engines over the supermatrix — one workspace, one dispatch, one
+    /// stream schedule for the whole batch — and the output is split
+    /// back per member. With one flexible stream the split outputs are
+    /// bit-identical to running each member through the single-matrix
+    /// path (window-aligned members keep plans and float accumulation
+    /// order member-local).
+    pub fn execute_batch_with(
+        &self,
+        batch: &GraphBatch,
+        bs: &[Dense],
+        ws: &mut Workspace,
+    ) -> Result<Vec<Dense>> {
+        anyhow::ensure!(
+            batch.total_rows() == self.dist.rows && batch.total_cols() == self.dist.cols,
+            "batch shape {}x{} does not match the executor's plan ({}x{})",
+            batch.total_rows(),
+            batch.total_cols(),
+            self.dist.rows,
+            self.dist.cols
+        );
+        let b = batch.stack_cols(bs)?;
+        let mut out = Dense::zeros(self.dist.rows, b.cols);
+        self.execute_into_with(&b, &mut out, ws)?;
+        Ok(batch.split(&out))
     }
 
     /// Execute into an existing (zeroed) output buffer with a
@@ -525,6 +562,48 @@ mod tests {
                 out.data.fill(0.0);
                 pooled.execute_into_with(&b, &mut out, &mut ws).unwrap();
                 assert_eq!(out.data, want.data, "rep {rep} diverged from scoped path");
+            }
+        });
+    }
+
+    #[test]
+    fn batched_split_is_bit_identical_to_per_graph_loop() {
+        // Acceptance property: execute_batch_with + split over a
+        // block-diagonal GraphBatch is bit-identical to running each
+        // member graph through the existing single-matrix path. One
+        // flexible stream keeps float accumulation order deterministic
+        // on both sides; members mix flex-heavy, tc-heavy, and hybrid
+        // shapes so every engine combination is crossed.
+        check(Config::default().cases(10), "batched spmm == per-graph loop", |rng| {
+            let members: Vec<Csr> = (0..rng.range(1, 6))
+                .map(|_| match rng.range(0, 4) {
+                    0 => gen::uniform_random(rng, rng.range(1, 50), rng.range(1, 40), 0.12),
+                    1 => gen::power_law(rng, rng.range(8, 60), 4.0, 2.0),
+                    2 => gen::banded(rng, rng.range(8, 40), 3, 0.8),
+                    _ => Csr::zeros(rng.range(1, 20), rng.range(1, 20)),
+                })
+                .collect();
+            let n = rng.range(1, 20);
+            let bs: Vec<Dense> = members.iter().map(|m| Dense::random(rng, m.cols, n)).collect();
+            let d = DistParams { threshold: rng.range(1, 6), fill_padding: rng.chance(0.5) };
+            let batch = GraphBatch::compose(&members).unwrap();
+            let plan = crate::prep::preprocess_spmm_batch(
+                &batch,
+                &d,
+                &BalanceParams::default(),
+                crate::prep::PrepMode::Sequential,
+            );
+            let mut batched = SpmmExecutor::from_plan(plan.plan, TcBackend::NativeBitmap);
+            batched.flex_threads = 1;
+            let mut ws = Workspace::new();
+            let got = batched.execute_batch_with(&batch, &bs, &mut ws).unwrap();
+            assert_eq!(got.len(), members.len());
+            for (i, ((m, b), g)) in members.iter().zip(&bs).zip(&got).enumerate() {
+                let mut single =
+                    SpmmExecutor::new(m, &d, &BalanceParams::default(), TcBackend::NativeBitmap);
+                single.flex_threads = 1;
+                let want = single.execute(b).unwrap();
+                assert_eq!(g.data, want.data, "member {i} diverged from single-matrix path");
             }
         });
     }

@@ -12,7 +12,7 @@ pub mod gcn;
 pub mod trainer;
 
 pub use data::GraphData;
-pub use trainer::{TrainConfig, TrainStats};
+pub use trainer::{TrainConfig, TrainStats, Trainer};
 
 /// Which backend executes the dense (linear / loss) compute.
 #[derive(Clone)]

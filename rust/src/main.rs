@@ -18,7 +18,7 @@ use libra::costmodel::{self, HardwareProfile};
 use libra::dist::{DistParams, Op};
 use libra::exec::sddmm::SddmmExecutor;
 use libra::exec::{SpmmExecutor, TcBackend};
-use libra::serve::{Engine, EngineConfig, Request, SchedParams};
+use libra::serve::{Engine, EngineConfig, MicroBatchParams, MicroBatcher, Request, SchedParams};
 use libra::sparse::{gen, mm_io, Csr, Dense};
 use libra::util::SplitMix64;
 use std::collections::HashMap;
@@ -32,20 +32,21 @@ fn main() -> Result<()> {
     };
     let rest = &args[1..];
     match cmd.as_str() {
-        "spmm" => {
-            cmd_spmm(&parse_flags(rest, &["matrix", "n", "theta", "backend", "seed", "json"])?)
-        }
+        "spmm" => cmd_spmm(&parse_flags(
+            rest,
+            &["matrix", "n", "theta", "backend", "seed", "json", "batch"],
+        )?),
         "sddmm" => {
             cmd_sddmm(&parse_flags(rest, &["matrix", "k", "theta", "backend", "seed", "json"])?)
         }
         "stats" => cmd_stats(&parse_flags(rest, &["matrix", "seed"])?),
         "tune" => cmd_tune(&parse_flags(rest, &["n", "k"])?),
-        "gnn" => cmd_gnn(&parse_flags(rest, &["model", "epochs"])?),
+        "gnn" => cmd_gnn(&parse_flags(rest, &["model", "epochs", "batch", "graphs"])?),
         "serve" => cmd_serve(&parse_flags(
             rest,
             &[
                 "patterns", "requests", "workers", "n", "size", "theta", "backend", "seed",
-                "cache-mb", "batch",
+                "cache-mb", "batch", "microbatch", "linger-us", "batch-kb",
             ],
         )?),
         "--help" | "-h" | "help" => {
@@ -61,12 +62,14 @@ fn print_usage() {
         "libra — heterogeneous sparse matrix multiplication\n\n\
          usage: libra <spmm|sddmm|stats|tune|gnn|serve> [flags]\n\
          \x20 spmm   --matrix <path.mtx|gen:SPEC> [--n 128] [--theta N|auto] [--backend native|pjrt] [--seed 42] [--json]\n\
+         \x20        [--batch N]  (N>1: compose N member graphs block-diagonally; compare vs the per-graph loop)\n\
          \x20 sddmm  --matrix <path.mtx|gen:SPEC> [--k 32]  [--theta N|auto] [--backend native|pjrt] [--seed 42] [--json]\n\
          \x20 stats  --matrix <path.mtx|gen:SPEC> [--seed 42]\n\
          \x20 tune   [--n 128] [--k 32]\n\
-         \x20 gnn    [--model gcn|agnn] [--epochs 50]\n\
+         \x20 gnn    [--model gcn|agnn] [--epochs 50] [--batch B] [--graphs G]  (B>0: mini-batch train over G small graphs)\n\
          \x20 serve  [--patterns 6] [--requests 120] [--workers W] [--n 64] [--size 1024]\n\
          \x20        [--theta N|auto] [--backend native|pjrt] [--seed 42] [--cache-mb 256] [--batch 8]\n\
+         \x20        [--microbatch] [--linger-us 2000] [--batch-kb 2048]  (coalesce requests into block-diagonal batches)\n\
          gen:SPEC: gen:powerlaw:N:DEG | gen:banded:N:BAND | gen:uniform:N:DENSITY | gen:blockdiag:N:BLOCKS\n\
          (--seed controls gen:SPEC synthesis and the serve trace; unknown flags are rejected)"
     );
@@ -104,11 +107,27 @@ fn parse_flags(args: &[String], allowed: &[&str]) -> Result<HashMap<String, Stri
 }
 
 fn load_matrix(flags: &HashMap<String, String>) -> Result<Csr> {
+    load_matrix_seeded(flags, None)
+}
+
+/// Load N member graphs for `--batch N`: a `gen:SPEC` synthesizes N
+/// distinct members (seed + i), a file matrix is replicated N times.
+fn load_members(flags: &HashMap<String, String>, n_members: usize) -> Result<Vec<Csr>> {
+    let base: u64 = flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+    if flags.get("matrix").is_some_and(|s| s.starts_with("gen:")) {
+        (0..n_members).map(|i| load_matrix_seeded(flags, Some(base + i as u64))).collect()
+    } else {
+        let m = load_matrix(flags)?;
+        Ok(vec![m; n_members])
+    }
+}
+
+fn load_matrix_seeded(flags: &HashMap<String, String>, seed: Option<u64>) -> Result<Csr> {
     let spec = flags.get("matrix").context("--matrix required")?;
     if let Some(genspec) = spec.strip_prefix("gen:") {
         let parts: Vec<&str> = genspec.split(':').collect();
         let mut rng = SplitMix64::new(
-            flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(42),
+            seed.or_else(|| flags.get("seed").and_then(|s| s.parse().ok())).unwrap_or(42),
         );
         let n: usize = parts.get(1).and_then(|s| s.parse().ok()).unwrap_or(4096);
         Ok(match parts[0] {
@@ -160,6 +179,10 @@ fn theta(flags: &HashMap<String, String>, op: Op, n: usize) -> Result<DistParams
 }
 
 fn cmd_spmm(flags: &HashMap<String, String>) -> Result<()> {
+    let batch: usize = flags.get("batch").and_then(|s| s.parse().ok()).unwrap_or(1);
+    if batch > 1 {
+        return cmd_spmm_batch(flags, batch);
+    }
     let m = load_matrix(flags)?;
     let n: usize = flags.get("n").and_then(|s| s.parse().ok()).unwrap_or(128);
     let json = flags.contains_key("json");
@@ -210,6 +233,68 @@ fn cmd_spmm(flags: &HashMap<String, String>) -> Result<()> {
             secs * 1e3,
             gflops,
             exec.counters.snapshot().pjrt_calls
+        );
+    }
+    Ok(())
+}
+
+/// `spmm --batch N`: compose N member graphs into one block-diagonal
+/// batch and compare the per-graph loop (full per-call prep + dispatch
+/// per member — what unbatched small-graph traffic pays) against one
+/// batched prep + dispatch for the whole set.
+fn cmd_spmm_batch(flags: &HashMap<String, String>, n_members: usize) -> Result<()> {
+    use libra::prep::{preprocess_spmm_batch, PrepMode};
+    use libra::sparse::GraphBatch;
+    let members = load_members(flags, n_members)?;
+    let n: usize = flags.get("n").and_then(|s| s.parse().ok()).unwrap_or(128);
+    let json = flags.contains_key("json");
+    let params = theta(flags, Op::Spmm, n)?;
+    let backend = backend(flags)?;
+    let nnz: usize = members.iter().map(|m| m.nnz()).sum();
+    let mut rng = SplitMix64::new(1);
+    let bs: Vec<Dense> = members.iter().map(|m| Dense::random(&mut rng, m.cols, n)).collect();
+    let reps = 5;
+
+    // per-graph loop: every member pays distribution + balancing +
+    // dispatch on its own
+    let t = std::time::Instant::now();
+    for _ in 0..reps {
+        for (m, b) in members.iter().zip(&bs) {
+            let exec = SpmmExecutor::new(m, &params, &BalanceParams::default(), backend.clone());
+            std::hint::black_box(exec.execute(b)?);
+        }
+    }
+    let seq = t.elapsed().as_secs_f64() / reps as f64;
+
+    // batched: one compose + one prep + one hybrid dispatch
+    let t = std::time::Instant::now();
+    for _ in 0..reps {
+        let gb = GraphBatch::compose(&members)?;
+        let plan =
+            preprocess_spmm_batch(&gb, &params, &BalanceParams::default(), PrepMode::Sequential);
+        let exec = SpmmExecutor::from_plan(plan.plan, backend.clone());
+        std::hint::black_box(exec.execute_batch(&gb, &bs)?);
+    }
+    let bat = t.elapsed().as_secs_f64() / reps as f64;
+    let speedup = seq / bat.max(1e-12);
+
+    if json {
+        println!(
+            "{{\"op\":\"spmm_batch\",\"members\":{n_members},\"nnz\":{nnz},\"n\":{n},\
+             \"theta\":{},\"per_graph_ms\":{:.6},\"batched_ms\":{:.6},\"speedup\":{:.4}}}",
+            params.threshold,
+            seq * 1e3,
+            bat * 1e3,
+            speedup
+        );
+    } else {
+        println!(
+            "spmm batch of {n_members} graphs ({nnz} nnz total), N={n}, theta={}:\n\
+             \x20 per-graph loop {:.3} ms | batched {:.3} ms | {:.2}x",
+            params.threshold,
+            seq * 1e3,
+            bat * 1e3,
+            speedup
         );
     }
     Ok(())
@@ -300,13 +385,33 @@ fn cmd_tune(flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_gnn(flags: &HashMap<String, String>) -> Result<()> {
     use libra::gnn::data::planted_partition;
-    use libra::gnn::trainer::{train_agnn, train_gcn, TrainConfig};
+    use libra::gnn::trainer::{train_agnn, train_gcn, TrainConfig, Trainer};
     use libra::gnn::DenseBackend;
     let model = flags.get("model").map(String::as_str).unwrap_or("gcn");
     let epochs: usize = flags.get("epochs").and_then(|s| s.parse().ok()).unwrap_or(50);
-    let data = planted_partition("cora_syn", 2708, 7, 6.0, 0.85, 128, 17);
+    let batch: usize = flags.get("batch").and_then(|s| s.parse().ok()).unwrap_or(0);
     let cfg = TrainConfig { epochs, lr: 0.01, hidden: 64, layers: 5, ..Default::default() };
     let params = costmodel::substrate_params(Op::Spmm, cfg.hidden);
+    if batch > 0 {
+        // mini-batch training over a corpus of small graphs
+        bail_unless_gcn(model)?;
+        let graphs: usize = flags.get("graphs").and_then(|s| s.parse().ok()).unwrap_or(16);
+        let corpus: Vec<_> = (0..graphs)
+            .map(|i| planted_partition(&format!("mb_{i}"), 200 + 8 * i, 7, 6.0, 0.85, 64, 17))
+            .collect();
+        let trainer = Trainer::new(cfg, params, TcBackend::NativeBitmap, DenseBackend::Native);
+        let stats = trainer.fit_batched(&corpus, batch)?;
+        println!(
+            "gcn mini-batch: {graphs} graphs in batches of {batch}, {} epochs, \
+             final acc {:.3}, {:.1} ms/epoch, prep {:.2}%",
+            epochs,
+            stats.final_accuracy,
+            stats.total_train_time() / epochs.max(1) as f64 * 1e3,
+            stats.prep_fraction() * 100.0
+        );
+        return Ok(());
+    }
+    let data = planted_partition("cora_syn", 2708, 7, 6.0, 0.85, 128, 17);
     let stats = match model {
         "gcn" => train_gcn(&data, &cfg, &params, TcBackend::NativeBitmap, DenseBackend::Native)?,
         "agnn" => train_agnn(&data, &cfg, &params, TcBackend::NativeBitmap, DenseBackend::Native)?,
@@ -320,6 +425,13 @@ fn cmd_gnn(flags: &HashMap<String, String>) -> Result<()> {
         stats.prep_fraction() * 100.0
     );
     Ok(())
+}
+
+fn bail_unless_gcn(model: &str) -> Result<()> {
+    match model {
+        "gcn" => Ok(()),
+        other => bail!("--batch supports only --model gcn (got '{other}')"),
+    }
 }
 
 /// Closed-loop serving driver: synthesizes a multi-tenant request
@@ -344,6 +456,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let cache_mb: usize = get(flags, "cache-mb", 256)?;
     let batch = get(flags, "batch", 8)?.max(1);
     let seed: u64 = get(flags, "seed", 42)?;
+    let microbatch = flags.contains_key("microbatch");
+    let linger_us: u64 = get(flags, "linger-us", 2000)?;
+    let batch_kb: usize = get(flags, "batch-kb", 2048)?.max(1);
 
     let mut rng = SplitMix64::new(seed);
     let mats: Vec<Csr> = (0..patterns)
@@ -356,44 +471,85 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let params = theta(flags, Op::Spmm, n)?;
     println!(
         "serve: {patterns} patterns ({size}x{size}), {requests} requests, N={n}, theta={}, \
-         {workers} workers, cache {cache_mb} MiB, batch {batch}",
-        params.threshold
+         {workers} workers, cache {cache_mb} MiB, batch {batch}{}",
+        params.threshold,
+        if microbatch {
+            format!(", micro-batching (linger {linger_us} us, {batch_kb} KiB)")
+        } else {
+            String::new()
+        }
     );
 
-    let engine = Engine::new(EngineConfig {
+    let engine = std::sync::Arc::new(Engine::new(EngineConfig {
         sched: SchedParams { workers, max_batch: batch },
         cache_bytes: cache_mb << 20,
         backend: backend(flags)?,
-    });
+    }));
     let b = Dense::random(&mut rng, size, n);
 
     // closed loop: at most `window` requests in flight, so queue-wait
     // reflects steady state instead of a t=0 flood
     let window = (workers * 4).max(8);
-    let mut in_flight = std::collections::VecDeque::with_capacity(window);
     let mut errors = 0usize;
     let t0 = std::time::Instant::now();
-    for _ in 0..requests {
-        if in_flight.len() >= window {
-            let t: libra::serve::Ticket = in_flight.pop_front().unwrap();
+    let micro_report = if microbatch {
+        // micro-batched path: the coalescer owns admission; requests
+        // from this (and any other) session merge into block-diagonal
+        // supermatrix submissions per feature width
+        let batcher = MicroBatcher::new(
+            engine.clone(),
+            MicroBatchParams {
+                max_batch_bytes: batch_kb << 10,
+                linger: std::time::Duration::from_micros(linger_us),
+                dist: Some(params),
+            },
+        );
+        let mut in_flight = std::collections::VecDeque::with_capacity(window);
+        for _ in 0..requests {
+            if in_flight.len() >= window {
+                let t: libra::serve::MicroTicket = in_flight.pop_front().unwrap();
+                errors += t.wait().is_err() as usize;
+            }
+            let which = rng.zipf(patterns, 1.8);
+            let mut m = mats[which].clone();
+            for v in m.values.iter_mut() {
+                *v = rng.f32_range(-1.0, 1.0);
+            }
+            in_flight.push_back(batcher.submit(m, b.clone()));
+        }
+        for t in in_flight {
+            errors += t.wait().is_err() as usize;
+        }
+        Some(batcher.report())
+    } else {
+        let mut in_flight = std::collections::VecDeque::with_capacity(window);
+        for _ in 0..requests {
+            if in_flight.len() >= window {
+                let t: libra::serve::Ticket = in_flight.pop_front().unwrap();
+                errors += t.wait().result.is_err() as usize;
+            }
+            let which = rng.zipf(patterns, 1.8);
+            let mut m = mats[which].clone();
+            for v in m.values.iter_mut() {
+                *v = rng.f32_range(-1.0, 1.0);
+            }
+            in_flight
+                .push_back(engine.submit_async(Request::spmm(m, b.clone()).with_dist(params)));
+        }
+        for t in in_flight {
             errors += t.wait().result.is_err() as usize;
         }
-        let which = rng.zipf(patterns, 1.8);
-        let mut m = mats[which].clone();
-        for v in m.values.iter_mut() {
-            *v = rng.f32_range(-1.0, 1.0);
-        }
-        in_flight.push_back(engine.submit_async(Request::spmm(m, b.clone()).with_dist(params)));
-    }
-    for t in in_flight {
-        errors += t.wait().result.is_err() as usize;
-    }
+        None
+    };
     let wall = t0.elapsed().as_secs_f64();
     println!(
         "replayed {requests} requests in {:.2}s ({:.1} req/s end-to-end)\n",
         wall,
         requests as f64 / wall.max(1e-9)
     );
+    if let Some(rep) = micro_report {
+        println!("{rep}");
+    }
     println!("{}", engine.report());
     if errors > 0 {
         bail!("{errors} requests failed");

@@ -8,9 +8,9 @@
 
 use crate::balance::{balance_spmm, BalanceParams, SpmmSchedule};
 use crate::dist::spmm::{assemble, distribute_window, SpmmDist, WindowOut};
-use crate::dist::{distribute_sddmm, DistParams, SddmmDist};
+use crate::dist::{distribute_sddmm, DistParams, DistStats, SddmmDist};
 use crate::format::WINDOW;
-use crate::sparse::Csr;
+use crate::sparse::{Csr, GraphBatch};
 use crossbeam_utils::thread;
 
 /// Complete preprocessed SpMM plan.
@@ -77,6 +77,98 @@ pub fn preprocess_spmm(
     };
     let sched = balance_spmm(&dist, balance_params);
     SpmmPlan { dist, sched }
+}
+
+/// Per-member view of a batched plan: the member's window span in the
+/// supermatrix plus its slice of the distribution and balance
+/// decisions. Because `GraphBatch` aligns members to window
+/// boundaries and both distribution and balancing are window-local,
+/// these numbers are exactly what preprocessing the member standalone
+/// would report — θ and the balance stats stay inspectable per member
+/// even though only one pass ran.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchSegment {
+    /// True (unpadded) member shape.
+    pub rows: usize,
+    pub cols: usize,
+    /// Member window span `[window_lo, window_hi)` in the supermatrix.
+    pub window_lo: usize,
+    pub window_hi: usize,
+    /// Member slice of the distribution decision.
+    pub stats: DistStats,
+    /// TC segments the balancer emitted for the member's windows.
+    pub tc_segments: usize,
+    /// Long / short flexible tiles over the member's rows.
+    pub long_tiles: usize,
+    pub short_tiles: usize,
+}
+
+/// One preprocessed plan for a whole [`GraphBatch`]: a single
+/// distribution + balance pass over the block-diagonal supermatrix,
+/// with per-member segment metadata. The inner [`SpmmPlan`] drives any
+/// existing executor (`SpmmExecutor::from_plan`).
+#[derive(Debug, Clone)]
+pub struct BatchPlan {
+    pub plan: SpmmPlan,
+    pub segments: Vec<BatchSegment>,
+}
+
+/// Preprocess a batched SpMM workload: one distribution + balancing
+/// pass over the supermatrix (not one per member), then derive the
+/// per-member segment table.
+pub fn preprocess_spmm_batch(
+    batch: &GraphBatch,
+    dist_params: &DistParams,
+    balance_params: &BalanceParams,
+    mode: PrepMode,
+) -> BatchPlan {
+    assert!(
+        batch.is_window_aligned(),
+        "BatchPlan segment stats require a window-aligned batch (GraphBatch::compose)"
+    );
+    let plan = preprocess_spmm(&batch.matrix, dist_params, balance_params, mode);
+    let segments = (0..batch.len()).map(|i| batch_segment(batch, &plan, i)).collect();
+    BatchPlan { plan, segments }
+}
+
+fn batch_segment(batch: &GraphBatch, plan: &SpmmPlan, i: usize) -> BatchSegment {
+    let (rows, cols) = batch.member_shape(i);
+    let span = batch.padded_row_range(i);
+    let (window_lo, window_hi) = (span.start / WINDOW, span.end / WINDOW);
+    // blocks are emitted window-major, so the member's blocks are one
+    // contiguous run locatable by binary search
+    let window_of = &plan.dist.tc.window_of;
+    let b_lo = window_of.partition_point(|&w| (w as usize) < window_lo);
+    let b_hi = window_of.partition_point(|&w| (w as usize) < window_hi);
+    let nnz_tc = (plan.dist.tc.val_ptr[b_hi] - plan.dist.tc.val_ptr[b_lo]) as usize;
+    let span_flex = &plan.dist.flex_row_ptr;
+    let nnz_flex = (span_flex[span.end] - span_flex[span.start]) as usize;
+    let n_blocks = b_hi - b_lo;
+    let capacity = n_blocks * WINDOW * plan.dist.tc.k;
+    let stats = DistStats {
+        nnz_total: batch.nnz_range(i).len(),
+        nnz_tc,
+        nnz_flex,
+        n_blocks,
+        n_windows: window_hi - window_lo,
+        padding_ratio: if capacity == 0 {
+            0.0
+        } else {
+            1.0 - nnz_tc as f64 / capacity as f64
+        },
+    };
+    let in_windows = |w: u32| (window_lo..window_hi).contains(&(w as usize));
+    let in_rows = |r: u32| span.contains(&(r as usize));
+    BatchSegment {
+        rows,
+        cols,
+        window_lo,
+        window_hi,
+        stats,
+        tc_segments: plan.sched.tc_segments.iter().filter(|s| in_windows(s.window)).count(),
+        long_tiles: plan.sched.long_tiles.iter().filter(|t| in_rows(t.row)).count(),
+        short_tiles: plan.sched.short_tiles.iter().filter(|t| in_rows(t.row)).count(),
+    }
 }
 
 /// Parallel distribution: window ranges on worker threads (Algorithm
@@ -314,6 +406,70 @@ mod tests {
         let sched = &plan.sched;
         assert!(sched.tc_segments.len() + sched.long_tiles.len() + sched.short_tiles.len() > 0);
         assert_eq!(plan.sched.flex_elems(), plan.dist.flex_vals.len());
+    }
+
+    #[test]
+    fn batch_member_stats_equal_standalone_prep() {
+        // The window-alignment invariant made measurable: one pass over
+        // the supermatrix reports, per member, exactly the numbers a
+        // standalone preprocess of that member would (distribution
+        // stats and balance decomposition counts alike).
+        check(Config::default().cases(12), "batch stats == standalone", |rng| {
+            let members: Vec<_> = (0..rng.range(1, 5))
+                .map(|_| {
+                    let rows = rng.range(1, 60);
+                    let cols = rng.range(1, 50);
+                    gen::uniform_random(rng, rows, cols, 0.12)
+                })
+                .collect();
+            let batch = crate::sparse::GraphBatch::compose(&members).unwrap();
+            let d = DistParams { threshold: rng.range(1, 6), fill_padding: rng.chance(0.5) };
+            let b = BalanceParams::default();
+            let bp = preprocess_spmm_batch(&batch, &d, &b, PrepMode::Sequential);
+            assert_eq!(bp.segments.len(), members.len());
+            for (i, m) in members.iter().enumerate() {
+                let seg = &bp.segments[i];
+                assert_eq!((seg.rows, seg.cols), (m.rows, m.cols));
+                let standalone = preprocess_spmm(m, &d, &b, PrepMode::Sequential);
+                assert_eq!(seg.stats, standalone.dist.stats, "member {i} dist stats");
+                assert_eq!(seg.tc_segments, standalone.sched.tc_segments.len(), "member {i}");
+                assert_eq!(seg.long_tiles, standalone.sched.long_tiles.len(), "member {i}");
+                assert_eq!(seg.short_tiles, standalone.sched.short_tiles.len(), "member {i}");
+            }
+            // member slices tile the supermatrix plan exactly
+            let nnz_tc: usize = bp.segments.iter().map(|s| s.stats.nnz_tc).sum();
+            let nnz_flex: usize = bp.segments.iter().map(|s| s.stats.nnz_flex).sum();
+            assert_eq!(nnz_tc, bp.plan.dist.stats.nnz_tc);
+            assert_eq!(nnz_flex, bp.plan.dist.stats.nnz_flex);
+            let segs: usize = bp.segments.iter().map(|s| s.tc_segments).sum();
+            assert_eq!(segs, bp.plan.sched.tc_segments.len());
+        });
+    }
+
+    #[test]
+    fn empty_and_single_member_batch_plans() {
+        let mut rng = SplitMix64::new(157);
+        let empty = crate::sparse::GraphBatch::compose(&[]).unwrap();
+        let bp = preprocess_spmm_batch(
+            &empty,
+            &DistParams::default(),
+            &BalanceParams::default(),
+            PrepMode::Sequential,
+        );
+        assert!(bp.segments.is_empty());
+        assert_eq!(bp.plan.dist.stats.nnz_total, 0);
+
+        let m = gen::power_law(&mut rng, 90, 6.0, 2.0);
+        let one = crate::sparse::GraphBatch::compose(std::slice::from_ref(&m)).unwrap();
+        let bp = preprocess_spmm_batch(
+            &one,
+            &DistParams::default(),
+            &BalanceParams::default(),
+            PrepMode::Parallel,
+        );
+        assert_eq!(bp.segments.len(), 1);
+        assert_eq!(bp.segments[0].stats.nnz_total, m.nnz());
+        assert_eq!(bp.segments[0].window_hi - bp.segments[0].window_lo, 90usize.div_ceil(8));
     }
 
     #[test]

@@ -18,7 +18,11 @@
 //! * [`sched`] — a fixed worker pool over one shared FIFO queue with
 //!   batched admission for same-pattern requests and an occupancy
 //!   tracker that divides the machine's threads among busy workers
-//!   (the paper's §4.4 utilization idea lifted across requests).
+//!   (the paper's §4.4 utilization idea lifted across requests). Also
+//!   home of the [`MicroBatcher`], which coalesces same-feature-width
+//!   small-graph requests into one block-diagonal
+//!   [`crate::sparse::GraphBatch`] submission (bounded by
+//!   `max_batch_bytes` and a linger window).
 //! * [`metrics`] — queue/prep/exec latency split, hit rate, worker
 //!   occupancy; snapshot via [`Engine::report`].
 
@@ -29,7 +33,10 @@ pub mod session;
 
 pub use cache::{CacheStats, CachedPlan, PlanCache, PlanKey, SddmmEntry};
 pub use metrics::{MetricsReport, ServeMetrics};
-pub use sched::{Occupancy, SchedParams, SharedQueue};
+pub use sched::{
+    MicroBatchParams, MicroBatchReport, MicroBatcher, MicroTicket, Occupancy, SchedParams,
+    SharedQueue,
+};
 pub use session::{
     Engine, EngineConfig, OpInputs, Output, Payload, Request, Response, Ticket, Timing,
 };

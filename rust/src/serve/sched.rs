@@ -22,9 +22,13 @@
 //!   keep their width until they finish, so ramp-up can transiently
 //!   oversubscribe before settling.
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use super::session::{Engine, Request};
+use crate::dist::DistParams;
+use crate::sparse::{Csr, Dense, GraphBatch};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Worker-pool parameters.
 #[derive(Debug, Clone, Copy)]
@@ -155,6 +159,370 @@ impl Occupancy {
     }
 }
 
+/// Micro-batching knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct MicroBatchParams {
+    /// Flush a group once its members' estimated payload bytes
+    /// (pattern arrays + dense operand) reach this bound.
+    pub max_batch_bytes: usize,
+    /// Flush a group this long after its first member arrived, whether
+    /// or not the byte bound was reached — the latency a request is
+    /// willing to trade for coalescing.
+    pub linger: Duration,
+    /// θ override forwarded to every batched submission (`None` asks
+    /// the cost model, exactly like a direct [`Request::spmm`]).
+    pub dist: Option<DistParams>,
+}
+
+impl Default for MicroBatchParams {
+    fn default() -> Self {
+        Self { max_batch_bytes: 2 << 20, linger: Duration::from_millis(2), dist: None }
+    }
+}
+
+/// One-shot completion cell a submitter blocks on — the blocking
+/// handoff primitive shared by the engine's response slots
+/// (`session::ResponseSlot`) and the micro-batcher's tickets.
+pub(crate) struct OneShot<T> {
+    cell: Mutex<Option<T>>,
+    cv: Condvar,
+}
+
+impl<T> OneShot<T> {
+    pub(crate) fn new() -> Self {
+        Self { cell: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    pub(crate) fn put(&self, v: T) {
+        *self.cell.lock().unwrap() = Some(v);
+        self.cv.notify_all();
+    }
+
+    pub(crate) fn wait(&self) -> T {
+        let mut guard = self.cv.wait_while(self.cell.lock().unwrap(), |c| c.is_none()).unwrap();
+        guard.take().unwrap()
+    }
+}
+
+/// One-shot slot a micro-batched submitter blocks on.
+type MicroSlot = OneShot<anyhow::Result<Dense>>;
+
+/// Handle to one in-flight micro-batched request (from
+/// [`MicroBatcher::submit`]).
+pub struct MicroTicket {
+    slot: Arc<MicroSlot>,
+}
+
+impl MicroTicket {
+    /// Block until this member's split output is ready.
+    pub fn wait(self) -> anyhow::Result<Dense> {
+        self.slot.wait()
+    }
+}
+
+/// Plain snapshot of the micro-batcher counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MicroBatchReport {
+    /// Member requests admitted into a group (shape-rejected and
+    /// post-close submissions count only as `errors`, so the
+    /// members-per-batch average stays honest).
+    pub submitted: u64,
+    /// Batched submissions sent to the engine.
+    pub batches: u64,
+    /// Batches flushed because the byte bound was reached.
+    pub flushed_by_size: u64,
+    /// Batches flushed because the linger window expired (includes the
+    /// final drain on close).
+    pub flushed_by_linger: u64,
+    /// Most members ever coalesced into one batch.
+    pub largest_batch: u64,
+    /// Member requests answered with an error.
+    pub errors: u64,
+}
+
+impl std::fmt::Display for MicroBatchReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "micro-batcher: {} requests -> {} batches ({:.2} members/batch, largest {}), \
+             {} size-flushed, {} linger-flushed, {} errors",
+            self.submitted,
+            self.batches,
+            self.submitted as f64 / (self.batches.max(1)) as f64,
+            self.largest_batch,
+            self.flushed_by_size,
+            self.flushed_by_linger,
+            self.errors
+        )
+    }
+}
+
+#[derive(Debug, Default)]
+struct MicroStats {
+    submitted: AtomicU64,
+    batches: AtomicU64,
+    flushed_by_size: AtomicU64,
+    flushed_by_linger: AtomicU64,
+    largest_batch: AtomicU64,
+    errors: AtomicU64,
+}
+
+struct PendingMember {
+    m: Csr,
+    b: Dense,
+    slot: Arc<MicroSlot>,
+}
+
+struct Group {
+    members: Vec<PendingMember>,
+    bytes: usize,
+    opened: Instant,
+}
+
+#[derive(Default)]
+struct BatcherState {
+    /// Open groups, keyed by feature width (`b.cols`).
+    groups: HashMap<usize, Group>,
+    /// Size-triggered groups awaiting the flusher.
+    ready: Vec<Group>,
+    closed: bool,
+}
+
+/// The serve-side micro-batcher: coalesces same-feature-width SpMM
+/// requests from different sessions into one [`GraphBatch`] submission.
+///
+/// Small-graph traffic is where per-request overhead dominates: each
+/// direct [`Engine::submit`] pays queueing, plan resolution, and
+/// dispatch for a matrix whose kernel work is tiny. The micro-batcher
+/// buffers such requests per feature width and submits one
+/// block-diagonal supermatrix instead — one plan, one hybrid dispatch,
+/// one workspace for N member graphs — then splits the output back and
+/// answers every member. A group is flushed when its estimated bytes
+/// reach [`MicroBatchParams::max_batch_bytes`] or its oldest member
+/// has lingered for [`MicroBatchParams::linger`], whichever comes
+/// first; dropping the batcher drains every open group. The
+/// background flusher only composes and submits (async) — each
+/// batch's completion is resolved off-thread, so a slow batch never
+/// holds other width groups past their linger deadlines and the
+/// engine's worker pool is the concurrency limit.
+pub struct MicroBatcher {
+    engine: Arc<Engine>,
+    params: MicroBatchParams,
+    shared: Arc<(Mutex<BatcherState>, Condvar)>,
+    stats: Arc<MicroStats>,
+    flusher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MicroBatcher {
+    /// Start the micro-batcher's background flusher.
+    pub fn new(engine: Arc<Engine>, params: MicroBatchParams) -> Self {
+        let shared = Arc::new((Mutex::new(BatcherState::default()), Condvar::new()));
+        let stats = Arc::new(MicroStats::default());
+        let flusher = {
+            let engine = engine.clone();
+            let shared = shared.clone();
+            let stats = stats.clone();
+            std::thread::spawn(move || flusher_loop(&engine, &params, &shared, &stats))
+        };
+        Self { engine, params, shared, stats, flusher: Some(flusher) }
+    }
+
+    /// Enqueue one member request (`m` is the member's sparse matrix,
+    /// `b` its dense operand, `m.cols x n`). Returns immediately; the
+    /// [`MicroTicket`] resolves when the member's batch completes.
+    /// Shape errors are rejected here — before joining a group — so a
+    /// malformed request can never fail its batch neighbors.
+    pub fn submit(&self, m: Csr, b: Dense) -> MicroTicket {
+        let slot = Arc::new(MicroSlot::new());
+        if b.rows != m.cols {
+            self.stats.errors.fetch_add(1, Ordering::Relaxed);
+            slot.put(Err(anyhow::anyhow!(
+                "operand has {} rows but the matrix has {} columns",
+                b.rows,
+                m.cols
+            )));
+            return MicroTicket { slot };
+        }
+        let bytes = (m.row_ptr.len() + m.col_idx.len() + m.values.len() + b.data.len()) * 4;
+        let width = b.cols;
+        let (lock, cv) = &*self.shared;
+        let mut st = lock.lock().unwrap();
+        if st.closed {
+            self.stats.errors.fetch_add(1, Ordering::Relaxed);
+            slot.put(Err(anyhow::anyhow!("micro-batcher is closed")));
+            return MicroTicket { slot };
+        }
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        let group = st.groups.entry(width).or_insert_with(|| Group {
+            members: Vec::new(),
+            bytes: 0,
+            opened: Instant::now(),
+        });
+        group.members.push(PendingMember { m, b, slot: slot.clone() });
+        group.bytes += bytes;
+        if group.bytes >= self.params.max_batch_bytes {
+            let full = st.groups.remove(&width).unwrap();
+            st.ready.push(full);
+            self.stats.flushed_by_size.fetch_add(1, Ordering::Relaxed);
+        }
+        drop(st);
+        // wake the flusher: a ready group, or a new earliest deadline
+        cv.notify_one();
+        MicroTicket { slot }
+    }
+
+    /// Member requests currently waiting in open groups (racy; for
+    /// reporting only).
+    pub fn pending(&self) -> usize {
+        let (lock, _) = &*self.shared;
+        let st = lock.lock().unwrap();
+        st.groups.values().map(|g| g.members.len()).sum()
+    }
+
+    /// Counter snapshot.
+    pub fn report(&self) -> MicroBatchReport {
+        let load = |f: &AtomicU64| f.load(Ordering::Relaxed);
+        MicroBatchReport {
+            submitted: load(&self.stats.submitted),
+            batches: load(&self.stats.batches),
+            flushed_by_size: load(&self.stats.flushed_by_size),
+            flushed_by_linger: load(&self.stats.flushed_by_linger),
+            largest_batch: load(&self.stats.largest_batch),
+            errors: load(&self.stats.errors),
+        }
+    }
+
+    /// The engine this batcher submits to.
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+}
+
+impl Drop for MicroBatcher {
+    fn drop(&mut self) {
+        {
+            let (lock, cv) = &*self.shared;
+            lock.lock().unwrap().closed = true;
+            cv.notify_all();
+        }
+        if let Some(h) = self.flusher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn flusher_loop(
+    engine: &Engine,
+    params: &MicroBatchParams,
+    shared: &(Mutex<BatcherState>, Condvar),
+    stats: &Arc<MicroStats>,
+) {
+    let (lock, cv) = shared;
+    loop {
+        let (work, done) = {
+            let mut st = lock.lock().unwrap();
+            loop {
+                if st.closed {
+                    // final drain: everything still open flushes now
+                    let mut work = std::mem::take(&mut st.ready);
+                    let drained = st.groups.len() as u64;
+                    work.extend(st.groups.drain().map(|(_, g)| g));
+                    stats.flushed_by_linger.fetch_add(drained, Ordering::Relaxed);
+                    break (work, true);
+                }
+                if !st.ready.is_empty() {
+                    break (std::mem::take(&mut st.ready), false);
+                }
+                let now = Instant::now();
+                let deadline = st.groups.values().map(|g| g.opened + params.linger).min();
+                match deadline {
+                    Some(dl) if dl <= now => {
+                        let expired: Vec<usize> = st
+                            .groups
+                            .iter()
+                            .filter(|(_, g)| g.opened + params.linger <= now)
+                            .map(|(&w, _)| w)
+                            .collect();
+                        let work: Vec<Group> =
+                            expired.iter().map(|w| st.groups.remove(w).unwrap()).collect();
+                        stats.flushed_by_linger.fetch_add(work.len() as u64, Ordering::Relaxed);
+                        break (work, false);
+                    }
+                    Some(dl) => {
+                        let (g, _) = cv.wait_timeout(st, dl - now).unwrap();
+                        st = g;
+                    }
+                    None => st = cv.wait(st).unwrap(),
+                }
+            }
+        };
+        for group in work {
+            flush_group(engine, params, stats, group);
+        }
+        if done {
+            return;
+        }
+    }
+}
+
+/// Report a whole-group failure to every member.
+fn fail_group(stats: &MicroStats, slots: &[Arc<MicroSlot>], msg: String) {
+    stats.errors.fetch_add(slots.len() as u64, Ordering::Relaxed);
+    for s in slots {
+        s.put(Err(anyhow::anyhow!("{msg}")));
+    }
+}
+
+/// Compose one group into a block-diagonal supermatrix, submit it as a
+/// single engine request (async), and hand completion to a detached
+/// resolver thread that splits the output and answers every member.
+/// The flusher itself never blocks on execution, so one slow batch
+/// cannot hold other width groups past their linger deadlines — the
+/// engine's worker pool, not the flusher, is the concurrency limit.
+fn flush_group(engine: &Engine, params: &MicroBatchParams, stats: &Arc<MicroStats>, group: Group) {
+    if group.members.is_empty() {
+        return;
+    }
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    stats.largest_batch.fetch_max(group.members.len() as u64, Ordering::Relaxed);
+    let mut mats = Vec::with_capacity(group.members.len());
+    let mut bs = Vec::with_capacity(group.members.len());
+    let mut slots = Vec::with_capacity(group.members.len());
+    for p in group.members {
+        mats.push(p.m);
+        bs.push(p.b);
+        slots.push(p.slot);
+    }
+    let mut batch = match GraphBatch::compose(&mats) {
+        Ok(b) => b,
+        Err(e) => return fail_group(stats, &slots, format!("batch composition failed: {e}")),
+    };
+    drop(mats);
+    let super_b = match batch.stack_cols(&bs) {
+        Ok(b) => b,
+        Err(e) => return fail_group(stats, &slots, format!("batch staging failed: {e}")),
+    };
+    drop(bs);
+    // the offset tables answer `split`; the supermatrix itself moves
+    // into the request
+    let sup = std::mem::take(&mut batch.matrix);
+    let mut req = Request::spmm(sup, super_b);
+    if let Some(d) = params.dist {
+        req = req.with_dist(d);
+    }
+    let ticket = engine.submit_async(req);
+    let stats = stats.clone();
+    std::thread::spawn(move || match ticket.wait().result {
+        Ok(out) => {
+            let dense = out.into_dense().expect("spmm request must yield a dense output");
+            for (part, slot) in batch.split(&dense).into_iter().zip(&slots) {
+                slot.put(Ok(part));
+            }
+        }
+        Err(e) => fail_group(&stats, &slots, format!("batched submission failed: {e}")),
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -208,6 +576,155 @@ mod tests {
         // push after close still drains (graceful shutdown of stragglers)
         q.push(9);
         assert_eq!(q.pop_batch(1, |&x| x), Some(vec![9]));
+    }
+
+    fn micro_engine(workers: usize) -> Arc<Engine> {
+        Arc::new(Engine::new(crate::serve::EngineConfig {
+            sched: SchedParams { workers, max_batch: 8 },
+            cache_bytes: 64 << 20,
+            backend: crate::exec::TcBackend::NativeBitmap,
+        }))
+    }
+
+    #[test]
+    fn microbatcher_linger_coalesces_and_is_correct() {
+        use crate::sparse::gen;
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(700);
+        let batcher = MicroBatcher::new(
+            micro_engine(2),
+            MicroBatchParams {
+                max_batch_bytes: usize::MAX,
+                linger: Duration::from_millis(200),
+                dist: None,
+            },
+        );
+        let mats: Vec<Csr> = (0..5)
+            .map(|i| gen::uniform_random(&mut rng, 16 + 4 * i, 12 + i, 0.2))
+            .collect();
+        let pairs: Vec<(Csr, Dense)> = mats
+            .iter()
+            .map(|m| (m.clone(), Dense::random(&mut rng, m.cols, 8)))
+            .collect();
+        let tickets: Vec<MicroTicket> =
+            pairs.iter().map(|(m, b)| batcher.submit(m.clone(), b.clone())).collect();
+        for (t, (m, b)) in tickets.into_iter().zip(&pairs) {
+            let got = t.wait().unwrap();
+            assert!(got.allclose(&m.spmm_dense_ref(b), 1e-3));
+        }
+        let rep = batcher.report();
+        assert_eq!(rep.submitted, 5);
+        assert_eq!(rep.errors, 0);
+        // all five share one feature width and arrived well inside the
+        // linger window: exactly one block-diagonal submission
+        assert_eq!(rep.batches, 1, "same-width requests must coalesce: {rep}");
+        assert_eq!(rep.largest_batch, 5);
+        assert_eq!(rep.flushed_by_linger, 1);
+        // the engine saw one request, not five
+        assert_eq!(batcher.engine().report().requests, 1);
+    }
+
+    #[test]
+    fn microbatcher_size_bound_flushes_immediately() {
+        use crate::sparse::gen;
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(701);
+        // a 1-byte bound: every submission overflows its group at once
+        let batcher = MicroBatcher::new(
+            micro_engine(1),
+            MicroBatchParams {
+                max_batch_bytes: 1,
+                linger: Duration::from_secs(60),
+                dist: None,
+            },
+        );
+        let m = gen::uniform_random(&mut rng, 24, 24, 0.15);
+        let b = Dense::random(&mut rng, 24, 4);
+        let tickets: Vec<MicroTicket> =
+            (0..3).map(|_| batcher.submit(m.clone(), b.clone())).collect();
+        for t in tickets {
+            assert!(t.wait().unwrap().allclose(&m.spmm_dense_ref(&b), 1e-3));
+        }
+        let rep = batcher.report();
+        assert_eq!(rep.batches, 3, "1-byte bound must flush every submit: {rep}");
+        assert_eq!(rep.flushed_by_size, 3);
+        assert_eq!(rep.largest_batch, 1);
+    }
+
+    #[test]
+    fn microbatcher_groups_by_feature_width() {
+        use crate::sparse::gen;
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(702);
+        let batcher = MicroBatcher::new(
+            micro_engine(2),
+            MicroBatchParams {
+                max_batch_bytes: usize::MAX,
+                linger: Duration::from_millis(150),
+                dist: None,
+            },
+        );
+        let m = gen::uniform_random(&mut rng, 20, 20, 0.2);
+        let b8 = Dense::random(&mut rng, 20, 8);
+        let b16 = Dense::random(&mut rng, 20, 16);
+        let t1 = batcher.submit(m.clone(), b8.clone());
+        let t2 = batcher.submit(m.clone(), b16.clone());
+        let t3 = batcher.submit(m.clone(), b8.clone());
+        assert!(t1.wait().unwrap().allclose(&m.spmm_dense_ref(&b8), 1e-3));
+        assert!(t2.wait().unwrap().allclose(&m.spmm_dense_ref(&b16), 1e-3));
+        assert!(t3.wait().unwrap().allclose(&m.spmm_dense_ref(&b8), 1e-3));
+        let rep = batcher.report();
+        // widths never mix: one batch for n=8 (two members), one for n=16
+        assert_eq!(rep.batches, 2, "{rep}");
+        assert_eq!(rep.largest_batch, 2);
+    }
+
+    #[test]
+    fn microbatcher_rejects_bad_shapes_without_poisoning_the_group() {
+        use crate::sparse::gen;
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(703);
+        let batcher = MicroBatcher::new(
+            micro_engine(1),
+            MicroBatchParams {
+                max_batch_bytes: usize::MAX,
+                linger: Duration::from_millis(100),
+                dist: None,
+            },
+        );
+        let m = gen::uniform_random(&mut rng, 16, 16, 0.2);
+        let b = Dense::random(&mut rng, 16, 4);
+        let good = batcher.submit(m.clone(), b.clone());
+        // wrong operand height: rejected at submit, before grouping
+        let bad = batcher.submit(m.clone(), Dense::random(&mut rng, 17, 4));
+        assert!(bad.wait().is_err());
+        assert!(good.wait().unwrap().allclose(&m.spmm_dense_ref(&b), 1e-3));
+        let rep = batcher.report();
+        assert_eq!(rep.errors, 1);
+        assert_eq!(rep.batches, 1);
+        // the rejected request never joined a group, so it must not
+        // skew the members-per-batch accounting
+        assert_eq!(rep.submitted, 1);
+    }
+
+    #[test]
+    fn microbatcher_drop_drains_pending_groups() {
+        use crate::sparse::gen;
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(704);
+        let batcher = MicroBatcher::new(
+            micro_engine(1),
+            MicroBatchParams {
+                max_batch_bytes: usize::MAX,
+                linger: Duration::from_secs(60), // would never fire on its own
+                dist: None,
+            },
+        );
+        let m = gen::uniform_random(&mut rng, 16, 16, 0.2);
+        let b = Dense::random(&mut rng, 16, 4);
+        let t = batcher.submit(m.clone(), b.clone());
+        drop(batcher); // close drains the open group
+        assert!(t.wait().unwrap().allclose(&m.spmm_dense_ref(&b), 1e-3));
     }
 
     #[test]

@@ -26,7 +26,7 @@
 
 use super::cache::{CachedPlan, PlanCache, PlanKey, SddmmEntry};
 use super::metrics::{MetricsReport, ServeMetrics};
-use super::sched::{Occupancy, SchedParams, SharedQueue};
+use super::sched::{Occupancy, OneShot, SchedParams, SharedQueue};
 use crate::balance::BalanceParams;
 use crate::costmodel;
 use crate::dist::{DistParams, Op};
@@ -34,7 +34,7 @@ use crate::exec::sddmm::SddmmExecutor;
 use crate::exec::{SpmmExecutor, TcBackend, Workspace};
 use crate::sparse::{Csr, Dense, PatternFingerprint};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// The sparse operand of a request.
@@ -190,27 +190,9 @@ pub struct Response {
     pub timing: Timing,
 }
 
-/// One-shot completion slot a submitter blocks on.
-struct ResponseSlot {
-    cell: Mutex<Option<Response>>,
-    cv: Condvar,
-}
-
-impl ResponseSlot {
-    fn new() -> Self {
-        Self { cell: Mutex::new(None), cv: Condvar::new() }
-    }
-
-    fn put(&self, r: Response) {
-        *self.cell.lock().unwrap() = Some(r);
-        self.cv.notify_all();
-    }
-
-    fn wait(&self) -> Response {
-        let mut guard = self.cv.wait_while(self.cell.lock().unwrap(), |c| c.is_none()).unwrap();
-        guard.take().unwrap()
-    }
-}
+/// One-shot completion slot a submitter blocks on (the shared
+/// blocking-handoff cell from [`super::sched`]).
+type ResponseSlot = OneShot<Response>;
 
 /// Handle to an in-flight request (from [`Engine::submit_async`]).
 pub struct Ticket {

@@ -1,0 +1,450 @@
+//! Block-diagonal mini-batching: compose N small CSR graphs into one
+//! supermatrix, execute once, split the result back per member.
+//!
+//! The dominant way GNN systems process small-graph traffic is
+//! mini-batched: many graphs stacked into one block-diagonal operator
+//! per step, so the whole batch pays preprocessing and dispatch once.
+//! [`GraphBatch`] is that composer for the Libra pipeline.
+//!
+//! Member row spans are aligned up to [`crate::format::WINDOW`]
+//! boundaries (at most `WINDOW - 1` empty padding rows per member).
+//! Distribution and balancing are strictly window-local, so alignment
+//! guarantees every window of the supermatrix contains rows of exactly
+//! one member — the batched plan is the concatenation of the members'
+//! standalone plans (columns shifted by the member's offset), and
+//! batched execution split back per member is *bit-identical* to
+//! running each member through the single-matrix path whenever that
+//! path is itself deterministic: SDDMM always (each nonzero is written
+//! exactly once), SpMM with one flexible stream (`flex_threads = 1`;
+//! wider widths race CAS accumulation order on *both* paths, so
+//! outputs there agree to rounding, not bits). Padding rows hold no
+//! nonzeros, produce all-zero output rows, and are skipped by
+//! [`GraphBatch::split`].
+//!
+//! The batch owns the offset tables (`row_off` / `col_off` /
+//! `nnz_off`, each of length N+1) and the true member shapes; the
+//! supermatrix itself is a plain [`Csr`] any existing executor
+//! accepts. `split` / `split_csr` / `scatter_values` only read the
+//! offset tables, so the supermatrix can be moved out (e.g. into a
+//! serving request) and the batch still splits its outputs.
+
+use super::csr::Csr;
+use super::dense::Dense;
+use crate::format::WINDOW;
+use anyhow::Result;
+
+/// N CSR graphs stacked into one window-aligned block-diagonal CSR,
+/// plus the per-member offset tables needed to stage inputs and split
+/// outputs.
+#[derive(Debug, Clone)]
+pub struct GraphBatch {
+    /// The block-diagonal supermatrix (member `i` occupies rows
+    /// `row_off[i] .. row_off[i] + rows_i` and columns
+    /// `col_off[i] .. col_off[i] + cols_i`).
+    pub matrix: Csr,
+    /// Window-aligned member row starts; `row_off[n_members]` is the
+    /// supermatrix row count.
+    row_off: Vec<usize>,
+    /// Member column starts (exact, no alignment).
+    col_off: Vec<usize>,
+    /// Member nonzero starts in supermatrix CSR order.
+    nnz_off: Vec<usize>,
+    /// True (unpadded) member shapes.
+    shapes: Vec<(usize, usize)>,
+    /// Whether member row spans are window-aligned (see
+    /// [`GraphBatch::compose`] vs [`GraphBatch::compose_packed`]).
+    aligned: bool,
+}
+
+impl GraphBatch {
+    /// Stack `members` into a window-aligned block-diagonal supermatrix
+    /// (the default; per-member plans and outputs are bit-identical to
+    /// the standalone path). An empty member list composes to an empty
+    /// (0 x 0) batch.
+    pub fn compose(members: &[Csr]) -> Result<GraphBatch> {
+        Self::compose_with(members, true)
+    }
+
+    /// Stack `members` with *no* row padding: member row spans are
+    /// exact, so square members compose to a square supermatrix — the
+    /// layout chained operators need (a GCN feeds each layer's output
+    /// back through the same block-diagonal adjacency, which only
+    /// type-checks when rows == cols). Windows may span two members,
+    /// so packed batches trade the bit-identity and exact per-member
+    /// stat guarantees of [`GraphBatch::compose`] for composability;
+    /// results are still correct (a block-diagonal matrix is just a
+    /// matrix).
+    pub fn compose_packed(members: &[Csr]) -> Result<GraphBatch> {
+        Self::compose_with(members, false)
+    }
+
+    fn compose_with(members: &[Csr], align: bool) -> Result<GraphBatch> {
+        let mut row_off = Vec::with_capacity(members.len() + 1);
+        let mut col_off = Vec::with_capacity(members.len() + 1);
+        let mut nnz_off = Vec::with_capacity(members.len() + 1);
+        let (mut rows, mut cols, mut nnz) = (0usize, 0usize, 0usize);
+        for m in members {
+            row_off.push(rows);
+            col_off.push(cols);
+            nnz_off.push(nnz);
+            rows += if align { m.rows.div_ceil(WINDOW) * WINDOW } else { m.rows };
+            cols += m.cols;
+            nnz += m.nnz();
+        }
+        row_off.push(rows);
+        col_off.push(cols);
+        nnz_off.push(nnz);
+        anyhow::ensure!(
+            rows <= u32::MAX as usize && cols <= u32::MAX as usize && nnz <= u32::MAX as usize,
+            "batch exceeds u32 index space ({rows} rows, {cols} cols, {nnz} nnz)"
+        );
+
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        row_ptr.push(0u32);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        for (i, m) in members.iter().enumerate() {
+            let shift = col_off[i] as u32;
+            for r in 0..m.rows {
+                let (mcols, mvals) = m.row(r);
+                col_idx.extend(mcols.iter().map(|&c| c + shift));
+                values.extend_from_slice(mvals);
+                row_ptr.push(col_idx.len() as u32);
+            }
+            // window-alignment padding rows are empty
+            for _ in m.rows..(row_off[i + 1] - row_off[i]) {
+                row_ptr.push(col_idx.len() as u32);
+            }
+        }
+        let matrix = Csr { rows, cols, row_ptr, col_idx, values };
+        let shapes = members.iter().map(|m| (m.rows, m.cols)).collect();
+        Ok(GraphBatch { matrix, row_off, col_off, nnz_off, shapes, aligned: align })
+    }
+
+    /// Whether every member starts on a window boundary — the
+    /// precondition for bit-identical per-member plans and exact
+    /// per-member stats (`prep::preprocess_spmm_batch`).
+    pub fn is_window_aligned(&self) -> bool {
+        self.aligned
+    }
+
+    /// Number of member graphs.
+    pub fn len(&self) -> usize {
+        self.shapes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shapes.is_empty()
+    }
+
+    /// Total nonzeros across members (== supermatrix nnz).
+    pub fn nnz(&self) -> usize {
+        *self.nnz_off.last().unwrap_or(&0)
+    }
+
+    /// Supermatrix row count (window-aligned sum of member rows).
+    pub fn total_rows(&self) -> usize {
+        *self.row_off.last().unwrap_or(&0)
+    }
+
+    /// Supermatrix column count (sum of member columns).
+    pub fn total_cols(&self) -> usize {
+        *self.col_off.last().unwrap_or(&0)
+    }
+
+    /// True (unpadded) shape of member `i`.
+    pub fn member_shape(&self, i: usize) -> (usize, usize) {
+        self.shapes[i]
+    }
+
+    /// Member `i`'s real rows in the supermatrix (padding excluded).
+    pub fn row_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.row_off[i]..self.row_off[i] + self.shapes[i].0
+    }
+
+    /// Member `i`'s padded row span (window-aligned).
+    pub fn padded_row_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.row_off[i]..self.row_off[i + 1]
+    }
+
+    /// Member `i`'s columns in the supermatrix.
+    pub fn col_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.col_off[i]..self.col_off[i + 1]
+    }
+
+    /// Member `i`'s nonzero positions in supermatrix CSR order.
+    pub fn nnz_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.nnz_off[i]..self.nnz_off[i + 1]
+    }
+
+    /// Stack per-member operands laid out along the batch *columns*
+    /// (SpMM `B` / SDDMM `B`: part `i` is `cols_i x width`) into one
+    /// `total_cols x width` matrix. All parts must share one feature
+    /// width; a mismatch is rejected naming the offending member.
+    pub fn stack_cols(&self, parts: &[Dense]) -> Result<Dense> {
+        self.stack(parts, false)
+    }
+
+    /// Stack per-member operands laid out along the batch *rows*
+    /// (SDDMM `A` / GNN features: part `i` is `rows_i x width`) into
+    /// one `total_rows x width` matrix, zero rows in the padding span.
+    pub fn stack_rows(&self, parts: &[Dense]) -> Result<Dense> {
+        self.stack(parts, true)
+    }
+
+    fn stack(&self, parts: &[Dense], by_rows: bool) -> Result<Dense> {
+        anyhow::ensure!(
+            parts.len() == self.len(),
+            "batch has {} members but {} operands were supplied",
+            self.len(),
+            parts.len()
+        );
+        let width = parts.first().map_or(0, |p| p.cols);
+        let total = if by_rows { self.total_rows() } else { self.total_cols() };
+        let mut out = Dense::zeros(total, width);
+        for (i, p) in parts.iter().enumerate() {
+            anyhow::ensure!(
+                p.cols == width,
+                "batch member {i} has feature width {} but member 0 opened the batch at {width}",
+                p.cols
+            );
+            let (rows, cols) = self.shapes[i];
+            let (want, base) =
+                if by_rows { (rows, self.row_off[i]) } else { (cols, self.col_off[i]) };
+            anyhow::ensure!(
+                p.rows == want,
+                "batch member {i} operand has {} rows, expected {want}",
+                p.rows
+            );
+            out.data[base * width..(base + p.rows) * width].copy_from_slice(&p.data);
+        }
+        Ok(out)
+    }
+
+    /// Split a batched SpMM output (`total_rows x n`) back into one
+    /// dense output per member (padding rows dropped).
+    pub fn split(&self, out: &Dense) -> Vec<Dense> {
+        assert_eq!(out.rows, self.total_rows(), "split: output rows != batch rows");
+        (0..self.len())
+            .map(|i| {
+                let r = self.row_range(i);
+                Dense::from_vec(
+                    self.shapes[i].0,
+                    out.cols,
+                    out.data[r.start * out.cols..r.end * out.cols].to_vec(),
+                )
+            })
+            .collect()
+    }
+
+    /// Split a flat supermatrix value buffer (CSR order, e.g. a batched
+    /// SDDMM output) into one value vector per member.
+    pub fn scatter_values(&self, vals: &[f32]) -> Vec<Vec<f32>> {
+        assert_eq!(vals.len(), self.nnz(), "scatter: value count != batch nnz");
+        (0..self.len()).map(|i| vals[self.nnz_range(i)].to_vec()).collect()
+    }
+
+    /// Split a supermatrix-patterned CSR (e.g. a batched SDDMM output)
+    /// back into per-member CSRs with member-local column indices.
+    pub fn split_csr(&self, out: &Csr) -> Vec<Csr> {
+        assert_eq!(out.rows, self.total_rows(), "split_csr: pattern rows != batch rows");
+        assert_eq!(out.nnz(), self.nnz(), "split_csr: pattern nnz != batch nnz");
+        (0..self.len())
+            .map(|i| {
+                let (rows, cols) = self.shapes[i];
+                let r = self.row_range(i);
+                let nz = self.nnz_range(i);
+                let base = out.row_ptr[r.start];
+                let shift = self.col_off[i] as u32;
+                Csr {
+                    rows,
+                    cols,
+                    row_ptr: out.row_ptr[r.start..=r.end].iter().map(|&p| p - base).collect(),
+                    col_idx: out.col_idx[nz.clone()].iter().map(|&c| c - shift).collect(),
+                    values: out.values[nz].to_vec(),
+                }
+            })
+            .collect()
+    }
+
+    /// Rough resident bytes of the supermatrix (serving admission unit).
+    pub fn bytes(&self) -> usize {
+        self.matrix.row_ptr.len() * 4 + self.matrix.col_idx.len() * 4 + self.matrix.values.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::util::propcheck::{check, Config};
+    use crate::util::SplitMix64;
+
+    fn members(rng: &mut SplitMix64, n: usize) -> Vec<Csr> {
+        (0..n)
+            .map(|_| {
+                let rows = rng.range(1, 40);
+                let cols = rng.range(1, 40);
+                gen::uniform_random(rng, rows, cols, 0.15)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn compose_well_formed() {
+        check(Config::default().cases(25), "batch compose is valid", |rng| {
+            let ms = members(rng, rng.range(1, 6));
+            let batch = GraphBatch::compose(&ms).unwrap();
+            batch.matrix.validate().unwrap();
+            assert_eq!(batch.len(), ms.len());
+            assert_eq!(batch.nnz(), ms.iter().map(|m| m.nnz()).sum::<usize>());
+            assert_eq!(batch.total_cols(), ms.iter().map(|m| m.cols).sum::<usize>());
+            assert_eq!(batch.total_rows() % WINDOW, 0);
+            for (i, m) in ms.iter().enumerate() {
+                // window alignment: each member starts on a window edge
+                assert_eq!(batch.row_range(i).start % WINDOW, 0);
+                // the member's rows are reproduced verbatim (cols shifted)
+                let shift = batch.col_range(i).start as u32;
+                for r in 0..m.rows {
+                    let (bc, bv) = batch.matrix.row(batch.row_range(i).start + r);
+                    let (mc, mv) = m.row(r);
+                    assert_eq!(bv, mv);
+                    assert!(bc.iter().zip(mc).all(|(&b, &c)| b == c + shift));
+                }
+                // padding rows are empty
+                for r in batch.row_range(i).end..batch.padded_row_range(i).end {
+                    assert_eq!(batch.matrix.row_len(r), 0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn empty_batch() {
+        let batch = GraphBatch::compose(&[]).unwrap();
+        assert!(batch.is_empty());
+        assert_eq!(batch.total_rows(), 0);
+        assert_eq!(batch.total_cols(), 0);
+        assert_eq!(batch.nnz(), 0);
+        batch.matrix.validate().unwrap();
+        assert!(batch.split(&Dense::zeros(0, 4)).is_empty());
+        assert!(batch.scatter_values(&[]).is_empty());
+        // stacking zero operands yields an empty matrix, not an error
+        assert_eq!(batch.stack_cols(&[]).unwrap().rows, 0);
+    }
+
+    #[test]
+    fn batch_of_one_roundtrips() {
+        let mut rng = SplitMix64::new(600);
+        let m = gen::power_law(&mut rng, 37, 5.0, 2.0);
+        let batch = GraphBatch::compose(std::slice::from_ref(&m)).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch.total_rows(), 40); // 37 aligned up to WINDOW
+        // the member comes back bit-identical through split_csr
+        let back = batch.split_csr(&batch.matrix);
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0], m);
+        // and a stacked dense roundtrips through split
+        let b = Dense::random(&mut rng, 40, 8);
+        let split = batch.split(&b);
+        assert_eq!(split[0].data, b.data[..37 * 8]);
+    }
+
+    #[test]
+    fn packed_compose_is_square_for_square_members() {
+        let mut rng = SplitMix64::new(605);
+        let ms: Vec<Csr> = (0..3)
+            .map(|_| {
+                let n = rng.range(1, 30);
+                gen::uniform_random(&mut rng, n, n, 0.2)
+            })
+            .collect();
+        let batch = GraphBatch::compose_packed(&ms).unwrap();
+        assert!(!batch.is_window_aligned());
+        assert_eq!(batch.total_rows(), batch.total_cols(), "square members must pack square");
+        batch.matrix.validate().unwrap();
+        let back = batch.split_csr(&batch.matrix);
+        for (b, m) in back.iter().zip(&ms) {
+            assert_eq!(b, m);
+        }
+        // packed spans have no padding
+        for i in 0..batch.len() {
+            assert_eq!(batch.row_range(i), batch.padded_row_range(i));
+        }
+    }
+
+    #[test]
+    fn zero_edge_member() {
+        let mut rng = SplitMix64::new(601);
+        let ms = vec![
+            gen::uniform_random(&mut rng, 20, 16, 0.2),
+            Csr::zeros(9, 5), // member with zero edges
+            gen::uniform_random(&mut rng, 11, 7, 0.3),
+        ];
+        let batch = GraphBatch::compose(&ms).unwrap();
+        batch.matrix.validate().unwrap();
+        assert_eq!(batch.nnz_range(1).len(), 0);
+        let back = batch.split_csr(&batch.matrix);
+        for (b, m) in back.iter().zip(&ms) {
+            assert_eq!(b, m);
+        }
+    }
+
+    #[test]
+    fn mismatched_feature_widths_rejected_by_member() {
+        let mut rng = SplitMix64::new(602);
+        let ms = members(&mut rng, 3);
+        let batch = GraphBatch::compose(&ms).unwrap();
+        let parts: Vec<Dense> = ms
+            .iter()
+            .enumerate()
+            .map(|(i, m)| Dense::zeros(m.cols, if i == 2 { 32 } else { 16 }))
+            .collect();
+        let err = batch.stack_cols(&parts).unwrap_err().to_string();
+        assert!(err.contains("member 2"), "error must name the member: {err}");
+        assert!(err.contains("32") && err.contains("16"), "error must name both widths: {err}");
+        // wrong operand count is also rejected
+        assert!(batch.stack_cols(&parts[..2]).is_err());
+        // wrong row count names the member
+        let mut bad = vec![Dense::zeros(ms[0].cols, 16), Dense::zeros(ms[1].cols, 16)];
+        bad.push(Dense::zeros(ms[2].cols + 1, 16));
+        let err = batch.stack_cols(&bad).unwrap_err().to_string();
+        assert!(err.contains("member 2"), "{err}");
+    }
+
+    #[test]
+    fn stack_rows_zeroes_padding() {
+        let mut rng = SplitMix64::new(603);
+        let ms = vec![
+            gen::uniform_random(&mut rng, 5, 6, 0.3),
+            gen::uniform_random(&mut rng, 13, 4, 0.3),
+        ];
+        let batch = GraphBatch::compose(&ms).unwrap();
+        let parts: Vec<Dense> = ms.iter().map(|m| Dense::random(&mut rng, m.rows, 3)).collect();
+        let stacked = batch.stack_rows(&parts).unwrap();
+        assert_eq!(stacked.rows, batch.total_rows());
+        for (i, p) in parts.iter().enumerate() {
+            let r = batch.row_range(i);
+            assert_eq!(&stacked.data[r.start * 3..r.end * 3], p.data.as_slice());
+            for pad in r.end..batch.padded_row_range(i).end {
+                assert!(stacked.row(pad).iter().all(|&v| v == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_values_partitions_by_member() {
+        let mut rng = SplitMix64::new(604);
+        let ms = members(&mut rng, 4);
+        let batch = GraphBatch::compose(&ms).unwrap();
+        let vals: Vec<f32> = (0..batch.nnz()).map(|i| i as f32).collect();
+        let parts = batch.scatter_values(&vals);
+        assert_eq!(parts.len(), 4);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, batch.nnz());
+        for (i, p) in parts.iter().enumerate() {
+            assert_eq!(p.len(), ms[i].nnz());
+            assert_eq!(p.first().copied(), vals.get(batch.nnz_range(i).start).copied());
+        }
+    }
+}

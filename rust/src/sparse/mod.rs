@@ -6,6 +6,7 @@
 //! (SuiteSparse-scale matrices fit comfortably) and values are `f32`
 //! to match the kernels' native precision.
 
+pub mod batch;
 pub mod coo;
 pub mod corpus;
 pub mod csr;
@@ -15,6 +16,7 @@ pub mod gen;
 pub mod mm_io;
 pub mod stats;
 
+pub use batch::GraphBatch;
 pub use coo::Coo;
 pub use csr::Csr;
 pub use dense::Dense;

@@ -78,6 +78,17 @@ pub fn check<F: FnMut(&mut SplitMix64) + std::panic::UnwindSafe + Copy>(
                 .cloned()
                 .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
+            // A CI log must be enough to reproduce locally: name the
+            // case, both seeds, and the exact replay invocation (test
+            // harnesses may truncate panic payloads, so this goes to
+            // stderr as well).
+            eprintln!(
+                "propcheck: property '{name}' failed at case {case}/{} \
+                 (base seed {:#x}, case seed {seed:#x})\n\
+                 propcheck: reproduce with: \
+                 check(Config::default().replay({seed:#x}), \"{name}\", ...)",
+                cfg.cases, cfg.base_seed
+            );
             panic!(
                 "property '{name}' failed at case {case} (replay seed {seed:#x}): {msg}"
             );

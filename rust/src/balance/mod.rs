@@ -17,8 +17,14 @@
 //! The auxiliary arrays mirror the paper's: `WindowOffset`/`RowOffset`
 //! become the per-segment block/element ranges, `CurWindow`/`CurRow`
 //! the origin window/row, and `Atomic` the flag array.
+//!
+//! Both operators are balanced with the same machinery:
+//! [`balance_spmm`] produces an [`SpmmSchedule`] (atomics where Fig. 6
+//! demands them), [`balance_sddmm`] an [`SddmmSchedule`] (same
+//! decomposition bounds, never atomic — SDDMM writes each nonzero
+//! exactly once).
 
-use crate::dist::SpmmDist;
+use crate::dist::{SddmmDist, SpmmDist};
 use crate::format::WINDOW;
 
 /// Load balancing parameters (paper §5.4.2 defaults: Ts = Cs = 32,
@@ -96,7 +102,14 @@ impl SpmmSchedule {
 }
 
 /// Build the balanced schedule for a distributed SpMM workload.
+///
+/// `ts`/`cs` are clamped to at least 1: a zero bound is meaningless
+/// (no chunk could ever make progress) and the serving layer forwards
+/// caller-supplied `BalanceParams` here, so it must not be able to
+/// hang a worker.
 pub fn balance_spmm(dist: &SpmmDist, params: &BalanceParams) -> SpmmSchedule {
+    let ts = params.ts.max(1);
+    let cs = params.cs.max(1);
     let n_windows = dist.rows.div_ceil(WINDOW);
     let mut sched = SpmmSchedule::default();
 
@@ -133,9 +146,9 @@ pub fn balance_spmm(dist: &SpmmDist, params: &BalanceParams) -> SpmmSchedule {
         }
 
         // decomposition decisions
-        let tc_decomposed = params.enabled && be - bs > params.ts;
+        let tc_decomposed = params.enabled && be - bs > ts;
         let long_decomposed = params.enabled
-            && long_rows.iter().any(|&(_, s, e)| (e - s) as usize > params.cs);
+            && long_rows.iter().any(|&(_, s, e)| (e - s) as usize > cs);
 
         // Atomicity (paper Fig. 6): any decomposition in the window, or
         // multiple independent writers over the same window rows,
@@ -159,7 +172,7 @@ pub fn balance_spmm(dist: &SpmmDist, params: &BalanceParams) -> SpmmSchedule {
             if params.enabled {
                 let mut b = bs;
                 while b < be {
-                    let end = (b + params.ts).min(be);
+                    let end = (b + ts).min(be);
                     sched.tc_segments.push(TcSegment {
                         block_start: b as u32,
                         block_end: end as u32,
@@ -183,9 +196,9 @@ pub fn balance_spmm(dist: &SpmmDist, params: &BalanceParams) -> SpmmSchedule {
             if params.enabled {
                 let mut x = s;
                 while x < e {
-                    let end = (x + params.cs as u32).min(e);
+                    let end = (x + cs as u32).min(e);
                     // a row split across chunks always needs atomics
-                    let row_split = e - s > params.cs as u32;
+                    let row_split = e - s > cs as u32;
                     sched.long_tiles.push(FlexTile {
                         elem_start: x,
                         elem_end: end,
@@ -216,6 +229,135 @@ pub fn balance_spmm(dist: &SpmmDist, params: &BalanceParams) -> SpmmSchedule {
                 row_split: false,
             });
         }
+    }
+    sched
+}
+
+/// The balanced SDDMM schedule — the structural mirror of
+/// [`SpmmSchedule`]. SDDMM writes each nonzero exactly once, so no
+/// segment ever needs atomics; decomposition exists purely to bound
+/// the dispatch units (the paper's Fig. 6 cases apply to both ops):
+///
+/// * TC blocks → [`TcSegment`]s of at most `Ts` blocks per window;
+/// * flexible rows → short tiles (`len < Short_len`) and long tiles
+///   chunked into at most `Cs` elements.
+#[derive(Debug, Clone, Default)]
+pub struct SddmmSchedule {
+    pub tc_segments: Vec<TcSegment>,
+    pub long_tiles: Vec<FlexTile>,
+    pub short_tiles: Vec<FlexTile>,
+}
+
+impl SddmmSchedule {
+    /// Total flexible elements covered by tiles.
+    pub fn flex_elems(&self) -> usize {
+        self.long_tiles
+            .iter()
+            .chain(&self.short_tiles)
+            .map(|t| (t.elem_end - t.elem_start) as usize)
+            .sum()
+    }
+
+    /// Estimated resident bytes of the schedule arrays (the increment
+    /// a balanced plan adds on top of its distribution).
+    pub fn sched_bytes(&self) -> usize {
+        self.tc_segments.len() * std::mem::size_of::<TcSegment>()
+            + (self.long_tiles.len() + self.short_tiles.len()) * std::mem::size_of::<FlexTile>()
+    }
+}
+
+/// Build the balanced schedule for a distributed SDDMM workload.
+///
+/// TC blocks are grouped window-major (the order `distribute_sddmm`
+/// emits them) and chunked into segments of at most `params.ts`
+/// blocks; the flexible element list — row-major within each window —
+/// is cut at row boundaries into short tiles and `Cs`-bounded long
+/// chunks. Every segment carries `atomic: false`: each CSR position is
+/// written by exactly one element of exactly one segment, so the
+/// decomposition can never create a write conflict (unlike SpMM, where
+/// Fig. 6's cases force atomics on multi-writer windows).
+pub fn balance_sddmm(dist: &SddmmDist, params: &BalanceParams) -> SddmmSchedule {
+    // clamp as in `balance_spmm`: zero bounds must not hang a worker
+    let ts = params.ts.max(1);
+    let cs = params.cs.max(1);
+    let mut sched = SddmmSchedule::default();
+
+    // TC segments: runs of same-window blocks, chunked by Ts
+    let nb = dist.tc.n_blocks();
+    let mut b = 0usize;
+    while b < nb {
+        let w = dist.tc.window_of[b];
+        let mut be = b + 1;
+        while be < nb && dist.tc.window_of[be] == w {
+            be += 1;
+        }
+        if params.enabled {
+            let mut x = b;
+            while x < be {
+                let end = (x + ts).min(be);
+                sched.tc_segments.push(TcSegment {
+                    block_start: x as u32,
+                    block_end: end as u32,
+                    window: w,
+                    atomic: false,
+                });
+                x = end;
+            }
+        } else {
+            sched.tc_segments.push(TcSegment {
+                block_start: b as u32,
+                block_end: be as u32,
+                window: w,
+                atomic: false,
+            });
+        }
+        b = be;
+    }
+
+    // flexible tiles: runs of equal row (the flexible stream is
+    // row-major within each window and windows ascend, so rows are
+    // contiguous), short/long split and Cs chunking as for SpMM
+    let nf = dist.flex_rows.len();
+    let mut i = 0usize;
+    while i < nf {
+        let row = dist.flex_rows[i];
+        let mut j = i + 1;
+        while j < nf && dist.flex_rows[j] == row {
+            j += 1;
+        }
+        let len = j - i;
+        if len < params.short_len {
+            sched.short_tiles.push(FlexTile {
+                elem_start: i as u32,
+                elem_end: j as u32,
+                row,
+                atomic: false,
+                row_split: false,
+            });
+        } else if params.enabled {
+            let row_split = len > cs;
+            let mut x = i;
+            while x < j {
+                let end = (x + cs).min(j);
+                sched.long_tiles.push(FlexTile {
+                    elem_start: x as u32,
+                    elem_end: end as u32,
+                    row,
+                    atomic: false,
+                    row_split,
+                });
+                x = end;
+            }
+        } else {
+            sched.long_tiles.push(FlexTile {
+                elem_start: i as u32,
+                elem_end: j as u32,
+                row,
+                atomic: false,
+                row_split: false,
+            });
+        }
+        i = j;
     }
     sched
 }
@@ -436,6 +578,136 @@ mod tests {
                 assert!(!t.row_split);
             }
         });
+    }
+
+    fn sddmm_schedule_covers(dist: &crate::dist::SddmmDist, sched: &SddmmSchedule) {
+        // every TC block in exactly one segment, window-consistent
+        let mut seen = vec![false; dist.tc.n_blocks()];
+        for seg in &sched.tc_segments {
+            assert!(!seg.atomic, "sddmm segments never need atomics");
+            for b in seg.block_start..seg.block_end {
+                assert!(!seen[b as usize], "block {b} double-scheduled");
+                seen[b as usize] = true;
+                assert_eq!(dist.tc.window_of[b as usize], seg.window);
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "unscheduled blocks");
+        // every flexible element in exactly one tile, row-consistent
+        let mut elem_seen = vec![false; dist.flex_vals.len()];
+        for t in sched.long_tiles.iter().chain(&sched.short_tiles) {
+            assert!(!t.atomic);
+            for i in t.elem_start..t.elem_end {
+                assert!(!elem_seen[i as usize], "elem {i} double-scheduled");
+                elem_seen[i as usize] = true;
+                assert_eq!(dist.flex_rows[i as usize], t.row, "tile spans rows");
+            }
+        }
+        assert!(elem_seen.iter().all(|&x| x), "unscheduled flexible elements");
+    }
+
+    #[test]
+    fn sddmm_cover_property() {
+        check(Config::default().cases(30), "sddmm schedule covers workload", |rng| {
+            let (rr, cc) = (rng.range(1, 150), rng.range(1, 100));
+            let m = gen::uniform_random(rng, rr, cc, 0.1);
+            let d = crate::dist::distribute_sddmm(
+                &m,
+                &DistParams { threshold: rng.range(1, 48), fill_padding: true },
+            );
+            let p = BalanceParams {
+                ts: rng.range(1, 8),
+                cs: rng.range(2, 40),
+                short_len: rng.range(1, 6),
+                enabled: rng.chance(0.8),
+            };
+            let sched = balance_sddmm(&d, &p);
+            sddmm_schedule_covers(&d, &sched);
+            assert_eq!(sched.flex_elems(), d.flex_vals.len());
+        });
+    }
+
+    #[test]
+    fn sddmm_segment_sizes_bounded() {
+        let mut rng = SplitMix64::new(42);
+        let m = gen::power_law(&mut rng, 1024, 24.0, 2.0);
+        let d = crate::dist::distribute_sddmm(
+            &m,
+            &DistParams { threshold: 8, fill_padding: true },
+        );
+        let p = BalanceParams { ts: 2, cs: 16, short_len: 3, enabled: true };
+        let sched = balance_sddmm(&d, &p);
+        for seg in &sched.tc_segments {
+            assert!((seg.block_end - seg.block_start) as usize <= 2);
+        }
+        for t in &sched.long_tiles {
+            let len = (t.elem_end - t.elem_start) as usize;
+            assert!((1..=16).contains(&len));
+        }
+        for t in &sched.short_tiles {
+            assert!(((t.elem_end - t.elem_start) as usize) < 3);
+        }
+        // decomposed long rows are flagged as split (informational for
+        // SDDMM — never an atomics trigger)
+        for t in &sched.long_tiles {
+            let r = t.row;
+            let row_len = sched
+                .long_tiles
+                .iter()
+                .filter(|x| x.row == r)
+                .map(|x| (x.elem_end - x.elem_start) as usize)
+                .sum::<usize>();
+            assert_eq!(t.row_split, row_len > 16, "row {r}");
+        }
+    }
+
+    #[test]
+    fn sddmm_disabled_is_one_segment_per_window_and_whole_rows() {
+        let mut rng = SplitMix64::new(43);
+        let m = gen::uniform_random(&mut rng, 256, 256, 0.08);
+        let d = crate::dist::distribute_sddmm(&m, &DistParams::sddmm_default());
+        let sched = balance_sddmm(&d, &BalanceParams::disabled());
+        sddmm_schedule_covers(&d, &sched);
+        let mut per_window = std::collections::HashMap::new();
+        for seg in &sched.tc_segments {
+            *per_window.entry(seg.window).or_insert(0) += 1;
+        }
+        assert!(per_window.values().all(|&c: &i32| c == 1));
+        for t in &sched.long_tiles {
+            assert!(!t.row_split);
+        }
+    }
+
+    #[test]
+    fn zero_bounds_are_clamped_not_hung() {
+        // regression: ts = 0 / cs = 0 used to make the chunk loops
+        // spin forever; the serving layer forwards caller-supplied
+        // BalanceParams, so both balancers clamp to 1 and terminate
+        let mut rng = SplitMix64::new(44);
+        let m = gen::power_law(&mut rng, 256, 10.0, 2.0);
+        let zero = BalanceParams { ts: 0, cs: 0, short_len: 3, enabled: true };
+        let ds = distribute_spmm(&m, &DistParams::default());
+        let sched = balance_spmm(&ds, &zero);
+        schedule_covers(&ds, &sched);
+        for seg in &sched.tc_segments {
+            assert_eq!(seg.block_end - seg.block_start, 1);
+        }
+        let dd = crate::dist::distribute_sddmm(&m, &DistParams::sddmm_default());
+        let sched = balance_sddmm(&dd, &zero);
+        sddmm_schedule_covers(&dd, &sched);
+        for t in &sched.long_tiles {
+            assert_eq!(t.elem_end - t.elem_start, 1);
+        }
+    }
+
+    #[test]
+    fn sddmm_empty_matrix_yields_empty_schedule() {
+        let m = crate::sparse::Csr::zeros(20, 12);
+        let d = crate::dist::distribute_sddmm(&m, &DistParams::sddmm_default());
+        let sched = balance_sddmm(&d, &BalanceParams::default());
+        assert!(sched.tc_segments.is_empty());
+        assert!(sched.long_tiles.is_empty() && sched.short_tiles.is_empty());
+        assert_eq!(sched.flex_elems(), 0);
+        assert_eq!(sched.sched_bytes(), 0);
     }
 
     #[test]

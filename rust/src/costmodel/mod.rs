@@ -11,7 +11,13 @@
 //! The model is parameterized by a [`HardwareProfile`]; shipping
 //! profiles cover the paper's H100 figures and a profile measured on
 //! this substrate (used to sanity-check the bench results and produce
-//! the paper-scale estimates recorded in EXPERIMENTS.md).
+//! the paper-scale estimates recorded in `docs/EXPERIMENTS.md`).
+//!
+//! The model's consumers: [`crate::planner::Planner`] resolves a
+//! per-matrix θ from the unit histograms below ([`vector_histogram`]
+//! for SpMM, [`block_histogram`] for SDDMM) via [`tune_threshold`];
+//! serving, GNN training, batching, and the CLI all go through that
+//! one path.
 
 use crate::dist::Op;
 use crate::format::{SDDMM_BLOCK_N, SPMM_BLOCK_K, WINDOW};
@@ -161,15 +167,29 @@ pub fn predict_hybrid_time(
     structured.max(flexible) + batches as f64 * hw.structured_call_overhead
 }
 
+/// Largest possible unit NNZ for an operator: the 8x1 vector for SpMM,
+/// the 8x16 block for SDDMM. A threshold above this value routes every
+/// unit to the flexible engine.
+pub fn max_unit_nnz(op: Op) -> usize {
+    match op {
+        Op::Spmm => WINDOW,
+        Op::Sddmm => WINDOW * SDDMM_BLOCK_N,
+    }
+}
+
 /// Threshold tuner: pick θ minimizing predicted hybrid time over the
 /// observed unit histogram (the "practical performance" dimension).
+///
+/// Candidates cover `1..=max_unit_nnz(op) + 1`; the sentinel value
+/// `max_unit_nnz(op) + 1` means *no* unit qualifies for the structured
+/// engine (flexible-only — strictly better than any hybrid when the
+/// structured call overhead outweighs what even the densest units
+/// save). Callers that build [`crate::dist::DistParams`] from the
+/// result should normalize a sentinel to `DistParams::flex_only()`
+/// ([`crate::planner::Planner`] does).
 pub fn tune_threshold(hw: &HardwareProfile, op: Op, hist: &[usize], n: usize) -> usize {
-    let candidates: Vec<usize> = match op {
-        Op::Spmm => (1..=WINDOW).collect(),
-        Op::Sddmm => (1..=WINDOW * SDDMM_BLOCK_N).collect(),
-    };
     let mut best = (f64::MAX, 1usize);
-    for theta in candidates {
+    for theta in 1..=max_unit_nnz(op) + 1 {
         let t = predict_hybrid_time(hw, op, hist, n, theta);
         if t < best.0 {
             best = (t, theta);
@@ -192,10 +212,16 @@ pub fn substrate_params(op: Op, n: usize) -> crate::dist::DistParams {
 
 /// Build the per-vector NNZ histogram of a matrix (SpMM granularity).
 pub fn vector_histogram(m: &crate::sparse::Csr) -> Vec<usize> {
+    vector_histogram_range(m, 0, m.rows.div_ceil(WINDOW))
+}
+
+/// [`vector_histogram`] restricted to windows `[w_lo, w_hi)` — the
+/// per-member view a window-aligned [`crate::sparse::GraphBatch`]
+/// exposes; member histograms sum to the supermatrix histogram.
+pub fn vector_histogram_range(m: &crate::sparse::Csr, w_lo: usize, w_hi: usize) -> Vec<usize> {
     let mut hist = vec![0usize; WINDOW + 1];
-    let nwin = m.rows.div_ceil(WINDOW);
     let mut cols_buf: Vec<u32> = Vec::new();
-    for w in 0..nwin {
+    for w in w_lo..w_hi.min(m.rows.div_ceil(WINDOW)) {
         cols_buf.clear();
         let lo = w * WINDOW;
         let hi = ((w + 1) * WINDOW).min(m.rows);
@@ -216,6 +242,40 @@ pub fn vector_histogram(m: &crate::sparse::Csr) -> Vec<usize> {
         }
     }
     hist
+}
+
+/// Build the per-block NNZ histogram of a matrix (SDDMM granularity):
+/// each window's nonzero column vectors packed 16 per block in
+/// ascending column order, exactly as `dist::distribute_sddmm` packs
+/// them, so `hist[i]` counts the candidate 8x16 blocks holding `i`
+/// nonzeros.
+pub fn block_histogram(m: &crate::sparse::Csr) -> Vec<usize> {
+    block_histogram_range(m, 0, m.rows.div_ceil(WINDOW))
+}
+
+/// [`block_histogram`] restricted to windows `[w_lo, w_hi)`.
+pub fn block_histogram_range(m: &crate::sparse::Csr, w_lo: usize, w_hi: usize) -> Vec<usize> {
+    let max = max_unit_nnz(Op::Sddmm);
+    let mut hist = vec![0usize; max + 1];
+    for w in w_lo..w_hi.min(m.rows.div_ceil(WINDOW)) {
+        let lo = w * WINDOW;
+        let hi = ((w + 1) * WINDOW).min(m.rows);
+        let (_, vec_ranges) = crate::dist::window_vectors(m, lo, hi);
+        for chunk in vec_ranges.chunks(SDDMM_BLOCK_N) {
+            let block_nnz: usize = chunk.iter().map(|&(s, e)| e - s).sum();
+            hist[block_nnz.min(max)] += 1;
+        }
+    }
+    hist
+}
+
+/// The per-unit NNZ histogram at the operator's distribution
+/// granularity — the tuning input [`tune_threshold`] consumes.
+pub fn unit_histogram(m: &crate::sparse::Csr, op: Op) -> Vec<usize> {
+    match op {
+        Op::Spmm => vector_histogram(m),
+        Op::Sddmm => block_histogram(m),
+    }
 }
 
 #[cfg(test)]
@@ -266,9 +326,11 @@ mod tests {
     #[test]
     fn tuner_picks_extremes_for_extreme_matrices() {
         let hw = HardwareProfile::h100();
-        // all vectors dense -> tuner should pick a low threshold
+        // all vectors dense (enough of them to amortize the modeled
+        // structured-call overhead) -> tuner should pick a real
+        // threshold, not the all-flex sentinel
         let mut dense_hist = vec![0usize; 9];
-        dense_hist[8] = 1000;
+        dense_hist[8] = 1_000_000;
         let t = tune_threshold(&hw, Op::Spmm, &dense_hist, 128);
         assert!(t <= 8);
         // all NNZ-1 -> predicted hybrid at high θ (all flex) must beat all-TC
@@ -289,6 +351,67 @@ mod tests {
         let (vectors, nnz1) = crate::sparse::stats::count_vectors(&m, WINDOW);
         assert_eq!(hist.iter().sum::<usize>(), vectors);
         assert_eq!(hist[1], nnz1);
+    }
+
+    #[test]
+    fn tuner_uses_flex_only_sentinel_when_overhead_dominates() {
+        // a handful of dense vectors on the substrate profile: the
+        // structured call overhead (1e-4 s) dwarfs what they save, so
+        // the tuner must pick the all-flex sentinel rather than the
+        // least-bad hybrid the old 1..=WINDOW candidate set allowed
+        let hw = HardwareProfile::cpu_substrate();
+        let mut hist = vec![0usize; WINDOW + 1];
+        hist[WINDOW] = 4;
+        let t = tune_threshold(&hw, Op::Spmm, &hist, 128);
+        assert_eq!(t, max_unit_nnz(Op::Spmm) + 1, "expected the flex-only sentinel");
+        // sanity: the sentinel's prediction really is the minimum
+        let all_flex = predict_hybrid_time(&hw, Op::Spmm, &hist, 128, t);
+        let hybrid = predict_hybrid_time(&hw, Op::Spmm, &hist, 128, WINDOW);
+        assert!(all_flex < hybrid);
+    }
+
+    #[test]
+    fn block_histogram_counts() {
+        let mut rng = SplitMix64::new(142);
+        let m = gen::uniform_random(&mut rng, 80, 70, 0.1);
+        let hist = block_histogram(&m);
+        let total_nnz: usize = hist.iter().enumerate().map(|(nnz, &c)| nnz * c).sum();
+        assert_eq!(total_nnz, m.nnz());
+        // block counts must match what the distributor would emit at
+        // θ = 1 (every nonzero block becomes a TC block)
+        let d = crate::dist::distribute_sddmm(
+            &m,
+            &crate::dist::DistParams { threshold: 1, fill_padding: true },
+        );
+        let nonzero_blocks: usize = hist.iter().skip(1).sum();
+        assert_eq!(nonzero_blocks, d.tc.n_blocks());
+    }
+
+    #[test]
+    fn histogram_ranges_tile_the_matrix() {
+        let mut rng = SplitMix64::new(143);
+        let m = gen::power_law(&mut rng, 200, 6.0, 2.0);
+        let nwin = m.rows.div_ceil(WINDOW);
+        for (full, ranged) in [
+            (
+                vector_histogram(&m),
+                [
+                    vector_histogram_range(&m, 0, nwin / 2),
+                    vector_histogram_range(&m, nwin / 2, nwin),
+                ],
+            ),
+            (
+                block_histogram(&m),
+                [
+                    block_histogram_range(&m, 0, nwin / 2),
+                    block_histogram_range(&m, nwin / 2, nwin),
+                ],
+            ),
+        ] {
+            let merged: Vec<usize> =
+                ranged[0].iter().zip(&ranged[1]).map(|(&a, &b)| a + b).collect();
+            assert_eq!(full, merged);
+        }
     }
 
     #[test]

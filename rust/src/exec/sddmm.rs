@@ -1,9 +1,10 @@
 //! The hybrid SDDMM executor (paper §4.4, Fig. 7b).
 //!
 //! Stream 0 runs TC-block batches (dense MMA + in-kernel sampling &
-//! compaction); stream 1 runs per-element dot products for the
-//! flexible portion. SDDMM writes each nonzero exactly once, so no
-//! atomics are needed anywhere — load balancing is pure chunking.
+//! compaction); streams 1 and 2 run the balanced schedule's long /
+//! short flexible tiles (`balance::balance_sddmm`). SDDMM writes each
+//! nonzero exactly once, so no atomics are needed anywhere — the
+//! decomposition only bounds the dispatch units, exactly as for SpMM.
 
 use super::counters::Counters;
 use super::flex;
@@ -13,20 +14,21 @@ use super::pool::Threading;
 use super::structured::{self, Decode};
 use super::workspace::{self, Workspace};
 use super::TcBackend;
+use crate::balance::{balance_sddmm, BalanceParams, SddmmSchedule};
 use crate::dist::{DistParams, SddmmDist};
 use crate::format::legacy::TcfBlocks;
+use crate::prep::SddmmPlan;
 use crate::runtime::Input;
 use crate::sparse::{Csr, Dense, GraphBatch};
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-/// Elements per flexible work unit (the SDDMM tile chunk).
-const FLEX_CHUNK: usize = 512;
-
 /// A preprocessed SDDMM operator.
 pub struct SddmmExecutor {
     pub dist: SddmmDist,
+    /// the balanced schedule driving both streams
+    pub sched: SddmmSchedule,
     pub tcf: Option<TcfBlocks>,
     pub backend: TcBackend,
     /// flexible-stream width (concurrent flexible tasks per call)
@@ -45,14 +47,25 @@ impl SddmmExecutor {
         Self::from_dist(dist, m.clone(), backend)
     }
 
-    /// Build from an existing distribution and its source pattern.
-    /// Distribution does not run here — the serving layer's warm-cache
-    /// fast path hands in a cached plan plus a value-refreshed pattern.
+    /// Build from an existing distribution and its source pattern,
+    /// balancing with the default parameters. (Prefer
+    /// [`SddmmExecutor::from_plan`] when a balanced plan already
+    /// exists — e.g. out of the serving cache — so nothing re-runs.)
     pub fn from_dist(dist: SddmmDist, pattern: Csr, backend: TcBackend) -> Self {
+        let sched = balance_sddmm(&dist, &BalanceParams::default());
+        Self::from_plan(SddmmPlan { dist, sched }, pattern, backend)
+    }
+
+    /// Build from a fully preprocessed plan. Neither distribution nor
+    /// balancing runs here — the serving layer's warm-cache fast path,
+    /// mirroring `SpmmExecutor::from_plan`.
+    pub fn from_plan(plan: SddmmPlan, pattern: Csr, backend: TcBackend) -> Self {
+        let SddmmPlan { dist, sched } = plan;
         let tcf = matches!(backend, TcBackend::NativeTraversal)
             .then(|| TcfBlocks::from_bitmap(&dist.tc));
         Self {
             dist,
+            sched,
             tcf,
             backend,
             flex_threads: super::default_flex_threads(),
@@ -159,36 +172,57 @@ impl SddmmExecutor {
         self.check_shapes(a, b)?;
         let n_blocks = self.dist.tc.n_blocks();
         let structured_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
-        let cursor = AtomicUsize::new(0);
-        let n_flex = self.dist.flex_vals.len();
+        let long_cursor = AtomicUsize::new(0);
+        let short_cursor = AtomicUsize::new(0);
+        let has_flex = !self.sched.long_tiles.is_empty() || !self.sched.short_tiles.is_empty();
         let pack_bufs = ws.pack_bufs();
 
+        let run_tile = |tile: &crate::balance::FlexTile| {
+            flex::sddmm_range(
+                tile.elem_start as usize..tile.elem_end as usize,
+                &self.dist.flex_rows,
+                &self.dist.flex_cols,
+                &self.dist.flex_vals,
+                &self.dist.flex_out_idx,
+                a,
+                b,
+                out,
+                &self.counters,
+            );
+        };
+
         let structured_tasks = (n_blocks > 0) as usize;
-        let flex_tasks = if n_flex > 0 { self.flex_threads.max(1) } else { 0 };
+        let flex_tasks = if has_flex { self.flex_threads.max(1) } else { 0 };
         let task = |t: usize| {
             if t < structured_tasks {
+                // --- stream 0: structured engine over the TC segments ---
                 if let Err(e) = self.run_structured(a, b, out, pack_bufs) {
                     *structured_err.lock().unwrap() = Some(e);
                 }
                 return;
             }
+            // --- streams 1 & 2: the balanced schedule's flexible
+            // tiles. No atomics anywhere: every tile writes a disjoint
+            // set of CSR positions. ---
+            // stream 1: long tiles (Cs-bounded chunks, coarse units)
             loop {
-                let i0 = cursor.fetch_add(FLEX_CHUNK, Ordering::Relaxed);
-                if i0 >= n_flex {
+                let i = long_cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= self.sched.long_tiles.len() {
                     break;
                 }
-                let i1 = (i0 + FLEX_CHUNK).min(n_flex);
-                flex::sddmm_range(
-                    i0..i1,
-                    &self.dist.flex_rows,
-                    &self.dist.flex_cols,
-                    &self.dist.flex_vals,
-                    &self.dist.flex_out_idx,
-                    a,
-                    b,
-                    out,
-                    &self.counters,
-                );
+                run_tile(&self.sched.long_tiles[i]);
+            }
+            // stream 2: short tiles (batched grabs — tiles are tiny)
+            const SHORT_BATCH: usize = 64;
+            loop {
+                let i0 = short_cursor.fetch_add(SHORT_BATCH, Ordering::Relaxed);
+                if i0 >= self.sched.short_tiles.len() {
+                    break;
+                }
+                let i1 = (i0 + SHORT_BATCH).min(self.sched.short_tiles.len());
+                for tile in &self.sched.short_tiles[i0..i1] {
+                    run_tile(tile);
+                }
             }
         };
         self.threading.run(structured_tasks + flex_tasks, &task)?;
@@ -258,39 +292,31 @@ impl SddmmExecutor {
                 }
                 Ok(())
             }
-            TcBackend::NativeBitmap | TcBackend::NativeStaged => {
-                let decode = if matches!(self.backend, TcBackend::NativeBitmap) {
-                    Decode::Bitmap
-                } else {
-                    Decode::Staged
+            TcBackend::NativeBitmap | TcBackend::NativeStaged | TcBackend::NativeTraversal => {
+                // the native structured stream drains the balanced
+                // schedule's Ts-bounded TC segments — its dispatch
+                // units, mirroring the SpMM stream (the PJRT arm above
+                // instead batches by artifact bucket, which is *its*
+                // decomposition)
+                let (tcf, decode) = match &self.backend {
+                    TcBackend::NativeBitmap => (None, Decode::Bitmap),
+                    TcBackend::NativeStaged => (None, Decode::Staged),
+                    _ => (self.tcf.as_ref(), Decode::Traversal),
                 };
-                structured::sddmm_blocks(
-                    &self.dist.tc,
-                    None,
-                    decode,
-                    &self.dist.tc_out_idx,
-                    0,
-                    n_blocks,
-                    a,
-                    b,
-                    out,
-                    &self.counters,
-                );
-                Ok(())
-            }
-            TcBackend::NativeTraversal => {
-                structured::sddmm_blocks(
-                    &self.dist.tc,
-                    self.tcf.as_ref(),
-                    Decode::Traversal,
-                    &self.dist.tc_out_idx,
-                    0,
-                    n_blocks,
-                    a,
-                    b,
-                    out,
-                    &self.counters,
-                );
+                for seg in &self.sched.tc_segments {
+                    structured::sddmm_blocks(
+                        &self.dist.tc,
+                        tcf,
+                        decode,
+                        &self.dist.tc_out_idx,
+                        seg.block_start as usize,
+                        seg.block_end as usize,
+                        a,
+                        b,
+                        out,
+                        &self.counters,
+                    );
+                }
                 Ok(())
             }
         }
@@ -457,6 +483,76 @@ mod tests {
                 assert_eq!(got[i], want, "member {i} diverged from single-matrix path");
             }
         });
+    }
+
+    #[test]
+    fn balanced_schedule_is_bit_identical_to_unbalanced() {
+        // Satellite property: the balanced SDDMM schedule (any Ts/Cs
+        // decomposition, any flexible width) produces bit-identical
+        // output to the undecomposed path — every nonzero is written
+        // exactly once by the same dot product either way.
+        check(Config::default().cases(12), "balanced sddmm == unbalanced", |rng| {
+            let rows = rng.range(1, 140);
+            let cols = rng.range(1, 120);
+            let m = gen::uniform_random(rng, rows, cols, 0.1);
+            let k = rng.range(1, 16);
+            let a = Dense::random(rng, rows, k);
+            let b = Dense::random(rng, cols, k);
+            let d = DistParams { threshold: rng.range(1, 48), fill_padding: true };
+            let dist = crate::dist::distribute_sddmm(&m, &d);
+            let unbalanced = SddmmExecutor::from_plan(
+                crate::prep::SddmmPlan {
+                    dist: dist.clone(),
+                    sched: crate::balance::balance_sddmm(
+                        &dist,
+                        &crate::balance::BalanceParams::disabled(),
+                    ),
+                },
+                m.clone(),
+                TcBackend::NativeBitmap,
+            );
+            let want = unbalanced.execute(&a, &b).unwrap();
+            let p = crate::balance::BalanceParams {
+                ts: rng.range(1, 6),
+                cs: rng.range(2, 24),
+                short_len: rng.range(1, 5),
+                enabled: true,
+            };
+            let mut balanced = SddmmExecutor::from_plan(
+                crate::prep::SddmmPlan {
+                    sched: crate::balance::balance_sddmm(&dist, &p),
+                    dist,
+                },
+                m.clone(),
+                TcBackend::NativeBitmap,
+            );
+            balanced.flex_threads = rng.range(1, 4);
+            let got = balanced.execute(&a, &b).unwrap();
+            assert_eq!(got.values, want.values, "balanced schedule diverged");
+        });
+    }
+
+    #[test]
+    fn from_plan_skips_balancing_and_matches_from_dist() {
+        let mut rng = SplitMix64::new(99);
+        let m = gen::uniform_random(&mut rng, 100, 100, 0.1);
+        let a = Dense::random(&mut rng, 100, 8);
+        let b = Dense::random(&mut rng, 100, 8);
+        let plan = crate::prep::preprocess_sddmm(
+            &m,
+            &DistParams::sddmm_default(),
+            &crate::balance::BalanceParams::default(),
+            crate::prep::PrepMode::Sequential,
+        );
+        let via_plan = SddmmExecutor::from_plan(plan.clone(), m.clone(), TcBackend::NativeBitmap);
+        let dist = crate::dist::distribute_sddmm(&m, &DistParams::sddmm_default());
+        let via_dist = SddmmExecutor::from_dist(dist, m.clone(), TcBackend::NativeBitmap);
+        assert_eq!(via_plan.sched.tc_segments, via_dist.sched.tc_segments);
+        assert_eq!(via_plan.sched.long_tiles, via_dist.sched.long_tiles);
+        assert_eq!(via_plan.sched.short_tiles, via_dist.sched.short_tiles);
+        let x = via_plan.execute(&a, &b).unwrap();
+        let y = via_dist.execute(&a, &b).unwrap();
+        assert_eq!(x.values, y.values);
     }
 
     #[test]

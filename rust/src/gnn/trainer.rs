@@ -7,8 +7,9 @@ use super::data::GraphData;
 use super::dense::{accuracy, softmax_xent_into};
 use super::gcn::Gcn;
 use super::{DenseBackend, Precision};
-use crate::dist::DistParams;
+use crate::dist::{DistParams, Op};
 use crate::exec::TcBackend;
+use crate::planner::{Planner, ThetaPolicy};
 use crate::sparse::{Dense, GraphBatch};
 use crate::util::Timer;
 use anyhow::Result;
@@ -190,9 +191,14 @@ pub fn train_agnn(
 /// A reusable training harness binding one configuration to the
 /// kernel backends — the entry point for mini-batched training over a
 /// corpus of small graphs ([`Trainer::fit_batched`]).
+///
+/// θ is chosen per graph (or per composed mini-batch supermatrix) by
+/// the [`Planner`] under the trainer's [`ThetaPolicy`] — the same
+/// resolution path serving uses, so a trained adjacency and a served
+/// one can never disagree on their distribution.
 pub struct Trainer {
     pub cfg: TrainConfig,
-    pub dist: DistParams,
+    pub theta: ThetaPolicy,
     pub tc_backend: TcBackend,
     pub dense_backend: DenseBackend,
 }
@@ -211,16 +217,24 @@ struct MiniBatch {
 impl Trainer {
     pub fn new(
         cfg: TrainConfig,
-        dist: DistParams,
+        theta: ThetaPolicy,
         tc_backend: TcBackend,
         dense_backend: DenseBackend,
     ) -> Self {
-        Self { cfg, dist, tc_backend, dense_backend }
+        Self { cfg, theta, tc_backend, dense_backend }
+    }
+
+    /// The planner resolving θ for this trainer's plans. SpMM tuning
+    /// width is the hidden dimension — the feature width the training
+    /// hot loop actually multiplies by.
+    fn planner(&self) -> Planner {
+        Planner::new(self.theta)
     }
 
     /// Full-graph GCN training (the classic single-graph path).
     pub fn fit(&self, data: &GraphData) -> Result<TrainStats> {
-        train_gcn(data, &self.cfg, &self.dist, self.tc_backend.clone(), self.dense_backend.clone())
+        let dist = self.planner().resolve(&data.adj, Op::Spmm, self.cfg.hidden);
+        train_gcn(data, &self.cfg, &dist, self.tc_backend.clone(), self.dense_backend.clone())
     }
 
     /// Mini-batched GCN training over a corpus of small graphs — the
@@ -255,13 +269,18 @@ impl Trainer {
         }
         dims.push(n_classes);
 
-        // one composition + preprocessing pass per mini-batch, all
-        // reused across every epoch
+        // one composition + θ resolution + preprocessing pass per
+        // mini-batch, all reused across every epoch. θ is tuned on the
+        // composed supermatrix (for a packed batch its histogram is
+        // the members' merged tuning input), through the same Planner
+        // path serving uses.
+        let planner = self.planner();
         let prep_timer = Timer::start();
         let mut batches = Vec::new();
         for chunk in corpus.chunks(batch_size) {
             let adjs: Vec<_> = chunk.iter().map(|g| g.adj.clone()).collect();
             let gb = GraphBatch::compose_packed(&adjs)?;
+            let dist = planner.resolve_batch(&gb, Op::Spmm, self.cfg.hidden);
             let feat_parts: Vec<_> = chunk.iter().map(|g| g.features.clone()).collect();
             let feats = gb.stack_rows(&feat_parts)?;
             let rows = gb.total_rows();
@@ -279,7 +298,7 @@ impl Trainer {
             let model = Gcn::new(
                 &gb.matrix,
                 &dims,
-                &self.dist,
+                &dist,
                 self.tc_backend.clone(),
                 self.dense_backend.clone(),
                 self.cfg.precision,
@@ -452,12 +471,8 @@ mod tests {
             .map(|i| planted_partition(&format!("mb_{i}"), 56 + 4 * i, 4, 5.0, 0.85, 24, 7))
             .collect();
         let cfg = TrainConfig { epochs: 40, lr: 0.03, hidden: 16, layers: 3, ..Default::default() };
-        let trainer = Trainer::new(
-            cfg,
-            DistParams::default(),
-            TcBackend::NativeBitmap,
-            DenseBackend::Native,
-        );
+        let trainer =
+            Trainer::new(cfg, ThetaPolicy::Auto, TcBackend::NativeBitmap, DenseBackend::Native);
         let stats = trainer.fit_batched(&corpus, 4).unwrap();
         assert_eq!(stats.epoch_times.len(), 40);
         assert!(stats.loss_curve.last().unwrap() < &stats.loss_curve[0], "loss must drop");
@@ -471,7 +486,7 @@ mod tests {
         let b = planted_partition("b", 40, 3, 4.0, 0.8, 24, 2); // wrong width
         let trainer = Trainer::new(
             TrainConfig { epochs: 1, ..Default::default() },
-            DistParams::default(),
+            ThetaPolicy::Auto,
             TcBackend::NativeBitmap,
             DenseBackend::Native,
         );

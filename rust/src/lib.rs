@@ -19,6 +19,7 @@ pub mod bench;
 pub mod baselines;
 pub mod costmodel;
 pub mod exec;
+pub mod planner;
 pub mod prep;
 pub mod runtime;
 pub mod dist;

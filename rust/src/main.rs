@@ -1,16 +1,19 @@
 //! Libra CLI: preprocess, run, serve, and inspect hybrid sparse operators.
 //!
 //! Subcommands:
-//!   spmm   --matrix <.mtx|gen:SPEC> [--n 128] [--theta N|auto] [--backend native|pjrt]
-//!   sddmm  --matrix <.mtx|gen:SPEC> [--k 32]  [--theta N|auto] [--backend native|pjrt]
+//!   spmm   --matrix <.mtx|gen:SPEC> [--n 128] [--theta auto|auto-refined|N] [--backend ...]
+//!   sddmm  --matrix <.mtx|gen:SPEC> [--k 32]  [--theta auto|auto-refined|N] [--backend ...]
 //!   stats  --matrix <.mtx|gen:SPEC>            sparsity profile + distribution preview
-//!   tune   [--n 128] [--k 32]                  print tuned thresholds per profile
+//!   tune   [--matrix SPEC] [--n 128] [--k 32]  resolve θ through the serving Planner path
 //!   gnn    [--model gcn|agnn] [--epochs 50]    train on a synthetic citation graph
 //!   serve  [--patterns 6] [--requests 120] [--workers W] closed-loop serving-trace replay
 //!
-//! `gen:SPEC` synthesizes a matrix, e.g. `gen:powerlaw:4096:12` or
-//! `gen:banded:2048:6`, `gen:uniform:4096:0.001`, `gen:blockdiag:2048:24`.
-//! Unknown flags are an error; each subcommand lists what it accepts.
+//! `--theta` defaults to `auto` everywhere: the cost model tunes θ on
+//! the matrix's unit histogram via `planner::Planner` — the same path
+//! the serving engine uses. `gen:SPEC` synthesizes a matrix, e.g.
+//! `gen:powerlaw:4096:12` or `gen:banded:2048:6`,
+//! `gen:uniform:4096:0.001`, `gen:blockdiag:2048:24`. Unknown flags
+//! are an error; each subcommand lists what it accepts.
 
 use anyhow::{bail, Context, Result};
 use libra::balance::BalanceParams;
@@ -18,6 +21,7 @@ use libra::costmodel::{self, HardwareProfile};
 use libra::dist::{DistParams, Op};
 use libra::exec::sddmm::SddmmExecutor;
 use libra::exec::{SpmmExecutor, TcBackend};
+use libra::planner::{fmt_theta, Planner, ThetaPolicy};
 use libra::serve::{Engine, EngineConfig, MicroBatchParams, MicroBatcher, Request, SchedParams};
 use libra::sparse::{gen, mm_io, Csr, Dense};
 use libra::util::SplitMix64;
@@ -40,8 +44,8 @@ fn main() -> Result<()> {
             cmd_sddmm(&parse_flags(rest, &["matrix", "k", "theta", "backend", "seed", "json"])?)
         }
         "stats" => cmd_stats(&parse_flags(rest, &["matrix", "seed"])?),
-        "tune" => cmd_tune(&parse_flags(rest, &["n", "k"])?),
-        "gnn" => cmd_gnn(&parse_flags(rest, &["model", "epochs", "batch", "graphs"])?),
+        "tune" => cmd_tune(&parse_flags(rest, &["matrix", "n", "k", "seed"])?),
+        "gnn" => cmd_gnn(&parse_flags(rest, &["model", "epochs", "batch", "graphs", "theta"])?),
         "serve" => cmd_serve(&parse_flags(
             rest,
             &[
@@ -61,17 +65,19 @@ fn print_usage() {
     println!(
         "libra — heterogeneous sparse matrix multiplication\n\n\
          usage: libra <spmm|sddmm|stats|tune|gnn|serve> [flags]\n\
-         \x20 spmm   --matrix <path.mtx|gen:SPEC> [--n 128] [--theta N|auto] [--backend native|pjrt] [--seed 42] [--json]\n\
+         \x20 spmm   --matrix <path.mtx|gen:SPEC> [--n 128] [--theta auto|auto-refined|N] [--backend native|pjrt] [--seed 42] [--json]\n\
          \x20        [--batch N]  (N>1: compose N member graphs block-diagonally; compare vs the per-graph loop)\n\
-         \x20 sddmm  --matrix <path.mtx|gen:SPEC> [--k 32]  [--theta N|auto] [--backend native|pjrt] [--seed 42] [--json]\n\
+         \x20 sddmm  --matrix <path.mtx|gen:SPEC> [--k 32]  [--theta auto|auto-refined|N] [--backend native|pjrt] [--seed 42] [--json]\n\
          \x20 stats  --matrix <path.mtx|gen:SPEC> [--seed 42]\n\
-         \x20 tune   [--n 128] [--k 32]\n\
-         \x20 gnn    [--model gcn|agnn] [--epochs 50] [--batch B] [--graphs G]  (B>0: mini-batch train over G small graphs)\n\
+         \x20 tune   [--matrix <path.mtx|gen:SPEC>] [--n 128] [--k 32] [--seed 42]\n\
+         \x20 gnn    [--model gcn|agnn] [--epochs 50] [--theta auto|auto-refined|N] [--batch B] [--graphs G]\n\
+         \x20        (B>0: mini-batch train over G small graphs)\n\
          \x20 serve  [--patterns 6] [--requests 120] [--workers W] [--n 64] [--size 1024]\n\
-         \x20        [--theta N|auto] [--backend native|pjrt] [--seed 42] [--cache-mb 256] [--batch 8]\n\
+         \x20        [--theta auto|auto-refined|N] [--backend native|pjrt] [--seed 42] [--cache-mb 256] [--batch 8]\n\
          \x20        [--microbatch] [--linger-us 2000] [--batch-kb 2048]  (coalesce requests into block-diagonal batches)\n\
          gen:SPEC: gen:powerlaw:N:DEG | gen:banded:N:BAND | gen:uniform:N:DENSITY | gen:blockdiag:N:BLOCKS\n\
-         (--seed controls gen:SPEC synthesis and the serve trace; unknown flags are rejected)"
+         (--theta defaults to auto: cost-model tuning on the matrix histogram, one Planner path\n\
+         \x20 shared by every subcommand and the serving engine; unknown flags are rejected)"
     );
 }
 
@@ -166,16 +172,22 @@ fn backend(flags: &HashMap<String, String>) -> Result<TcBackend> {
     }
 }
 
-fn theta(flags: &HashMap<String, String>, op: Op, n: usize) -> Result<DistParams> {
+/// Parse `--theta auto|auto-refined|N` (default: auto).
+fn theta_policy(flags: &HashMap<String, String>) -> Result<ThetaPolicy> {
     match flags.get("theta").map(String::as_str) {
-        None | Some("auto") => Ok(costmodel::substrate_params(op, n)),
-        Some(v) => {
-            let threshold: usize = v.parse().map_err(|_| {
-                anyhow::anyhow!("invalid value '{v}' for --theta (positive integer or 'auto')")
-            })?;
-            Ok(DistParams { threshold, fill_padding: true })
-        }
+        None => Ok(ThetaPolicy::Auto),
+        Some(v) => ThetaPolicy::parse(v).ok_or_else(|| {
+            anyhow::anyhow!(
+                "invalid value '{v}' for --theta (auto, auto-refined, or a positive integer)"
+            )
+        }),
     }
+}
+
+/// Resolve effective distribution parameters for one matrix through
+/// the Planner — the identical path `serve::Engine` runs.
+fn theta(flags: &HashMap<String, String>, m: &Csr, op: Op, n: usize) -> Result<DistParams> {
+    Ok(Planner::new(theta_policy(flags)?).resolve(m, op, n))
 }
 
 fn cmd_spmm(flags: &HashMap<String, String>) -> Result<()> {
@@ -186,15 +198,16 @@ fn cmd_spmm(flags: &HashMap<String, String>) -> Result<()> {
     let m = load_matrix(flags)?;
     let n: usize = flags.get("n").and_then(|s| s.parse().ok()).unwrap_or(128);
     let json = flags.contains_key("json");
-    let params = theta(flags, Op::Spmm, n)?;
+    let params = theta(flags, &m, Op::Spmm, n)?;
     let exec = SpmmExecutor::new(&m, &params, &BalanceParams::default(), backend(flags)?);
     if !json {
         println!(
-            "matrix {}x{} nnz={} | theta={} -> {} blocks ({:.1}% padding), {} flex nnz",
+            "matrix {}x{} nnz={} | theta={} ({}) -> {} blocks ({:.1}% padding), {} flex nnz",
             m.rows,
             m.cols,
             m.nnz(),
-            params.threshold,
+            fmt_theta(params.threshold),
+            theta_policy(flags)?,
             exec.dist.stats.n_blocks,
             exec.dist.stats.padding_ratio * 100.0,
             exec.dist.stats.nnz_flex
@@ -213,13 +226,13 @@ fn cmd_spmm(flags: &HashMap<String, String>) -> Result<()> {
     if json {
         // machine-readable bench point (one JSON object per run)
         println!(
-            "{{\"op\":\"spmm\",\"rows\":{},\"cols\":{},\"nnz\":{},\"n\":{n},\"theta\":{},\
+            "{{\"op\":\"spmm\",\"rows\":{},\"cols\":{},\"nnz\":{},\"n\":{n},\"theta\":\"{}\",\
              \"blocks\":{},\"padding_ratio\":{:.6},\"nnz_flex\":{},\"ms\":{:.6},\
              \"gflops\":{:.4},\"pjrt_calls\":{}}}",
             m.rows,
             m.cols,
             m.nnz(),
-            params.threshold,
+            fmt_theta(params.threshold),
             exec.dist.stats.n_blocks,
             exec.dist.stats.padding_ratio,
             exec.dist.stats.nnz_flex,
@@ -248,7 +261,11 @@ fn cmd_spmm_batch(flags: &HashMap<String, String>, n_members: usize) -> Result<(
     let members = load_members(flags, n_members)?;
     let n: usize = flags.get("n").and_then(|s| s.parse().ok()).unwrap_or(128);
     let json = flags.contains_key("json");
-    let params = theta(flags, Op::Spmm, n)?;
+    // resolve θ on the composed batch: the members' merged histograms
+    // are the supermatrix tuning input; the per-graph loop uses the
+    // same parameters so the comparison isolates batching
+    let params = Planner::new(theta_policy(flags)?)
+        .resolve_batch(&GraphBatch::compose(&members)?, Op::Spmm, n);
     let backend = backend(flags)?;
     let nnz: usize = members.iter().map(|m| m.nnz()).sum();
     let mut rng = SplitMix64::new(1);
@@ -281,8 +298,8 @@ fn cmd_spmm_batch(flags: &HashMap<String, String>, n_members: usize) -> Result<(
     if json {
         println!(
             "{{\"op\":\"spmm_batch\",\"members\":{n_members},\"nnz\":{nnz},\"n\":{n},\
-             \"theta\":{},\"per_graph_ms\":{:.6},\"batched_ms\":{:.6},\"speedup\":{:.4}}}",
-            params.threshold,
+             \"theta\":\"{}\",\"per_graph_ms\":{:.6},\"batched_ms\":{:.6},\"speedup\":{:.4}}}",
+            fmt_theta(params.threshold),
             seq * 1e3,
             bat * 1e3,
             speedup
@@ -291,7 +308,7 @@ fn cmd_spmm_batch(flags: &HashMap<String, String>, n_members: usize) -> Result<(
         println!(
             "spmm batch of {n_members} graphs ({nnz} nnz total), N={n}, theta={}:\n\
              \x20 per-graph loop {:.3} ms | batched {:.3} ms | {:.2}x",
-            params.threshold,
+            fmt_theta(params.threshold),
             seq * 1e3,
             bat * 1e3,
             speedup
@@ -304,7 +321,7 @@ fn cmd_sddmm(flags: &HashMap<String, String>) -> Result<()> {
     let m = load_matrix(flags)?;
     let k: usize = flags.get("k").and_then(|s| s.parse().ok()).unwrap_or(32);
     let json = flags.contains_key("json");
-    let params = theta(flags, Op::Sddmm, k)?;
+    let params = theta(flags, &m, Op::Sddmm, k)?;
     let exec = SddmmExecutor::new(&m, &params, backend(flags)?);
     let mut rng = SplitMix64::new(2);
     let a = Dense::random(&mut rng, m.rows, k);
@@ -319,20 +336,21 @@ fn cmd_sddmm(flags: &HashMap<String, String>) -> Result<()> {
     let gflops = 2.0 * m.nnz() as f64 * k as f64 / secs / 1e9;
     if json {
         println!(
-            "{{\"op\":\"sddmm\",\"rows\":{},\"cols\":{},\"nnz\":{},\"k\":{k},\"theta\":{},\
+            "{{\"op\":\"sddmm\",\"rows\":{},\"cols\":{},\"nnz\":{},\"k\":{k},\"theta\":\"{}\",\
              \"tc_fraction\":{:.6},\"ms\":{:.6},\"gflops\":{:.4}}}",
             m.rows,
             m.cols,
             m.nnz(),
-            params.threshold,
+            fmt_theta(params.threshold),
             exec.dist.stats.tc_fraction(),
             secs * 1e3,
             gflops
         );
     } else {
         println!(
-            "sddmm K={k}: theta={} | {:.3} ms, {:.2} GFLOPS ({:.1}% nnz structured)",
-            params.threshold,
+            "sddmm K={k}: theta={} ({}) | {:.3} ms, {:.2} GFLOPS ({:.1}% nnz structured)",
+            fmt_theta(params.threshold),
+            theta_policy(flags)?,
             secs * 1e3,
             gflops,
             exec.dist.stats.tc_fraction() * 100.0
@@ -368,9 +386,16 @@ fn cmd_stats(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Offline tuning report. Deliberately owns **no** tuning code: every
+/// resolved θ below comes from `planner::Planner::resolve` — the exact
+/// path `serve::Engine`, `gnn::Trainer`, and the batch composer run —
+/// so offline and online tuning can never disagree. (The per-profile
+/// analytic crossover is printed for context; it is the model's
+/// matrix-independent bound, not a tuning path.)
 fn cmd_tune(flags: &HashMap<String, String>) -> Result<()> {
     let n: usize = flags.get("n").and_then(|s| s.parse().ok()).unwrap_or(128);
     let k: usize = flags.get("k").and_then(|s| s.parse().ok()).unwrap_or(32);
+    println!("analytic per-unit crossover (matrix-independent):");
     for hw in [HardwareProfile::h100(), HardwareProfile::cpu_substrate()] {
         println!(
             "{:>14}: peak ratio {:>5.1}x  theta_spmm(N={n}) = {}  theta_sddmm(K={k}) = {}",
@@ -378,6 +403,28 @@ fn cmd_tune(flags: &HashMap<String, String>) -> Result<()> {
             hw.peak_ratio(),
             costmodel::analytic_threshold(&hw, Op::Spmm, n),
             costmodel::analytic_threshold(&hw, Op::Sddmm, k),
+        );
+    }
+    let default_spec = "gen:powerlaw:4096:12";
+    let spec = flags.get("matrix").cloned().unwrap_or_else(|| default_spec.to_string());
+    let mut with_matrix = flags.clone();
+    with_matrix.insert("matrix".into(), spec.clone());
+    let m = load_matrix(&with_matrix)?;
+    println!(
+        "\nPlanner resolution for {spec} ({}x{}, nnz {}) — the serving path:",
+        m.rows,
+        m.cols,
+        m.nnz()
+    );
+    for policy in [ThetaPolicy::Auto, ThetaPolicy::AutoRefined] {
+        let p = Planner::new(policy);
+        let ds = p.resolve(&m, Op::Spmm, n);
+        let dd = p.resolve(&m, Op::Sddmm, k);
+        println!(
+            "  {:>12}: theta_spmm(N={n}) = {}  theta_sddmm(K={k}) = {}",
+            policy.to_string(),
+            fmt_theta(ds.threshold),
+            fmt_theta(dd.threshold)
         );
     }
     Ok(())
@@ -391,15 +438,16 @@ fn cmd_gnn(flags: &HashMap<String, String>) -> Result<()> {
     let epochs: usize = flags.get("epochs").and_then(|s| s.parse().ok()).unwrap_or(50);
     let batch: usize = flags.get("batch").and_then(|s| s.parse().ok()).unwrap_or(0);
     let cfg = TrainConfig { epochs, lr: 0.01, hidden: 64, layers: 5, ..Default::default() };
-    let params = costmodel::substrate_params(Op::Spmm, cfg.hidden);
+    let policy = theta_policy(flags)?;
     if batch > 0 {
-        // mini-batch training over a corpus of small graphs
+        // mini-batch training over a corpus of small graphs; the
+        // trainer resolves θ per composed supermatrix via the Planner
         bail_unless_gcn(model)?;
         let graphs: usize = flags.get("graphs").and_then(|s| s.parse().ok()).unwrap_or(16);
         let corpus: Vec<_> = (0..graphs)
             .map(|i| planted_partition(&format!("mb_{i}"), 200 + 8 * i, 7, 6.0, 0.85, 64, 17))
             .collect();
-        let trainer = Trainer::new(cfg, params, TcBackend::NativeBitmap, DenseBackend::Native);
+        let trainer = Trainer::new(cfg, policy, TcBackend::NativeBitmap, DenseBackend::Native);
         let stats = trainer.fit_batched(&corpus, batch)?;
         println!(
             "gcn mini-batch: {graphs} graphs in batches of {batch}, {} epochs, \
@@ -412,6 +460,7 @@ fn cmd_gnn(flags: &HashMap<String, String>) -> Result<()> {
         return Ok(());
     }
     let data = planted_partition("cora_syn", 2708, 7, 6.0, 0.85, 128, 17);
+    let params = Planner::new(policy).resolve(&data.adj, Op::Spmm, cfg.hidden);
     let stats = match model {
         "gcn" => train_gcn(&data, &cfg, &params, TcBackend::NativeBitmap, DenseBackend::Native)?,
         "agnn" => train_agnn(&data, &cfg, &params, TcBackend::NativeBitmap, DenseBackend::Native)?,
@@ -468,11 +517,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             _ => gen::block_diag_noise(&mut rng, size, (size / 64).max(1), 0.4, 1e-3),
         })
         .collect();
-    let params = theta(flags, Op::Spmm, n)?;
+    let policy = theta_policy(flags)?;
     println!(
-        "serve: {patterns} patterns ({size}x{size}), {requests} requests, N={n}, theta={}, \
+        "serve: {patterns} patterns ({size}x{size}), {requests} requests, N={n}, theta={policy}, \
          {workers} workers, cache {cache_mb} MiB, batch {batch}{}",
-        params.threshold,
         if microbatch {
             format!(", micro-batching (linger {linger_us} us, {batch_kb} KiB)")
         } else {
@@ -501,7 +549,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             MicroBatchParams {
                 max_batch_bytes: batch_kb << 10,
                 linger: std::time::Duration::from_micros(linger_us),
-                dist: Some(params),
+                theta: policy,
+                dist: None,
             },
         );
         let mut in_flight = std::collections::VecDeque::with_capacity(window);
@@ -534,7 +583,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
                 *v = rng.f32_range(-1.0, 1.0);
             }
             in_flight
-                .push_back(engine.submit_async(Request::spmm(m, b.clone()).with_dist(params)));
+                .push_back(engine.submit_async(Request::spmm(m, b.clone()).with_theta(policy)));
         }
         for t in in_flight {
             errors += t.wait().result.is_err() as usize;

@@ -1,0 +1,589 @@
+//! Op-generic planning layer: cost-model-driven θ resolution for every
+//! entry point (paper §4.2 made first-class).
+//!
+//! Libra's claim is that the 2D-aware distribution *and* the hybrid
+//! load balancing together pick the optimal task mapping per matrix —
+//! which only holds if the threshold θ is actually chosen per matrix
+//! instead of hard-coded. The [`Planner`] owns that choice: given a
+//! CSR, an [`Op`], and a [`HardwareProfile`], it resolves
+//! [`DistParams`] under an explicit [`ThetaPolicy`]:
+//!
+//! * [`ThetaPolicy::Fixed`]`(u)` — an operator-provided θ (the old
+//!   behavior; presets like the paper's H100 optima live here);
+//! * [`ThetaPolicy::Auto`] — build the per-unit NNZ histogram
+//!   ([`costmodel::unit_histogram`]) and minimize the predicted hybrid
+//!   time ([`costmodel::tune_threshold`]); deterministic, O(nnz);
+//! * [`ThetaPolicy::AutoRefined`] — `Auto`, then a cheap *measured*
+//!   probe over {θ*−1, θ*, θ*+1} on a sampled window slice of the
+//!   matrix: the paper's "practical performance is not known a priori"
+//!   escape hatch for model error, at the cost of a few sub-matrix
+//!   executions.
+//!
+//! A tuned θ above the operator's maximum unit NNZ (the tuner's
+//! all-flex sentinel) normalizes to [`DistParams::flex_only`], so
+//! equivalent plans share one serving-cache entry.
+//!
+//! Consumers: `serve::Engine` (resolved θ becomes `PlanKey`
+//! provenance, memoized per pattern fingerprint), `gnn::Trainer`,
+//! `prep`'s batched paths (member histograms merge into the
+//! supermatrix tuning input), and the CLI's `--theta
+//! auto|auto-refined|N` flags — including the offline `tune`
+//! subcommand, which calls exactly this path so offline and online
+//! tuning can never disagree.
+
+use crate::balance::BalanceParams;
+use crate::costmodel::{self, HardwareProfile};
+use crate::dist::{DistParams, Op};
+use crate::exec::sddmm::SddmmExecutor;
+use crate::exec::{SpmmExecutor, TcBackend, Threading};
+use crate::format::WINDOW;
+use crate::prep::{
+    preprocess_sddmm, preprocess_sddmm_batch, preprocess_spmm, preprocess_spmm_batch, BatchPlan,
+    PrepMode, SddmmBatchPlan, SddmmPlan, SpmmPlan,
+};
+use crate::sparse::{Csr, Dense, GraphBatch};
+use crate::util::SplitMix64;
+
+/// How the distribution threshold θ is chosen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ThetaPolicy {
+    /// Use this θ verbatim (values above the operator's max unit NNZ
+    /// normalize to flexible-only).
+    Fixed(usize),
+    /// Histogram + cost model (`tune_threshold`): deterministic, no
+    /// execution.
+    #[default]
+    Auto,
+    /// `Auto`, then a measured probe over {θ*−1, θ*, θ*+1} on a
+    /// sampled window slice.
+    AutoRefined,
+}
+
+impl ThetaPolicy {
+    /// Parse a CLI-style policy: `auto`, `auto-refined`, or a positive
+    /// integer θ.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "auto" => Some(ThetaPolicy::Auto),
+            "auto-refined" => Some(ThetaPolicy::AutoRefined),
+            _ => s.parse::<usize>().ok().filter(|&t| t > 0).map(ThetaPolicy::Fixed),
+        }
+    }
+}
+
+impl std::fmt::Display for ThetaPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ThetaPolicy::Fixed(t) => write!(f, "{t}"),
+            ThetaPolicy::Auto => write!(f, "auto"),
+            ThetaPolicy::AutoRefined => write!(f, "auto-refined"),
+        }
+    }
+}
+
+/// Windows sampled by the `AutoRefined` measured probe.
+const PROBE_WINDOWS: usize = 48;
+/// Output-column cap for the probe's dense operands.
+const PROBE_N: usize = 32;
+
+/// The op-generic planner: resolves `DistParams` / `BalanceParams`
+/// from the cost model and produces complete plans for both operators,
+/// single-matrix or batched.
+#[derive(Debug, Clone)]
+pub struct Planner {
+    /// Cost-model profile θ is tuned against.
+    pub hw: HardwareProfile,
+    pub policy: ThetaPolicy,
+    /// Balancing parameters threaded into every plan.
+    pub balance: BalanceParams,
+    /// `fill_padding` for resolved non-flex-only `DistParams`.
+    pub fill_padding: bool,
+    /// Preprocessing mode for the `plan_*` helpers.
+    pub mode: PrepMode,
+}
+
+impl Default for Planner {
+    fn default() -> Self {
+        Self::new(ThetaPolicy::Auto)
+    }
+}
+
+impl Planner {
+    /// A planner tuned for this substrate's calibrated profile (see
+    /// `docs/EXPERIMENTS.md`), default balancing, sequential prep.
+    pub fn new(policy: ThetaPolicy) -> Self {
+        Self {
+            hw: HardwareProfile::cpu_substrate(),
+            policy,
+            balance: BalanceParams::default(),
+            fill_padding: true,
+            mode: PrepMode::Sequential,
+        }
+    }
+
+    pub fn with_hw(mut self, hw: HardwareProfile) -> Self {
+        self.hw = hw;
+        self
+    }
+
+    pub fn with_balance(mut self, balance: BalanceParams) -> Self {
+        self.balance = balance;
+        self
+    }
+
+    pub fn with_mode(mut self, mode: PrepMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Turn a resolved θ into `DistParams`, normalizing anything past
+    /// the operator's max unit NNZ (including the tuner's all-flex
+    /// sentinel) to the canonical `flex_only` preset so equivalent
+    /// plans share one cache key.
+    pub fn params_for_theta(&self, op: Op, theta: usize) -> DistParams {
+        if theta > costmodel::max_unit_nnz(op) {
+            DistParams::flex_only()
+        } else {
+            DistParams { threshold: theta, fill_padding: self.fill_padding }
+        }
+    }
+
+    /// Resolve distribution parameters for one matrix under this
+    /// planner's policy. `n` is the dense feature width (output
+    /// columns for SpMM, the contraction dim K for SDDMM).
+    pub fn resolve(&self, m: &Csr, op: Op, n: usize) -> DistParams {
+        match self.policy {
+            ThetaPolicy::Fixed(t) => self.params_for_theta(op, t),
+            ThetaPolicy::Auto => {
+                let hist = costmodel::unit_histogram(m, op);
+                self.resolve_from_hist(&hist, op, n)
+            }
+            ThetaPolicy::AutoRefined => {
+                let hist = costmodel::unit_histogram(m, op);
+                let star = costmodel::tune_threshold(&self.hw, op, &hist, n);
+                self.params_for_theta(op, self.refine(m, op, n, star))
+            }
+        }
+    }
+
+    /// Resolve from a precomputed unit histogram (the batched paths
+    /// merge per-member histograms into this input). `Fixed` ignores
+    /// the histogram; `AutoRefined` degrades to `Auto` here because
+    /// there is no matrix to probe — use [`Planner::resolve`] or
+    /// [`Planner::resolve_batch`] when one exists.
+    pub fn resolve_from_hist(&self, hist: &[usize], op: Op, n: usize) -> DistParams {
+        match self.policy {
+            ThetaPolicy::Fixed(t) => self.params_for_theta(op, t),
+            _ => self.params_for_theta(op, costmodel::tune_threshold(&self.hw, op, hist, n)),
+        }
+    }
+
+    /// Resolve parameters for a whole [`GraphBatch`]: for a
+    /// window-aligned batch the per-member histograms are computed on
+    /// the members' window spans and merged — exactly the supermatrix
+    /// histogram, but attributable per member; packed batches fall
+    /// back to histogramming the supermatrix directly.
+    pub fn resolve_batch(&self, batch: &GraphBatch, op: Op, n: usize) -> DistParams {
+        match self.policy {
+            ThetaPolicy::Fixed(t) => self.params_for_theta(op, t),
+            ThetaPolicy::Auto if batch.is_window_aligned() => {
+                let hist = merged_batch_histogram(batch, op);
+                self.resolve_from_hist(&hist, op, n)
+            }
+            _ => self.resolve(&batch.matrix, op, n),
+        }
+    }
+
+    /// Resolve and preprocess one SpMM workload.
+    pub fn plan_spmm(&self, m: &Csr, n: usize) -> (SpmmPlan, DistParams) {
+        let d = self.resolve(m, Op::Spmm, n);
+        (preprocess_spmm(m, &d, &self.balance, self.mode), d)
+    }
+
+    /// Resolve and preprocess one SDDMM workload.
+    pub fn plan_sddmm(&self, m: &Csr, k: usize) -> (SddmmPlan, DistParams) {
+        let d = self.resolve(m, Op::Sddmm, k);
+        (preprocess_sddmm(m, &d, &self.balance, self.mode), d)
+    }
+
+    /// Resolve (merged member histograms) and preprocess a
+    /// window-aligned SpMM batch.
+    pub fn plan_spmm_batch(&self, batch: &GraphBatch, n: usize) -> (BatchPlan, DistParams) {
+        let d = self.resolve_batch(batch, Op::Spmm, n);
+        (preprocess_spmm_batch(batch, &d, &self.balance, self.mode), d)
+    }
+
+    /// Resolve and preprocess a window-aligned SDDMM batch.
+    pub fn plan_sddmm_batch(&self, batch: &GraphBatch, k: usize) -> (SddmmBatchPlan, DistParams) {
+        let d = self.resolve_batch(batch, Op::Sddmm, k);
+        (preprocess_sddmm_batch(batch, &d, &self.balance, self.mode), d)
+    }
+
+    /// The `AutoRefined` measured probe: execute a sampled window
+    /// slice of `m` at {θ*−1, θ*, θ*+1} (clamped to the valid range,
+    /// all-flex sentinel included) and keep the fastest. Inline,
+    /// single-stream execution isolates the distribution decision from
+    /// thread-scheduling noise.
+    fn refine(&self, m: &Csr, op: Op, n: usize, star: usize) -> usize {
+        let max = costmodel::max_unit_nnz(op) + 1;
+        let mut candidates: Vec<usize> = [star.saturating_sub(1).max(1), star, star + 1]
+            .into_iter()
+            .map(|t| t.min(max))
+            .collect();
+        candidates.dedup();
+        if candidates.len() <= 1 {
+            return star;
+        }
+        let slice = sample_window_slice(m, PROBE_WINDOWS);
+        let probe = slice.as_ref().unwrap_or(m);
+        let n_probe = n.clamp(1, PROBE_N);
+        let mut best = (f64::MAX, star);
+        for &theta in &candidates {
+            let params = self.params_for_theta(op, theta);
+            let secs = match op {
+                Op::Spmm => self.measure_spmm(probe, &params, n_probe),
+                Op::Sddmm => self.measure_sddmm(probe, &params, n_probe),
+            };
+            if secs < best.0 {
+                best = (secs, theta);
+            }
+        }
+        best.1
+    }
+
+    fn measure_spmm(&self, m: &Csr, params: &DistParams, n: usize) -> f64 {
+        let mut rng = SplitMix64::new(0x5eed_7e57);
+        let b = Dense::random(&mut rng, m.cols, n);
+        let mut exec = SpmmExecutor::new(m, params, &self.balance, TcBackend::NativeBitmap);
+        exec.threading = Threading::Inline;
+        exec.flex_threads = 1;
+        let mut out = Dense::zeros(m.rows, n);
+        let mut run = || {
+            out.data.fill(0.0);
+            exec.execute_into(&b, &mut out).expect("probe execution");
+        };
+        run(); // warm
+        let mut best = f64::MAX;
+        for _ in 0..2 {
+            let t = std::time::Instant::now();
+            run();
+            best = best.min(t.elapsed().as_secs_f64());
+        }
+        best
+    }
+
+    fn measure_sddmm(&self, m: &Csr, params: &DistParams, k: usize) -> f64 {
+        let mut rng = SplitMix64::new(0x5eed_7e58);
+        let a = Dense::random(&mut rng, m.rows, k);
+        let b = Dense::random(&mut rng, m.cols, k);
+        // probe the schedule this planner would actually build
+        // (matching the SpMM probe, which threads self.balance too)
+        let plan = preprocess_sddmm(m, params, &self.balance, PrepMode::Sequential);
+        let mut exec = SddmmExecutor::from_plan(plan, m.clone(), TcBackend::NativeBitmap);
+        exec.threading = Threading::Inline;
+        exec.flex_threads = 1;
+        exec.execute(&a, &b).expect("probe execution"); // warm
+        let mut best = f64::MAX;
+        for _ in 0..2 {
+            let t = std::time::Instant::now();
+            std::hint::black_box(exec.execute(&a, &b).expect("probe execution"));
+            best = best.min(t.elapsed().as_secs_f64());
+        }
+        best
+    }
+}
+
+/// Merge per-member unit histograms of a window-aligned batch — the
+/// supermatrix tuning input, attributable per member. Equals
+/// histogramming the supermatrix directly (padding rows contribute
+/// nothing; windows are member-local).
+pub fn merged_batch_histogram(batch: &GraphBatch, op: Op) -> Vec<usize> {
+    let mut merged = vec![0usize; costmodel::max_unit_nnz(op) + 1];
+    for i in 0..batch.len() {
+        let w = batch.member_window_range(i);
+        let hist = match op {
+            Op::Spmm => costmodel::vector_histogram_range(&batch.matrix, w.start, w.end),
+            Op::Sddmm => costmodel::block_histogram_range(&batch.matrix, w.start, w.end),
+        };
+        for (m, h) in merged.iter_mut().zip(&hist) {
+            *m += h;
+        }
+    }
+    merged
+}
+
+/// Human-readable resolved θ: the flex-only sentinel (`usize::MAX`,
+/// from [`DistParams::flex_only`]) renders as `"flex"`. The one
+/// formatting rule shared by the CLI, the benches, and the serving
+/// metrics display.
+pub fn fmt_theta(threshold: usize) -> String {
+    if threshold == usize::MAX {
+        "flex".into()
+    } else {
+        threshold.to_string()
+    }
+}
+
+/// Evenly strided window sample of `m`, at most `max_windows` windows
+/// concatenated into an independent CSR (columns unchanged). `None`
+/// when the matrix is already small enough to probe whole.
+fn sample_window_slice(m: &Csr, max_windows: usize) -> Option<Csr> {
+    let nwin = m.rows.div_ceil(WINDOW);
+    if nwin <= max_windows {
+        return None;
+    }
+    let stride = nwin.div_ceil(max_windows);
+    let mut row_ptr: Vec<u32> = vec![0];
+    let mut col_idx: Vec<u32> = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
+    for w in (0..nwin).step_by(stride) {
+        let lo = w * WINDOW;
+        let hi = ((w + 1) * WINDOW).min(m.rows);
+        for r in lo..hi {
+            let (cols, vals) = m.row(r);
+            col_idx.extend_from_slice(cols);
+            values.extend_from_slice(vals);
+            row_ptr.push(col_idx.len() as u32);
+        }
+    }
+    Some(Csr { rows: row_ptr.len() - 1, cols: m.cols, row_ptr, col_idx, values })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::util::propcheck::{check, Config};
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn policy_parsing_round_trips() {
+        assert_eq!(ThetaPolicy::parse("auto"), Some(ThetaPolicy::Auto));
+        assert_eq!(ThetaPolicy::parse("auto-refined"), Some(ThetaPolicy::AutoRefined));
+        assert_eq!(ThetaPolicy::parse("5"), Some(ThetaPolicy::Fixed(5)));
+        assert_eq!(ThetaPolicy::parse("0"), None);
+        assert_eq!(ThetaPolicy::parse("fast"), None);
+        assert_eq!(ThetaPolicy::Auto.to_string(), "auto");
+        assert_eq!(ThetaPolicy::Fixed(3).to_string(), "3");
+        assert_eq!(ThetaPolicy::default(), ThetaPolicy::Auto);
+    }
+
+    #[test]
+    fn fixed_policy_normalizes_out_of_range_theta() {
+        let p = Planner::new(ThetaPolicy::Fixed(3));
+        let mut rng = SplitMix64::new(900);
+        let m = gen::uniform_random(&mut rng, 40, 40, 0.2);
+        assert_eq!(p.resolve(&m, Op::Spmm, 16).threshold, 3);
+        let wild = Planner::new(ThetaPolicy::Fixed(99));
+        assert_eq!(wild.resolve(&m, Op::Spmm, 16), DistParams::flex_only());
+        // 99 is a valid SDDMM block threshold (max 128)
+        assert_eq!(wild.resolve(&m, Op::Sddmm, 16).threshold, 99);
+    }
+
+    #[test]
+    fn auto_matches_direct_tuner_call() {
+        let p = Planner::new(ThetaPolicy::Auto);
+        let mut rng = SplitMix64::new(901);
+        let m = gen::power_law(&mut rng, 300, 8.0, 2.0);
+        for (op, n) in [(Op::Spmm, 64), (Op::Sddmm, 32)] {
+            let hist = costmodel::unit_histogram(&m, op);
+            let want = p.params_for_theta(op, costmodel::tune_threshold(&p.hw, op, &hist, n));
+            assert_eq!(p.resolve(&m, op, n), want);
+        }
+    }
+
+    #[test]
+    fn auto_refined_stays_near_the_model_optimum() {
+        let p = Planner::new(ThetaPolicy::AutoRefined);
+        let mut rng = SplitMix64::new(902);
+        let m = gen::column_clustered(&mut rng, 512, 512, 8000, 0.5, 5);
+        for (op, n) in [(Op::Spmm, 32), (Op::Sddmm, 16)] {
+            let hist = costmodel::unit_histogram(&m, op);
+            let star = costmodel::tune_threshold(&p.hw, op, &hist, n);
+            let refined = p.resolve(&m, op, n);
+            // the probe may move θ by at most one step off θ*
+            let near: Vec<DistParams> = [star.saturating_sub(1).max(1), star, star + 1]
+                .into_iter()
+                .map(|t| p.params_for_theta(op, t))
+                .collect();
+            assert!(near.contains(&refined), "refined {refined:?} not near θ*={star}");
+        }
+    }
+
+    #[test]
+    fn planned_outputs_are_valid_plans() {
+        check(Config::default().cases(8), "planner output covers matrix", |rng| {
+            let m = gen::uniform_random(rng, rng.range(1, 120), rng.range(1, 90), 0.1);
+            let p = Planner::new(ThetaPolicy::Auto);
+            let (spmm, d) = p.plan_spmm(&m, 16);
+            spmm.dist.validate_cover(&m).unwrap();
+            assert_eq!(d, p.resolve(&m, Op::Spmm, 16), "resolution must be deterministic");
+            let (sddmm, _) = p.plan_sddmm(&m, 16);
+            sddmm.dist.validate_cover(&m).unwrap();
+            assert_eq!(sddmm.sched.flex_elems(), sddmm.dist.flex_vals.len());
+        });
+    }
+
+    #[test]
+    fn non_default_planner_threads_profile_balance_and_mode_through() {
+        // the builder surface must actually steer resolution and
+        // planning: an H100 profile shifts θ down vs the substrate,
+        // custom balance params shape both ops' schedules, and the
+        // parallel prep mode yields the identical plan
+        let mut rng = SplitMix64::new(906);
+        let m = gen::power_law(&mut rng, 400, 10.0, 2.0);
+        let tight = BalanceParams { ts: 2, cs: 8, short_len: 2, enabled: true };
+        let p = Planner::new(ThetaPolicy::Auto)
+            .with_hw(HardwareProfile::h100())
+            .with_balance(tight)
+            .with_mode(PrepMode::Parallel);
+        let d = p.resolve(&m, Op::Spmm, 128);
+        let substrate = Planner::new(ThetaPolicy::Auto).resolve(&m, Op::Spmm, 128);
+        assert!(
+            d.threshold <= substrate.threshold,
+            "h100's 15x peak ratio must not tune a higher θ than the substrate \
+             ({:?} vs {:?})",
+            d.threshold,
+            substrate.threshold
+        );
+        let (plan, dp) = p.plan_spmm(&m, 128);
+        assert_eq!(dp, d);
+        let seq = preprocess_spmm(&m, &d, &tight, PrepMode::Sequential);
+        assert_eq!(plan.dist.tc.bitmaps, seq.dist.tc.bitmaps, "parallel mode must match");
+        let (splan, _) = p.plan_sddmm(&m, 32);
+        for t in &splan.sched.long_tiles {
+            assert!((t.elem_end - t.elem_start) as usize <= tight.cs);
+        }
+        // a fixed-θ planner with the same knobs exercises the TC-side
+        // bound (auto may resolve flex-only on this substrate-sized
+        // matrix, leaving no blocks to decompose)
+        let pf = Planner::new(ThetaPolicy::Fixed(2)).with_balance(tight);
+        let (plan_f, df) = pf.plan_spmm(&m, 128);
+        assert_eq!(df.threshold, 2);
+        assert!(!plan_f.sched.tc_segments.is_empty());
+        for seg in &plan_f.sched.tc_segments {
+            assert!((seg.block_end - seg.block_start) as usize <= tight.ts);
+        }
+        // AutoRefined with custom balance probes without panicking
+        let pr = Planner::new(ThetaPolicy::AutoRefined).with_balance(tight);
+        let refined = pr.resolve(&m, Op::Sddmm, 16);
+        let _ = preprocess_sddmm(&m, &refined, &tight, PrepMode::Sequential);
+    }
+
+    #[test]
+    fn merged_batch_histogram_equals_supermatrix_histogram() {
+        check(Config::default().cases(10), "member hists merge to supermatrix", |rng| {
+            let members: Vec<crate::sparse::Csr> = (0..rng.range(1, 6))
+                .map(|_| gen::uniform_random(rng, rng.range(1, 50), rng.range(1, 40), 0.15))
+                .collect();
+            let batch = GraphBatch::compose(&members).unwrap();
+            for op in [Op::Spmm, Op::Sddmm] {
+                let merged = merged_batch_histogram(&batch, op);
+                let whole = costmodel::unit_histogram(&batch.matrix, op);
+                assert_eq!(merged, whole, "{op:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn auto_theta_is_model_optimal_against_both_extremes() {
+        // Deterministic half of the satellite property: the tuned θ's
+        // *predicted* hybrid time can never exceed the predictions for
+        // tc-only (θ = 1) or flex-only (sentinel) — the tuner minimizes
+        // over a candidate set containing both.
+        check(Config::default().cases(12), "auto-θ predicted ≤ extremes", |rng| {
+            let m = gen::uniform_random(rng, rng.range(8, 200), rng.range(8, 160), 0.1);
+            let p = Planner::new(ThetaPolicy::Auto);
+            for (op, n) in [(Op::Spmm, 32), (Op::Sddmm, 16)] {
+                let hist = costmodel::unit_histogram(&m, op);
+                let star = costmodel::tune_threshold(&p.hw, op, &hist, n);
+                let t = |theta| costmodel::predict_hybrid_time(&p.hw, op, &hist, n, theta);
+                let auto = t(star);
+                assert!(auto <= t(1) + 1e-18, "{op:?}: auto worse than tc-only");
+                let sentinel = costmodel::max_unit_nnz(op) + 1;
+                assert!(auto <= t(sentinel) + 1e-18, "{op:?}: auto worse than flex-only");
+            }
+        });
+    }
+
+    #[test]
+    fn auto_theta_throughput_not_worse_than_worst_extreme() {
+        // Measured half of the satellite property: auto-θ execution is
+        // never (meaningfully) slower than the *worse* of flex-only /
+        // tc-only. The bound is generous — the worse extreme is
+        // normally several times slower than a good hybrid — and the
+        // 1.5x slack plus min-of-5 timing keeps CI noise out.
+        let mut rng = SplitMix64::new(903);
+        let mats = [
+            gen::column_clustered(&mut rng, 512, 512, 9000, 0.5, 5),
+            gen::power_law(&mut rng, 512, 10.0, 2.2),
+            gen::banded(&mut rng, 384, 5, 0.8),
+        ];
+        let planner = Planner::new(ThetaPolicy::Auto);
+        let time_spmm = |params: &DistParams, m: &Csr, b: &Dense| {
+            let mut e =
+                SpmmExecutor::new(m, params, &BalanceParams::default(), TcBackend::NativeBitmap);
+            e.threading = Threading::Inline;
+            e.flex_threads = 1;
+            let mut out = Dense::zeros(m.rows, b.cols);
+            let mut best = f64::MAX;
+            for _ in 0..5 {
+                out.data.fill(0.0);
+                let t = std::time::Instant::now();
+                e.execute_into(b, &mut out).unwrap();
+                best = best.min(t.elapsed().as_secs_f64());
+            }
+            best
+        };
+        let time_sddmm = |params: &DistParams, m: &Csr, a: &Dense, b: &Dense| {
+            let mut e = SddmmExecutor::new(m, params, TcBackend::NativeBitmap);
+            e.threading = Threading::Inline;
+            e.flex_threads = 1;
+            let mut best = f64::MAX;
+            for _ in 0..5 {
+                let t = std::time::Instant::now();
+                std::hint::black_box(e.execute(a, b).unwrap());
+                best = best.min(t.elapsed().as_secs_f64());
+            }
+            best
+        };
+        for m in &mats {
+            let mut rng = SplitMix64::new(904);
+            let b = Dense::random(&mut rng, m.cols, 32);
+            let auto = planner.resolve(m, Op::Spmm, 32);
+            let t_auto = time_spmm(&auto, m, &b);
+            let worst = time_spmm(&DistParams::flex_only(), m, &b)
+                .max(time_spmm(&DistParams::tc_only(), m, &b));
+            assert!(
+                t_auto <= worst * 1.5,
+                "spmm auto-θ {:?} took {t_auto:.6}s vs worst extreme {worst:.6}s",
+                auto.threshold
+            );
+            let a = Dense::random(&mut rng, m.rows, 16);
+            let bb = Dense::random(&mut rng, m.cols, 16);
+            let auto_s = planner.resolve(m, Op::Sddmm, 16);
+            let t_auto = time_sddmm(&auto_s, m, &a, &bb);
+            let worst = time_sddmm(&DistParams::flex_only(), m, &a, &bb)
+                .max(time_sddmm(&DistParams::tc_only(), m, &a, &bb));
+            assert!(
+                t_auto <= worst * 1.5,
+                "sddmm auto-θ {:?} took {t_auto:.6}s vs worst extreme {worst:.6}s",
+                auto_s.threshold
+            );
+        }
+    }
+
+    #[test]
+    fn window_slice_sampling() {
+        let mut rng = SplitMix64::new(905);
+        let m = gen::uniform_random(&mut rng, 1000, 64, 0.05);
+        let s = sample_window_slice(&m, 48).expect("1000 rows should be sampled");
+        s.validate().unwrap();
+        assert!(s.rows <= 48 * WINDOW);
+        assert!(s.rows >= 8, "sample must keep a representative slice");
+        assert_eq!(s.cols, m.cols);
+        // small matrices are probed whole
+        let tiny = gen::uniform_random(&mut rng, 64, 32, 0.1);
+        assert!(sample_window_slice(&tiny, 48).is_none());
+    }
+}

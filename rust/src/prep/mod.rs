@@ -5,8 +5,17 @@
 //! substrate analog of the paper's GPU-accelerated preprocessing vs
 //! the OpenMP CPU baseline in Table 8). Both paths produce bit-for-bit
 //! identical plans; only wall-clock differs.
+//!
+//! Both operators emit a complete plan — [`SpmmPlan`] and
+//! [`SddmmPlan`] are structural mirrors (distribution + balanced
+//! schedule, `plan_bytes`/`workspace_bytes`), and both have batched
+//! counterparts ([`preprocess_spmm_batch`] /
+//! [`preprocess_sddmm_batch`]). θ selection is not done here: callers
+//! either pass explicit [`DistParams`] or go through
+//! [`crate::planner::Planner`], which resolves them from the cost
+//! model.
 
-use crate::balance::{balance_spmm, BalanceParams, SpmmSchedule};
+use crate::balance::{balance_sddmm, balance_spmm, BalanceParams, SddmmSchedule, SpmmSchedule};
 use crate::dist::spmm::{assemble, distribute_window, SpmmDist, WindowOut};
 use crate::dist::{distribute_sddmm, DistParams, DistStats, SddmmDist};
 use crate::format::WINDOW;
@@ -54,6 +63,36 @@ impl SpmmPlan {
             bytes += (WINDOW * self.dist.tc.k + WINDOW * n) * 4; // tile + acc
         }
         bytes
+    }
+}
+
+/// Complete preprocessed SDDMM plan — the structural mirror of
+/// [`SpmmPlan`]: a 2D-aware distribution plus a balanced schedule of
+/// bounded dispatch segments, cacheable by the serving layer and
+/// executable via `SddmmExecutor::from_plan` with zero re-planning.
+#[derive(Debug, Clone)]
+pub struct SddmmPlan {
+    pub dist: SddmmDist,
+    pub sched: SddmmSchedule,
+}
+
+impl SddmmPlan {
+    /// Estimated resident bytes of the plan (distribution arrays plus
+    /// schedule segments) — the eviction unit of `serve::PlanCache`.
+    pub fn plan_bytes(&self) -> usize {
+        self.dist.plan_bytes() + self.sched.sched_bytes()
+    }
+
+    /// Bytes of execution workspace one call on this plan needs.
+    /// Always 0: SDDMM writes each nonzero exactly once, so the hybrid
+    /// streams need no privatization buffer and no per-stream scratch
+    /// rows, and the native structured kernels stage nothing (the PJRT
+    /// backend's pack buffers are sized by its artifact buckets, not by
+    /// the plan). Kept as a method for symmetry with
+    /// [`SpmmPlan::workspace_bytes`] so the serving layer can price any
+    /// plan kind uniformly.
+    pub fn workspace_bytes(&self) -> usize {
+        0
     }
 }
 
@@ -134,7 +173,8 @@ pub fn preprocess_spmm_batch(
 fn batch_segment(batch: &GraphBatch, plan: &SpmmPlan, i: usize) -> BatchSegment {
     let (rows, cols) = batch.member_shape(i);
     let span = batch.padded_row_range(i);
-    let (window_lo, window_hi) = (span.start / WINDOW, span.end / WINDOW);
+    let windows = batch.member_window_range(i);
+    let (window_lo, window_hi) = (windows.start, windows.end);
     // blocks are emitted window-major, so the member's blocks are one
     // contiguous run locatable by binary search
     let window_of = &plan.dist.tc.window_of;
@@ -208,11 +248,16 @@ pub fn distribute_spmm_parallel_with(m: &Csr, params: &DistParams, workers: usiz
     assemble(m.rows, m.cols, m.nnz(), &outs)
 }
 
-/// Preprocess an SDDMM workload. (Distribution is window-local, so the
-/// parallel path chunks windows the same way; SDDMM has no balancing
-/// arrays beyond chunking, which the executor does at dispatch.)
-pub fn preprocess_sddmm(m: &Csr, dist_params: &DistParams, mode: PrepMode) -> SddmmDist {
-    match mode {
+/// Preprocess an SDDMM workload: distribution (window-local, so the
+/// parallel path chunks windows the same way) followed by the balanced
+/// schedule — full parity with [`preprocess_spmm`].
+pub fn preprocess_sddmm(
+    m: &Csr,
+    dist_params: &DistParams,
+    balance_params: &BalanceParams,
+    mode: PrepMode,
+) -> SddmmPlan {
+    let dist = match mode {
         PrepMode::Sequential => distribute_sddmm(m, dist_params),
         PrepMode::Parallel => {
             // window-parallel variant: SDDMM distribution is already
@@ -220,6 +265,79 @@ pub fn preprocess_sddmm(m: &Csr, dist_params: &DistParams, mode: PrepMode) -> Sd
             // merge by concatenation (indices are global already).
             distribute_sddmm_parallel(m, dist_params)
         }
+    };
+    let sched = balance_sddmm(&dist, balance_params);
+    SddmmPlan { dist, sched }
+}
+
+/// One preprocessed plan for a whole [`GraphBatch`] of SDDMM members:
+/// a single distribution + balance pass over the block-diagonal
+/// supermatrix with per-member segment metadata — [`BatchPlan`]'s
+/// SDDMM counterpart.
+#[derive(Debug, Clone)]
+pub struct SddmmBatchPlan {
+    pub plan: SddmmPlan,
+    pub segments: Vec<BatchSegment>,
+}
+
+/// Preprocess a batched SDDMM workload: one distribution + balancing
+/// pass over the supermatrix, then the per-member segment table
+/// (window-alignment makes every number exactly what standalone
+/// preprocessing of the member would report).
+pub fn preprocess_sddmm_batch(
+    batch: &GraphBatch,
+    dist_params: &DistParams,
+    balance_params: &BalanceParams,
+    mode: PrepMode,
+) -> SddmmBatchPlan {
+    assert!(
+        batch.is_window_aligned(),
+        "SddmmBatchPlan segment stats require a window-aligned batch (GraphBatch::compose)"
+    );
+    let plan = preprocess_sddmm(&batch.matrix, dist_params, balance_params, mode);
+    let segments = (0..batch.len()).map(|i| sddmm_batch_segment(batch, &plan, i)).collect();
+    SddmmBatchPlan { plan, segments }
+}
+
+fn sddmm_batch_segment(batch: &GraphBatch, plan: &SddmmPlan, i: usize) -> BatchSegment {
+    let (rows, cols) = batch.member_shape(i);
+    let span = batch.padded_row_range(i);
+    let windows = batch.member_window_range(i);
+    // blocks are emitted window-major: one contiguous run per member
+    let window_of = &plan.dist.tc.window_of;
+    let b_lo = window_of.partition_point(|&w| (w as usize) < windows.start);
+    let b_hi = window_of.partition_point(|&w| (w as usize) < windows.end);
+    let nnz_tc = (plan.dist.tc.val_ptr[b_hi] - plan.dist.tc.val_ptr[b_lo]) as usize;
+    // the flexible stream is row-major, so the member's elements are a
+    // contiguous run locatable by binary search on the row array
+    let flex_rows = &plan.dist.flex_rows;
+    let f_lo = flex_rows.partition_point(|&r| (r as usize) < span.start);
+    let f_hi = flex_rows.partition_point(|&r| (r as usize) < span.end);
+    let n_blocks = b_hi - b_lo;
+    let capacity = n_blocks * WINDOW * plan.dist.tc.k;
+    let stats = DistStats {
+        nnz_total: batch.nnz_range(i).len(),
+        nnz_tc,
+        nnz_flex: f_hi - f_lo,
+        n_blocks,
+        n_windows: windows.end - windows.start,
+        padding_ratio: if capacity == 0 {
+            0.0
+        } else {
+            1.0 - nnz_tc as f64 / capacity as f64
+        },
+    };
+    let in_windows = |w: u32| windows.contains(&(w as usize));
+    let in_rows = |r: u32| span.contains(&(r as usize));
+    BatchSegment {
+        rows,
+        cols,
+        window_lo: windows.start,
+        window_hi: windows.end,
+        stats,
+        tc_segments: plan.sched.tc_segments.iter().filter(|s| in_windows(s.window)).count(),
+        long_tiles: plan.sched.long_tiles.iter().filter(|t| in_rows(t.row)).count(),
+        short_tiles: plan.sched.short_tiles.iter().filter(|t| in_rows(t.row)).count(),
     }
 }
 
@@ -431,6 +549,61 @@ mod tests {
                 let seg = &bp.segments[i];
                 assert_eq!((seg.rows, seg.cols), (m.rows, m.cols));
                 let standalone = preprocess_spmm(m, &d, &b, PrepMode::Sequential);
+                assert_eq!(seg.stats, standalone.dist.stats, "member {i} dist stats");
+                assert_eq!(seg.tc_segments, standalone.sched.tc_segments.len(), "member {i}");
+                assert_eq!(seg.long_tiles, standalone.sched.long_tiles.len(), "member {i}");
+                assert_eq!(seg.short_tiles, standalone.sched.short_tiles.len(), "member {i}");
+            }
+            // member slices tile the supermatrix plan exactly
+            let nnz_tc: usize = bp.segments.iter().map(|s| s.stats.nnz_tc).sum();
+            let nnz_flex: usize = bp.segments.iter().map(|s| s.stats.nnz_flex).sum();
+            assert_eq!(nnz_tc, bp.plan.dist.stats.nnz_tc);
+            assert_eq!(nnz_flex, bp.plan.dist.stats.nnz_flex);
+            let segs: usize = bp.segments.iter().map(|s| s.tc_segments).sum();
+            assert_eq!(segs, bp.plan.sched.tc_segments.len());
+        });
+    }
+
+    #[test]
+    fn sddmm_plan_includes_schedule() {
+        let mut rng = SplitMix64::new(158);
+        let m = gen::power_law(&mut rng, 400, 10.0, 2.0);
+        let plan = preprocess_sddmm(
+            &m,
+            &DistParams::sddmm_default(),
+            &BalanceParams::default(),
+            PrepMode::Parallel,
+        );
+        assert_eq!(plan.sched.flex_elems(), plan.dist.flex_vals.len());
+        let covered: usize =
+            plan.sched.tc_segments.iter().map(|s| (s.block_end - s.block_start) as usize).sum();
+        assert_eq!(covered, plan.dist.tc.n_blocks());
+        assert!(plan.plan_bytes() >= plan.dist.plan_bytes());
+        assert_eq!(plan.workspace_bytes(), 0);
+    }
+
+    #[test]
+    fn sddmm_batch_member_stats_equal_standalone_prep() {
+        // SDDMM parity with `batch_member_stats_equal_standalone`: one
+        // pass over the supermatrix reports per member exactly what a
+        // standalone preprocess would.
+        check(Config::default().cases(12), "sddmm batch stats == standalone", |rng| {
+            let members: Vec<_> = (0..rng.range(1, 5))
+                .map(|_| {
+                    let rows = rng.range(1, 60);
+                    let cols = rng.range(1, 50);
+                    gen::uniform_random(rng, rows, cols, 0.12)
+                })
+                .collect();
+            let batch = crate::sparse::GraphBatch::compose(&members).unwrap();
+            let d = DistParams { threshold: rng.range(1, 48), fill_padding: true };
+            let b = BalanceParams::default();
+            let bp = preprocess_sddmm_batch(&batch, &d, &b, PrepMode::Sequential);
+            assert_eq!(bp.segments.len(), members.len());
+            for (i, m) in members.iter().enumerate() {
+                let seg = &bp.segments[i];
+                assert_eq!((seg.rows, seg.cols), (m.rows, m.cols));
+                let standalone = preprocess_sddmm(m, &d, &b, PrepMode::Sequential);
                 assert_eq!(seg.stats, standalone.dist.stats, "member {i} dist stats");
                 assert_eq!(seg.tc_segments, standalone.sched.tc_segments.len(), "member {i}");
                 assert_eq!(seg.long_tiles, standalone.sched.long_tiles.len(), "member {i}");

@@ -16,8 +16,8 @@
 //! the cold-path benches are driven.
 
 use crate::balance::BalanceParams;
-use crate::dist::{DistParams, Op, SddmmDist};
-use crate::prep::SpmmPlan;
+use crate::dist::{DistParams, Op};
+use crate::prep::{SddmmPlan, SpmmPlan};
 use crate::sparse::{Csr, PatternFingerprint};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -29,11 +29,15 @@ use std::sync::{Arc, Mutex};
 pub struct PlanKey {
     pub fp: PatternFingerprint,
     pub op: Op,
-    /// θ, from [`DistParams::threshold`].
+    /// θ, from [`DistParams::threshold`]. When a request resolved this
+    /// under an auto policy, the key carries the *resolved* value —
+    /// the provenance that makes a pattern tuned once a warm hit
+    /// forever (and makes `Fixed(θ*)` and auto-resolved-θ* requests
+    /// share one plan).
     pub threshold: usize,
     pub fill_padding: bool,
-    /// Balancing parameters (SpMM; fixed zeros for SDDMM, whose
-    /// chunking happens at dispatch and needs no cached state).
+    /// Balancing parameters (both ops: SpMM and SDDMM schedules are
+    /// cached fully balanced).
     pub ts: usize,
     pub cs: usize,
     pub short_len: usize,
@@ -54,7 +58,7 @@ impl PlanKey {
         }
     }
 
-    pub fn sddmm(fp: PatternFingerprint, d: &DistParams) -> Self {
+    pub fn sddmm(fp: PatternFingerprint, d: &DistParams, b: &BalanceParams) -> Self {
         Self {
             fp,
             op: Op::Sddmm,
@@ -63,25 +67,26 @@ impl PlanKey {
             // unit is already the whole block): normalize it out of
             // the key so identical plans share one entry
             fill_padding: false,
-            ts: 0,
-            cs: 0,
-            short_len: 0,
-            balance_enabled: false,
+            ts: b.ts,
+            cs: b.cs,
+            short_len: b.short_len,
+            balance_enabled: b.enabled,
         }
     }
 }
 
-/// Cached SDDMM state: the distribution plus the pattern CSR whose
-/// `row_ptr`/`col_idx` the output reuses.
+/// Cached SDDMM state: the balanced plan plus the pattern CSR whose
+/// `row_ptr`/`col_idx` the output reuses. A warm hit hands back the
+/// complete schedule — zero re-distribution *and* zero re-balancing.
 #[derive(Debug, Clone)]
 pub struct SddmmEntry {
-    pub dist: SddmmDist,
+    pub plan: SddmmPlan,
     pub pattern: Csr,
 }
 
 impl SddmmEntry {
     pub fn bytes(&self) -> usize {
-        self.dist.plan_bytes()
+        self.plan.plan_bytes()
             + self.pattern.row_ptr.len() * 4
             + self.pattern.col_idx.len() * 4
             + self.pattern.values.len() * 4
@@ -328,7 +333,11 @@ mod tests {
         let d2 = DistParams { threshold: 5, ..d1 };
         let b = BalanceParams::default();
         assert_ne!(PlanKey::spmm(fp, &d1, &b), PlanKey::spmm(fp, &d2, &b));
-        assert_ne!(PlanKey::spmm(fp, &d1, &b), PlanKey::sddmm(fp, &d1));
+        assert_ne!(PlanKey::spmm(fp, &d1, &b), PlanKey::sddmm(fp, &d1, &b));
         assert_eq!(PlanKey::spmm(fp, &d1, &b), PlanKey::spmm(fp, &d1, &b));
+        // sddmm keys separate balance parameters too (the cached plan
+        // now embeds the balanced schedule)
+        let b2 = BalanceParams { ts: 7, ..b };
+        assert_ne!(PlanKey::sddmm(fp, &d1, &b), PlanKey::sddmm(fp, &d1, &b2));
     }
 }

@@ -12,7 +12,9 @@
 //! neither engine stream sits idle.
 
 use super::cache::CacheStats;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// Cumulative serving counters (shared across the worker pool).
@@ -43,6 +45,16 @@ pub struct ServeMetrics {
     /// on top of what the plan cache itself holds
     /// (`prep::SpmmPlan::workspace_bytes` is the a-priori estimate).
     pub peak_worker_workspace_bytes: AtomicU64,
+    /// Auto-θ resolutions that ran the cost model (histogram + tuner,
+    /// possibly a measured probe): at most one per distinct
+    /// (pattern, op, width) thanks to the engine's provenance memo.
+    pub theta_tuned: AtomicU64,
+    /// Auto-θ resolutions answered by the provenance memo (pattern
+    /// tuned before — zero re-tuning).
+    pub theta_memo_hits: AtomicU64,
+    /// Resolved-θ distribution: how many requests were served at each
+    /// effective threshold (`usize::MAX` = flexible-only).
+    theta_hist: Mutex<BTreeMap<usize, u64>>,
 }
 
 impl ServeMetrics {
@@ -59,6 +71,9 @@ impl ServeMetrics {
             exec_nanos: AtomicU64::new(0),
             busy_nanos: AtomicU64::new(0),
             peak_worker_workspace_bytes: AtomicU64::new(0),
+            theta_tuned: AtomicU64::new(0),
+            theta_memo_hits: AtomicU64::new(0),
+            theta_hist: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -70,6 +85,11 @@ impl ServeMetrics {
     #[inline]
     pub fn max(&self, field: &AtomicU64, v: u64) {
         field.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record the effective θ one request resolved to.
+    pub fn record_theta(&self, theta: usize) {
+        *self.theta_hist.lock().unwrap().entry(theta).or_insert(0) += 1;
     }
 
     /// Seconds since the metrics (i.e. the engine) came up.
@@ -108,6 +128,9 @@ impl ServeMetrics {
             elapsed_secs: elapsed,
             workers,
             peak_worker_workspace_bytes: load(&self.peak_worker_workspace_bytes),
+            theta_tuned: load(&self.theta_tuned),
+            theta_memo_hits: load(&self.theta_memo_hits),
+            theta_dist: self.theta_hist.lock().unwrap().iter().map(|(&t, &c)| (t, c)).collect(),
             cache,
         }
     }
@@ -121,7 +144,7 @@ impl Default for ServeMetrics {
 
 /// Plain snapshot of the serving state, as returned by
 /// `serve::Engine::report`.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct MetricsReport {
     pub requests: u64,
     pub errors: u64,
@@ -138,6 +161,13 @@ pub struct MetricsReport {
     pub workers: usize,
     /// Peak per-worker execution-workspace residency, bytes.
     pub peak_worker_workspace_bytes: u64,
+    /// Cost-model tuning runs (auto-θ cold resolutions).
+    pub theta_tuned: u64,
+    /// Provenance-memo answers (auto-θ with zero re-tuning).
+    pub theta_memo_hits: u64,
+    /// Resolved-θ distribution: `(θ, requests served at θ)`, ascending
+    /// (`usize::MAX` = flexible-only).
+    pub theta_dist: Vec<(usize, u64)>,
     pub cache: CacheStats,
 }
 
@@ -172,6 +202,19 @@ impl std::fmt::Display for MetricsReport {
             "prep paths: {} full (cold), {} set_values (warm), {} admission batches",
             self.prep_full, self.prep_fast, self.batches
         )?;
+        let dist = self
+            .theta_dist
+            .iter()
+            .map(|&(t, c)| format!("{}:{c}", crate::planner::fmt_theta(t)))
+            .collect::<Vec<_>>()
+            .join(" ");
+        writeln!(
+            f,
+            "auto-θ: {} tuned, {} memo hits; resolved-θ distribution [{}]",
+            self.theta_tuned,
+            self.theta_memo_hits,
+            if dist.is_empty() { "-".to_string() } else { dist }
+        )?;
         write!(
             f,
             "resident memory: peak worker workspace {:.1} KiB (plans budgeted by the cache)",
@@ -193,6 +236,11 @@ mod tests {
         m.add(&m.exec_nanos, 2_000_000);
         m.add(&m.prep_full, 1);
         m.add(&m.prep_fast, 3);
+        m.add(&m.theta_tuned, 1);
+        m.add(&m.theta_memo_hits, 3);
+        m.record_theta(5);
+        m.record_theta(5);
+        m.record_theta(usize::MAX);
         let r = m.report(2, CacheStats { hits: 3, misses: 1, ..Default::default() });
         assert_eq!(r.requests, 4);
         assert!((r.mean_queue_ms - 2.0).abs() < 1e-9);
@@ -201,9 +249,14 @@ mod tests {
         assert!((r.cache.hit_rate() - 0.75).abs() < 1e-12);
         assert!(r.occupancy >= 0.0 && r.occupancy <= 1.0);
         assert!(r.throughput_rps > 0.0);
+        assert_eq!(r.theta_tuned, 1);
+        assert_eq!(r.theta_memo_hits, 3);
+        assert_eq!(r.theta_dist, vec![(5, 2), (usize::MAX, 1)]);
         // Display renders without panicking and mentions the hit rate
+        // and the resolved-θ distribution
         let text = format!("{r}");
         assert!(text.contains("75.0% hit rate"));
+        assert!(text.contains("[5:2 flex:1]"), "{text}");
     }
 
     #[test]

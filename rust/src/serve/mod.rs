@@ -14,7 +14,9 @@
 //!   whole preprocessing pipeline with an O(nnz) `set_values` refresh.
 //! * [`session`] — the [`Engine::submit`] API: requests carry an op
 //!   kind, a matrix (or a handle to a cached pattern + new values),
-//!   dense operands, and optional θ / balancing overrides.
+//!   dense operands, a [`crate::planner::ThetaPolicy`] (default
+//!   `Auto`: the cost model tunes θ per pattern, memoized as PlanKey
+//!   provenance), and optional explicit θ / balancing overrides.
 //! * [`sched`] — a fixed worker pool over one shared FIFO queue with
 //!   batched admission for same-pattern requests and an occupancy
 //!   tracker that divides the machine's threads among busy workers

@@ -24,6 +24,7 @@
 
 use super::session::{Engine, Request};
 use crate::dist::DistParams;
+use crate::planner::ThetaPolicy;
 use crate::sparse::{Csr, Dense, GraphBatch};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -169,14 +170,25 @@ pub struct MicroBatchParams {
     /// or not the byte bound was reached — the latency a request is
     /// willing to trade for coalescing.
     pub linger: Duration,
-    /// θ override forwarded to every batched submission (`None` asks
-    /// the cost model, exactly like a direct [`Request::spmm`]).
+    /// θ policy for the batched supermatrix submissions. Under `Auto`
+    /// the engine tunes on the supermatrix histogram — which, for the
+    /// window-aligned batches the composer builds, *is* the merge of
+    /// the members' histograms.
+    pub theta: ThetaPolicy,
+    /// Explicit `DistParams` override forwarded to every batched
+    /// submission (bypasses the policy, exactly like a direct
+    /// [`Request::with_dist`]).
     pub dist: Option<DistParams>,
 }
 
 impl Default for MicroBatchParams {
     fn default() -> Self {
-        Self { max_batch_bytes: 2 << 20, linger: Duration::from_millis(2), dist: None }
+        Self {
+            max_batch_bytes: 2 << 20,
+            linger: Duration::from_millis(2),
+            theta: ThetaPolicy::Auto,
+            dist: None,
+        }
     }
 }
 
@@ -301,10 +313,10 @@ struct BatcherState {
 /// reach [`MicroBatchParams::max_batch_bytes`] or its oldest member
 /// has lingered for [`MicroBatchParams::linger`], whichever comes
 /// first; dropping the batcher drains every open group. The
-/// background flusher only composes and submits (async) — each
-/// batch's completion is resolved off-thread, so a slow batch never
-/// holds other width groups past their linger deadlines and the
-/// engine's worker pool is the concurrency limit.
+/// background flusher only composes — each batch's submission (which
+/// runs auto-θ resolution) and completion are handled off-thread, so
+/// a slow batch never holds other width groups past their linger
+/// deadlines and the engine's worker pool is the concurrency limit.
 pub struct MicroBatcher {
     engine: Arc<Engine>,
     params: MicroBatchParams,
@@ -412,7 +424,7 @@ impl Drop for MicroBatcher {
 }
 
 fn flusher_loop(
-    engine: &Engine,
+    engine: &Arc<Engine>,
     params: &MicroBatchParams,
     shared: &(Mutex<BatcherState>, Condvar),
     stats: &Arc<MicroStats>,
@@ -473,13 +485,21 @@ fn fail_group(stats: &MicroStats, slots: &[Arc<MicroSlot>], msg: String) {
     }
 }
 
-/// Compose one group into a block-diagonal supermatrix, submit it as a
-/// single engine request (async), and hand completion to a detached
-/// resolver thread that splits the output and answers every member.
-/// The flusher itself never blocks on execution, so one slow batch
-/// cannot hold other width groups past their linger deadlines — the
-/// engine's worker pool, not the flusher, is the concurrency limit.
-fn flush_group(engine: &Engine, params: &MicroBatchParams, stats: &Arc<MicroStats>, group: Group) {
+/// Compose one group into a block-diagonal supermatrix and hand both
+/// the submission and its completion to a detached resolver thread,
+/// which submits the single engine request, waits, splits the output,
+/// and answers every member. The flusher itself never blocks on
+/// execution *or* on plan-key resolution — `submit_async` runs auto-θ
+/// tuning (histogram + cost model, possibly a measured probe) on the
+/// supermatrix, which must not stall other width groups past their
+/// linger deadlines — so the engine's worker pool, not the flusher, is
+/// the concurrency limit.
+fn flush_group(
+    engine: &Arc<Engine>,
+    params: &MicroBatchParams,
+    stats: &Arc<MicroStats>,
+    group: Group,
+) {
     if group.members.is_empty() {
         return;
     }
@@ -506,13 +526,13 @@ fn flush_group(engine: &Engine, params: &MicroBatchParams, stats: &Arc<MicroStat
     // the offset tables answer `split`; the supermatrix itself moves
     // into the request
     let sup = std::mem::take(&mut batch.matrix);
-    let mut req = Request::spmm(sup, super_b);
+    let mut req = Request::spmm(sup, super_b).with_theta(params.theta);
     if let Some(d) = params.dist {
         req = req.with_dist(d);
     }
-    let ticket = engine.submit_async(req);
+    let engine = engine.clone();
     let stats = stats.clone();
-    std::thread::spawn(move || match ticket.wait().result {
+    std::thread::spawn(move || match engine.submit_async(req).wait().result {
         Ok(out) => {
             let dense = out.into_dense().expect("spmm request must yield a dense output");
             for (part, slot) in batch.split(&dense).into_iter().zip(&slots) {
@@ -596,6 +616,7 @@ mod tests {
             MicroBatchParams {
                 max_batch_bytes: usize::MAX,
                 linger: Duration::from_millis(200),
+                theta: ThetaPolicy::Auto,
                 dist: None,
             },
         );
@@ -635,6 +656,7 @@ mod tests {
             MicroBatchParams {
                 max_batch_bytes: 1,
                 linger: Duration::from_secs(60),
+                theta: ThetaPolicy::Auto,
                 dist: None,
             },
         );
@@ -661,6 +683,7 @@ mod tests {
             MicroBatchParams {
                 max_batch_bytes: usize::MAX,
                 linger: Duration::from_millis(150),
+                theta: ThetaPolicy::Auto,
                 dist: None,
             },
         );
@@ -689,6 +712,7 @@ mod tests {
             MicroBatchParams {
                 max_batch_bytes: usize::MAX,
                 linger: Duration::from_millis(100),
+                theta: ThetaPolicy::Auto,
                 dist: None,
             },
         );
@@ -717,6 +741,7 @@ mod tests {
             MicroBatchParams {
                 max_batch_bytes: usize::MAX,
                 linger: Duration::from_secs(60), // would never fire on its own
+                theta: ThetaPolicy::Auto,
                 dist: None,
             },
         );

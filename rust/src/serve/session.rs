@@ -3,15 +3,21 @@
 //! An [`Engine`] owns a plan cache, a shared request queue, and a fixed
 //! worker pool. A [`Request`] carries an op kind with its dense
 //! operands, a sparse payload — either a full matrix or a
-//! [`Payload::Handle`] (pattern fingerprint + fresh values) — and
-//! optional `DistParams`/`BalanceParams` overrides (θ defaults to the
-//! cost model's substrate tuning per op and feature width).
+//! [`Payload::Handle`] (pattern fingerprint + fresh values) — and a
+//! [`ThetaPolicy`] (default `Auto`: the cost model tunes θ on the
+//! matrix's unit histogram) plus optional explicit
+//! `DistParams`/`BalanceParams` overrides.
 //!
 //! Request lifecycle:
 //!
-//! 1. `submit` fingerprints the payload, derives the [`PlanKey`], and
-//!    enqueues a job (`submit_async` returns a [`Ticket`] instead of
-//!    blocking);
+//! 1. `submit` fingerprints the payload and resolves the effective θ —
+//!    under an auto policy via the engine's [`crate::planner::Planner`]
+//!    path, memoized per (fingerprint, op, width) so a pattern is
+//!    tuned exactly once and every later request (including
+//!    values-only handles) reuses the provenance; the *resolved* θ
+//!    goes into the [`PlanKey`], so a fingerprint tuned once is a warm
+//!    cache hit forever. The job is then enqueued (`submit_async`
+//!    returns a [`Ticket`] instead of blocking);
 //! 2. a worker admits the job — together with any queued same-key jobs
 //!    (batched admission) — and resolves the plan: cache **hit** →
 //!    clone the shared plan and `set_values` (no distribution, no
@@ -28,13 +34,14 @@ use super::cache::{CachedPlan, PlanCache, PlanKey, SddmmEntry};
 use super::metrics::{MetricsReport, ServeMetrics};
 use super::sched::{Occupancy, OneShot, SchedParams, SharedQueue};
 use crate::balance::BalanceParams;
-use crate::costmodel;
 use crate::dist::{DistParams, Op};
 use crate::exec::sddmm::SddmmExecutor;
 use crate::exec::{SpmmExecutor, TcBackend, Workspace};
+use crate::planner::{Planner, ThetaPolicy};
 use crate::sparse::{Csr, Dense, PatternFingerprint};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// The sparse operand of a request.
@@ -71,9 +78,13 @@ pub enum OpInputs {
 pub struct Request {
     pub payload: Payload,
     pub inputs: OpInputs,
-    /// θ override; `None` asks the cost model for the substrate tuning.
+    /// How θ is chosen when no explicit `dist` override is given.
+    /// Defaults to [`ThetaPolicy::Auto`]; resolution is memoized per
+    /// pattern by the engine, so auto tuning runs once per fingerprint.
+    pub theta: ThetaPolicy,
+    /// Explicit `DistParams` override (bypasses the policy entirely).
     pub dist: Option<DistParams>,
-    /// Balancing override (SpMM only); `None` uses the defaults.
+    /// Balancing override (both ops); `None` uses the defaults.
     pub balance: Option<BalanceParams>,
 }
 
@@ -82,6 +93,7 @@ impl Request {
         Self {
             payload: Payload::Matrix(m),
             inputs: OpInputs::Spmm { b },
+            theta: ThetaPolicy::Auto,
             dist: None,
             balance: None,
         }
@@ -91,6 +103,7 @@ impl Request {
         Self {
             payload: Payload::Matrix(m),
             inputs: OpInputs::Sddmm { a, b },
+            theta: ThetaPolicy::Auto,
             dist: None,
             balance: None,
         }
@@ -101,6 +114,7 @@ impl Request {
         Self {
             payload: Payload::Handle { fp, values },
             inputs: OpInputs::Spmm { b },
+            theta: ThetaPolicy::Auto,
             dist: None,
             balance: None,
         }
@@ -111,9 +125,17 @@ impl Request {
         Self {
             payload: Payload::Handle { fp, values },
             inputs: OpInputs::Sddmm { a, b },
+            theta: ThetaPolicy::Auto,
             dist: None,
             balance: None,
         }
+    }
+
+    /// Choose how θ is resolved (ignored if [`Request::with_dist`]
+    /// supplies explicit parameters).
+    pub fn with_theta(mut self, t: ThetaPolicy) -> Self {
+        self.theta = t;
+        self
     }
 
     pub fn with_dist(mut self, d: DistParams) -> Self {
@@ -126,20 +148,11 @@ impl Request {
         self
     }
 
-    /// The plan key this request resolves to: fingerprint plus the
-    /// *effective* parameters (overrides or cost-model defaults).
-    pub fn plan_key(&self) -> PlanKey {
-        let fp = self.payload.fingerprint();
+    /// Op kind and dense feature width (the tuning input `n`).
+    fn op_and_width(&self) -> (Op, usize) {
         match &self.inputs {
-            OpInputs::Spmm { b } => {
-                let d = self.dist.unwrap_or_else(|| costmodel::substrate_params(Op::Spmm, b.cols));
-                let bal = self.balance.unwrap_or_default();
-                PlanKey::spmm(fp, &d, &bal)
-            }
-            OpInputs::Sddmm { a, .. } => {
-                let d = self.dist.unwrap_or_else(|| costmodel::substrate_params(Op::Sddmm, a.cols));
-                PlanKey::sddmm(fp, &d)
-            }
+            OpInputs::Spmm { b } => (Op::Spmm, b.cols),
+            OpInputs::Sddmm { a, .. } => (Op::Sddmm, a.cols),
         }
     }
 }
@@ -248,6 +261,60 @@ pub struct Engine {
     workers: Vec<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
     sched: SchedParams,
+    /// Resolved-θ provenance: (fingerprint, op, feature width,
+    /// policy) → tuned `DistParams`. Auto policies consult this before
+    /// running the cost model, so each pattern is tuned exactly once
+    /// per policy and values-only handles resolve without ever seeing
+    /// the matrix. Keyed by policy so an `AutoRefined` request for a
+    /// pattern first tuned under plain `Auto` really runs its measured
+    /// probe instead of silently inheriting the unrefined θ. Bounded:
+    /// past [`THETA_MEMO_CAP`] entries the least-recently-used half is
+    /// evicted — recency keeps the provenance of actively-served
+    /// handle patterns (touched on every request) alive while shedding
+    /// one-shot fingerprints (e.g. micro-batched supermatrices), so
+    /// unique-fingerprint traffic cannot grow the memo unboundedly
+    /// *and* cannot starve long-lived handle tenants of their θ.
+    theta_memo: Mutex<ThetaMemo>,
+}
+
+/// Max resolved-θ provenance entries kept before the LRU half is
+/// evicted (entries are ~90 bytes, so this bounds the memo to a few
+/// MiB).
+const THETA_MEMO_CAP: usize = 1 << 16;
+
+type ThetaMemoKey = (PatternFingerprint, Op, usize, ThetaPolicy);
+
+/// The resolved-θ provenance table: a recency-stamped map with
+/// evict-oldest-half overflow handling (a full LRU list is overkill —
+/// eviction is rare, and one sort of `THETA_MEMO_CAP` ticks costs
+/// microseconds against the tuning work that filled them).
+#[derive(Default)]
+struct ThetaMemo {
+    map: HashMap<ThetaMemoKey, (DistParams, u64)>,
+    tick: u64,
+}
+
+impl ThetaMemo {
+    fn get(&mut self, key: &ThetaMemoKey) -> Option<DistParams> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(key).map(|e| {
+            e.1 = tick;
+            e.0
+        })
+    }
+
+    fn insert(&mut self, key: ThetaMemoKey, d: DistParams) {
+        if self.map.len() >= THETA_MEMO_CAP {
+            let mut ticks: Vec<u64> = self.map.values().map(|&(_, t)| t).collect();
+            ticks.sort_unstable();
+            let cutoff = ticks[ticks.len() / 2];
+            self.map.retain(|_, &mut (_, t)| t > cutoff);
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.insert(key, (d, tick));
+    }
 }
 
 impl Engine {
@@ -280,6 +347,7 @@ impl Engine {
             workers,
             next_id: AtomicU64::new(0),
             sched: SchedParams { workers: n_workers, ..cfg.sched },
+            theta_memo: Mutex::new(ThetaMemo::default()),
         }
     }
 
@@ -291,12 +359,96 @@ impl Engine {
     /// Enqueue a request; the returned [`Ticket`] collects the
     /// response. Submitting many tickets before waiting is how a
     /// closed-loop client keeps the pool saturated.
+    ///
+    /// θ resolution happens here (before the queue) so that batched
+    /// admission can group same-plan requests by their *resolved* key.
+    /// A request that cannot be resolved — a values-only handle for a
+    /// pattern that was never tuned — is answered with an error
+    /// immediately instead of occupying a worker.
+    ///
+    /// Submit-time cost contract: fingerprinting is O(nnz) always (as
+    /// before this existed); the *first* request for a pattern under
+    /// an auto policy additionally pays the cost-model tuning on the
+    /// submitter thread — another O(nnz) histogram for `Auto`, plus a
+    /// bounded measured probe (≤ 48-window slice, a few executions)
+    /// for `AutoRefined`. Every repeat rides the provenance memo.
+    /// Latency-sensitive submitters should pre-warm cold patterns from
+    /// a background thread (or use `Fixed`/`with_dist`, which skip
+    /// tuning entirely); the `MicroBatcher` does exactly this by
+    /// submitting from its detached resolver threads.
     pub fn submit_async(&self, req: Request) -> Ticket {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let key = req.plan_key();
         let slot = Arc::new(ResponseSlot::new());
-        self.queue.push(Job { id, key, req, enqueued: Instant::now(), slot: slot.clone() });
+        match self.resolve_key(&req) {
+            Ok(key) => {
+                let job = Job { id, key, req, enqueued: Instant::now(), slot: slot.clone() };
+                self.queue.push(job);
+            }
+            Err(e) => {
+                self.metrics.add(&self.metrics.requests, 1);
+                self.metrics.add(&self.metrics.errors, 1);
+                slot.put(Response {
+                    id,
+                    result: Err(e),
+                    cache_hit: false,
+                    timing: Timing::default(),
+                });
+            }
+        }
         Ticket { id, slot }
+    }
+
+    /// Resolve a request's effective parameters into its [`PlanKey`],
+    /// recording resolved-θ provenance and metrics.
+    fn resolve_key(&self, req: &Request) -> anyhow::Result<PlanKey> {
+        let fp = req.payload.fingerprint();
+        let (op, n) = req.op_and_width();
+        let bal = req.balance.unwrap_or_default();
+        let d = match req.dist {
+            Some(d) => d,
+            None => self.resolve_dist(&req.payload, fp, op, n, req.theta)?,
+        };
+        self.metrics.record_theta(d.threshold);
+        Ok(match op {
+            Op::Spmm => PlanKey::spmm(fp, &d, &bal),
+            Op::Sddmm => PlanKey::sddmm(fp, &d, &bal),
+        })
+    }
+
+    /// Resolve `DistParams` under a [`ThetaPolicy`], memoized per
+    /// (fingerprint, op, width): the cost model runs at most once per
+    /// pattern, and every later request — matrix or handle — reuses
+    /// the recorded provenance.
+    fn resolve_dist(
+        &self,
+        payload: &Payload,
+        fp: PatternFingerprint,
+        op: Op,
+        n: usize,
+        policy: ThetaPolicy,
+    ) -> anyhow::Result<DistParams> {
+        if let ThetaPolicy::Fixed(t) = policy {
+            return Ok(Planner::new(policy).params_for_theta(op, t));
+        }
+        let memo_key = (fp, op, n, policy);
+        if let Some(d) = self.theta_memo.lock().unwrap().get(&memo_key) {
+            self.metrics.add(&self.metrics.theta_memo_hits, 1);
+            return Ok(d);
+        }
+        let Payload::Matrix(m) = payload else {
+            anyhow::bail!(
+                "pattern handle {:#018x} ({}x{}, nnz {}) has no resolved θ yet; auto-θ tunes \
+                 on first sight of the full matrix — resubmit it once",
+                fp.hash,
+                fp.rows,
+                fp.cols,
+                fp.nnz
+            );
+        };
+        let d = Planner::new(policy).resolve(m, op, n);
+        self.metrics.add(&self.metrics.theta_tuned, 1);
+        self.theta_memo.lock().unwrap().insert(memo_key, d);
+        Ok(d)
     }
 
     /// Metrics snapshot (latency split, hit rate, occupancy, …).
@@ -508,7 +660,10 @@ fn resolve_spmm(
     }
 }
 
-/// Resolve an SDDMM executor (same warm/cold split as SpMM).
+/// Resolve an SDDMM executor (same warm/cold split as SpMM). The
+/// cached entry carries the *balanced* plan, so a warm hit executes
+/// the balanced schedule with zero re-distribution and zero
+/// re-balancing — `set_values` is the only O(nnz) work.
 fn resolve_sddmm(
     key: PlanKey,
     payload: Payload,
@@ -518,50 +673,62 @@ fn resolve_sddmm(
     backend: TcBackend,
     cache_hit: &mut bool,
 ) -> anyhow::Result<SddmmExecutor> {
+    let bparams = BalanceParams {
+        ts: key.ts,
+        cs: key.cs,
+        short_len: key.short_len,
+        enabled: key.balance_enabled,
+    };
     match payload {
         Payload::Matrix(m) => {
             if let Some(CachedPlan::Sddmm(entry)) = cache.get(&key) {
                 *cache_hit = true;
                 metrics.add(&metrics.prep_fast, 1);
                 // the submitted matrix *is* the cached pattern with the
-                // fresh values: refresh only the distribution and reuse
-                // the matrix as the output pattern (no deep clone)
-                let mut dist = entry.dist.clone();
-                dist.set_values(&m.values);
-                return Ok(SddmmExecutor::from_dist(dist, m, backend));
+                // fresh values: refresh only the plan's values and
+                // reuse the matrix as the output pattern (no deep
+                // clone, no distribution, no balancing)
+                let mut plan = entry.plan.clone();
+                plan.dist.set_values(&m.values);
+                return Ok(SddmmExecutor::from_plan(plan, m, backend));
             }
             metrics.add(&metrics.prep_full, 1);
-            let dist = crate::dist::distribute_sddmm(&m, dparams);
-            let entry = SddmmEntry { dist, pattern: m };
+            let plan = crate::prep::preprocess_sddmm(
+                &m,
+                dparams,
+                &bparams,
+                crate::prep::PrepMode::Sequential,
+            );
+            let entry = SddmmEntry { plan, pattern: m };
             if entry.bytes() <= cache.capacity_bytes() {
                 let shared = Arc::new(entry);
                 cache.insert(key, CachedPlan::Sddmm(shared.clone()));
-                Ok(SddmmExecutor::from_dist(
-                    shared.dist.clone(),
+                Ok(SddmmExecutor::from_plan(
+                    shared.plan.clone(),
                     shared.pattern.clone(),
                     backend,
                 ))
             } else {
                 // cache would reject it: skip the publish and the copy
-                Ok(SddmmExecutor::from_dist(entry.dist, entry.pattern, backend))
+                Ok(SddmmExecutor::from_plan(entry.plan, entry.pattern, backend))
             }
         }
         Payload::Handle { fp, values } => match cache.get(&key) {
             Some(CachedPlan::Sddmm(entry)) => {
                 anyhow::ensure!(
-                    values.len() == entry.dist.stats.nnz_total,
+                    values.len() == entry.plan.dist.stats.nnz_total,
                     "handle carries {} values but cached pattern has {} nonzeros",
                     values.len(),
-                    entry.dist.stats.nnz_total
+                    entry.plan.dist.stats.nnz_total
                 );
                 *cache_hit = true;
                 metrics.add(&metrics.prep_fast, 1);
                 // refresh values before construction (single TcfBlocks
                 // build under the traversal backend)
                 let mut e = (*entry).clone();
-                e.dist.set_values(&values);
+                e.plan.dist.set_values(&values);
                 e.pattern.values.copy_from_slice(&values);
-                Ok(SddmmExecutor::from_dist(e.dist, e.pattern, backend))
+                Ok(SddmmExecutor::from_plan(e.plan, e.pattern, backend))
             }
             _ => anyhow::bail!(
                 "pattern handle {:#018x} ({}x{}, nnz {}) is not in the plan cache; resubmit the full matrix",
@@ -803,6 +970,116 @@ mod tests {
             let want = cold.execute(&b).unwrap();
             assert_eq!(got.data, want.data, "warm fast path diverged from cold prep");
         });
+    }
+
+    #[test]
+    fn theta_memo_eviction_keeps_hot_entries() {
+        // overflow must shed cold (one-shot) fingerprints, never the
+        // actively-touched provenance of live handle tenants
+        let mut memo = ThetaMemo::default();
+        let key = |i: u64| {
+            let fp = PatternFingerprint { rows: 8, cols: 8, nnz: 8, hash: i, hash2: i };
+            (fp, Op::Spmm, 64usize, ThetaPolicy::Auto)
+        };
+        let hot = key(u64::MAX);
+        memo.insert(hot, DistParams::default());
+        for i in 0..THETA_MEMO_CAP as u64 {
+            memo.insert(key(i), DistParams::flex_only());
+            if i % 64 == 0 {
+                // the hot entry is touched regularly, like a handle
+                // tenant's pattern
+                assert!(memo.get(&hot).is_some(), "hot entry evicted at {i}");
+            }
+        }
+        assert_eq!(memo.get(&hot), Some(DistParams::default()));
+        assert!(memo.map.len() <= THETA_MEMO_CAP, "memo must stay bounded");
+    }
+
+    #[test]
+    fn auto_theta_provenance_makes_repeat_traffic_warm() {
+        // Acceptance: auto-θ resolution runs the cost model once per
+        // pattern; the resolved θ is PlanKey provenance, so repeats —
+        // full matrices and values-only handles alike — are warm hits
+        // with zero re-tuning.
+        let eng = engine(1, 64 << 20);
+        let mut rng = SplitMix64::new(506);
+        let m1 = gen::power_law(&mut rng, 200, 8.0, 2.0);
+        let fp = m1.pattern_fingerprint();
+        let b = Dense::random(&mut rng, 200, 16);
+        let m2 = revalued(&m1, &mut rng);
+
+        let r1 = eng.submit(Request::spmm(m1.clone(), b.clone()));
+        assert!(!r1.cache_hit);
+        r1.result.unwrap();
+        let r2 = eng.submit(Request::spmm(m2, b.clone()));
+        assert!(r2.cache_hit, "same pattern under auto-θ must warm-hit");
+        let vals: Vec<f32> = (0..m1.nnz()).map(|i| (i % 5) as f32).collect();
+        let r3 = eng.submit(Request::spmm_handle(fp, vals, b));
+        assert!(r3.cache_hit, "handle must reuse the θ provenance");
+        r3.result.unwrap();
+
+        let rep = eng.report();
+        assert_eq!(rep.theta_tuned, 1, "exactly one cost-model run per pattern");
+        assert_eq!(rep.theta_memo_hits, 2, "repeats must ride the provenance memo");
+        assert_eq!(rep.prep_full, 1);
+        assert_eq!(rep.prep_fast, 2);
+        // the resolved-θ distribution covers all three requests at one θ
+        assert_eq!(rep.theta_dist.iter().map(|&(_, c)| c).sum::<u64>(), 3);
+        assert_eq!(rep.theta_dist.len(), 1, "one pattern, one resolved θ: {:?}", rep.theta_dist);
+    }
+
+    #[test]
+    fn warm_sddmm_executes_balanced_schedule_without_retuning() {
+        // Acceptance: warm-cache SDDMM serving executes the *balanced*
+        // schedule with zero re-tuning, asserted via prep metrics and
+        // by inspecting the resolved executor.
+        let eng = engine(1, 64 << 20);
+        let mut rng = SplitMix64::new(507);
+        let m1 = gen::uniform_random(&mut rng, 120, 100, 0.1);
+        let a = Dense::random(&mut rng, 120, 16);
+        let b = Dense::random(&mut rng, 100, 16);
+        let m2 = revalued(&m1, &mut rng);
+
+        let r1 = eng.submit(Request::sddmm(m1.clone(), a.clone(), b.clone()));
+        assert!(!r1.cache_hit);
+        r1.result.unwrap();
+        let r2 = eng.submit(Request::sddmm(m2.clone(), a.clone(), b.clone()));
+        assert!(r2.cache_hit);
+        let out = r2.result.unwrap().into_sparse().unwrap();
+        let want = m2.sddmm_dense_ref(&a, &b);
+        for (g, w) in out.values.iter().zip(&want.values) {
+            assert!((g - w).abs() < 1e-2 + 1e-3 * w.abs());
+        }
+        let rep = eng.report();
+        assert_eq!(rep.prep_full, 1);
+        assert_eq!(rep.prep_fast, 1, "warm sddmm must skip distribution AND balancing");
+        assert_eq!(rep.theta_tuned, 1);
+        assert_eq!(rep.theta_memo_hits, 1);
+
+        // the warm resolve hands back the full balanced schedule
+        let metrics = ServeMetrics::new();
+        let key = {
+            let planner = crate::planner::Planner::new(crate::planner::ThetaPolicy::Auto);
+            let d = planner.resolve(&m1, Op::Sddmm, 16);
+            PlanKey::sddmm(m1.pattern_fingerprint(), &d, &BalanceParams::default())
+        };
+        let mut hit = false;
+        let cold = resolve_sddmm(
+            key,
+            Payload::Matrix(m1),
+            &DistParams { threshold: key.threshold, fill_padding: key.fill_padding },
+            eng.cache(),
+            &metrics,
+            TcBackend::NativeBitmap,
+            &mut hit,
+        )
+        .unwrap();
+        assert!(hit, "engine-published plan must be visible to a warm resolve");
+        let sched = &cold.sched;
+        let n_segments =
+            sched.tc_segments.len() + sched.long_tiles.len() + sched.short_tiles.len();
+        assert!(n_segments > 0, "cached sddmm plan must carry a schedule");
+        assert_eq!(cold.sched.flex_elems(), cold.dist.flex_vals.len());
     }
 
     #[test]

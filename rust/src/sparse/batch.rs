@@ -167,6 +167,16 @@ impl GraphBatch {
         self.row_off[i]..self.row_off[i + 1]
     }
 
+    /// Member `i`'s window span in the supermatrix. For a
+    /// window-aligned batch every window in the span belongs to this
+    /// member alone — the invariant that makes per-member plan slices
+    /// (`prep::BatchPlan` / `prep::SddmmBatchPlan`) and per-member
+    /// tuning histograms (`planner::Planner`) exact.
+    pub fn member_window_range(&self, i: usize) -> std::ops::Range<usize> {
+        let span = self.padded_row_range(i);
+        span.start / WINDOW..span.end.div_ceil(WINDOW)
+    }
+
     /// Member `i`'s columns in the supermatrix.
     pub fn col_range(&self, i: usize) -> std::ops::Range<usize> {
         self.col_off[i]..self.col_off[i + 1]
@@ -303,6 +313,10 @@ mod tests {
             for (i, m) in ms.iter().enumerate() {
                 // window alignment: each member starts on a window edge
                 assert_eq!(batch.row_range(i).start % WINDOW, 0);
+                // the window span tiles the padded row span exactly
+                let w = batch.member_window_range(i);
+                assert_eq!(w.start * WINDOW, batch.padded_row_range(i).start);
+                assert_eq!(w.end * WINDOW, batch.padded_row_range(i).end);
                 // the member's rows are reproduced verbatim (cols shifted)
                 let shift = batch.col_range(i).start as u32;
                 for r in 0..m.rows {

@@ -1,0 +1,138 @@
+//! Table 13 (delta): incremental plan patching vs full re-preprocess
+//! across edit-batch sizes.
+//!
+//! The serving claim behind `Engine::submit_delta` is that an evolving
+//! graph's edit batch costs O(touched windows), not O(matrix): the
+//! patch path re-runs distribution and balancing only for the windows
+//! the batch touches and splices everything else from the resident
+//! plan, while the cold path pays fingerprint + full distribution +
+//! full balancing on the mutated matrix. This bench measures both
+//! sides on a power-law graph for batches of 1, 16, and 256 edits
+//! (each half insertions at absent coordinates, half deletions of
+//! existing edges).
+//!
+//! Timing discipline: min-of-reps after a warm run; the patch side is
+//! charged end-to-end (CSR merge + incremental fingerprint + plan
+//! patch), the full side fingerprint + sequential preprocess of the
+//! final matrix. **Gate**: CI's bench-smoke job fails (nonzero exit)
+//! if the single-edit patch is not at least 10x faster than the full
+//! re-preprocess — the whole point of the delta path.
+
+use libra::balance::BalanceParams;
+use libra::bench::Table;
+use libra::delta::EdgeDelta;
+use libra::dist::DistParams;
+use libra::prep::{preprocess_spmm, PrepMode};
+use libra::sparse::{gen, Csr, PatternDigests};
+use libra::util::SplitMix64;
+use std::collections::HashSet;
+
+/// A delta with exactly `edits` edits: alternating deletions of
+/// existing edges and insertions at absent coordinates, no coordinate
+/// reused.
+fn build_delta(rng: &mut SplitMix64, m: &Csr, edits: usize) -> EdgeDelta {
+    let mut delta = EdgeDelta::new();
+    let mut used: HashSet<(usize, usize)> = HashSet::new();
+    let mut produced = 0;
+    while produced < edits {
+        let r = rng.range(0, m.rows);
+        if produced % 2 == 0 && m.row_len(r) > 0 {
+            let (cols, _) = m.row(r);
+            let c = cols[rng.below(cols.len() as u64) as usize] as usize;
+            if used.insert((r, c)) {
+                delta.delete(r, c);
+                produced += 1;
+            }
+        } else {
+            let c = rng.range(0, m.cols);
+            if m.get(r, c).is_none() && used.insert((r, c)) {
+                delta.upsert(r, c, rng.f32_range(-1.0, 1.0));
+                produced += 1;
+            }
+        }
+    }
+    delta
+}
+
+fn main() {
+    let (reps, rows, deg) = match libra::bench::scale() {
+        "smoke" => (3, 4096, 8.0),
+        "full" => (5, 65536, 16.0),
+        _ => (5, 16384, 8.0),
+    };
+    let mut rng = SplitMix64::new(13);
+    let m = gen::power_law(&mut rng, rows, deg, 2.0);
+    let dparams = DistParams::default();
+    let bparams = BalanceParams::default();
+    let base_plan = preprocess_spmm(&m, &dparams, &bparams, PrepMode::Sequential);
+    let base_digests = PatternDigests::of(&m);
+    println!(
+        "delta patching: {} rows, {} nnz, min-of-{reps} timing, SpMM plan (θ = {})",
+        m.rows,
+        m.nnz(),
+        dparams.threshold
+    );
+
+    let mut t = Table::new(
+        "Table 13: plan maintenance cost, incremental patch vs full re-preprocess",
+        &["edits", "windows touched", "patch ms", "full ms", "speedup"],
+    );
+    let mut gate_speedup = f64::MAX;
+    for &edits in &[1usize, 16, 256] {
+        let delta = build_delta(&mut rng, &m, edits);
+        let touched = delta.touched_windows();
+        let new_m = m.apply_delta(&delta).unwrap();
+
+        // patch side: CSR merge + incremental fingerprint + plan patch
+        let time_patch = || {
+            let nm = m.apply_delta(&delta).unwrap();
+            let mut digests = base_digests.clone();
+            digests.update(&nm, &touched);
+            let plan = base_plan.apply_delta(&m, &nm, &touched, &dparams, &bparams);
+            std::hint::black_box((digests.fingerprint(), plan.dist.stats.nnz_total))
+        };
+        // full side: what a cold cache miss pays on the final matrix
+        let time_full = || {
+            let fp = new_m.pattern_fingerprint();
+            let plan = preprocess_spmm(&new_m, &dparams, &bparams, PrepMode::Sequential);
+            std::hint::black_box((fp, plan.dist.stats.nnz_total))
+        };
+        time_patch(); // warm
+        time_full();
+        let mut best_patch = f64::MAX;
+        let mut best_full = f64::MAX;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            time_patch();
+            best_patch = best_patch.min(t0.elapsed().as_secs_f64());
+            let t1 = std::time::Instant::now();
+            time_full();
+            best_full = best_full.min(t1.elapsed().as_secs_f64());
+        }
+        let speedup = best_full / best_patch.max(1e-12);
+        if edits == 1 {
+            gate_speedup = speedup;
+        }
+        t.add(vec![
+            format!("{edits}"),
+            format!("{}/{}", touched.len(), m.rows.div_ceil(8)),
+            format!("{:.3}", best_patch * 1e3),
+            format!("{:.3}", best_full * 1e3),
+            format!("{speedup:.1}x"),
+        ]);
+    }
+    t.print();
+
+    // The gate: a single-edit delta must be at least 10x cheaper to
+    // patch than to re-preprocess — otherwise the incremental path has
+    // regressed into a full rebuild and serving loses its warm story.
+    let ok = gate_speedup >= 10.0;
+    println!(
+        "\nsingle-edit patch {} the 10x bar ({:.1}x vs full re-preprocess)",
+        if ok { "clears" } else { "MISSES" },
+        gate_speedup
+    );
+    if !ok {
+        std::process::exit(1);
+    }
+}

@@ -101,19 +101,12 @@ impl SpmmSchedule {
     }
 }
 
-/// Build the balanced schedule for a distributed SpMM workload.
-///
-/// `ts`/`cs` are clamped to at least 1: a zero bound is meaningless
-/// (no chunk could ever make progress) and the serving layer forwards
-/// caller-supplied `BalanceParams` here, so it must not be able to
-/// hang a worker.
-pub fn balance_spmm(dist: &SpmmDist, params: &BalanceParams) -> SpmmSchedule {
-    let ts = params.ts.max(1);
-    let cs = params.cs.max(1);
+/// Per-window block ranges of a window-major SpMM distribution:
+/// window `w`'s TC blocks are `win_block_start[w]..win_block_start[w+1]`
+/// (length `n_windows + 1`). Shared by [`balance_spmm`] and the
+/// delta-patching path, which re-balances only touched windows.
+pub(crate) fn spmm_win_block_start(dist: &SpmmDist) -> Vec<u32> {
     let n_windows = dist.rows.div_ceil(WINDOW);
-    let mut sched = SpmmSchedule::default();
-
-    // group blocks by window (blocks are emitted window-major by dist)
     let nb = dist.tc.n_blocks();
     let mut win_block_start = vec![0u32; n_windows + 1];
     for b in 0..nb {
@@ -122,106 +115,101 @@ pub fn balance_spmm(dist: &SpmmDist, params: &BalanceParams) -> SpmmSchedule {
     for w in 0..n_windows {
         win_block_start[w + 1] += win_block_start[w];
     }
+    win_block_start
+}
 
-    for w in 0..n_windows {
-        let bs = win_block_start[w] as usize;
-        let be = win_block_start[w + 1] as usize;
-        let lo = w * WINDOW;
-        let hi = ((w + 1) * WINDOW).min(dist.rows);
+/// Balance one window of an SpMM distribution, appending its segments
+/// and tiles to `sched`. `bs..be` is the window's block range (as from
+/// [`spmm_win_block_start`]). Window-local by construction — the delta
+/// path re-runs it for exactly the touched windows.
+pub(crate) fn spmm_window_kernel(
+    dist: &SpmmDist,
+    w: usize,
+    bs: usize,
+    be: usize,
+    params: &BalanceParams,
+    sched: &mut SpmmSchedule,
+) {
+    let ts = params.ts.max(1);
+    let cs = params.cs.max(1);
+    let lo = w * WINDOW;
+    let hi = ((w + 1) * WINDOW).min(dist.rows);
 
-        // classify the window's flexible rows
-        let mut short_rows: Vec<(u32, u32, u32)> = Vec::new(); // (row, s, e)
-        let mut long_rows: Vec<(u32, u32, u32)> = Vec::new();
-        for r in lo..hi {
-            let (s, e) = (dist.flex_row_ptr[r], dist.flex_row_ptr[r + 1]);
-            if s == e {
-                continue;
-            }
-            let len = (e - s) as usize;
-            if len < params.short_len {
-                short_rows.push((r as u32, s, e));
-            } else {
-                long_rows.push((r as u32, s, e));
-            }
+    // classify the window's flexible rows
+    let mut short_rows: Vec<(u32, u32, u32)> = Vec::new(); // (row, s, e)
+    let mut long_rows: Vec<(u32, u32, u32)> = Vec::new();
+    for r in lo..hi {
+        let (s, e) = (dist.flex_row_ptr[r], dist.flex_row_ptr[r + 1]);
+        if s == e {
+            continue;
         }
-
-        // decomposition decisions
-        let tc_decomposed = params.enabled && be - bs > ts;
-        let long_decomposed = params.enabled
-            && long_rows.iter().any(|&(_, s, e)| (e - s) as usize > cs);
-
-        // Atomicity (paper Fig. 6): any decomposition in the window, or
-        // multiple independent writers over the same window rows,
-        // forces atomics for every segment of the window.
-        let n_writers = (be > bs) as usize + long_rows.len() + short_rows.len();
-        let multi_writer_rows = {
-            // TC segments write all rows of the window; a flexible tile
-            // writes one row. Conflict exists iff TC work coexists with
-            // any flexible work, or decomposition splits one row/window
-            // across segments.
-            (be > bs) && (!long_rows.is_empty() || !short_rows.is_empty())
-        };
-        let atomic = tc_decomposed || long_decomposed || multi_writer_rows;
-        let _ = n_writers;
-        if atomic {
-            sched.atomic_windows += 1;
+        let len = (e - s) as usize;
+        if len < params.short_len {
+            short_rows.push((r as u32, s, e));
+        } else {
+            long_rows.push((r as u32, s, e));
         }
+    }
 
-        // TC segments
-        if be > bs {
-            if params.enabled {
-                let mut b = bs;
-                while b < be {
-                    let end = (b + ts).min(be);
-                    sched.tc_segments.push(TcSegment {
-                        block_start: b as u32,
-                        block_end: end as u32,
-                        window: w as u32,
-                        atomic,
-                    });
-                    b = end;
-                }
-            } else {
+    // decomposition decisions
+    let tc_decomposed = params.enabled && be - bs > ts;
+    let long_decomposed =
+        params.enabled && long_rows.iter().any(|&(_, s, e)| (e - s) as usize > cs);
+
+    // Atomicity (paper Fig. 6): any decomposition in the window, or
+    // multiple independent writers over the same window rows, forces
+    // atomics for every segment of the window. TC segments write all
+    // rows of the window; a flexible tile writes one row, so conflict
+    // exists iff TC work coexists with any flexible work.
+    let multi_writer_rows = (be > bs) && (!long_rows.is_empty() || !short_rows.is_empty());
+    let atomic = tc_decomposed || long_decomposed || multi_writer_rows;
+    if atomic {
+        sched.atomic_windows += 1;
+    }
+
+    // TC segments
+    if be > bs {
+        if params.enabled {
+            let mut b = bs;
+            while b < be {
+                let end = (b + ts).min(be);
                 sched.tc_segments.push(TcSegment {
-                    block_start: bs as u32,
-                    block_end: be as u32,
+                    block_start: b as u32,
+                    block_end: end as u32,
                     window: w as u32,
                     atomic,
                 });
+                b = end;
             }
+        } else {
+            sched.tc_segments.push(TcSegment {
+                block_start: bs as u32,
+                block_end: be as u32,
+                window: w as u32,
+                atomic,
+            });
         }
+    }
 
-        // long tiles, chunked by Cs elements
-        for &(row, s, e) in &long_rows {
-            if params.enabled {
-                let mut x = s;
-                while x < e {
-                    let end = (x + cs as u32).min(e);
-                    // a row split across chunks always needs atomics
-                    let row_split = e - s > cs as u32;
-                    sched.long_tiles.push(FlexTile {
-                        elem_start: x,
-                        elem_end: end,
-                        row,
-                        atomic: atomic || row_split,
-                        row_split,
-                    });
-                    x = end;
-                }
-            } else {
+    // long tiles, chunked by Cs elements
+    for &(row, s, e) in &long_rows {
+        if params.enabled {
+            let mut x = s;
+            while x < e {
+                let end = (x + cs as u32).min(e);
+                // a row split across chunks always needs atomics
+                let row_split = e - s > cs as u32;
                 sched.long_tiles.push(FlexTile {
-                    elem_start: s,
-                    elem_end: e,
+                    elem_start: x,
+                    elem_end: end,
                     row,
-                    atomic,
-                    row_split: false,
+                    atomic: atomic || row_split,
+                    row_split,
                 });
+                x = end;
             }
-        }
-
-        // short tiles (never decomposed)
-        for &(row, s, e) in &short_rows {
-            sched.short_tiles.push(FlexTile {
+        } else {
+            sched.long_tiles.push(FlexTile {
                 elem_start: s,
                 elem_end: e,
                 row,
@@ -229,6 +217,39 @@ pub fn balance_spmm(dist: &SpmmDist, params: &BalanceParams) -> SpmmSchedule {
                 row_split: false,
             });
         }
+    }
+
+    // short tiles (never decomposed)
+    for &(row, s, e) in &short_rows {
+        sched.short_tiles.push(FlexTile {
+            elem_start: s,
+            elem_end: e,
+            row,
+            atomic,
+            row_split: false,
+        });
+    }
+}
+
+/// Build the balanced schedule for a distributed SpMM workload.
+///
+/// `ts`/`cs` are clamped to at least 1: a zero bound is meaningless
+/// (no chunk could ever make progress) and the serving layer forwards
+/// caller-supplied `BalanceParams` here, so it must not be able to
+/// hang a worker.
+pub fn balance_spmm(dist: &SpmmDist, params: &BalanceParams) -> SpmmSchedule {
+    let n_windows = dist.rows.div_ceil(WINDOW);
+    let mut sched = SpmmSchedule::default();
+    let win_block_start = spmm_win_block_start(dist);
+    for w in 0..n_windows {
+        spmm_window_kernel(
+            dist,
+            w,
+            win_block_start[w] as usize,
+            win_block_start[w + 1] as usize,
+            params,
+            &mut sched,
+        );
     }
     sched
 }
@@ -277,22 +298,55 @@ impl SddmmSchedule {
 /// decomposition can never create a write conflict (unlike SpMM, where
 /// Fig. 6's cases force atomics on multi-writer windows).
 pub fn balance_sddmm(dist: &SddmmDist, params: &BalanceParams) -> SddmmSchedule {
-    // clamp as in `balance_spmm`: zero bounds must not hang a worker
-    let ts = params.ts.max(1);
-    let cs = params.cs.max(1);
     let mut sched = SddmmSchedule::default();
-
-    // TC segments: runs of same-window blocks, chunked by Ts
     let nb = dist.tc.n_blocks();
-    let mut b = 0usize;
-    while b < nb {
-        let w = dist.tc.window_of[b];
-        let mut be = b + 1;
-        while be < nb && dist.tc.window_of[be] == w {
+    let nf = dist.flex_rows.len();
+    // walk blocks (window-major) and flexible elements (row-major,
+    // windows ascending) in lockstep, one window at a time
+    let (mut b, mut f) = (0usize, 0usize);
+    while b < nb || f < nf {
+        let wb = if b < nb { dist.tc.window_of[b] as usize } else { usize::MAX };
+        let wf = if f < nf { dist.flex_rows[f] as usize / WINDOW } else { usize::MAX };
+        let w = wb.min(wf);
+        let mut be = b;
+        while be < nb && dist.tc.window_of[be] as usize == w {
             be += 1;
         }
+        let mut fe = f;
+        while fe < nf && (dist.flex_rows[fe] as usize) < (w + 1) * WINDOW {
+            fe += 1;
+        }
+        sddmm_window_kernel(dist, w as u32, b, be, f, fe, params, &mut sched);
+        b = be;
+        f = fe;
+    }
+    sched
+}
+
+/// Balance one window of an SDDMM distribution, appending its segments
+/// and tiles to `sched`. `bs..be` is the window's block range, `fs..fe`
+/// its flexible element range (row-major; flexible row runs never
+/// cross a window boundary). Window-local by construction — the delta
+/// path re-runs it for exactly the touched windows. `ts`/`cs` are
+/// clamped as in [`balance_spmm`]: zero bounds must not hang a worker.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sddmm_window_kernel(
+    dist: &SddmmDist,
+    w: u32,
+    bs: usize,
+    be: usize,
+    fs: usize,
+    fe: usize,
+    params: &BalanceParams,
+    sched: &mut SddmmSchedule,
+) {
+    let ts = params.ts.max(1);
+    let cs = params.cs.max(1);
+
+    // TC segments: the window's block run, chunked by Ts
+    if be > bs {
         if params.enabled {
-            let mut x = b;
+            let mut x = bs;
             while x < be {
                 let end = (x + ts).min(be);
                 sched.tc_segments.push(TcSegment {
@@ -305,24 +359,21 @@ pub fn balance_sddmm(dist: &SddmmDist, params: &BalanceParams) -> SddmmSchedule 
             }
         } else {
             sched.tc_segments.push(TcSegment {
-                block_start: b as u32,
+                block_start: bs as u32,
                 block_end: be as u32,
                 window: w,
                 atomic: false,
             });
         }
-        b = be;
     }
 
-    // flexible tiles: runs of equal row (the flexible stream is
-    // row-major within each window and windows ascend, so rows are
-    // contiguous), short/long split and Cs chunking as for SpMM
-    let nf = dist.flex_rows.len();
-    let mut i = 0usize;
-    while i < nf {
+    // flexible tiles: runs of equal row within [fs, fe), short/long
+    // split and Cs chunking as for SpMM
+    let mut i = fs;
+    while i < fe {
         let row = dist.flex_rows[i];
         let mut j = i + 1;
-        while j < nf && dist.flex_rows[j] == row {
+        while j < fe && dist.flex_rows[j] == row {
             j += 1;
         }
         let len = j - i;
@@ -359,7 +410,6 @@ pub fn balance_sddmm(dist: &SddmmDist, params: &BalanceParams) -> SddmmSchedule 
         }
         i = j;
     }
-    sched
 }
 
 #[cfg(test)]
@@ -368,7 +418,7 @@ mod tests {
     use crate::dist::{distribute_spmm, DistParams};
     use crate::sparse::gen;
     use crate::util::propcheck::{check, Config};
-    use crate::util::SplitMix64;
+    use crate::util::{testgen, SplitMix64};
 
     fn schedule_covers(dist: &SpmmDist, sched: &SpmmSchedule) {
         // every TC block in exactly one segment
@@ -398,8 +448,7 @@ mod tests {
     #[test]
     fn cover_property() {
         check(Config::default().cases(30), "schedule covers workload", |rng| {
-            let (rr, cc) = (rng.range(1, 150), rng.range(1, 100));
-            let m = gen::uniform_random(rng, rr, cc, 0.1);
+            let m = testgen::pattern_family(rng, 150);
             let d = distribute_spmm(
                 &m,
                 &DistParams { threshold: rng.range(1, 6), fill_padding: true },
@@ -566,7 +615,7 @@ mod tests {
         // the ablation path must preserve the cover + tile-row
         // invariants that the serving fast path relies on
         check(Config::default().cases(15), "disabled balance covers", |rng| {
-            let m = gen::uniform_random(rng, rng.range(1, 120), rng.range(1, 90), 0.1);
+            let m = testgen::pattern_family(rng, 120);
             let params = DistParams { threshold: rng.range(1, 6), fill_padding: true };
             let d = distribute_spmm(&m, &params);
             d.validate_cover(&m).unwrap();
@@ -608,8 +657,7 @@ mod tests {
     #[test]
     fn sddmm_cover_property() {
         check(Config::default().cases(30), "sddmm schedule covers workload", |rng| {
-            let (rr, cc) = (rng.range(1, 150), rng.range(1, 100));
-            let m = gen::uniform_random(rng, rr, cc, 0.1);
+            let m = testgen::pattern_family(rng, 150);
             let d = crate::dist::distribute_sddmm(
                 &m,
                 &DistParams { threshold: rng.range(1, 48), fill_padding: true },

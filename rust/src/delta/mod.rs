@@ -1,0 +1,833 @@
+//! Incremental plan maintenance for evolving sparsity patterns.
+//!
+//! Every layer below serving assumes a frozen pattern, so one edge
+//! insertion used to force full re-fingerprint + re-distribution +
+//! re-balancing — a cold `PlanCache` miss. But Libra's distribution is
+//! strictly *window-local* ([`crate::dist`]): window `w`'s θ-split
+//! depends only on rows `8w..8w+8`, and so do the balance decisions.
+//! An edge-batch delta therefore invalidates exactly the windows whose
+//! rows it touches; everything else can be spliced from the old plan
+//! with index shifts.
+//!
+//! The layer-by-layer contract (each step is bit-identical to running
+//! the full pipeline on the post-delta matrix, enforced by the
+//! differential tests in `tests/delta_differential.rs`):
+//!
+//! * [`Csr::apply_delta`] rebuilds only the touched row spans and
+//!   bulk-copies the untouched runs;
+//! * [`crate::sparse::PatternDigests::update`] re-hashes only touched
+//!   windows, recombining to exactly `fingerprint(new_m)`;
+//! * [`patch_spmm_dist`] / [`patch_sddmm_dist`] re-run the window
+//!   distributor only for touched windows and splice maximal untouched
+//!   window runs as bulk array copies (one constant CSR-index shift
+//!   per run, because a run's elements all move by the same amount);
+//! * [`patch_spmm_schedule`] / [`patch_sddmm_schedule`] re-run the
+//!   window balance kernel only for touched windows and copy the rest
+//!   of the segments with block/element shifts;
+//! * [`SpmmPlan::apply_delta`] / [`SddmmPlan::apply_delta`] compose the
+//!   two, and `serve::PlanCache::apply_delta` turns a mutated pattern
+//!   into a patched cache entry instead of a cold miss.
+//!
+//! A delta never changes the matrix shape — evolving-graph workloads
+//! mutate edges, not the vertex set (grow the vertex set by building a
+//! new matrix).
+
+use crate::balance::{
+    sddmm_window_kernel, spmm_win_block_start, spmm_window_kernel, BalanceParams, FlexTile,
+    SddmmSchedule, SpmmSchedule, TcSegment,
+};
+use crate::dist::spmm::distribute_window;
+use crate::dist::{distribute_sddmm, DistParams, DistStats, SddmmDist, SpmmDist};
+use crate::format::{TcBlocks, WINDOW};
+use crate::prep::{row_slice, SddmmPlan, SpmmPlan};
+use crate::sparse::Csr;
+
+/// One edit of an [`EdgeDelta`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DeltaOp {
+    /// Insert the edge with this value, or overwrite the value if the
+    /// edge already exists (a value-only upsert still invalidates the
+    /// window: patched distributions reuse untouched windows' *values*).
+    Upsert(f32),
+    /// Remove the edge (which must exist in the base matrix).
+    Delete,
+}
+
+/// A batch of edge edits against a fixed base pattern.
+///
+/// The batch is a *set of final states*, not a sequence: each `(row,
+/// col)` coordinate ends up inserted-or-updated (`Upsert`) or removed
+/// (`Delete`), and when the same coordinate is pushed twice the last
+/// push wins ([`EdgeDelta::canonical`]). Deltas are validated against
+/// the base matrix by [`Csr::apply_delta`]: out-of-range coordinates
+/// and deletions of absent edges are errors, not no-ops — a serving
+/// tenant mutating a graph it mis-tracks should hear about it.
+#[derive(Debug, Clone, Default)]
+pub struct EdgeDelta {
+    ops: Vec<(u32, u32, DeltaOp)>,
+}
+
+impl EdgeDelta {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert `(row, col)` with value `v`, or overwrite its value.
+    pub fn upsert(&mut self, row: usize, col: usize, v: f32) -> &mut Self {
+        self.ops.push((row as u32, col as u32, DeltaOp::Upsert(v)));
+        self
+    }
+
+    /// Delete `(row, col)` (must exist in the base matrix).
+    pub fn delete(&mut self, row: usize, col: usize) -> &mut Self {
+        self.ops.push((row as u32, col as u32, DeltaOp::Delete));
+        self
+    }
+
+    /// Number of (possibly duplicate) edits pushed.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// The raw edit list, in push order.
+    pub fn ops(&self) -> &[(u32, u32, DeltaOp)] {
+        &self.ops
+    }
+
+    /// Edits sorted by `(row, col)` with duplicates collapsed to the
+    /// last-pushed op per coordinate — the form every patcher consumes.
+    pub fn canonical(&self) -> Vec<(u32, u32, DeltaOp)> {
+        let mut sorted = self.ops.clone();
+        // stable by construction: ties keep push order, so the later
+        // push survives the dedup below
+        sorted.sort_by_key(|&(r, c, _)| (r, c));
+        let mut canon: Vec<(u32, u32, DeltaOp)> = Vec::with_capacity(sorted.len());
+        for op in sorted {
+            match canon.last_mut() {
+                Some(last) if last.0 == op.0 && last.1 == op.1 => *last = op,
+                _ => canon.push(op),
+            }
+        }
+        canon
+    }
+
+    /// Sorted, deduplicated indices of the row windows this delta
+    /// touches. Value-only upserts count: the distribution patchers
+    /// reuse untouched windows' value arrays verbatim.
+    pub fn touched_windows(&self) -> Vec<usize> {
+        let mut ws: Vec<usize> = self.ops.iter().map(|&(r, _, _)| r as usize / WINDOW).collect();
+        ws.sort_unstable();
+        ws.dedup();
+        ws
+    }
+}
+
+impl Csr {
+    /// Apply an edge-batch delta, rebuilding only the touched row spans
+    /// (untouched row runs are bulk copies). Errors on out-of-range
+    /// coordinates and on deleting an absent edge; the matrix shape is
+    /// preserved. Equivalent to rebuilding the matrix from scratch
+    /// with the edits applied.
+    pub fn apply_delta(&self, delta: &EdgeDelta) -> anyhow::Result<Csr> {
+        let ops = delta.canonical();
+        for &(r, c, op) in &ops {
+            anyhow::ensure!(
+                (r as usize) < self.rows,
+                "delta row {r} out of range (matrix has {} rows)",
+                self.rows
+            );
+            anyhow::ensure!(
+                (c as usize) < self.cols,
+                "delta col {c} out of range (matrix has {} cols)",
+                self.cols
+            );
+            if matches!(op, DeltaOp::Delete) {
+                anyhow::ensure!(
+                    self.get(r as usize, c as usize).is_some(),
+                    "delta deletes absent edge ({r}, {c})"
+                );
+            }
+        }
+
+        let mut row_ptr = vec![0u32; self.rows + 1];
+        let mut col_idx: Vec<u32> = Vec::with_capacity(self.col_idx.len() + ops.len());
+        let mut values: Vec<f32> = Vec::with_capacity(self.values.len() + ops.len());
+        let mut oi = 0usize;
+        let mut r = 0usize;
+        while r < self.rows {
+            let edit_row = if oi < ops.len() { ops[oi].0 as usize } else { self.rows };
+            if r < edit_row {
+                // bulk-copy the untouched run [r, edit_row)
+                let (s, e) = (self.row_ptr[r] as usize, self.row_ptr[edit_row] as usize);
+                let base = col_idx.len() as i64 - s as i64;
+                col_idx.extend_from_slice(&self.col_idx[s..e]);
+                values.extend_from_slice(&self.values[s..e]);
+                for rr in r..edit_row {
+                    row_ptr[rr + 1] = (self.row_ptr[rr + 1] as i64 + base) as u32;
+                }
+                r = edit_row;
+                continue;
+            }
+            // merge row r's old elements with its ops (both col-sorted)
+            let (s, e) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            let mut oj = oi;
+            while oj < ops.len() && ops[oj].0 as usize == r {
+                oj += 1;
+            }
+            let (mut i, mut j) = (s, oi);
+            while i < e && j < oj {
+                let (oc, nc) = (self.col_idx[i], ops[j].1);
+                if oc < nc {
+                    col_idx.push(oc);
+                    values.push(self.values[i]);
+                    i += 1;
+                } else if nc < oc {
+                    // absent coordinate: validated above to be an upsert
+                    if let DeltaOp::Upsert(v) = ops[j].2 {
+                        col_idx.push(nc);
+                        values.push(v);
+                    }
+                    j += 1;
+                } else {
+                    match ops[j].2 {
+                        DeltaOp::Upsert(v) => {
+                            col_idx.push(oc);
+                            values.push(v);
+                        }
+                        DeltaOp::Delete => {}
+                    }
+                    i += 1;
+                    j += 1;
+                }
+            }
+            while i < e {
+                col_idx.push(self.col_idx[i]);
+                values.push(self.values[i]);
+                i += 1;
+            }
+            while j < oj {
+                if let DeltaOp::Upsert(v) = ops[j].2 {
+                    col_idx.push(ops[j].1);
+                    values.push(v);
+                }
+                j += 1;
+            }
+            row_ptr[r + 1] = col_idx.len() as u32;
+            oi = oj;
+            r += 1;
+        }
+        Ok(Csr { rows: self.rows, cols: self.cols, row_ptr, col_idx, values })
+    }
+}
+
+/// Patch an SpMM distribution after a delta: re-distribute exactly the
+/// `touched` windows (sorted, as from [`EdgeDelta::touched_windows`])
+/// from `new_m`, and splice every maximal untouched window run from
+/// `old` as bulk array copies. Within an untouched run all CSR source
+/// indices shift by one constant (`new_m.row_ptr[lo] - old_m.row_ptr[lo]`
+/// at the run start), which is what makes the splice a copy rather
+/// than a recomputation. Bit-identical to `distribute_spmm(new_m,
+/// params)` provided `old` was built from `old_m` with the same
+/// `params`.
+pub fn patch_spmm_dist(
+    old: &SpmmDist,
+    old_m: &Csr,
+    new_m: &Csr,
+    touched: &[usize],
+    params: &DistParams,
+) -> SpmmDist {
+    assert_eq!(old.rows, new_m.rows, "deltas never change the shape");
+    assert_eq!(old.cols, new_m.cols, "deltas never change the shape");
+    let rows = old.rows;
+    let n_windows = rows.div_ceil(WINDOW);
+    let old_wbs = spmm_win_block_start(old);
+    let k = old.tc.k;
+
+    let mut tc = TcBlocks::new(k);
+    let mut tc_src_idx: Vec<u32> = Vec::with_capacity(old.tc_src_idx.len());
+    let mut flex_row_ptr = vec![0u32; rows + 1];
+    let mut flex_cols: Vec<u32> = Vec::with_capacity(old.flex_cols.len());
+    let mut flex_vals: Vec<f32> = Vec::with_capacity(old.flex_vals.len());
+    let mut flex_src_idx: Vec<u32> = Vec::with_capacity(old.flex_src_idx.len());
+
+    let mut ti = 0usize;
+    let mut w = 0usize;
+    while w < n_windows {
+        while ti < touched.len() && touched[ti] < w {
+            ti += 1;
+        }
+        if ti < touched.len() && touched[ti] == w {
+            // touched: re-run the window distributor on the new matrix
+            let o = distribute_window(new_m, w, params);
+            let lo = w * WINDOW;
+            let mut acc = *tc.val_ptr.last().unwrap();
+            for &bm in &o.bitmaps {
+                tc.window_of.push(w as u32);
+                tc.bitmaps.push(bm);
+                acc += bm.count_ones();
+                tc.val_ptr.push(acc);
+            }
+            tc.cols.extend_from_slice(&o.block_cols);
+            tc.values.extend_from_slice(&o.values);
+            tc_src_idx.extend_from_slice(&o.tc_src_idx);
+            let mut facc = flex_vals.len() as u32;
+            for (i, &len) in o.flex_row_len.iter().enumerate() {
+                facc += len;
+                flex_row_ptr[lo + i + 1] = facc;
+            }
+            flex_cols.extend_from_slice(&o.flex_cols);
+            flex_vals.extend_from_slice(&o.flex_vals);
+            flex_src_idx.extend_from_slice(&o.flex_src_idx);
+            w += 1;
+        } else {
+            // untouched run [w, wr): splice with shifted indices
+            let wr = if ti < touched.len() { touched[ti].min(n_windows) } else { n_windows };
+            let lo = w * WINDOW;
+            let hi_run = (wr * WINDOW).min(rows);
+            let (bs, be) = (old_wbs[w] as usize, old_wbs[wr] as usize);
+            let (vs, ve) = (old.tc.val_ptr[bs] as usize, old.tc.val_ptr[be] as usize);
+            let shift = new_m.row_ptr[lo] as i64 - old_m.row_ptr[lo] as i64;
+            let vdiff = *tc.val_ptr.last().unwrap() as i64 - old.tc.val_ptr[bs] as i64;
+            tc.window_of.extend_from_slice(&old.tc.window_of[bs..be]);
+            tc.cols.extend_from_slice(&old.tc.cols[bs * k..be * k]);
+            tc.bitmaps.extend_from_slice(&old.tc.bitmaps[bs..be]);
+            tc.values.extend_from_slice(&old.tc.values[vs..ve]);
+            let vp = old.tc.val_ptr[bs + 1..=be].iter().map(|&p| (p as i64 + vdiff) as u32);
+            tc.val_ptr.extend(vp);
+            tc_src_idx.extend(old.tc_src_idx[vs..ve].iter().map(|&p| (p as i64 + shift) as u32));
+            let (fs, fe) = (old.flex_row_ptr[lo] as usize, old.flex_row_ptr[hi_run] as usize);
+            let fbase = flex_vals.len() as u32;
+            for r in lo..hi_run {
+                flex_row_ptr[r + 1] = fbase + old.flex_row_ptr[r + 1] - fs as u32;
+            }
+            flex_cols.extend_from_slice(&old.flex_cols[fs..fe]);
+            flex_vals.extend_from_slice(&old.flex_vals[fs..fe]);
+            let fsi = old.flex_src_idx[fs..fe].iter().map(|&p| (p as i64 + shift) as u32);
+            flex_src_idx.extend(fsi);
+            w = wr;
+        }
+    }
+    let nnz_tc = tc.nnz();
+    let stats = DistStats {
+        nnz_total: new_m.nnz(),
+        nnz_tc,
+        nnz_flex: flex_vals.len(),
+        n_blocks: tc.n_blocks(),
+        n_windows,
+        padding_ratio: tc.padding_ratio(),
+    };
+    SpmmDist {
+        rows,
+        cols: old.cols,
+        tc,
+        tc_src_idx,
+        flex_row_ptr,
+        flex_cols,
+        flex_vals,
+        flex_src_idx,
+        stats,
+    }
+}
+
+/// Patch an SDDMM distribution after a delta — the [`patch_spmm_dist`]
+/// mirror. Touched windows re-run the distributor on a row slice of
+/// `new_m` (re-globalized exactly as the parallel preprocessing path
+/// does); untouched window runs are spliced with a constant CSR-index
+/// shift per run. Bit-identical to `distribute_sddmm(new_m, params)`.
+pub fn patch_sddmm_dist(
+    old: &SddmmDist,
+    old_m: &Csr,
+    new_m: &Csr,
+    touched: &[usize],
+    params: &DistParams,
+) -> SddmmDist {
+    assert_eq!(old.rows, new_m.rows, "deltas never change the shape");
+    assert_eq!(old.cols, new_m.cols, "deltas never change the shape");
+    let rows = old.rows;
+    let n_windows = rows.div_ceil(WINDOW);
+    let k = old.tc.k;
+    let mut out = SddmmDist { rows, cols: old.cols, tc: TcBlocks::new(k), ..Default::default() };
+
+    let mut ti = 0usize;
+    let mut w = 0usize;
+    while w < n_windows {
+        while ti < touched.len() && touched[ti] < w {
+            ti += 1;
+        }
+        if ti < touched.len() && touched[ti] == w {
+            let lo = w * WINDOW;
+            let hi = ((w + 1) * WINDOW).min(rows);
+            let sub = row_slice(new_m, lo, hi);
+            let d = distribute_sddmm(&sub, params);
+            let val_base = out.tc.values.len() as u32;
+            let pos_base = new_m.row_ptr[lo];
+            for _ in 0..d.tc.n_blocks() {
+                out.tc.window_of.push(w as u32);
+            }
+            out.tc.cols.extend_from_slice(&d.tc.cols);
+            out.tc.bitmaps.extend_from_slice(&d.tc.bitmaps);
+            out.tc.values.extend_from_slice(&d.tc.values);
+            out.tc.val_ptr.extend(d.tc.val_ptr[1..].iter().map(|&p| p + val_base));
+            out.tc_out_idx.extend(d.tc_out_idx.iter().map(|&p| p + pos_base));
+            out.flex_rows.extend(d.flex_rows.iter().map(|&r| r + lo as u32));
+            out.flex_cols.extend_from_slice(&d.flex_cols);
+            out.flex_vals.extend_from_slice(&d.flex_vals);
+            out.flex_out_idx.extend(d.flex_out_idx.iter().map(|&p| p + pos_base));
+            w += 1;
+        } else {
+            let wr = if ti < touched.len() { touched[ti].min(n_windows) } else { n_windows };
+            let lo = w * WINDOW;
+            let hi_run = (wr * WINDOW).min(rows);
+            let bs = old.tc.window_of.partition_point(|&x| (x as usize) < w);
+            let be = old.tc.window_of.partition_point(|&x| (x as usize) < wr);
+            let (vs, ve) = (old.tc.val_ptr[bs] as usize, old.tc.val_ptr[be] as usize);
+            let fs = old.flex_rows.partition_point(|&r| (r as usize) < lo);
+            let fe = old.flex_rows.partition_point(|&r| (r as usize) < hi_run);
+            let shift = new_m.row_ptr[lo] as i64 - old_m.row_ptr[lo] as i64;
+            let vdiff = out.tc.values.len() as i64 - old.tc.val_ptr[bs] as i64;
+            out.tc.window_of.extend_from_slice(&old.tc.window_of[bs..be]);
+            out.tc.cols.extend_from_slice(&old.tc.cols[bs * k..be * k]);
+            out.tc.bitmaps.extend_from_slice(&old.tc.bitmaps[bs..be]);
+            out.tc.values.extend_from_slice(&old.tc.values[vs..ve]);
+            let vp = old.tc.val_ptr[bs + 1..=be].iter().map(|&p| (p as i64 + vdiff) as u32);
+            out.tc.val_ptr.extend(vp);
+            let oi = old.tc_out_idx[vs..ve].iter().map(|&p| (p as i64 + shift) as u32);
+            out.tc_out_idx.extend(oi);
+            out.flex_rows.extend_from_slice(&old.flex_rows[fs..fe]);
+            out.flex_cols.extend_from_slice(&old.flex_cols[fs..fe]);
+            out.flex_vals.extend_from_slice(&old.flex_vals[fs..fe]);
+            let foi = old.flex_out_idx[fs..fe].iter().map(|&p| (p as i64 + shift) as u32);
+            out.flex_out_idx.extend(foi);
+            w = wr;
+        }
+    }
+    let nnz_tc = out.tc.nnz();
+    out.stats = DistStats {
+        nnz_total: new_m.nnz(),
+        nnz_tc,
+        nnz_flex: new_m.nnz() - nnz_tc,
+        n_blocks: out.tc.n_blocks(),
+        n_windows,
+        padding_ratio: out.tc.padding_ratio(),
+    };
+    out
+}
+
+/// Patch an SpMM balance schedule after its distribution was patched:
+/// re-run the window balance kernel only for `touched` windows (on
+/// `new_dist`) and copy every other window's segments with block /
+/// element index shifts. Bit-identical to `balance_spmm(new_dist,
+/// params)` provided `old_sched` came from `balance_spmm(old_dist,
+/// params)`.
+pub fn patch_spmm_schedule(
+    old_sched: &SpmmSchedule,
+    old_dist: &SpmmDist,
+    new_dist: &SpmmDist,
+    touched: &[usize],
+    params: &BalanceParams,
+) -> SpmmSchedule {
+    let rows = new_dist.rows;
+    let n_windows = rows.div_ceil(WINDOW);
+    let old_wbs = spmm_win_block_start(old_dist);
+    let new_wbs = spmm_win_block_start(new_dist);
+    let mut sched = SpmmSchedule::default();
+    let (mut tc_i, mut long_i, mut short_i) = (0usize, 0usize, 0usize);
+    let mut ti = 0usize;
+    for w in 0..n_windows {
+        let lo = w * WINDOW;
+        let hi = ((w + 1) * WINDOW).min(rows);
+        // the old schedule's slice for this window (segments are
+        // window-ascending, tiles row-ascending)
+        let mut tc_j = tc_i;
+        while tc_j < old_sched.tc_segments.len()
+            && old_sched.tc_segments[tc_j].window as usize == w
+        {
+            tc_j += 1;
+        }
+        let mut long_j = long_i;
+        while long_j < old_sched.long_tiles.len()
+            && (old_sched.long_tiles[long_j].row as usize) < hi
+        {
+            long_j += 1;
+        }
+        let mut short_j = short_i;
+        while short_j < old_sched.short_tiles.len()
+            && (old_sched.short_tiles[short_j].row as usize) < hi
+        {
+            short_j += 1;
+        }
+        while ti < touched.len() && touched[ti] < w {
+            ti += 1;
+        }
+        if ti < touched.len() && touched[ti] == w {
+            spmm_window_kernel(
+                new_dist,
+                w,
+                new_wbs[w] as usize,
+                new_wbs[w + 1] as usize,
+                params,
+                &mut sched,
+            );
+        } else {
+            let block_shift = new_wbs[w] as i64 - old_wbs[w] as i64;
+            let elem_shift = new_dist.flex_row_ptr[lo] as i64 - old_dist.flex_row_ptr[lo] as i64;
+            // Every segment of an untouched window carries the window's
+            // atomic flag (a long tile's extra `row_split` trigger
+            // implies the window-level `long_decomposed` trigger), so
+            // the per-window count can be reconstructed from the copies.
+            let mut window_atomic = false;
+            for seg in &old_sched.tc_segments[tc_i..tc_j] {
+                window_atomic |= seg.atomic;
+                sched.tc_segments.push(TcSegment {
+                    block_start: (seg.block_start as i64 + block_shift) as u32,
+                    block_end: (seg.block_end as i64 + block_shift) as u32,
+                    ..*seg
+                });
+            }
+            for t in &old_sched.long_tiles[long_i..long_j] {
+                window_atomic |= t.atomic;
+                sched.long_tiles.push(FlexTile {
+                    elem_start: (t.elem_start as i64 + elem_shift) as u32,
+                    elem_end: (t.elem_end as i64 + elem_shift) as u32,
+                    ..*t
+                });
+            }
+            for t in &old_sched.short_tiles[short_i..short_j] {
+                window_atomic |= t.atomic;
+                sched.short_tiles.push(FlexTile {
+                    elem_start: (t.elem_start as i64 + elem_shift) as u32,
+                    elem_end: (t.elem_end as i64 + elem_shift) as u32,
+                    ..*t
+                });
+            }
+            if window_atomic {
+                sched.atomic_windows += 1;
+            }
+        }
+        tc_i = tc_j;
+        long_i = long_j;
+        short_i = short_j;
+    }
+    sched
+}
+
+/// Patch an SDDMM balance schedule — the [`patch_spmm_schedule`]
+/// mirror (no atomic-window accounting: SDDMM segments are never
+/// atomic). Bit-identical to `balance_sddmm(new_dist, params)`.
+pub fn patch_sddmm_schedule(
+    old_sched: &SddmmSchedule,
+    old_dist: &SddmmDist,
+    new_dist: &SddmmDist,
+    touched: &[usize],
+    params: &BalanceParams,
+) -> SddmmSchedule {
+    let rows = new_dist.rows;
+    let n_windows = rows.div_ceil(WINDOW);
+    let mut sched = SddmmSchedule::default();
+    let (mut tc_i, mut long_i, mut short_i) = (0usize, 0usize, 0usize);
+    // running block / flex-element cursors into both distributions
+    let (mut old_b, mut new_b) = (0usize, 0usize);
+    let (mut old_f, mut new_f) = (0usize, 0usize);
+    let mut ti = 0usize;
+    for w in 0..n_windows {
+        let hi = ((w + 1) * WINDOW).min(rows);
+        let mut old_be = old_b;
+        while old_be < old_dist.tc.n_blocks() && old_dist.tc.window_of[old_be] as usize == w {
+            old_be += 1;
+        }
+        let mut new_be = new_b;
+        while new_be < new_dist.tc.n_blocks() && new_dist.tc.window_of[new_be] as usize == w {
+            new_be += 1;
+        }
+        let mut old_fe = old_f;
+        while old_fe < old_dist.flex_rows.len() && (old_dist.flex_rows[old_fe] as usize) < hi {
+            old_fe += 1;
+        }
+        let mut new_fe = new_f;
+        while new_fe < new_dist.flex_rows.len() && (new_dist.flex_rows[new_fe] as usize) < hi {
+            new_fe += 1;
+        }
+        let mut tc_j = tc_i;
+        while tc_j < old_sched.tc_segments.len()
+            && old_sched.tc_segments[tc_j].window as usize == w
+        {
+            tc_j += 1;
+        }
+        let mut long_j = long_i;
+        while long_j < old_sched.long_tiles.len()
+            && (old_sched.long_tiles[long_j].row as usize) < hi
+        {
+            long_j += 1;
+        }
+        let mut short_j = short_i;
+        while short_j < old_sched.short_tiles.len()
+            && (old_sched.short_tiles[short_j].row as usize) < hi
+        {
+            short_j += 1;
+        }
+        while ti < touched.len() && touched[ti] < w {
+            ti += 1;
+        }
+        if ti < touched.len() && touched[ti] == w {
+            sddmm_window_kernel(
+                new_dist,
+                w as u32,
+                new_b,
+                new_be,
+                new_f,
+                new_fe,
+                params,
+                &mut sched,
+            );
+        } else {
+            let block_shift = new_b as i64 - old_b as i64;
+            let elem_shift = new_f as i64 - old_f as i64;
+            for seg in &old_sched.tc_segments[tc_i..tc_j] {
+                sched.tc_segments.push(TcSegment {
+                    block_start: (seg.block_start as i64 + block_shift) as u32,
+                    block_end: (seg.block_end as i64 + block_shift) as u32,
+                    ..*seg
+                });
+            }
+            for t in &old_sched.long_tiles[long_i..long_j] {
+                sched.long_tiles.push(FlexTile {
+                    elem_start: (t.elem_start as i64 + elem_shift) as u32,
+                    elem_end: (t.elem_end as i64 + elem_shift) as u32,
+                    ..*t
+                });
+            }
+            for t in &old_sched.short_tiles[short_i..short_j] {
+                sched.short_tiles.push(FlexTile {
+                    elem_start: (t.elem_start as i64 + elem_shift) as u32,
+                    elem_end: (t.elem_end as i64 + elem_shift) as u32,
+                    ..*t
+                });
+            }
+        }
+        tc_i = tc_j;
+        long_i = long_j;
+        short_i = short_j;
+        old_b = old_be;
+        new_b = new_be;
+        old_f = old_fe;
+        new_f = new_fe;
+    }
+    sched
+}
+
+impl SpmmPlan {
+    /// Patch this plan to the post-delta matrix `new_m`, recomputing
+    /// only the `touched` windows' distribution and balance decisions
+    /// (see module docs). `old_m` is the matrix this plan was built
+    /// from; `dist_params`/`balance_params` must match the plan's.
+    /// Bit-identical to `preprocess_spmm(new_m, ...)`.
+    pub fn apply_delta(
+        &self,
+        old_m: &Csr,
+        new_m: &Csr,
+        touched: &[usize],
+        dist_params: &DistParams,
+        balance_params: &BalanceParams,
+    ) -> SpmmPlan {
+        let dist = patch_spmm_dist(&self.dist, old_m, new_m, touched, dist_params);
+        let sched = patch_spmm_schedule(&self.sched, &self.dist, &dist, touched, balance_params);
+        SpmmPlan { dist, sched }
+    }
+}
+
+impl SddmmPlan {
+    /// Patch this plan to the post-delta matrix `new_m` — the
+    /// [`SpmmPlan::apply_delta`] mirror.
+    pub fn apply_delta(
+        &self,
+        old_m: &Csr,
+        new_m: &Csr,
+        touched: &[usize],
+        dist_params: &DistParams,
+        balance_params: &BalanceParams,
+    ) -> SddmmPlan {
+        let dist = patch_sddmm_dist(&self.dist, old_m, new_m, touched, dist_params);
+        let sched = patch_sddmm_schedule(&self.sched, &self.dist, &dist, touched, balance_params);
+        SddmmPlan { dist, sched }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, Coo};
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn canonical_is_sorted_and_last_wins() {
+        let mut d = EdgeDelta::new();
+        d.upsert(3, 4, 1.0).delete(1, 2).upsert(3, 4, 9.0).upsert(0, 0, 5.0).delete(3, 4);
+        let c = d.canonical();
+        assert_eq!(c.len(), 3);
+        assert_eq!((c[0].0, c[0].1), (0, 0));
+        assert_eq!((c[1].0, c[1].1), (1, 2));
+        assert_eq!((c[2].0, c[2].1), (3, 4));
+        // (3, 4): pushed upsert, upsert, delete — the delete wins
+        assert!(matches!(c[2].2, DeltaOp::Delete));
+        assert_eq!(d.len(), 5);
+        assert!(!d.is_empty());
+    }
+
+    #[test]
+    fn touched_windows_includes_value_only_upserts() {
+        let mut d = EdgeDelta::new();
+        d.upsert(0, 1, 2.0); // window 0
+        d.upsert(17, 3, 4.0); // window 2
+        d.upsert(18, 5, 6.0); // window 2 again
+        assert_eq!(d.touched_windows(), vec![0, 2]);
+    }
+
+    #[test]
+    fn apply_delta_matches_rebuilt_coo() {
+        let mut rng = SplitMix64::new(500);
+        let m = gen::uniform_random(&mut rng, 40, 30, 0.1);
+        let mut d = EdgeDelta::new();
+        // delete the first edge, upsert a new one and revalue another
+        let (r0, c0) = (0usize, m.col_idx[m.row_ptr[0] as usize] as usize);
+        let first_row_nonempty = m.row_ptr[1] > m.row_ptr[0];
+        if first_row_nonempty {
+            d.delete(r0, c0);
+        }
+        d.upsert(39, 29, 7.5);
+        let new_m = m.apply_delta(&d).unwrap();
+        new_m.validate().unwrap();
+        // rebuild from scratch via COO for comparison
+        let mut coo = Coo::new(40, 30);
+        for r in 0..m.rows {
+            let (cols, vals) = m.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                if first_row_nonempty && r == r0 && c as usize == c0 {
+                    continue;
+                }
+                if r == 39 && c == 29 {
+                    continue;
+                }
+                coo.push(r, c as usize, v);
+            }
+        }
+        coo.push(39, 29, 7.5);
+        let want = coo.to_csr();
+        assert_eq!(new_m.row_ptr, want.row_ptr);
+        assert_eq!(new_m.col_idx, want.col_idx);
+        assert_eq!(new_m.values, want.values);
+    }
+
+    #[test]
+    fn apply_delta_value_only_upsert_keeps_pattern() {
+        let mut rng = SplitMix64::new(501);
+        let m = gen::uniform_random(&mut rng, 20, 20, 0.2);
+        let pos = m.nnz() / 2;
+        let r = m.row_ptr.partition_point(|&p| p as usize <= pos) - 1;
+        let c = m.col_idx[pos] as usize;
+        let mut d = EdgeDelta::new();
+        d.upsert(r, c, 42.0);
+        let new_m = m.apply_delta(&d).unwrap();
+        assert_eq!(new_m.row_ptr, m.row_ptr);
+        assert_eq!(new_m.col_idx, m.col_idx);
+        assert_eq!(new_m.get(r, c), Some(42.0));
+    }
+
+    #[test]
+    fn apply_delta_rejects_bad_ops() {
+        let m = gen::uniform_random(&mut SplitMix64::new(502), 10, 10, 0.1);
+        let mut d = EdgeDelta::new();
+        d.upsert(10, 0, 1.0);
+        assert!(m.apply_delta(&d).is_err());
+        let mut d = EdgeDelta::new();
+        d.upsert(0, 10, 1.0);
+        assert!(m.apply_delta(&d).is_err());
+        // deleting an absent edge is an error, not a no-op
+        let mut d = EdgeDelta::new();
+        let absent_col = (0..10).find(|&c| m.get(0, c).is_none()).unwrap();
+        d.delete(0, absent_col);
+        assert!(m.apply_delta(&d).is_err());
+    }
+
+    #[test]
+    fn empty_delta_is_identity() {
+        let m = gen::uniform_random(&mut SplitMix64::new(503), 25, 25, 0.15);
+        let new_m = m.apply_delta(&EdgeDelta::new()).unwrap();
+        assert_eq!(new_m.row_ptr, m.row_ptr);
+        assert_eq!(new_m.col_idx, m.col_idx);
+        assert_eq!(new_m.values, m.values);
+    }
+
+    #[test]
+    fn patched_dist_matches_scratch_on_small_case() {
+        let mut rng = SplitMix64::new(504);
+        let m = gen::uniform_random(&mut rng, 64, 48, 0.1);
+        let params = DistParams::default();
+        let old = crate::dist::distribute_spmm(&m, &params);
+        let mut d = EdgeDelta::new();
+        d.upsert(20, 7, 3.0).delete(5, m.col_idx[m.row_ptr[5] as usize] as usize);
+        let new_m = m.apply_delta(&d).unwrap();
+        let patched = patch_spmm_dist(&old, &m, &new_m, &d.touched_windows(), &params);
+        let scratch = crate::dist::distribute_spmm(&new_m, &params);
+        assert_eq!(patched.tc.bitmaps, scratch.tc.bitmaps);
+        assert_eq!(patched.tc.cols, scratch.tc.cols);
+        assert_eq!(patched.tc.values, scratch.tc.values);
+        assert_eq!(patched.tc.val_ptr, scratch.tc.val_ptr);
+        assert_eq!(patched.tc.window_of, scratch.tc.window_of);
+        assert_eq!(patched.tc_src_idx, scratch.tc_src_idx);
+        assert_eq!(patched.flex_row_ptr, scratch.flex_row_ptr);
+        assert_eq!(patched.flex_cols, scratch.flex_cols);
+        assert_eq!(patched.flex_vals, scratch.flex_vals);
+        assert_eq!(patched.flex_src_idx, scratch.flex_src_idx);
+        assert_eq!(patched.stats, scratch.stats);
+        patched.validate_cover(&new_m).unwrap();
+    }
+
+    #[test]
+    fn patched_plan_matches_scratch_on_small_case() {
+        let mut rng = SplitMix64::new(505);
+        let m = gen::power_law(&mut rng, 96, 6.0, 2.0);
+        let dp = DistParams::default();
+        let bp = BalanceParams::default();
+        let plan = crate::prep::preprocess_spmm(&m, &dp, &bp, crate::prep::PrepMode::Sequential);
+        let mut d = EdgeDelta::new();
+        d.upsert(90, 3, 1.0).upsert(0, 2, 2.0);
+        let new_m = m.apply_delta(&d).unwrap();
+        let patched = plan.apply_delta(&m, &new_m, &d.touched_windows(), &dp, &bp);
+        let scratch =
+            crate::prep::preprocess_spmm(&new_m, &dp, &bp, crate::prep::PrepMode::Sequential);
+        assert_eq!(patched.sched.tc_segments, scratch.sched.tc_segments);
+        assert_eq!(patched.sched.long_tiles, scratch.sched.long_tiles);
+        assert_eq!(patched.sched.short_tiles, scratch.sched.short_tiles);
+        assert_eq!(patched.sched.atomic_windows, scratch.sched.atomic_windows);
+        assert_eq!(patched.dist.flex_row_ptr, scratch.dist.flex_row_ptr);
+        assert_eq!(patched.dist.tc.bitmaps, scratch.dist.tc.bitmaps);
+    }
+
+    #[test]
+    fn patched_sddmm_plan_matches_scratch_on_small_case() {
+        let mut rng = SplitMix64::new(506);
+        let m = gen::uniform_random(&mut rng, 80, 40, 0.12);
+        let dp = DistParams::sddmm_default();
+        let bp = BalanceParams::default();
+        let plan = crate::prep::preprocess_sddmm(&m, &dp, &bp, crate::prep::PrepMode::Sequential);
+        let mut d = EdgeDelta::new();
+        d.upsert(40, 10, 4.0).upsert(41, 11, 5.0);
+        let new_m = m.apply_delta(&d).unwrap();
+        let patched = plan.apply_delta(&m, &new_m, &d.touched_windows(), &dp, &bp);
+        let scratch =
+            crate::prep::preprocess_sddmm(&new_m, &dp, &bp, crate::prep::PrepMode::Sequential);
+        assert_eq!(patched.dist.tc.bitmaps, scratch.dist.tc.bitmaps);
+        assert_eq!(patched.dist.tc.val_ptr, scratch.dist.tc.val_ptr);
+        assert_eq!(patched.dist.tc_out_idx, scratch.dist.tc_out_idx);
+        assert_eq!(patched.dist.flex_rows, scratch.dist.flex_rows);
+        assert_eq!(patched.dist.flex_out_idx, scratch.dist.flex_out_idx);
+        assert_eq!(patched.sched.tc_segments, scratch.sched.tc_segments);
+        assert_eq!(patched.sched.long_tiles, scratch.sched.long_tiles);
+        assert_eq!(patched.sched.short_tiles, scratch.sched.short_tiles);
+        patched.dist.validate_cover(&new_m).unwrap();
+    }
+}

@@ -199,14 +199,12 @@ mod tests {
     use super::*;
     use crate::sparse::{gen, Coo};
     use crate::util::propcheck::{check, Config};
-    use crate::util::SplitMix64;
+    use crate::util::{testgen, SplitMix64};
 
     #[test]
     fn cover_property() {
         check(Config::default().cases(40), "sddmm dist covers matrix", |rng| {
-            let rows = rng.range(1, 180);
-            let cols = rng.range(1, 150);
-            let m = gen::uniform_random(rng, rows, cols, 0.08);
+            let m = testgen::pattern_family(rng, 180);
             let th = if rng.chance(0.1) { usize::MAX } else { rng.range(1, 64) };
             let d = distribute_sddmm(&m, &DistParams { threshold: th, fill_padding: true });
             d.validate_cover(&m).unwrap();

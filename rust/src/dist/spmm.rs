@@ -291,14 +291,12 @@ mod tests {
     use crate::format::bitmap;
     use crate::sparse::{gen, Coo};
     use crate::util::propcheck::{check, Config};
-    use crate::util::SplitMix64;
+    use crate::util::{testgen, SplitMix64};
 
     #[test]
     fn cover_property() {
         check(Config::default().cases(40), "spmm dist covers matrix", |rng| {
-            let rows = rng.range(1, 200);
-            let cols = rng.range(1, 150);
-            let m = gen::uniform_random(rng, rows, cols, 0.08);
+            let m = testgen::pattern_family(rng, 200);
             let params = DistParams {
                 threshold: if rng.chance(0.1) { usize::MAX } else { rng.range(1, 9) },
                 fill_padding: rng.chance(0.5),
@@ -379,7 +377,7 @@ mod tests {
     #[test]
     fn fill_padding_never_adds_blocks() {
         check(Config::default().cases(25), "fill keeps block count", |rng| {
-            let m = gen::uniform_random(rng, rng.range(1, 120), rng.range(1, 120), 0.1);
+            let m = testgen::random_csr(rng, rng.range(1, 90), rng.range(1, 90), 0.1);
             let th = rng.range(2, 8);
             let off = distribute_spmm(&m, &DistParams { threshold: th, fill_padding: false });
             let on = distribute_spmm(&m, &DistParams { threshold: th, fill_padding: true });

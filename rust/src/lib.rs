@@ -18,6 +18,7 @@ pub mod balance;
 pub mod bench;
 pub mod baselines;
 pub mod costmodel;
+pub mod delta;
 pub mod exec;
 pub mod planner;
 pub mod prep;

@@ -419,7 +419,7 @@ fn distribute_sddmm_parallel(m: &Csr, params: &DistParams) -> SddmmDist {
 }
 
 /// Extract rows `[rlo, rhi)` as an independent CSR (columns unchanged).
-fn row_slice(m: &Csr, rlo: usize, rhi: usize) -> Csr {
+pub(crate) fn row_slice(m: &Csr, rlo: usize, rhi: usize) -> Csr {
     let s = m.row_ptr[rlo] as usize;
     let e = m.row_ptr[rhi] as usize;
     Csr {
@@ -436,13 +436,12 @@ mod tests {
     use super::*;
     use crate::sparse::gen;
     use crate::util::propcheck::{check, Config};
-    use crate::util::SplitMix64;
+    use crate::util::{testgen, SplitMix64};
 
     #[test]
     fn parallel_equals_sequential_spmm() {
         check(Config::default().cases(15), "parallel == sequential prep", |rng| {
-            let rows = rng.range(1, 400);
-            let m = gen::uniform_random(rng, rows, 200, 0.05);
+            let m = testgen::pattern_family(rng, 300);
             let params = DistParams::default();
             let seq = crate::dist::distribute_spmm(&m, &params);
             let par = distribute_spmm_parallel(&m, &params);
@@ -457,8 +456,7 @@ mod tests {
     #[test]
     fn parallel_equals_sequential_sddmm() {
         check(Config::default().cases(10), "parallel == sequential sddmm", |rng| {
-            let rows = rng.range(1, 300);
-            let m = gen::uniform_random(rng, rows, 150, 0.06);
+            let m = testgen::pattern_family(rng, 250);
             let params = DistParams::sddmm_default();
             let seq = distribute_sddmm(&m, &params);
             let par = distribute_sddmm_parallel(&m, &params);
@@ -533,13 +531,8 @@ mod tests {
         // standalone preprocess of that member would (distribution
         // stats and balance decomposition counts alike).
         check(Config::default().cases(12), "batch stats == standalone", |rng| {
-            let members: Vec<_> = (0..rng.range(1, 5))
-                .map(|_| {
-                    let rows = rng.range(1, 60);
-                    let cols = rng.range(1, 50);
-                    gen::uniform_random(rng, rows, cols, 0.12)
-                })
-                .collect();
+            let members: Vec<_> =
+                (0..rng.range(1, 5)).map(|_| testgen::pattern_family(rng, 60)).collect();
             let batch = crate::sparse::GraphBatch::compose(&members).unwrap();
             let d = DistParams { threshold: rng.range(1, 6), fill_padding: rng.chance(0.5) };
             let b = BalanceParams::default();
@@ -588,13 +581,8 @@ mod tests {
         // pass over the supermatrix reports per member exactly what a
         // standalone preprocess would.
         check(Config::default().cases(12), "sddmm batch stats == standalone", |rng| {
-            let members: Vec<_> = (0..rng.range(1, 5))
-                .map(|_| {
-                    let rows = rng.range(1, 60);
-                    let cols = rng.range(1, 50);
-                    gen::uniform_random(rng, rows, cols, 0.12)
-                })
-                .collect();
+            let members: Vec<_> =
+                (0..rng.range(1, 5)).map(|_| testgen::pattern_family(rng, 60)).collect();
             let batch = crate::sparse::GraphBatch::compose(&members).unwrap();
             let d = DistParams { threshold: rng.range(1, 48), fill_padding: true };
             let b = BalanceParams::default();

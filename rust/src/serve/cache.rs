@@ -16,9 +16,10 @@
 //! the cold-path benches are driven.
 
 use crate::balance::BalanceParams;
+use crate::delta::EdgeDelta;
 use crate::dist::{DistParams, Op};
 use crate::prep::{SddmmPlan, SpmmPlan};
-use crate::sparse::{Csr, PatternFingerprint};
+use crate::sparse::{Csr, PatternDigests, PatternFingerprint};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -134,6 +135,40 @@ impl CacheStats {
     }
 }
 
+/// Structural state recorded for one served pattern: the full CSR the
+/// cached plan was built from, plus its per-window digest vector. Both
+/// are what [`PlanCache::apply_delta`] needs to patch a plan through an
+/// [`EdgeDelta`] incrementally — only touched windows are re-hashed and
+/// re-distributed.
+#[derive(Debug, Clone)]
+pub struct PatternState {
+    pub pattern: Csr,
+    pub digests: PatternDigests,
+}
+
+/// Max pattern states retained for delta patching before the
+/// least-recently-used one is shed.
+const PATTERN_TABLE_CAP: usize = 512;
+
+#[derive(Default)]
+struct PatternTable {
+    map: HashMap<PatternFingerprint, (Arc<PatternState>, u64)>,
+    tick: u64,
+}
+
+/// The product of [`PlanCache::apply_delta`]: where the patched plan
+/// now lives and what it describes.
+#[derive(Debug, Clone)]
+pub struct DeltaApplied {
+    /// Key the patched plan is resident under (same parameters as the
+    /// base key; the fingerprint is the patched pattern's).
+    pub new_key: PlanKey,
+    pub new_fp: PatternFingerprint,
+    pub plan: CachedPlan,
+    /// Nonzeros of the patched pattern.
+    pub nnz: usize,
+}
+
 struct Entry {
     plan: CachedPlan,
     bytes: usize,
@@ -150,6 +185,10 @@ struct Inner {
 /// Thread-safe LRU plan cache with a byte budget.
 pub struct PlanCache {
     inner: Mutex<Inner>,
+    /// Pattern CSR + window digests per served fingerprint, so deltas
+    /// against cached plans can be applied as patches. Separate lock:
+    /// plan lookups never wait on pattern bookkeeping.
+    patterns: Mutex<PatternTable>,
     capacity: usize,
 }
 
@@ -163,6 +202,7 @@ impl PlanCache {
                 bytes: 0,
                 stats: CacheStats::default(),
             }),
+            patterns: Mutex::new(PatternTable::default()),
             capacity: capacity_bytes,
         }
     }
@@ -245,6 +285,108 @@ impl PlanCache {
     /// Current estimated resident bytes.
     pub fn resident_bytes(&self) -> usize {
         self.inner.lock().unwrap().bytes
+    }
+
+    /// Record a pattern's structural state (CSR + window digests) so
+    /// later [`PlanCache::apply_delta`] calls can patch plans keyed by
+    /// its fingerprint. Returns that fingerprint.
+    pub fn record_pattern(&self, m: &Csr) -> PatternFingerprint {
+        let digests = PatternDigests::of(m);
+        let fp = digests.fingerprint();
+        self.store_pattern(fp, PatternState { pattern: m.clone(), digests });
+        fp
+    }
+
+    /// Structural state recorded for `fp`, if still retained.
+    pub fn pattern(&self, fp: &PatternFingerprint) -> Option<Arc<PatternState>> {
+        let mut table = self.patterns.lock().unwrap();
+        table.tick += 1;
+        let tick = table.tick;
+        table.map.get_mut(fp).map(|e| {
+            e.1 = tick;
+            e.0.clone()
+        })
+    }
+
+    fn store_pattern(&self, fp: PatternFingerprint, state: PatternState) {
+        let mut table = self.patterns.lock().unwrap();
+        if table.map.len() >= PATTERN_TABLE_CAP && !table.map.contains_key(&fp) {
+            let victim = table.map.iter().min_by_key(|(_, e)| e.1).map(|(k, _)| *k);
+            if let Some(victim) = victim {
+                table.map.remove(&victim);
+            }
+        }
+        table.tick += 1;
+        let tick = table.tick;
+        table.map.insert(fp, (Arc::new(state), tick));
+    }
+
+    /// Patch the cached plan under `old_key` through `delta`: the base
+    /// pattern is updated row-span-surgically, only touched windows are
+    /// re-hashed / re-distributed / re-balanced, and the patched plan —
+    /// bit-identical to a from-scratch preprocess of the patched
+    /// matrix — is published under the patched pattern's key. If that
+    /// key is already resident (the delta cycled back to a structure
+    /// served before), the existing entry is reused instead of
+    /// inserting a twin. Errors if the base pattern state or the base
+    /// plan is gone — the caller decides whether to rebuild cold.
+    pub fn apply_delta(
+        &self,
+        old_key: &PlanKey,
+        delta: &EdgeDelta,
+    ) -> anyhow::Result<DeltaApplied> {
+        let state = self.pattern(&old_key.fp).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no recorded pattern state for fingerprint {:#018x}; \
+                 the base matrix must be served (or recorded) before deltas can patch it",
+                old_key.fp.hash
+            )
+        })?;
+        let old_plan = self.get(old_key).ok_or_else(|| {
+            anyhow::anyhow!("no cached plan under the delta's base key (evicted or never built)")
+        })?;
+        let new_m = state.pattern.apply_delta(delta)?;
+        let touched = delta.touched_windows();
+        let mut digests = state.digests.clone();
+        digests.update(&new_m, &touched);
+        let new_fp = digests.fingerprint();
+        let new_key = PlanKey { fp: new_fp, ..*old_key };
+        let nnz = new_m.nnz();
+        let plan = match self.get(&new_key) {
+            Some(existing) => existing,
+            None => {
+                let dparams =
+                    DistParams { threshold: old_key.threshold, fill_padding: old_key.fill_padding };
+                let bparams = BalanceParams {
+                    ts: old_key.ts,
+                    cs: old_key.cs,
+                    short_len: old_key.short_len,
+                    enabled: old_key.balance_enabled,
+                };
+                let patched = match &old_plan {
+                    CachedPlan::Spmm(p) => {
+                        let plan =
+                            p.apply_delta(&state.pattern, &new_m, &touched, &dparams, &bparams);
+                        CachedPlan::Spmm(Arc::new(plan))
+                    }
+                    CachedPlan::Sddmm(e) => {
+                        let plan = e.plan.apply_delta(
+                            &state.pattern,
+                            &new_m,
+                            &touched,
+                            &dparams,
+                            &bparams,
+                        );
+                        CachedPlan::Sddmm(Arc::new(SddmmEntry { plan, pattern: new_m.clone() }))
+                    }
+                };
+                self.insert(new_key, patched.clone());
+                patched
+            }
+        };
+        // the patched pattern becomes a patchable base itself
+        self.store_pattern(new_fp, PatternState { pattern: new_m, digests });
+        Ok(DeltaApplied { new_key, new_fp, plan, nnz })
     }
 }
 
@@ -339,5 +481,62 @@ mod tests {
         // now embeds the balanced schedule)
         let b2 = BalanceParams { ts: 7, ..b };
         assert_ne!(PlanKey::sddmm(fp, &d1, &b), PlanKey::sddmm(fp, &d1, &b2));
+    }
+
+    #[test]
+    fn pattern_state_roundtrip() {
+        let cache = PlanCache::new(1 << 20);
+        let mut rng = SplitMix64::new(7);
+        let m = gen::uniform_random(&mut rng, 40, 40, 0.1);
+        let fp = cache.record_pattern(&m);
+        assert_eq!(fp, m.pattern_fingerprint());
+        let state = cache.pattern(&fp).expect("recorded pattern must be retrievable");
+        assert_eq!(state.pattern, m);
+        assert_eq!(state.digests.fingerprint(), fp);
+        let other = PatternFingerprint { hash: fp.hash ^ 1, ..fp };
+        assert!(cache.pattern(&other).is_none());
+    }
+
+    #[test]
+    fn delta_patch_matches_scratch_and_publishes() {
+        let cache = PlanCache::new(1 << 22);
+        let mut rng = SplitMix64::new(8);
+        let m = gen::uniform_random(&mut rng, 96, 80, 0.08);
+        let d = DistParams::default();
+        let b = BalanceParams::default();
+        let fp = cache.record_pattern(&m);
+        let key = PlanKey::spmm(fp, &d, &b);
+        let plan = preprocess_spmm(&m, &d, &b, PrepMode::Sequential);
+        assert!(cache.insert(key, CachedPlan::Spmm(Arc::new(plan))));
+
+        // structural insertion at a coordinate guaranteed absent
+        let r = 3;
+        let c = (0..m.cols).find(|&c| m.get(r, c).is_none()).unwrap();
+        let mut delta = crate::delta::EdgeDelta::new();
+        delta.upsert(r, c, 1.5);
+        let applied = cache.apply_delta(&key, &delta).unwrap();
+        let new_m = m.apply_delta(&delta).unwrap();
+        assert_eq!(applied.new_fp, new_m.pattern_fingerprint());
+        assert_eq!(applied.nnz, new_m.nnz());
+        assert_eq!(applied.new_key, PlanKey::spmm(applied.new_fp, &d, &b));
+
+        // the patched plan is bit-identical to a scratch preprocess
+        let want = preprocess_spmm(&new_m, &d, &b, PrepMode::Sequential);
+        let CachedPlan::Spmm(got) = &applied.plan else { panic!("expected an spmm plan") };
+        assert_eq!(got.dist.tc.bitmaps, want.dist.tc.bitmaps);
+        assert_eq!(got.dist.tc.values, want.dist.tc.values);
+        assert_eq!(got.dist.flex_cols, want.dist.flex_cols);
+        assert_eq!(got.dist.flex_vals, want.dist.flex_vals);
+        assert_eq!(got.sched.tc_segments, want.sched.tc_segments);
+        assert_eq!(got.sched.long_tiles, want.sched.long_tiles);
+        assert_eq!(got.sched.short_tiles, want.sched.short_tiles);
+
+        // ...and resident under the new key, with its pattern recorded
+        assert!(cache.get(&applied.new_key).is_some());
+        assert!(cache.pattern(&applied.new_fp).is_some());
+
+        // a base fingerprint that was never recorded errors out cleanly
+        let missing = PlanKey { fp: PatternFingerprint { hash: fp.hash ^ 2, ..fp }, ..key };
+        assert!(cache.apply_delta(&missing, &delta).is_err());
     }
 }

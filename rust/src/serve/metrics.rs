@@ -52,6 +52,12 @@ pub struct ServeMetrics {
     /// Auto-θ resolutions answered by the provenance memo (pattern
     /// tuned before — zero re-tuning).
     pub theta_memo_hits: AtomicU64,
+    /// Edge-batch deltas applied as incremental patches to a cached
+    /// plan (window-local re-distribution + schedule splicing).
+    pub delta_patched: AtomicU64,
+    /// Edge-batch deltas that fell back to a full from-scratch
+    /// preprocess (base plan or pattern state gone).
+    pub delta_rebuilt: AtomicU64,
     /// Resolved-θ distribution: how many requests were served at each
     /// effective threshold (`usize::MAX` = flexible-only).
     theta_hist: Mutex<BTreeMap<usize, u64>>,
@@ -73,6 +79,8 @@ impl ServeMetrics {
             peak_worker_workspace_bytes: AtomicU64::new(0),
             theta_tuned: AtomicU64::new(0),
             theta_memo_hits: AtomicU64::new(0),
+            delta_patched: AtomicU64::new(0),
+            delta_rebuilt: AtomicU64::new(0),
             theta_hist: Mutex::new(BTreeMap::new()),
         }
     }
@@ -130,6 +138,8 @@ impl ServeMetrics {
             peak_worker_workspace_bytes: load(&self.peak_worker_workspace_bytes),
             theta_tuned: load(&self.theta_tuned),
             theta_memo_hits: load(&self.theta_memo_hits),
+            delta_patched: load(&self.delta_patched),
+            delta_rebuilt: load(&self.delta_rebuilt),
             theta_dist: self.theta_hist.lock().unwrap().iter().map(|(&t, &c)| (t, c)).collect(),
             cache,
         }
@@ -165,6 +175,10 @@ pub struct MetricsReport {
     pub theta_tuned: u64,
     /// Provenance-memo answers (auto-θ with zero re-tuning).
     pub theta_memo_hits: u64,
+    /// Edge-batch deltas applied as incremental plan patches.
+    pub delta_patched: u64,
+    /// Edge-batch deltas that rebuilt the plan from scratch.
+    pub delta_rebuilt: u64,
     /// Resolved-θ distribution: `(θ, requests served at θ)`, ascending
     /// (`usize::MAX` = flexible-only).
     pub theta_dist: Vec<(usize, u64)>,
@@ -202,6 +216,11 @@ impl std::fmt::Display for MetricsReport {
             "prep paths: {} full (cold), {} set_values (warm), {} admission batches",
             self.prep_full, self.prep_fast, self.batches
         )?;
+        writeln!(
+            f,
+            "deltas: {} patched onto cached plans, {} rebuilt from scratch",
+            self.delta_patched, self.delta_rebuilt
+        )?;
         let dist = self
             .theta_dist
             .iter()
@@ -238,6 +257,8 @@ mod tests {
         m.add(&m.prep_fast, 3);
         m.add(&m.theta_tuned, 1);
         m.add(&m.theta_memo_hits, 3);
+        m.add(&m.delta_patched, 2);
+        m.add(&m.delta_rebuilt, 1);
         m.record_theta(5);
         m.record_theta(5);
         m.record_theta(usize::MAX);
@@ -251,11 +272,13 @@ mod tests {
         assert!(r.throughput_rps > 0.0);
         assert_eq!(r.theta_tuned, 1);
         assert_eq!(r.theta_memo_hits, 3);
+        assert_eq!((r.delta_patched, r.delta_rebuilt), (2, 1));
         assert_eq!(r.theta_dist, vec![(5, 2), (usize::MAX, 1)]);
         // Display renders without panicking and mentions the hit rate
         // and the resolved-θ distribution
         let text = format!("{r}");
         assert!(text.contains("75.0% hit rate"));
+        assert!(text.contains("2 patched onto cached plans, 1 rebuilt"), "{text}");
         assert!(text.contains("[5:2 flex:1]"), "{text}");
     }
 

@@ -27,18 +27,25 @@
 //!   `max_batch_bytes` and a linger window).
 //! * [`metrics`] — queue/prep/exec latency split, hit rate, worker
 //!   occupancy; snapshot via [`Engine::report`].
+//!
+//! Evolving graphs ride [`Engine::submit_delta`]: an
+//! [`crate::delta::EdgeDelta`] against a served pattern patches the
+//! cached plan window-locally (bit-identical to a cold preprocess of
+//! the mutated matrix) instead of being a cold miss; metrics count
+//! `delta_patched` vs `delta_rebuilt`.
 
 pub mod cache;
 pub mod metrics;
 pub mod sched;
 pub mod session;
 
-pub use cache::{CacheStats, CachedPlan, PlanCache, PlanKey, SddmmEntry};
+pub use cache::{CacheStats, CachedPlan, DeltaApplied, PatternState, PlanCache, PlanKey, SddmmEntry};
 pub use metrics::{MetricsReport, ServeMetrics};
 pub use sched::{
     MicroBatchParams, MicroBatchReport, MicroBatcher, MicroTicket, Occupancy, SchedParams,
     SharedQueue,
 };
 pub use session::{
-    Engine, EngineConfig, OpInputs, Output, Payload, Request, Response, Ticket, Timing,
+    DeltaOutcome, DeltaRequest, Engine, EngineConfig, OpInputs, Output, Payload, Request, Response,
+    Ticket, Timing,
 };

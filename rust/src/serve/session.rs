@@ -34,6 +34,7 @@ use super::cache::{CachedPlan, PlanCache, PlanKey, SddmmEntry};
 use super::metrics::{MetricsReport, ServeMetrics};
 use super::sched::{Occupancy, OneShot, SchedParams, SharedQueue};
 use crate::balance::BalanceParams;
+use crate::delta::EdgeDelta;
 use crate::dist::{DistParams, Op};
 use crate::exec::sddmm::SddmmExecutor;
 use crate::exec::{SpmmExecutor, TcBackend, Workspace};
@@ -155,6 +156,79 @@ impl Request {
             OpInputs::Sddmm { a, .. } => (Op::Sddmm, a.cols),
         }
     }
+}
+
+/// A structural mutation of a previously-served pattern (see
+/// [`Engine::submit_delta`]): an edge batch against the pattern with
+/// fingerprint `fp`, plus the parameters identifying which cached plan
+/// the batch patches.
+#[derive(Debug, Clone)]
+pub struct DeltaRequest {
+    /// Fingerprint of the base pattern, as previously served.
+    pub fp: PatternFingerprint,
+    pub delta: EdgeDelta,
+    pub op: Op,
+    /// Dense feature width the plan is tuned for (the `n` auto-θ saw).
+    pub width: usize,
+    pub theta: ThetaPolicy,
+    pub dist: Option<DistParams>,
+    pub balance: Option<BalanceParams>,
+    /// The base matrix; enables a cold rebuild when the patch path is
+    /// unavailable (base plan evicted / pattern state shed).
+    pub base: Option<Csr>,
+}
+
+impl DeltaRequest {
+    pub fn spmm(fp: PatternFingerprint, delta: EdgeDelta, width: usize) -> Self {
+        Self {
+            fp,
+            delta,
+            op: Op::Spmm,
+            width,
+            theta: ThetaPolicy::Auto,
+            dist: None,
+            balance: None,
+            base: None,
+        }
+    }
+
+    pub fn sddmm(fp: PatternFingerprint, delta: EdgeDelta, width: usize) -> Self {
+        Self { op: Op::Sddmm, ..Self::spmm(fp, delta, width) }
+    }
+
+    /// Attach the base matrix (rebuild fallback + θ resolution source).
+    pub fn with_base(mut self, m: Csr) -> Self {
+        self.base = Some(m);
+        self
+    }
+
+    pub fn with_theta(mut self, t: ThetaPolicy) -> Self {
+        self.theta = t;
+        self
+    }
+
+    pub fn with_dist(mut self, d: DistParams) -> Self {
+        self.dist = Some(d);
+        self
+    }
+
+    pub fn with_balance(mut self, b: BalanceParams) -> Self {
+        self.balance = Some(b);
+        self
+    }
+}
+
+/// The outcome of [`Engine::submit_delta`].
+#[derive(Debug, Clone, Copy)]
+pub struct DeltaOutcome {
+    /// Fingerprint of the patched pattern — the handle for follow-up
+    /// traffic.
+    pub new_fp: PatternFingerprint,
+    /// True iff the cached plan was patched incrementally; false means
+    /// the engine rebuilt from scratch off [`DeltaRequest::base`].
+    pub patched: bool,
+    /// Nonzeros of the patched pattern.
+    pub nnz: usize,
 }
 
 /// A request's product.
@@ -404,9 +478,13 @@ impl Engine {
         let fp = req.payload.fingerprint();
         let (op, n) = req.op_and_width();
         let bal = req.balance.unwrap_or_default();
+        let matrix = match &req.payload {
+            Payload::Matrix(m) => Some(m),
+            Payload::Handle { .. } => None,
+        };
         let d = match req.dist {
             Some(d) => d,
-            None => self.resolve_dist(&req.payload, fp, op, n, req.theta)?,
+            None => self.resolve_dist(matrix, fp, op, n, req.theta)?,
         };
         self.metrics.record_theta(d.threshold);
         Ok(match op {
@@ -421,7 +499,7 @@ impl Engine {
     /// the recorded provenance.
     fn resolve_dist(
         &self,
-        payload: &Payload,
+        matrix: Option<&Csr>,
         fp: PatternFingerprint,
         op: Op,
         n: usize,
@@ -435,7 +513,7 @@ impl Engine {
             self.metrics.add(&self.metrics.theta_memo_hits, 1);
             return Ok(d);
         }
-        let Payload::Matrix(m) = payload else {
+        let Some(m) = matrix else {
             anyhow::bail!(
                 "pattern handle {:#018x} ({}x{}, nnz {}) has no resolved θ yet; auto-θ tunes \
                  on first sight of the full matrix — resubmit it once",
@@ -449,6 +527,72 @@ impl Engine {
         self.metrics.add(&self.metrics.theta_tuned, 1);
         self.theta_memo.lock().unwrap().insert(memo_key, d);
         Ok(d)
+    }
+
+    /// Apply an edge-batch delta to a previously-served pattern,
+    /// synchronously on the caller thread. The normal outcome is an
+    /// incremental **patch**: the cached plan is updated window-locally
+    /// (bit-identical to a cold preprocess of the mutated matrix) and
+    /// published under the patched fingerprint, so follow-up requests —
+    /// values-only handles included — hit warm. If the patch path is
+    /// unavailable (base plan evicted, pattern state shed) and the
+    /// request carries [`DeltaRequest::base`], the engine **rebuilds**
+    /// the plan from scratch instead; without a base matrix the error
+    /// surfaces to the caller. The two paths are counted separately as
+    /// `delta_patched` / `delta_rebuilt` in [`ServeMetrics`] — a delta
+    /// that silently fell back would show up there.
+    pub fn submit_delta(&self, req: DeltaRequest) -> anyhow::Result<DeltaOutcome> {
+        let bal = req.balance.unwrap_or_default();
+        let d = match req.dist {
+            Some(d) => d,
+            None => self.resolve_dist(req.base.as_ref(), req.fp, req.op, req.width, req.theta)?,
+        };
+        let old_key = match req.op {
+            Op::Spmm => PlanKey::spmm(req.fp, &d, &bal),
+            Op::Sddmm => PlanKey::sddmm(req.fp, &d, &bal),
+        };
+        match self.cache.apply_delta(&old_key, &req.delta) {
+            Ok(applied) => {
+                self.metrics.add(&self.metrics.delta_patched, 1);
+                // seed the θ provenance so traffic against the patched
+                // pattern resolves without re-tuning
+                let memo_key = (applied.new_fp, req.op, req.width, req.theta);
+                self.theta_memo.lock().unwrap().insert(memo_key, d);
+                Ok(DeltaOutcome { new_fp: applied.new_fp, patched: true, nnz: applied.nnz })
+            }
+            Err(patch_err) => {
+                let Some(base) = req.base else { return Err(patch_err) };
+                let new_m = base.apply_delta(&req.delta)?;
+                let new_fp = self.cache.record_pattern(&new_m);
+                let new_key = PlanKey { fp: new_fp, ..old_key };
+                let nnz = new_m.nnz();
+                let plan = match req.op {
+                    Op::Spmm => {
+                        let p = crate::prep::preprocess_spmm(
+                            &new_m,
+                            &d,
+                            &bal,
+                            crate::prep::PrepMode::Sequential,
+                        );
+                        CachedPlan::Spmm(Arc::new(p))
+                    }
+                    Op::Sddmm => {
+                        let p = crate::prep::preprocess_sddmm(
+                            &new_m,
+                            &d,
+                            &bal,
+                            crate::prep::PrepMode::Sequential,
+                        );
+                        CachedPlan::Sddmm(Arc::new(SddmmEntry { plan: p, pattern: new_m }))
+                    }
+                };
+                self.cache.insert(new_key, plan);
+                let memo_key = (new_fp, req.op, req.width, req.theta);
+                self.theta_memo.lock().unwrap().insert(memo_key, d);
+                self.metrics.add(&self.metrics.delta_rebuilt, 1);
+                Ok(DeltaOutcome { new_fp, patched: false, nnz })
+            }
+        }
     }
 
     /// Metrics snapshot (latency split, hit rate, occupancy, …).
@@ -624,6 +768,9 @@ fn resolve_spmm(
                 crate::prep::PrepMode::Sequential,
             );
             if plan.plan_bytes() <= cache.capacity_bytes() {
+                // record the pattern's structural state alongside the
+                // plan so edge-batch deltas can patch it incrementally
+                cache.record_pattern(&m);
                 let shared = Arc::new(plan);
                 cache.insert(key, CachedPlan::Spmm(shared.clone()));
                 Ok(SpmmExecutor::from_plan((*shared).clone(), backend))
@@ -701,6 +848,8 @@ fn resolve_sddmm(
             );
             let entry = SddmmEntry { plan, pattern: m };
             if entry.bytes() <= cache.capacity_bytes() {
+                // record structural state for incremental delta patching
+                cache.record_pattern(&entry.pattern);
                 let shared = Arc::new(entry);
                 cache.insert(key, CachedPlan::Sddmm(shared.clone()));
                 Ok(SddmmExecutor::from_plan(
@@ -1080,6 +1229,70 @@ mod tests {
             sched.tc_segments.len() + sched.long_tiles.len() + sched.short_tiles.len();
         assert!(n_segments > 0, "cached sddmm plan must carry a schedule");
         assert_eq!(cold.sched.flex_elems(), cold.dist.flex_vals.len());
+    }
+
+    #[test]
+    fn submit_delta_patches_cached_plan() {
+        let eng = engine(1, 64 << 20);
+        let mut rng = SplitMix64::new(508);
+        let m = gen::uniform_random(&mut rng, 100, 90, 0.08);
+        let b = Dense::random(&mut rng, 90, 16);
+        eng.submit(Request::spmm(m.clone(), b.clone())).result.unwrap();
+
+        // structural insertion at a coordinate guaranteed absent
+        let r = 5;
+        let c = (0..m.cols).find(|&c| m.get(r, c).is_none()).unwrap();
+        let mut delta = EdgeDelta::new();
+        delta.upsert(r, c, 2.5);
+        let fp = m.pattern_fingerprint();
+        let out = eng.submit_delta(DeltaRequest::spmm(fp, delta.clone(), 16)).unwrap();
+        assert!(out.patched, "cached base must be patched, not rebuilt");
+        let new_m = m.apply_delta(&delta).unwrap();
+        assert_eq!(out.new_fp, new_m.pattern_fingerprint());
+        assert_eq!(out.nnz, new_m.nnz());
+
+        // the patched plan serves follow-up traffic warm — values-only
+        // handles included, thanks to the seeded θ provenance
+        let resp = eng.submit(Request::spmm_handle(out.new_fp, new_m.values.clone(), b.clone()));
+        assert!(resp.cache_hit, "patched plan must be a warm hit");
+        let got = resp.result.unwrap().into_dense().unwrap();
+        assert!(got.allclose(&new_m.spmm_dense_ref(&b), 1e-3));
+
+        let rep = eng.report();
+        assert_eq!(rep.delta_patched, 1, "the delta must ride the patch path");
+        assert_eq!(rep.delta_rebuilt, 0);
+    }
+
+    #[test]
+    fn submit_delta_falls_back_to_rebuild_with_base() {
+        let eng = engine(1, 64 << 20);
+        let mut rng = SplitMix64::new(509);
+        let m = gen::uniform_random(&mut rng, 80, 70, 0.1);
+        let b = Dense::random(&mut rng, 70, 8);
+        let fp = m.pattern_fingerprint();
+        let r = 2;
+        let c = (0..m.cols).find(|&c| m.get(r, c).is_none()).unwrap();
+        let mut delta = EdgeDelta::new();
+        delta.upsert(r, c, 1.0);
+
+        // never served: no base plan to patch and no matrix to rebuild
+        // from — the error surfaces instead of silently rebuilding
+        assert!(eng.submit_delta(DeltaRequest::spmm(fp, delta.clone(), 8)).is_err());
+
+        // with the base matrix attached the engine rebuilds cold
+        let req = DeltaRequest::spmm(fp, delta.clone(), 8).with_base(m.clone());
+        let out = eng.submit_delta(req).unwrap();
+        assert!(!out.patched);
+        let new_m = m.apply_delta(&delta).unwrap();
+        assert_eq!(out.new_fp, new_m.pattern_fingerprint());
+
+        // the rebuilt plan is resident: same-pattern traffic hits warm
+        let resp = eng.submit(Request::spmm(new_m.clone(), b.clone()));
+        assert!(resp.cache_hit);
+        resp.result.unwrap();
+        let rep = eng.report();
+        assert_eq!(rep.delta_patched, 0);
+        assert_eq!(rep.delta_rebuilt, 1);
     }
 
     #[test]

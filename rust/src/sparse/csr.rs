@@ -202,25 +202,13 @@ impl Csr {
 mod tests {
     use super::*;
     use crate::util::propcheck::{check, Config};
-    use crate::util::SplitMix64;
+    use crate::util::testgen::random_csr;
 
     fn small() -> Csr {
         // [1 0 2]
         // [0 0 0]
         // [3 4 0]
         Csr::from_parts(3, 3, vec![0, 2, 2, 4], vec![0, 2, 0, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap()
-    }
-
-    pub(crate) fn random_csr(rng: &mut SplitMix64, rows: usize, cols: usize, density: f64) -> Csr {
-        let mut coo = Coo::new(rows, cols);
-        for r in 0..rows {
-            for c in 0..cols {
-                if rng.chance(density) {
-                    coo.push(r, c, rng.f32_range(-1.0, 1.0));
-                }
-            }
-        }
-        coo.to_csr()
     }
 
     #[test]

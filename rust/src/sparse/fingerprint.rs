@@ -16,8 +16,22 @@
 //! collisions (FNV-1a alone is not collision-resistant). Shape and nnz
 //! are kept alongside the hashes (not just mixed in) so lookups can
 //! also cheaply sanity-check a handle's value buffer length.
+//!
+//! # Windowed structure
+//!
+//! The hashes are computed *per row window* ([`crate::format::WINDOW`]
+//! rows, the same granularity as the 2D-aware distribution) and then
+//! combined in window order. Each window digests its per-row lengths
+//! (not absolute `row_ptr` offsets) plus its `col_idx` slice, so a
+//! window's sub-digest is invariant under edits to *other* windows.
+//! [`PatternDigests`] keeps the per-window digests alongside the
+//! matrix so an edge-batch delta only re-hashes the touched windows
+//! (`update`), and the recombined digest is — by construction, the
+//! same fold over the same sub-digests — exactly equal to
+//! [`fingerprint`] of the post-delta matrix.
 
 use super::Csr;
+use crate::format::WINDOW;
 
 /// Structural identity of a CSR sparsity pattern.
 ///
@@ -30,9 +44,10 @@ pub struct PatternFingerprint {
     pub rows: usize,
     pub cols: usize,
     pub nnz: usize,
-    /// FNV-1a hash of `row_ptr` followed by `col_idx`.
+    /// FNV-1a fold over the per-window FNV-1a sub-digests.
     pub hash: u64,
-    /// Independent multiply-xorshift hash of the same words.
+    /// Independent multiply-xorshift fold over the per-window
+    /// multiply-xorshift sub-digests.
     pub hash2: u64,
 }
 
@@ -61,18 +76,116 @@ fn mix_u32s(mut h: u64, words: &[u32]) -> u64 {
     h
 }
 
+/// Sub-digest pair `[fnv, mix]` of window `w` of `m`.
+///
+/// Hashes the window's per-row *lengths* (offset-free, so the digest
+/// does not move when earlier windows gain or lose elements) followed
+/// by its `col_idx` slice. The lengths/cols boundary cannot alias:
+/// the window's row count is fixed by the shape and the cols count is
+/// the sum of the lengths.
+fn window_digest(m: &Csr, w: usize) -> [u64; 2] {
+    let lo = w * WINDOW;
+    let hi = ((w + 1) * WINDOW).min(m.rows);
+    let s = m.row_ptr[lo] as usize;
+    let e = m.row_ptr[hi] as usize;
+    let mut lens = [0u32; WINDOW];
+    for (i, r) in (lo..hi).enumerate() {
+        lens[i] = m.row_ptr[r + 1] - m.row_ptr[r];
+    }
+    let lens = &lens[..hi - lo];
+    let cols = &m.col_idx[s..e];
+    let h = fnv1a_u32s(fnv1a_u32s(FNV_OFFSET, lens), cols);
+    let mut h2 = mix_u32s(MIX_SEED, lens);
+    // a length-dependent separator so (lens, cols) contributions
+    // cannot alias across the two arrays
+    h2 = (h2 ^ cols.len() as u64).wrapping_mul(MIX_MUL);
+    h2 = mix_u32s(h2, cols);
+    [h, h2]
+}
+
+/// Fold the per-window sub-digests (in window order) into the final
+/// 128-bit fingerprint hashes.
+fn combine(windows: &[[u64; 2]]) -> (u64, u64) {
+    let mut h = FNV_OFFSET;
+    let mut h2 = MIX_SEED;
+    for d in windows {
+        for byte in d[0].to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        h2 = (h2 ^ d[1]).wrapping_mul(MIX_MUL);
+        h2 ^= h2 >> 33;
+    }
+    (h, h2)
+}
+
 /// Fingerprint the pattern of `m` (values are ignored).
 pub fn fingerprint(m: &Csr) -> PatternFingerprint {
+    let n_windows = m.rows.div_ceil(WINDOW);
     let mut h = FNV_OFFSET;
-    h = fnv1a_u32s(h, &m.row_ptr);
-    h = fnv1a_u32s(h, &m.col_idx);
     let mut h2 = MIX_SEED;
-    h2 = mix_u32s(h2, &m.row_ptr);
-    // a length-dependent separator so (row_ptr, col_idx) boundaries
-    // cannot alias across arrays
-    h2 = (h2 ^ m.col_idx.len() as u64).wrapping_mul(MIX_MUL);
-    h2 = mix_u32s(h2, &m.col_idx);
+    for w in 0..n_windows {
+        let d = window_digest(m, w);
+        for byte in d[0].to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        h2 = (h2 ^ d[1]).wrapping_mul(MIX_MUL);
+        h2 ^= h2 >> 33;
+    }
     PatternFingerprint { rows: m.rows, cols: m.cols, nnz: m.nnz(), hash: h, hash2: h2 }
+}
+
+/// Per-window sub-digests of a pattern, kept alongside a cached plan
+/// so an edge-batch delta re-hashes only the touched windows.
+///
+/// Invariant: `digests.fingerprint() == fingerprint(m)` for the matrix
+/// `m` the digests were built from / last updated to — the combined
+/// digest is the identical fold over identical sub-digests, not an
+/// approximation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PatternDigests {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    /// `[fnv, mix]` sub-digest per row window, in window order.
+    pub windows: Vec<[u64; 2]>,
+}
+
+impl PatternDigests {
+    /// Digest every window of `m`.
+    pub fn of(m: &Csr) -> Self {
+        let n_windows = m.rows.div_ceil(WINDOW);
+        let windows = (0..n_windows).map(|w| window_digest(m, w)).collect();
+        Self { rows: m.rows, cols: m.cols, nnz: m.nnz(), windows }
+    }
+
+    /// Recombine the stored sub-digests into the full fingerprint.
+    pub fn fingerprint(&self) -> PatternFingerprint {
+        let (hash, hash2) = combine(&self.windows);
+        PatternFingerprint { rows: self.rows, cols: self.cols, nnz: self.nnz, hash, hash2 }
+    }
+
+    /// Refresh after a delta: `new_m` is the post-delta matrix and
+    /// `touched` the sorted window indices whose rows changed. Only
+    /// touched windows (plus any windows appended or dropped by a row
+    /// count change) are re-hashed; everything else is reused.
+    pub fn update(&mut self, new_m: &Csr, touched: &[usize]) {
+        let n_windows = new_m.rows.div_ceil(WINDOW);
+        let old_n = self.windows.len();
+        self.windows.resize(n_windows, [0, 0]);
+        for w in old_n..n_windows {
+            self.windows[w] = window_digest(new_m, w);
+        }
+        for &w in touched {
+            if w < n_windows {
+                self.windows[w] = window_digest(new_m, w);
+            }
+        }
+        self.rows = new_m.rows;
+        self.cols = new_m.cols;
+        self.nnz = new_m.nnz();
+    }
 }
 
 impl Csr {
@@ -137,5 +250,44 @@ mod tests {
         let mut b = Coo::new(2, 2);
         b.push(0, 1, 1.0);
         assert_ne!(a.to_csr().pattern_fingerprint(), b.to_csr().pattern_fingerprint());
+    }
+
+    #[test]
+    fn digests_recombine_to_fingerprint() {
+        check(Config::default().cases(30), "digests recombine", |rng| {
+            let m = gen::uniform_random(rng, rng.range(1, 100), rng.range(1, 60), 0.08);
+            assert_eq!(PatternDigests::of(&m).fingerprint(), fingerprint(&m));
+        });
+    }
+
+    #[test]
+    fn digest_of_empty_matches() {
+        let m = Csr::zeros(0, 0);
+        assert_eq!(PatternDigests::of(&m).fingerprint(), fingerprint(&m));
+        let m = Csr::zeros(17, 5);
+        assert_eq!(PatternDigests::of(&m).fingerprint(), fingerprint(&m));
+    }
+
+    #[test]
+    fn untouched_window_digest_is_offset_invariant() {
+        // Removing an element from window 0 must not disturb window 1's
+        // sub-digest (lengths are hashed, not absolute offsets).
+        let mut rng = SplitMix64::new(77);
+        let m = gen::uniform_random(&mut rng, 16, 16, 0.3);
+        let mut coo = Coo::new(16, 16);
+        for r in 0..16 {
+            let (cols, vals) = m.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                if r != 0 || c != m.row(0).0[0] {
+                    coo.push(r, c as usize, v);
+                }
+            }
+        }
+        let m2 = coo.to_csr();
+        assert_eq!(m2.nnz(), m.nnz() - 1);
+        let d = PatternDigests::of(&m);
+        let d2 = PatternDigests::of(&m2);
+        assert_ne!(d.windows[0], d2.windows[0]);
+        assert_eq!(d.windows[1], d2.windows[1]);
     }
 }

@@ -20,4 +20,4 @@ pub use batch::GraphBatch;
 pub use coo::Coo;
 pub use csr::Csr;
 pub use dense::Dense;
-pub use fingerprint::PatternFingerprint;
+pub use fingerprint::{PatternDigests, PatternFingerprint};

@@ -8,6 +8,7 @@
 pub mod logger;
 pub mod prng;
 pub mod propcheck;
+pub mod testgen;
 pub mod timer;
 
 pub use prng::SplitMix64;

@@ -26,11 +26,15 @@ pub struct Config {
     pub cases: usize,
     pub base_seed: u64,
     pub replay: Option<u64>,
+    /// Largest size parameter handed to [`check_sized`] properties.
+    pub max_size: usize,
+    /// Size to use when replaying a [`check_sized`] failure.
+    pub replay_size: Option<usize>,
 }
 
 impl Default for Config {
     fn default() -> Self {
-        Self { cases: 100, base_seed: DEFAULT_SEED, replay: None }
+        Self { cases: 100, base_seed: DEFAULT_SEED, replay: None, max_size: 64, replay_size: None }
     }
 }
 
@@ -48,6 +52,19 @@ impl Config {
     /// Replay a single failing case by its reported seed.
     pub fn replay(mut self, s: u64) -> Self {
         self.replay = Some(s);
+        self
+    }
+
+    /// Upper bound for the size ramp in [`check_sized`].
+    pub fn max_size(mut self, s: usize) -> Self {
+        self.max_size = s;
+        self
+    }
+
+    /// Replay a single [`check_sized`] case at its shrunk size.
+    pub fn replay_sized(mut self, seed: u64, size: usize) -> Self {
+        self.replay = Some(seed);
+        self.replay_size = Some(size);
         self
     }
 }
@@ -96,6 +113,74 @@ pub fn check<F: FnMut(&mut SplitMix64) + std::panic::UnwindSafe + Copy>(
     }
 }
 
+/// Like [`check`], but hands the property an explicit size parameter
+/// ramped from 1 up to `cfg.max_size` across the cases. On failure the
+/// framework binary-searches the smallest size at which the same case
+/// seed still fails and reports that shrunk configuration alongside the
+/// usual replay line — a minimal counterexample is far easier to debug
+/// than whatever size the ramp happened to trip on.
+pub fn check_sized<F: FnMut(&mut SplitMix64, usize) + std::panic::UnwindSafe + Copy>(
+    cfg: Config,
+    name: &str,
+    prop: F,
+) {
+    let max_size = cfg.max_size.max(1);
+    if let Some(seed) = cfg.replay {
+        let size = cfg.replay_size.unwrap_or(max_size);
+        let mut rng = SplitMix64::new(seed);
+        let mut p = prop;
+        p(&mut rng, size);
+        return;
+    }
+    let run = |seed: u64, size: usize| {
+        std::panic::catch_unwind(move || {
+            let mut rng = SplitMix64::new(seed);
+            let mut p = prop;
+            p(&mut rng, size);
+        })
+    };
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add((case as u64).wrapping_mul(0x9e37_79b9));
+        let size = if cfg.cases <= 1 {
+            max_size
+        } else {
+            1 + case * (max_size - 1) / (cfg.cases - 1)
+        };
+        if let Err(e) = run(seed, size) {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            // Shrink: binary-search the smallest size that still fails
+            // with this exact case seed. Invariant: `hi` always fails,
+            // so the loop converges on a failing size even when the
+            // property is not monotone in size.
+            let (mut lo, mut hi) = (1usize, size);
+            while lo < hi {
+                let mid = lo + (hi - lo) / 2;
+                if run(seed, mid).is_err() {
+                    hi = mid;
+                } else {
+                    lo = mid + 1;
+                }
+            }
+            let shrunk = lo;
+            eprintln!(
+                "propcheck: property '{name}' failed at case {case}/{} \
+                 (base seed {:#x}, case seed {seed:#x}, size {size}, shrunk to size {shrunk})\n\
+                 propcheck: reproduce with: \
+                 check_sized(Config::default().replay_sized({seed:#x}, {shrunk}), \"{name}\", ...)",
+                cfg.cases, cfg.base_seed
+            );
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (replay seed {seed:#x}, shrunk size {shrunk}): {msg}"
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,5 +207,39 @@ mod tests {
         check(Config::default().replay(0x1234), "replay ok", |rng| {
             let _ = rng.next_u64();
         });
+    }
+
+    #[test]
+    fn sized_property_ramps_to_max() {
+        check_sized(Config::default().cases(16).max_size(32), "size ramps", |rng, size| {
+            assert!((1..=32).contains(&size));
+            let v: Vec<u64> = (0..size).map(|_| rng.next_u64()).collect();
+            assert_eq!(v.len(), size);
+        });
+    }
+
+    #[test]
+    fn replay_sized_runs_single_case_at_size() {
+        check_sized(Config::default().replay_sized(0x5678, 7), "replay sized", |rng, size| {
+            assert_eq!(size, 7);
+            let _ = rng.next_u64();
+        });
+    }
+
+    #[test]
+    fn shrinking_reports_smallest_failing_size() {
+        // intentionally-failing fixture: fails iff size >= 17. The ramp
+        // first trips well above that (case 2 runs at size 19), and the
+        // shrinker must walk it back down to exactly 17.
+        let result = std::panic::catch_unwind(|| {
+            check_sized(Config::default().cases(8).max_size(64), "fails at 17", |_rng, size| {
+                assert!(size < 17, "too big: {size}");
+            });
+        });
+        let msg = match result {
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap(),
+            Ok(()) => panic!("fixture property unexpectedly passed"),
+        };
+        assert!(msg.contains("shrunk size 17"), "got: {msg}");
     }
 }

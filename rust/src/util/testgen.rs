@@ -1,0 +1,130 @@
+//! Shared deterministic test-input generators.
+//!
+//! Inline `#[cfg(test)]` modules across the crate used to carry their
+//! own seeded random-CSR helpers and pattern-family mixers; this module
+//! is the single home for them, and it is compiled unconditionally so
+//! the `tests/` integration suite and the benches can use the same
+//! generators (`libra::util::testgen`). Everything here draws from a
+//! caller-supplied [`SplitMix64`], so every generated input is exactly
+//! reproducible from a propcheck case seed.
+
+use crate::delta::EdgeDelta;
+use crate::format::WINDOW;
+use crate::sparse::{gen, Coo, Csr};
+use crate::util::SplitMix64;
+
+/// Dense-Bernoulli random CSR: each cell is present with probability
+/// `density`, values uniform in `[-1, 1)`. O(rows x cols) — meant for
+/// small property-test matrices where exact per-cell control matters;
+/// use [`crate::sparse::gen`] for large corpora.
+pub fn random_csr(rng: &mut SplitMix64, rows: usize, cols: usize, density: f64) -> Csr {
+    let mut coo = Coo::new(rows, cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            if rng.chance(density) {
+                coo.push(r, c, rng.f32_range(-1.0, 1.0));
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Draw one matrix from a family of adversarial pattern shapes —
+/// empty, dense (all-TC at small θ), per-row singletons (flex-only),
+/// degree-skewed, banded, and uniform — with dimensions up to
+/// `max_dim`. The mix the distribution/balance/delta property tests
+/// sweep so every engine-routing path gets exercised.
+pub fn pattern_family(rng: &mut SplitMix64, max_dim: usize) -> Csr {
+    let max_dim = max_dim.max(2);
+    match rng.below(6) {
+        0 => Csr::zeros(rng.range(1, max_dim), rng.range(1, max_dim)),
+        1 => gen::uniform_random(rng, rng.range(1, max_dim), rng.range(1, max_dim), 0.5),
+        2 => {
+            // at most one element per row: flex-only for any θ > 1
+            let rows = rng.range(1, max_dim);
+            let cols = rng.range(1, max_dim);
+            let mut coo = Coo::new(rows, cols);
+            for r in 0..rows {
+                if rng.chance(0.5) {
+                    coo.push(r, rng.range(0, cols), rng.f32_range(-1.0, 1.0));
+                }
+            }
+            coo.to_csr()
+        }
+        3 => gen::power_law(rng, rng.range(8, max_dim.max(9)), 4.0, 2.0),
+        4 => gen::banded(rng, rng.range(4, max_dim.max(5)), 3, 0.8),
+        _ => gen::uniform_random(rng, rng.range(1, max_dim), rng.range(1, max_dim), 0.1),
+    }
+}
+
+/// Seeded random edge batch against `m`: up to `max_edits` edits mixing
+/// insertions of absent coordinates, deletions and value-only upserts
+/// of existing ones, plus — with probability 1/4 — the deletion of one
+/// entire window's edges (the hardest patch case: every block and tile
+/// of the window must vanish). Multi-row batches naturally straddle
+/// window boundaries. Always valid against `m` per
+/// [`Csr::apply_delta`]'s rules.
+pub fn random_edge_delta(rng: &mut SplitMix64, m: &Csr, max_edits: usize) -> EdgeDelta {
+    let mut d = EdgeDelta::new();
+    if m.rows == 0 || m.cols == 0 {
+        return d;
+    }
+    if m.nnz() > 0 && rng.chance(0.25) {
+        let w = rng.range(0, m.rows.div_ceil(WINDOW));
+        let lo = w * WINDOW;
+        let hi = ((w + 1) * WINDOW).min(m.rows);
+        for r in lo..hi {
+            let (cols, _) = m.row(r);
+            for &c in cols {
+                d.delete(r, c as usize);
+            }
+        }
+    }
+    let n = rng.range(0, max_edits.max(1) + 1);
+    for _ in 0..n {
+        let r = rng.range(0, m.rows);
+        let c = rng.range(0, m.cols);
+        if m.get(r, c).is_some() && rng.chance(0.5) {
+            d.delete(r, c);
+        } else {
+            // insertion if absent, value-only upsert if present
+            d.upsert(r, c, rng.f32_range(-2.0, 2.0));
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Config};
+
+    #[test]
+    fn random_csr_respects_bounds() {
+        check(Config::default().cases(20), "random_csr valid", |rng| {
+            let (r, c) = (rng.range(1, 40), rng.range(1, 40));
+            let m = random_csr(rng, r, c, 0.2);
+            m.validate().unwrap();
+            assert_eq!((m.rows, m.cols), (r, c));
+        });
+    }
+
+    #[test]
+    fn pattern_family_is_always_valid() {
+        check(Config::default().cases(60), "pattern_family valid", |rng| {
+            let m = pattern_family(rng, 64);
+            m.validate().unwrap();
+        });
+    }
+
+    #[test]
+    fn random_edge_delta_always_applies() {
+        check(Config::default().cases(60), "delta applies cleanly", |rng| {
+            let m = pattern_family(rng, 48);
+            let d = random_edge_delta(rng, &m, 12);
+            let new_m = m.apply_delta(&d).unwrap();
+            new_m.validate().unwrap();
+            assert_eq!((new_m.rows, new_m.cols), (m.rows, m.cols));
+        });
+    }
+}

@@ -1,0 +1,266 @@
+//! Differential harness for incremental plan maintenance.
+//!
+//! Every property here chains K random edge-batch deltas through the
+//! incremental patchers (`Csr::apply_delta`, `PatternDigests::update`,
+//! `SpmmPlan::apply_delta` / `SddmmPlan::apply_delta`) and demands the
+//! result be **bit-identical** — every distribution array, every
+//! balance segment, the fingerprint, and the executed output — to a
+//! from-scratch preprocess of the final matrix. Any divergence in any
+//! layer is a correctness bug, not a tolerance question: patched plans
+//! are served to tenants as if they were cold-built.
+
+use libra::balance::BalanceParams;
+use libra::delta::EdgeDelta;
+use libra::dist::DistParams;
+use libra::exec::sddmm::SddmmExecutor;
+use libra::exec::{SpmmExecutor, TcBackend, Threading};
+use libra::prep::{preprocess_sddmm, preprocess_spmm, PrepMode, SddmmPlan, SpmmPlan};
+use libra::sparse::{Csr, Dense, PatternDigests};
+use libra::util::propcheck::{check, Config};
+use libra::util::{testgen, SplitMix64};
+
+fn random_dist_params(rng: &mut SplitMix64) -> DistParams {
+    match rng.below(4) {
+        0 => DistParams::default(),
+        1 => DistParams::flex_only(),
+        2 => DistParams::tc_only(),
+        _ => DistParams { threshold: rng.range(1, 10), fill_padding: rng.chance(0.5) },
+    }
+}
+
+fn random_sddmm_dist_params(rng: &mut SplitMix64) -> DistParams {
+    match rng.below(3) {
+        0 => DistParams::sddmm_default(),
+        1 => DistParams::flex_only(),
+        _ => DistParams { threshold: rng.range(1, 48), fill_padding: true },
+    }
+}
+
+fn random_balance_params(rng: &mut SplitMix64) -> BalanceParams {
+    if rng.chance(0.3) {
+        BalanceParams::default()
+    } else {
+        BalanceParams {
+            ts: rng.range(1, 8),
+            cs: rng.range(2, 40),
+            short_len: rng.range(1, 6),
+            enabled: rng.chance(0.8),
+        }
+    }
+}
+
+/// Field-by-field bit-identity of a patched SpMM plan vs a scratch one.
+fn assert_spmm_plans_equal(got: &SpmmPlan, want: &SpmmPlan, ctx: &str) {
+    assert_eq!(got.dist.rows, want.dist.rows, "{ctx}: rows");
+    assert_eq!(got.dist.cols, want.dist.cols, "{ctx}: cols");
+    assert_eq!(got.dist.tc.k, want.dist.tc.k, "{ctx}: tc.k");
+    assert_eq!(got.dist.tc.window_of, want.dist.tc.window_of, "{ctx}: tc.window_of");
+    assert_eq!(got.dist.tc.cols, want.dist.tc.cols, "{ctx}: tc.cols");
+    assert_eq!(got.dist.tc.bitmaps, want.dist.tc.bitmaps, "{ctx}: tc.bitmaps");
+    assert_eq!(got.dist.tc.val_ptr, want.dist.tc.val_ptr, "{ctx}: tc.val_ptr");
+    assert_eq!(got.dist.tc.values, want.dist.tc.values, "{ctx}: tc.values");
+    assert_eq!(got.dist.tc_src_idx, want.dist.tc_src_idx, "{ctx}: tc_src_idx");
+    assert_eq!(got.dist.flex_row_ptr, want.dist.flex_row_ptr, "{ctx}: flex_row_ptr");
+    assert_eq!(got.dist.flex_cols, want.dist.flex_cols, "{ctx}: flex_cols");
+    assert_eq!(got.dist.flex_vals, want.dist.flex_vals, "{ctx}: flex_vals");
+    assert_eq!(got.dist.flex_src_idx, want.dist.flex_src_idx, "{ctx}: flex_src_idx");
+    assert_eq!(got.dist.stats, want.dist.stats, "{ctx}: stats");
+    assert_eq!(got.sched.tc_segments, want.sched.tc_segments, "{ctx}: tc_segments");
+    assert_eq!(got.sched.long_tiles, want.sched.long_tiles, "{ctx}: long_tiles");
+    assert_eq!(got.sched.short_tiles, want.sched.short_tiles, "{ctx}: short_tiles");
+    assert_eq!(got.sched.atomic_windows, want.sched.atomic_windows, "{ctx}: atomic_windows");
+}
+
+/// The SDDMM mirror of [`assert_spmm_plans_equal`].
+fn assert_sddmm_plans_equal(got: &SddmmPlan, want: &SddmmPlan, ctx: &str) {
+    assert_eq!(got.dist.rows, want.dist.rows, "{ctx}: rows");
+    assert_eq!(got.dist.cols, want.dist.cols, "{ctx}: cols");
+    assert_eq!(got.dist.tc.k, want.dist.tc.k, "{ctx}: tc.k");
+    assert_eq!(got.dist.tc.window_of, want.dist.tc.window_of, "{ctx}: tc.window_of");
+    assert_eq!(got.dist.tc.cols, want.dist.tc.cols, "{ctx}: tc.cols");
+    assert_eq!(got.dist.tc.bitmaps, want.dist.tc.bitmaps, "{ctx}: tc.bitmaps");
+    assert_eq!(got.dist.tc.val_ptr, want.dist.tc.val_ptr, "{ctx}: tc.val_ptr");
+    assert_eq!(got.dist.tc.values, want.dist.tc.values, "{ctx}: tc.values");
+    assert_eq!(got.dist.tc_out_idx, want.dist.tc_out_idx, "{ctx}: tc_out_idx");
+    assert_eq!(got.dist.flex_rows, want.dist.flex_rows, "{ctx}: flex_rows");
+    assert_eq!(got.dist.flex_cols, want.dist.flex_cols, "{ctx}: flex_cols");
+    assert_eq!(got.dist.flex_vals, want.dist.flex_vals, "{ctx}: flex_vals");
+    assert_eq!(got.dist.flex_out_idx, want.dist.flex_out_idx, "{ctx}: flex_out_idx");
+    assert_eq!(got.dist.stats, want.dist.stats, "{ctx}: stats");
+    assert_eq!(got.sched.tc_segments, want.sched.tc_segments, "{ctx}: tc_segments");
+    assert_eq!(got.sched.long_tiles, want.sched.long_tiles, "{ctx}: long_tiles");
+    assert_eq!(got.sched.short_tiles, want.sched.short_tiles, "{ctx}: short_tiles");
+}
+
+#[test]
+fn chained_deltas_match_scratch_spmm() {
+    check(Config::default().cases(24), "chained spmm deltas == scratch", |rng| {
+        let dparams = random_dist_params(rng);
+        let bparams = random_balance_params(rng);
+        let mut m = testgen::pattern_family(rng, 96);
+        let mut plan = preprocess_spmm(&m, &dparams, &bparams, PrepMode::Sequential);
+        let mut digests = PatternDigests::of(&m);
+        for step in 0..8 {
+            let delta = testgen::random_edge_delta(rng, &m, 10);
+            let new_m = m.apply_delta(&delta).unwrap();
+            let touched = delta.touched_windows();
+            plan = plan.apply_delta(&m, &new_m, &touched, &dparams, &bparams);
+            digests.update(&new_m, &touched);
+            let want = preprocess_spmm(&new_m, &dparams, &bparams, PrepMode::Sequential);
+            assert_spmm_plans_equal(&plan, &want, &format!("step {step}"));
+            assert_eq!(
+                digests.fingerprint(),
+                new_m.pattern_fingerprint(),
+                "step {step}: incremental fingerprint diverged"
+            );
+            plan.dist.validate_cover(&new_m).unwrap();
+            m = new_m;
+        }
+        // executed bit-identity of the final patched plan, under both
+        // deterministic executor configs
+        let b = Dense::random(rng, m.cols, rng.range(1, 12));
+        let want_plan = preprocess_spmm(&m, &dparams, &bparams, PrepMode::Sequential);
+        for threading in [Threading::Inline, Threading::Scoped] {
+            let mut got_x = SpmmExecutor::from_plan(plan.clone(), TcBackend::NativeBitmap);
+            let mut want_x = SpmmExecutor::from_plan(want_plan.clone(), TcBackend::NativeBitmap);
+            got_x.flex_threads = 1;
+            want_x.flex_threads = 1;
+            got_x.threading = threading.clone();
+            want_x.threading = threading.clone();
+            let got = got_x.execute(&b).unwrap();
+            let want = want_x.execute(&b).unwrap();
+            assert_eq!(got.data, want.data, "executed SpMM output diverged");
+        }
+    });
+}
+
+#[test]
+fn chained_deltas_match_scratch_sddmm() {
+    check(Config::default().cases(20), "chained sddmm deltas == scratch", |rng| {
+        let dparams = random_sddmm_dist_params(rng);
+        let bparams = random_balance_params(rng);
+        let mut m = testgen::pattern_family(rng, 80);
+        let mut plan = preprocess_sddmm(&m, &dparams, &bparams, PrepMode::Sequential);
+        let mut digests = PatternDigests::of(&m);
+        for step in 0..8 {
+            let delta = testgen::random_edge_delta(rng, &m, 10);
+            let new_m = m.apply_delta(&delta).unwrap();
+            let touched = delta.touched_windows();
+            plan = plan.apply_delta(&m, &new_m, &touched, &dparams, &bparams);
+            digests.update(&new_m, &touched);
+            let want = preprocess_sddmm(&new_m, &dparams, &bparams, PrepMode::Sequential);
+            assert_sddmm_plans_equal(&plan, &want, &format!("step {step}"));
+            assert_eq!(
+                digests.fingerprint(),
+                new_m.pattern_fingerprint(),
+                "step {step}: incremental fingerprint diverged"
+            );
+            m = new_m;
+        }
+        // executed bit-identity: SDDMM writes each nonzero exactly
+        // once, so it is deterministic at any flexible width
+        let k = rng.range(1, 10);
+        let a = Dense::random(rng, m.rows, k);
+        let b = Dense::random(rng, m.cols, k);
+        let want_plan = preprocess_sddmm(&m, &dparams, &bparams, PrepMode::Sequential);
+        let got_x = SddmmExecutor::from_plan(plan.clone(), m.clone(), TcBackend::NativeBitmap);
+        let want_x = SddmmExecutor::from_plan(want_plan, m.clone(), TcBackend::NativeBitmap);
+        let got = got_x.execute(&a, &b).unwrap();
+        let want = want_x.execute(&a, &b).unwrap();
+        assert_eq!(got.values, want.values, "executed SDDMM output diverged");
+    });
+}
+
+#[test]
+fn window_emptying_and_straddling_deltas() {
+    let mut rng = SplitMix64::new(42);
+    let dparams = DistParams::default();
+    let bparams = BalanceParams::default();
+    let m = testgen::random_csr(&mut rng, 24, 20, 0.3);
+    let plan = preprocess_spmm(&m, &dparams, &bparams, PrepMode::Sequential);
+
+    // d1 empties window 1 entirely (deletes every edge of rows 8..16)
+    let mut d1 = EdgeDelta::new();
+    for r in 8..16 {
+        let (cols, _) = m.row(r);
+        for &c in cols {
+            d1.delete(r, c as usize);
+        }
+    }
+    assert!(!d1.is_empty(), "fixture needs edges in rows 8..16");
+    let m1 = m.apply_delta(&d1).unwrap();
+    assert_eq!(m1.row_ptr[8], m1.row_ptr[16], "window 1 should be empty");
+    let patched = plan.apply_delta(&m, &m1, &d1.touched_windows(), &dparams, &bparams);
+    let scratch = preprocess_spmm(&m1, &dparams, &bparams, PrepMode::Sequential);
+    assert_spmm_plans_equal(&patched, &scratch, "emptied window");
+
+    // d2 straddles the window 0 / window 1 boundary
+    let mut d2 = EdgeDelta::new();
+    d2.upsert(7, 19, 1.25).upsert(8, 0, -2.0);
+    assert_eq!(d2.touched_windows(), vec![0, 1]);
+    let m2 = m1.apply_delta(&d2).unwrap();
+    let patched2 = patched.apply_delta(&m1, &m2, &d2.touched_windows(), &dparams, &bparams);
+    let scratch2 = preprocess_spmm(&m2, &dparams, &bparams, PrepMode::Sequential);
+    assert_spmm_plans_equal(&patched2, &scratch2, "straddling delta");
+}
+
+#[test]
+fn fingerprint_pattern_identity_edge_cases() {
+    // empty matrices: equal across instances, shape-sensitive
+    let e1 = Csr::zeros(10, 10);
+    let e2 = Csr::zeros(10, 10);
+    assert_eq!(e1.pattern_fingerprint(), e2.pattern_fingerprint());
+    assert_ne!(e1.pattern_fingerprint(), Csr::zeros(11, 10).pattern_fingerprint());
+    assert_eq!(e1.pattern_fingerprint().nnz, 0);
+
+    // fingerprints identify the *pattern*: value changes are invisible
+    let mut rng = SplitMix64::new(7);
+    let m = testgen::random_csr(&mut rng, 40, 30, 0.15);
+    let mut revalued = m.clone();
+    for v in &mut revalued.values {
+        *v *= -3.5;
+    }
+    assert_eq!(m.pattern_fingerprint(), revalued.pattern_fingerprint());
+    assert_eq!(PatternDigests::of(&m), PatternDigests::of(&revalued));
+}
+
+#[test]
+fn delta_to_already_cached_pattern_reuses_entry() {
+    use libra::serve::{CachedPlan, PlanCache, PlanKey};
+    use std::sync::Arc;
+
+    let cache = PlanCache::new(1 << 22);
+    let mut rng = SplitMix64::new(91);
+    let dparams = DistParams::default();
+    let bparams = BalanceParams::default();
+    let a = testgen::random_csr(&mut rng, 48, 40, 0.1);
+    // a guaranteed-structural insertion (never a value-only upsert)
+    let r = 5;
+    let c = (0..a.cols).find(|&c| a.get(r, c).is_none()).unwrap();
+    let mut delta = EdgeDelta::new();
+    delta.upsert(r, c, 2.5);
+    let b = a.apply_delta(&delta).unwrap();
+
+    // serve BOTH patterns first, so the delta's target is already hot
+    let fp_a = cache.record_pattern(&a);
+    let fp_b = cache.record_pattern(&b);
+    let key_a = PlanKey::spmm(fp_a, &dparams, &bparams);
+    let key_b = PlanKey::spmm(fp_b, &dparams, &bparams);
+    let plan_a = Arc::new(preprocess_spmm(&a, &dparams, &bparams, PrepMode::Sequential));
+    let plan_b = Arc::new(preprocess_spmm(&b, &dparams, &bparams, PrepMode::Sequential));
+    assert!(cache.insert(key_a, CachedPlan::Spmm(plan_a)));
+    assert!(cache.insert(key_b, CachedPlan::Spmm(plan_b.clone())));
+    let (len_before, ins_before) = (cache.len(), cache.stats().insertions);
+
+    // the delta lands on the already-cached pattern: the cache must
+    // hand back the existing entry, not patch-and-insert a duplicate
+    let applied = cache.apply_delta(&key_a, &delta).unwrap();
+    assert_eq!(applied.new_key, key_b);
+    assert_eq!(applied.new_fp, fp_b);
+    assert_eq!(cache.len(), len_before);
+    assert_eq!(cache.stats().insertions, ins_before);
+    let CachedPlan::Spmm(got) = applied.plan else {
+        panic!("expected an SpMM plan");
+    };
+    assert!(Arc::ptr_eq(&got, &plan_b), "must reuse the resident entry");
+}

@@ -1,0 +1,69 @@
+//! End-to-end serving smoke: engine up, several sessions over one
+//! pattern (cold then warm, asserted via prep metrics), then an edge
+//! delta submitted through [`Engine::submit_delta`] and served warm —
+//! the evolving-graph path must be a patch, never a silent rebuild.
+
+use libra::delta::EdgeDelta;
+use libra::exec::TcBackend;
+use libra::serve::{DeltaRequest, Engine, EngineConfig, Request, SchedParams};
+use libra::sparse::{gen, Dense};
+use libra::util::SplitMix64;
+
+#[test]
+fn serve_smoke_warm_sessions_then_delta() {
+    let eng = Engine::new(EngineConfig {
+        sched: SchedParams { workers: 2, max_batch: 8 },
+        cache_bytes: 64 << 20,
+        backend: TcBackend::NativeBitmap,
+    });
+    let mut rng = SplitMix64::new(2024);
+    let m = gen::power_law(&mut rng, 256, 8.0, 2.0);
+    let b = Dense::random(&mut rng, 256, 16);
+
+    // session 1: cold — full preprocessing
+    let cold = eng.submit(Request::spmm(m.clone(), b.clone()));
+    assert!(!cold.cache_hit);
+    let got = cold.result.unwrap().into_dense().unwrap();
+    assert!(got.allclose(&m.spmm_dense_ref(&b), 1e-3));
+
+    // sessions 2..=5: same pattern, fresh values — all warm
+    for session in 0..4 {
+        let mut m2 = m.clone();
+        for v in m2.values.iter_mut() {
+            *v = rng.f32_range(-2.0, 2.0);
+        }
+        let r = eng.submit(Request::spmm(m2.clone(), b.clone()));
+        assert!(r.cache_hit, "session {session} must hit the plan cache");
+        let out = r.result.unwrap().into_dense().unwrap();
+        assert!(out.allclose(&m2.spmm_dense_ref(&b), 1e-3));
+    }
+    let rep = eng.report();
+    assert_eq!(rep.prep_full, 1, "exactly one cold prep");
+    assert_eq!(rep.prep_fast, 4, "all follow-up sessions must be warm");
+    assert_eq!(rep.errors, 0);
+
+    // now the graph evolves: one structural insertion + one deletion
+    let fp = m.pattern_fingerprint();
+    let ins = (0..m.cols).find(|&c| m.get(3, c).is_none()).unwrap();
+    let del_row = (0..m.rows).find(|&row| m.row_len(row) > 0).unwrap();
+    let del_col = m.row(del_row).0[0] as usize;
+    let mut delta = EdgeDelta::new();
+    delta.upsert(3, ins, 0.75).delete(del_row, del_col);
+    let new_m = m.apply_delta(&delta).unwrap();
+
+    let out = eng.submit_delta(DeltaRequest::spmm(fp, delta, 16)).unwrap();
+    assert!(out.patched, "served pattern must be patched, not rebuilt");
+    assert_eq!(out.new_fp, new_m.pattern_fingerprint());
+    assert_eq!(out.nnz, new_m.nnz());
+    let rep = eng.report();
+    assert_eq!(rep.delta_patched, 1);
+    assert_eq!(rep.delta_rebuilt, 0);
+
+    // the patched plan serves the mutated graph warm: no new full prep
+    let r = eng.submit(Request::spmm(new_m.clone(), b.clone()));
+    assert!(r.cache_hit, "post-delta request must hit the patched plan");
+    let out = r.result.unwrap().into_dense().unwrap();
+    assert!(out.allclose(&new_m.spmm_dense_ref(&b), 1e-3));
+    let rep = eng.report();
+    assert_eq!(rep.prep_full, 1, "the delta must not trigger a cold prep");
+}

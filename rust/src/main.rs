@@ -22,7 +22,10 @@ use libra::dist::{DistParams, Op};
 use libra::exec::sddmm::SddmmExecutor;
 use libra::exec::{SpmmExecutor, TcBackend};
 use libra::planner::{fmt_theta, Planner, ThetaPolicy};
-use libra::serve::{Engine, EngineConfig, MicroBatchParams, MicroBatcher, Request, SchedParams};
+use libra::serve::{
+    Cluster, ClusterConfig, Engine, EngineConfig, MicroBatchParams, MicroBatcher, Request, Routing,
+    SchedParams, TenantId,
+};
 use libra::sparse::{gen, mm_io, Csr, Dense};
 use libra::util::SplitMix64;
 use std::collections::HashMap;
@@ -50,7 +53,8 @@ fn main() -> Result<()> {
             rest,
             &[
                 "patterns", "requests", "workers", "n", "size", "theta", "backend", "seed",
-                "cache-mb", "batch", "microbatch", "linger-us", "batch-kb",
+                "cache-mb", "batch", "microbatch", "linger-us", "batch-kb", "shards", "tenants",
+                "qdepth",
             ],
         )?),
         "--help" | "-h" | "help" => {
@@ -75,6 +79,7 @@ fn print_usage() {
          \x20 serve  [--patterns 6] [--requests 120] [--workers W] [--n 64] [--size 1024]\n\
          \x20        [--theta auto|auto-refined|N] [--backend native|pjrt] [--seed 42] [--cache-mb 256] [--batch 8]\n\
          \x20        [--microbatch] [--linger-us 2000] [--batch-kb 2048]  (coalesce requests into block-diagonal batches)\n\
+         \x20        [--shards S] [--tenants T] [--qdepth Q]  (scale-out: shard cluster, zipf tenant tags, bounded admission)\n\
          gen:SPEC: gen:powerlaw:N:DEG | gen:banded:N:BAND | gen:uniform:N:DENSITY | gen:blockdiag:N:BLOCKS\n\
          (--theta defaults to auto: cost-model tuning on the matrix histogram, one Planner path\n\
          \x20 shared by every subcommand and the serving engine; unknown flags are rejected)"
@@ -487,7 +492,12 @@ fn bail_unless_gcn(model: &str) -> Result<()> {
 /// trace (a few distinct sparsity patterns, zipf-skewed popularity,
 /// fresh values per request) and replays it against `serve::Engine`,
 /// then prints the metrics report — hit rate, latency split, and
-/// worker occupancy.
+/// worker occupancy. With any of `--shards`/`--tenants`/`--qdepth`
+/// the trace instead goes through a `serve::Cluster`: requests are
+/// tagged with a zipf-skewed `TenantId` (so weighted-fair admission
+/// is actually exercised), routed by fingerprint affinity, shed when
+/// the bounded queues fill, and reported as one merged
+/// `ClusterReport` with per-phase tail percentiles.
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     // a value that fails to parse is an error, matching the strict
     // flag-name handling (never silently fall back to a default)
@@ -508,6 +518,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let microbatch = flags.contains_key("microbatch");
     let linger_us: u64 = get(flags, "linger-us", 2000)?;
     let batch_kb: usize = get(flags, "batch-kb", 2048)?.max(1);
+    let shards = get(flags, "shards", 1)?.max(1);
+    let tenants: usize = get(flags, "tenants", 4)?.max(1);
+    let qdepth = get(flags, "qdepth", (workers * 8).max(16))?.max(1);
+    // any scale-out flag routes the replay through a sharded Cluster
+    let scale_out = flags.contains_key("shards")
+        || flags.contains_key("tenants")
+        || flags.contains_key("qdepth");
 
     let mut rng = SplitMix64::new(seed);
     let mats: Vec<Csr> = (0..patterns)
@@ -527,6 +544,94 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             String::new()
         }
     );
+
+    if scale_out {
+        println!("scale-out: {shards} shards, {tenants} tenants (zipf tags), qdepth {qdepth}");
+        let cluster = Cluster::new(ClusterConfig {
+            shards,
+            engine: EngineConfig {
+                sched: SchedParams { workers, max_batch: batch },
+                cache_bytes: cache_mb << 20,
+                backend: backend(flags)?,
+            },
+            qdepth,
+            spill_at: (qdepth / 2).max(1),
+            routing: Routing::Affinity,
+            microbatch: if microbatch {
+                Some(MicroBatchParams {
+                    max_batch_bytes: batch_kb << 10,
+                    linger: std::time::Duration::from_micros(linger_us),
+                    theta: policy,
+                    dist: None,
+                })
+            } else {
+                None
+            },
+        });
+        for t in 0..tenants {
+            cluster.set_tenant_weight(TenantId(t as u32), 1);
+        }
+        let b = Dense::random(&mut rng, size, n);
+        let window = (workers * shards * 4).max(8);
+        let mut errors = 0usize;
+        let mut shed = 0usize;
+        let t0 = std::time::Instant::now();
+        if microbatch {
+            let mut in_flight = std::collections::VecDeque::with_capacity(window);
+            for _ in 0..requests {
+                if in_flight.len() >= window {
+                    let t: libra::serve::MicroTicket = in_flight.pop_front().unwrap();
+                    errors += t.wait().is_err() as usize;
+                }
+                let mut m = mats[rng.zipf(patterns, 1.8)].clone();
+                for v in m.values.iter_mut() {
+                    *v = rng.f32_range(-1.0, 1.0);
+                }
+                match cluster.submit_micro(m, b.clone()) {
+                    Ok(t) => in_flight.push_back(t),
+                    Err(_) => shed += 1,
+                }
+            }
+            for t in in_flight {
+                errors += t.wait().is_err() as usize;
+            }
+        } else {
+            let mut in_flight = std::collections::VecDeque::with_capacity(window);
+            for _ in 0..requests {
+                if in_flight.len() >= window {
+                    let t: libra::serve::ClusterTicket = in_flight.pop_front().unwrap();
+                    errors += t.wait().result.is_err() as usize;
+                }
+                // skewed tenant tags: tenant 0 dominates, the tail is
+                // light — the fairness-relevant regime
+                let tenant = TenantId(rng.zipf(tenants, 1.2) as u32);
+                let mut m = mats[rng.zipf(patterns, 1.8)].clone();
+                for v in m.values.iter_mut() {
+                    *v = rng.f32_range(-1.0, 1.0);
+                }
+                match cluster.submit_async(tenant, Request::spmm(m, b.clone()).with_theta(policy))
+                {
+                    Ok(t) => in_flight.push_back(t),
+                    Err(_) => shed += 1,
+                }
+            }
+            for t in in_flight {
+                errors += t.wait().result.is_err() as usize;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "replayed {requests} requests ({} admitted, {shed} shed) in {:.2}s ({:.1} req/s)\n",
+            requests - shed,
+            wall,
+            (requests - shed) as f64 / wall.max(1e-9)
+        );
+        println!("{}", cluster.report());
+        if errors > 0 {
+            bail!("{errors} requests failed");
+        }
+        return Ok(());
+    }
 
     let engine = std::sync::Arc::new(Engine::new(EngineConfig {
         sched: SchedParams { workers, max_batch: batch },

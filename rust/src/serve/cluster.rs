@@ -1,0 +1,653 @@
+//! Scale-out serving: N shard engines behind fingerprint-affinity
+//! routing, bounded weighted-fair admission, and merged tail metrics.
+//!
+//! A single [`Engine`] amortizes preprocessing through its plan cache;
+//! a [`Cluster`] keeps that amortization while scaling out, by making
+//! *placement* part of the story (the HC-SpMM observation: where a
+//! request lands matters as much as how it executes):
+//!
+//! * **Rendezvous (HRW) routing** — each pattern fingerprint hashes to
+//!   a preference order over shards; requests go to the top-ranked
+//!   (*home*) shard, so one shard's [`super::cache::PlanCache`] and
+//!   θ-memo stay hot on its slice of patterns instead of every shard
+//!   cold-prepping every pattern. Routing is deterministic, and
+//!   memoized so a pattern patched by [`Cluster::submit_delta`] keeps
+//!   its home shard under the new fingerprint (shard-stable
+//!   re-fingerprinting).
+//! * **Power-of-two-choices spill** — when the home shard's admission
+//!   queue exceeds [`ClusterConfig::spill_at`], the request may go to
+//!   its HRW second choice if that one is less loaded: bounded
+//!   affinity loss in exchange for not stacking the tail behind one
+//!   hot shard.
+//! * **Bounded admission with weighted-fair sheds**
+//!   ([`super::admission`]) — per shard, a [`Rejected::QueueFull`] is
+//!   returned to the submitter instead of growing an unbounded queue,
+//!   and deficit round-robin over [`TenantId`]s keeps one heavy tenant
+//!   from starving the rest.
+//! * **Merged tail observability** — [`Cluster::report`] folds the
+//!   shards' [`MetricsReport`]s with [`MetricsReport::merge`]
+//!   (counters sum, histograms merge bucket-wise, rates recomputed
+//!   from counts) into one [`ClusterReport`] with honest cluster-wide
+//!   p50/p95/p99 per phase.
+//!
+//! Small-graph traffic rides per-shard [`MicroBatcher`]s (enable via
+//! [`ClusterConfig::microbatch`]): members coalesce *within* their
+//! home shard, so the supermatrix plans it produces stay shard-local
+//! too.
+
+use super::admission::{Admission, Rejected, TenantId, TenantStat};
+use super::hist::{HistSnapshot, LatencyHist};
+use super::metrics::MetricsReport;
+use super::sched::{MicroBatchParams, MicroBatcher, MicroTicket, OneShot};
+use super::session::{DeltaOutcome, DeltaRequest, Engine, EngineConfig, Request, Response};
+use crate::sparse::{Csr, Dense, PatternFingerprint};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// How requests are placed on shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Routing {
+    /// Fingerprint-affinity HRW with power-of-two-choices spill (the
+    /// default): warm hits concentrate on each pattern's home shard.
+    Affinity,
+    /// Round-robin, ignoring the pattern: the cache-oblivious baseline
+    /// `tab14_scaleout` measures affinity against.
+    RoundRobin,
+}
+
+/// Cluster construction parameters.
+#[derive(Clone)]
+pub struct ClusterConfig {
+    /// Shard count (engines), clamped to ≥ 1.
+    pub shards: usize,
+    /// Per-shard engine configuration (worker pool, cache budget,
+    /// backend) — each shard gets its own plan cache and θ-memo.
+    pub engine: EngineConfig,
+    /// Per-shard admission bound: queued requests past this are shed
+    /// with [`Rejected::QueueFull`].
+    pub qdepth: usize,
+    /// Home-queue depth past which the HRW second choice is considered
+    /// (power-of-two-choices spill).
+    pub spill_at: usize,
+    pub routing: Routing,
+    /// When set, each shard owns a [`MicroBatcher`] over its engine
+    /// and [`Cluster::submit_micro`] coalesces small-graph requests
+    /// shard-locally.
+    pub microbatch: Option<MicroBatchParams>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            shards: 4,
+            engine: EngineConfig::default(),
+            qdepth: 64,
+            spill_at: 16,
+            routing: Routing::Affinity,
+            microbatch: None,
+        }
+    }
+}
+
+/// One admitted request riding from the admission queue to a runner.
+struct AdmItem {
+    req: Request,
+    slot: Arc<OneShot<Response>>,
+    offered: Instant,
+}
+
+struct Shard {
+    engine: Arc<Engine>,
+    admission: Arc<Admission<AdmItem>>,
+    /// Offer → runner-pickup wait (the admission phase the engine's
+    /// own queue histogram cannot see).
+    admit_wait: Arc<LatencyHist>,
+    micro: Option<MicroBatcher>,
+    runners: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Handle to one in-flight cluster request.
+pub struct ClusterTicket {
+    shard: usize,
+    slot: Arc<OneShot<Response>>,
+}
+
+impl ClusterTicket {
+    /// The shard the request was admitted to.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Block until the response is ready.
+    pub fn wait(self) -> Response {
+        self.slot.wait()
+    }
+}
+
+/// Max fingerprint → home-shard entries kept before the LRU half is
+/// evicted (same recency-stamped scheme as the engine's θ-memo).
+const ROUTE_MEMO_CAP: usize = 1 << 16;
+
+/// Fingerprint → home shard, recency-stamped. Memoization is what
+/// makes routing *shard-stable*: a delta-patched pattern inherits its
+/// base pattern's home instead of re-rolling HRW on the new hash.
+#[derive(Default)]
+struct RouteMemo {
+    map: HashMap<(u64, u64), (usize, u64)>,
+    tick: u64,
+}
+
+impl RouteMemo {
+    fn get(&mut self, key: &(u64, u64)) -> Option<usize> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(key).map(|e| {
+            e.1 = tick;
+            e.0
+        })
+    }
+
+    fn insert(&mut self, key: (u64, u64), shard: usize) {
+        if self.map.len() >= ROUTE_MEMO_CAP {
+            let mut ticks: Vec<u64> = self.map.values().map(|&(_, t)| t).collect();
+            ticks.sort_unstable();
+            let cutoff = ticks[ticks.len() / 2];
+            self.map.retain(|_, &mut (_, t)| t > cutoff);
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.insert(key, (shard, tick));
+    }
+}
+
+/// Rendezvous weight of `shard` for a fingerprint: highest score wins.
+/// Pure (fingerprint, shard) function — every cluster instance with
+/// the same shard count agrees on every pattern's preference order.
+fn hrw_score(fp: &PatternFingerprint, shard: u64) -> u64 {
+    let mut x =
+        fp.hash ^ fp.hash2.rotate_left(32) ^ shard.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// The scale-out serving cluster: N shard engines, affinity routing,
+/// bounded weighted-fair admission.
+pub struct Cluster {
+    shards: Vec<Shard>,
+    route: Mutex<RouteMemo>,
+    qdepth: usize,
+    spill_at: usize,
+    routing: Routing,
+    rr: AtomicU64,
+    spilled: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl Cluster {
+    /// Bring up `cfg.shards` engines, each with its own admission
+    /// queue, runner pool (one runner per engine worker), and — when
+    /// configured — micro-batcher.
+    pub fn new(cfg: ClusterConfig) -> Self {
+        let n = cfg.shards.max(1);
+        let runners_per_shard = cfg.engine.sched.workers.max(1);
+        let shards = (0..n)
+            .map(|i| {
+                let engine = Arc::new(Engine::new(cfg.engine.clone()));
+                let admission: Arc<Admission<AdmItem>> = Arc::new(Admission::new(cfg.qdepth, i));
+                let admit_wait = Arc::new(LatencyHist::new());
+                let runners = (0..runners_per_shard)
+                    .map(|_| {
+                        let engine = engine.clone();
+                        let admission = admission.clone();
+                        let admit_wait = admit_wait.clone();
+                        std::thread::spawn(move || runner_loop(&engine, &admission, &admit_wait))
+                    })
+                    .collect();
+                let micro = cfg.microbatch.map(|p| MicroBatcher::new(engine.clone(), p));
+                Shard { engine, admission, admit_wait, micro, runners }
+            })
+            .collect();
+        Self {
+            shards,
+            route: Mutex::new(RouteMemo::default()),
+            qdepth: cfg.qdepth.max(1),
+            spill_at: cfg.spill_at,
+            routing: cfg.routing,
+            rr: AtomicU64::new(0),
+            spilled: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard `i`'s engine (per-shard metrics, cache, pending counts).
+    pub fn shard_engine(&self, i: usize) -> &Arc<Engine> {
+        &self.shards[i].engine
+    }
+
+    /// Requests queued (not yet picked up by a runner) on shard `i`.
+    pub fn pending(&self, i: usize) -> usize {
+        self.shards[i].admission.len()
+    }
+
+    /// Register a tenant's fair-share weight on every shard (clamped
+    /// to ≥ 1; unregistered tenants default to 1).
+    pub fn set_tenant_weight(&self, tenant: TenantId, weight: u64) {
+        for s in &self.shards {
+            s.admission.set_weight(tenant, weight);
+        }
+    }
+
+    /// A pattern's home shard: deterministic HRW, memoized so
+    /// delta-patched descendants keep the same home.
+    pub fn home_shard(&self, fp: PatternFingerprint) -> usize {
+        if self.shards.len() == 1 {
+            return 0;
+        }
+        let key = (fp.hash, fp.hash2);
+        let mut memo = self.route.lock().unwrap();
+        if let Some(s) = memo.get(&key) {
+            return s;
+        }
+        let home = self.hrw_rank(&fp, None);
+        memo.insert(key, home);
+        home
+    }
+
+    /// Best-scoring shard, optionally excluding one (the second
+    /// choice for power-of-two spill).
+    fn hrw_rank(&self, fp: &PatternFingerprint, exclude: Option<usize>) -> usize {
+        (0..self.shards.len())
+            .filter(|&i| Some(i) != exclude)
+            .max_by_key(|&i| hrw_score(fp, i as u64))
+            .unwrap_or(0)
+    }
+
+    /// Pick the shard for one request; returns `(shard, spilled)`.
+    fn place(&self, fp: PatternFingerprint) -> (usize, bool) {
+        if self.shards.len() == 1 {
+            return (0, false);
+        }
+        match self.routing {
+            Routing::RoundRobin => {
+                ((self.rr.fetch_add(1, Ordering::Relaxed) as usize) % self.shards.len(), false)
+            }
+            Routing::Affinity => {
+                let home = self.home_shard(fp);
+                let depth = self.shards[home].admission.len();
+                if depth > self.spill_at {
+                    let second = self.hrw_rank(&fp, Some(home));
+                    if self.shards[second].admission.len() < depth {
+                        self.spilled.fetch_add(1, Ordering::Relaxed);
+                        return (second, true);
+                    }
+                }
+                (home, false)
+            }
+        }
+    }
+
+    /// Route and enqueue one request for `tenant`. Full queues shed:
+    /// the submitter gets [`Rejected::QueueFull`] *now* instead of an
+    /// unboundedly late response.
+    pub fn submit_async(&self, tenant: TenantId, req: Request) -> Result<ClusterTicket, Rejected> {
+        let fp = req.payload.fingerprint();
+        let (idx, _spilled) = self.place(fp);
+        let slot = Arc::new(OneShot::new());
+        let item = AdmItem { req, slot: slot.clone(), offered: Instant::now() };
+        match self.shards[idx].admission.offer(tenant, item) {
+            Ok(()) => Ok(ClusterTicket { shard: idx, slot }),
+            Err(e) => {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Route, enqueue, and wait for one request.
+    pub fn submit(&self, tenant: TenantId, req: Request) -> Result<Response, Rejected> {
+        Ok(self.submit_async(tenant, req)?.wait())
+    }
+
+    /// Apply an edge-batch delta on the base pattern's home shard and
+    /// pin the patched fingerprint to that same home, so follow-up
+    /// traffic (which carries the *new* fingerprint) still lands where
+    /// the patched plan lives.
+    pub fn submit_delta(&self, req: DeltaRequest) -> anyhow::Result<DeltaOutcome> {
+        let home = self.home_shard(req.fp);
+        let out = self.shards[home].engine.submit_delta(req)?;
+        if self.shards.len() > 1 {
+            self.route.lock().unwrap().insert((out.new_fp.hash, out.new_fp.hash2), home);
+        }
+        Ok(out)
+    }
+
+    /// Submit one small-graph member to its home shard's
+    /// micro-batcher. Requires [`ClusterConfig::microbatch`]; sheds
+    /// like `submit` when the home shard is saturated.
+    pub fn submit_micro(&self, m: Csr, b: Dense) -> Result<MicroTicket, Rejected> {
+        let (idx, _) = self.place(m.pattern_fingerprint());
+        let shard = &self.shards[idx];
+        let Some(micro) = &shard.micro else {
+            return Err(Rejected::MicroBatchingDisabled);
+        };
+        let depth = shard.admission.len();
+        if depth >= self.qdepth {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(Rejected::QueueFull { shard: idx, depth, limit: self.qdepth });
+        }
+        Ok(micro.submit(m, b))
+    }
+
+    /// Merged cluster snapshot: one [`MetricsReport`] folded from
+    /// every shard, plus admission-side accounting.
+    pub fn report(&self) -> ClusterReport {
+        let per_shard: Vec<MetricsReport> = self.shards.iter().map(|s| s.engine.report()).collect();
+        let merged = MetricsReport::merge(&per_shard);
+        let mut admit_wait = HistSnapshot::default();
+        let mut by_tenant: HashMap<TenantId, TenantStat> = HashMap::new();
+        for s in &self.shards {
+            admit_wait.merge(&s.admit_wait.snapshot());
+            for t in s.admission.tenant_stats() {
+                let e = by_tenant.entry(t.tenant).or_insert(TenantStat {
+                    tenant: t.tenant,
+                    weight: t.weight,
+                    admitted: 0,
+                    rejected: 0,
+                });
+                e.weight = e.weight.max(t.weight);
+                e.admitted += t.admitted;
+                e.rejected += t.rejected;
+            }
+        }
+        let mut tenants: Vec<TenantStat> = by_tenant.into_values().collect();
+        tenants.sort_by_key(|t| t.tenant);
+        ClusterReport {
+            shards: self.shards.len(),
+            merged,
+            per_shard,
+            admit_wait,
+            tenants,
+            spilled: self.spilled.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        for s in &mut self.shards {
+            s.admission.close();
+        }
+        for s in &mut self.shards {
+            for r in s.runners.drain(..) {
+                let _ = r.join();
+            }
+            // MicroBatcher and Engine drops (queue close + worker
+            // joins) run when the Shard itself is dropped
+        }
+    }
+}
+
+/// Per-shard forwarding loop: DRR-ordered take, blocking engine
+/// submit, response handoff. One runner per engine worker keeps the
+/// engine saturated while the admission queue — not the engine's
+/// internal FIFO — holds every waiting request, so the DRR order and
+/// the `qdepth` bound actually govern service.
+fn runner_loop(engine: &Arc<Engine>, admission: &Admission<AdmItem>, admit_wait: &LatencyHist) {
+    while let Some(item) = admission.take() {
+        admit_wait.record(item.offered.elapsed().as_nanos() as u64);
+        let resp = engine.submit(item.req);
+        item.slot.put(resp);
+    }
+}
+
+/// Cluster-wide snapshot: merged engine metrics + admission view.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub shards: usize,
+    /// [`MetricsReport::merge`] over every shard: counters summed,
+    /// histograms merged, rates recomputed from counts.
+    pub merged: MetricsReport,
+    pub per_shard: Vec<MetricsReport>,
+    /// Offer → runner-pickup wait, merged across shards.
+    pub admit_wait: HistSnapshot,
+    /// Per-tenant admitted/rejected totals across shards.
+    pub tenants: Vec<TenantStat>,
+    /// Requests placed on their HRW second choice (p2c spill).
+    pub spilled: u64,
+    /// Requests shed ([`Rejected::QueueFull`]) across shards.
+    pub rejected: u64,
+}
+
+impl ClusterReport {
+    /// Warm-hit share of plan resolutions (`prep_fast` over all
+    /// preps) — the affinity-routing scoreboard.
+    pub fn warm_hit_rate(&self) -> f64 {
+        let total = self.merged.prep_full + self.merged.prep_fast;
+        if total == 0 {
+            0.0
+        } else {
+            self.merged.prep_fast as f64 / total as f64
+        }
+    }
+}
+
+impl std::fmt::Display for ClusterReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "cluster: {} shards | {:.1}% warm hits | {} spilled (p2c) | {} shed (queue full)",
+            self.shards,
+            self.warm_hit_rate() * 100.0,
+            self.spilled,
+            self.rejected
+        )?;
+        writeln!(f, "admission wait: {}", self.admit_wait.fmt_ms())?;
+        for t in &self.tenants {
+            let offered = t.admitted + t.rejected;
+            writeln!(
+                f,
+                "tenant {} (weight {}): {} admitted / {} offered ({:.1}% shed)",
+                t.tenant,
+                t.weight,
+                t.admitted,
+                offered,
+                if offered == 0 { 0.0 } else { t.rejected as f64 / offered as f64 * 100.0 }
+            )?;
+        }
+        write!(f, "{}", self.merged)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::TcBackend;
+    use crate::serve::SchedParams;
+    use crate::sparse::gen;
+    use crate::util::SplitMix64;
+
+    fn cluster(shards: usize, qdepth: usize, spill_at: usize) -> Cluster {
+        Cluster::new(ClusterConfig {
+            shards,
+            engine: EngineConfig {
+                sched: SchedParams { workers: 1, max_batch: 8 },
+                cache_bytes: 32 << 20,
+                backend: TcBackend::NativeBitmap,
+            },
+            qdepth,
+            spill_at,
+            routing: Routing::Affinity,
+            microbatch: None,
+        })
+    }
+
+    fn fp(rng: &mut SplitMix64) -> PatternFingerprint {
+        PatternFingerprint {
+            rows: 64,
+            cols: 64,
+            nnz: 128,
+            hash: rng.next_u64(),
+            hash2: rng.next_u64(),
+        }
+    }
+
+    #[test]
+    fn hrw_routing_is_deterministic_and_balanced() {
+        let c1 = cluster(4, 8, 4);
+        let c2 = cluster(4, 8, 4);
+        let mut rng = SplitMix64::new(900);
+        let mut counts = [0usize; 4];
+        for _ in 0..512 {
+            let p = fp(&mut rng);
+            let home = c1.home_shard(p);
+            assert_eq!(home, c1.home_shard(p), "routing must be deterministic");
+            assert_eq!(home, c2.home_shard(p), "instances must agree (pure HRW)");
+            counts[home] += 1;
+        }
+        // rough balance: each shard homes a meaningful share (expected
+        // 128 each over 512 patterns)
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 60, "shard {i} homes only {c}/512 patterns: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn single_shard_routes_everything_home() {
+        let c = cluster(1, 8, 0);
+        let mut rng = SplitMix64::new(901);
+        for _ in 0..16 {
+            assert_eq!(c.home_shard(fp(&mut rng)), 0);
+        }
+    }
+
+    #[test]
+    fn overloaded_home_spills_to_second_choice() {
+        // spill_at 0: any queued request triggers the p2c check. One
+        // slow request occupies the single runner, the next queues, so
+        // later submissions see depth > 0 and spill to the other shard.
+        let c = cluster(2, 8, 0);
+        let mut rng = SplitMix64::new(902);
+        let m = gen::power_law(&mut rng, 384, 8.0, 2.0);
+        let b = crate::sparse::Dense::random(&mut rng, 384, 32);
+        let tickets: Vec<ClusterTicket> = (0..6)
+            .map(|_| {
+                let mut m2 = m.clone();
+                for v in m2.values.iter_mut() {
+                    *v = rng.f32_range(-1.0, 1.0);
+                }
+                c.submit_async(TenantId(0), Request::spmm(m2, b.clone())).unwrap()
+            })
+            .collect();
+        let shards_used: std::collections::HashSet<usize> =
+            tickets.iter().map(|t| t.shard()).collect();
+        for t in tickets {
+            t.wait().result.unwrap();
+        }
+        let rep = c.report();
+        assert_eq!(rep.merged.requests, 6);
+        assert_eq!(rep.merged.errors, 0);
+        assert!(
+            rep.spilled > 0 && shards_used.len() == 2,
+            "back-to-back submissions with spill_at=0 must spill: {} spilled, shards {:?}",
+            rep.spilled,
+            shards_used
+        );
+    }
+
+    #[test]
+    fn report_merges_all_shards() {
+        let c = cluster(2, 8, 64); // spill_at > qdepth: never spills
+        let mut rng = SplitMix64::new(903);
+        // two patterns, one homed per shard (keep generating until the
+        // homes differ — a few tries at most)
+        let mut mats = Vec::new();
+        let mut homes = std::collections::HashSet::new();
+        for i in 0usize.. {
+            let m = gen::uniform_random(&mut rng, 64 + i % 7, 64, 0.1);
+            let h = c.home_shard(m.pattern_fingerprint());
+            if homes.insert(h) {
+                mats.push(m);
+            }
+            if homes.len() == 2 {
+                break;
+            }
+        }
+        for m in &mats {
+            let b = crate::sparse::Dense::random(&mut rng, m.cols, 8);
+            // twice per pattern: one cold, one warm — on its home shard
+            for _ in 0..2 {
+                c.submit(TenantId(1), Request::spmm(m.clone(), b.clone())).unwrap();
+            }
+        }
+        let rep = c.report();
+        assert_eq!(rep.merged.requests, 4);
+        assert_eq!(rep.merged.prep_full, 2, "one cold prep per pattern, each on its home");
+        assert_eq!(rep.merged.prep_fast, 2);
+        assert_eq!(rep.per_shard.len(), 2);
+        // each shard saw exactly its own pattern
+        for s in &rep.per_shard {
+            assert_eq!(s.prep_full, 1);
+            assert_eq!(s.prep_fast, 1);
+        }
+        assert_eq!(rep.spilled, 0);
+        assert!(rep.admit_wait.count >= 4);
+        assert_eq!(rep.tenants.len(), 1);
+        assert_eq!(rep.tenants[0].admitted, 4);
+        // Display renders the merged view
+        let text = format!("{rep}");
+        assert!(text.contains("2 shards"), "{text}");
+        assert!(text.contains("tenant t1"), "{text}");
+    }
+
+    #[test]
+    fn micro_batching_disabled_is_an_explicit_rejection() {
+        let c = cluster(2, 8, 4);
+        let mut rng = SplitMix64::new(904);
+        let m = gen::uniform_random(&mut rng, 16, 16, 0.2);
+        let b = crate::sparse::Dense::random(&mut rng, 16, 4);
+        assert_eq!(c.submit_micro(m, b).err(), Some(Rejected::MicroBatchingDisabled));
+    }
+
+    #[test]
+    fn per_shard_micro_batchers_coalesce_shard_locally() {
+        let c = Cluster::new(ClusterConfig {
+            shards: 2,
+            engine: EngineConfig {
+                sched: SchedParams { workers: 1, max_batch: 8 },
+                cache_bytes: 32 << 20,
+                backend: TcBackend::NativeBitmap,
+            },
+            qdepth: 16,
+            spill_at: 16,
+            routing: Routing::Affinity,
+            microbatch: Some(MicroBatchParams {
+                linger: std::time::Duration::from_millis(120),
+                ..MicroBatchParams::default()
+            }),
+        });
+        let mut rng = SplitMix64::new(905);
+        let m = gen::uniform_random(&mut rng, 24, 24, 0.2);
+        let b = crate::sparse::Dense::random(&mut rng, 24, 8);
+        let home = c.home_shard(m.pattern_fingerprint());
+        let tickets: Vec<MicroTicket> =
+            (0..3).map(|_| c.submit_micro(m.clone(), b.clone()).unwrap()).collect();
+        for t in tickets {
+            assert!(t.wait().unwrap().allclose(&m.spmm_dense_ref(&b), 1e-3));
+        }
+        // all three members coalesced on the home shard's engine: one
+        // batched request there, zero on the other shard
+        assert_eq!(c.shard_engine(home).report().requests, 1);
+        assert_eq!(c.shard_engine(1 - home).report().requests, 0);
+    }
+}

@@ -1,0 +1,294 @@
+//! Log-bucketed latency histograms: tail percentiles, not means.
+//!
+//! A mean hides exactly the behavior scale-out serving exists to
+//! control — the tail. [`LatencyHist`] is a fixed 256-bucket,
+//! lock-free histogram over nanosecond samples: values below 16 ns get
+//! exact linear buckets, everything above lands in one of four
+//! sub-buckets per power-of-two octave (≤ ~19% relative bucket width),
+//! which is tight enough to read p50/p95/p99 honestly while keeping
+//! `record` a single relaxed atomic increment on the worker's hot
+//! path. Snapshots ([`HistSnapshot`]) are plain data: they merge
+//! exactly (bucket-wise sums — the merged p99 is the p99 of the merged
+//! sample set, never an average of per-shard p99s), which is what lets
+//! N shard engines fold into one honest `ClusterReport`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets: 16 linear (0..16 ns) + 60 octaves x 4 sub-buckets.
+pub const HIST_BUCKETS: usize = 256;
+
+/// Bucket index for a nanosecond sample: exact below 16, then
+/// `(octave, 2-bit mantissa)` — 4 sub-buckets per power of two.
+#[inline]
+fn bucket_index(nanos: u64) -> usize {
+    if nanos < 16 {
+        nanos as usize
+    } else {
+        let msb = 63 - nanos.leading_zeros() as usize; // >= 4
+        let sub = ((nanos >> (msb - 2)) & 3) as usize;
+        16 + (msb - 4) * 4 + sub
+    }
+}
+
+/// `[lower, upper)` nanosecond bounds of one bucket.
+fn bucket_bounds(b: usize) -> (u64, u64) {
+    if b < 16 {
+        (b as u64, b as u64 + 1)
+    } else {
+        let octave = 4 + (b - 16) / 4;
+        let sub = ((b - 16) % 4) as u64;
+        let width = 1u64 << (octave - 2);
+        let lower = (1u64 << octave) + sub * width;
+        (lower, lower.saturating_add(width))
+    }
+}
+
+/// A lock-free log-bucketed latency histogram (nanosecond samples).
+///
+/// Shared across a worker pool; `record` is one relaxed `fetch_add`.
+/// Read it through [`LatencyHist::snapshot`].
+#[derive(Debug)]
+pub struct LatencyHist {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one nanosecond sample.
+    #[inline]
+    pub fn record(&self, nanos: u64) {
+        self.buckets[bucket_index(nanos)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// Record a seconds sample (the serving layer's `Timing` unit).
+    #[inline]
+    pub fn record_secs(&self, secs: f64) {
+        self.record((secs.max(0.0) * 1e9) as u64);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Plain-data copy for reporting and merging.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum_nanos: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Plain-data histogram snapshot: mergeable, quantile-queryable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSnapshot {
+    /// Per-bucket sample counts (length [`HIST_BUCKETS`]).
+    buckets: Vec<u64>,
+    /// Total samples.
+    pub count: u64,
+    /// Summed sample nanoseconds (for exact means).
+    pub sum_nanos: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self { buckets: vec![0; HIST_BUCKETS], count: 0, sum_nanos: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Fold another snapshot in: bucket-wise sums, so quantiles of the
+    /// merge are quantiles of the union sample set.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_nanos += other.sum_nanos;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// The `q`-quantile in nanoseconds (bucket midpoint), 0 if empty.
+    /// `q` is clamped to [0, 1]; `quantile(0.99)` is the p99.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let (lo, hi) = bucket_bounds(b);
+                return (lo as f64 + hi as f64) / 2.0;
+            }
+        }
+        let (lo, hi) = bucket_bounds(HIST_BUCKETS - 1);
+        (lo as f64 + hi as f64) / 2.0
+    }
+
+    /// The `q`-quantile in milliseconds.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        self.quantile(q) / 1e6
+    }
+
+    /// Exact mean in milliseconds (from the summed samples, not the
+    /// buckets), 0 if empty.
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_nanos as f64 / self.count as f64 / 1e6
+        }
+    }
+
+    /// `p50 | p95 | p99` in milliseconds — the report line.
+    pub fn fmt_ms(&self) -> String {
+        if self.count == 0 {
+            return "-".to_string();
+        }
+        format!(
+            "p50 {:.3} ms | p95 {:.3} ms | p99 {:.3} ms",
+            self.quantile_ms(0.50),
+            self.quantile_ms(0.95),
+            self.quantile_ms(0.99)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Config};
+
+    #[test]
+    fn buckets_are_contiguous_and_ordered() {
+        // every sample lands in a bucket whose bounds contain it, and
+        // bucket lower bounds are strictly increasing
+        let mut prev_hi = 0u64;
+        for b in 0..HIST_BUCKETS {
+            let (lo, hi) = bucket_bounds(b);
+            assert_eq!(lo, prev_hi, "gap before bucket {b}");
+            assert!(hi > lo || hi == u64::MAX, "empty bucket {b}");
+            prev_hi = hi;
+        }
+        for v in [0u64, 1, 15, 16, 17, 63, 64, 1_000, 999_983, 1 << 33, u64::MAX] {
+            let (lo, hi) = bucket_bounds(bucket_index(v));
+            assert!(lo <= v && (v < hi || hi == u64::MAX), "{v} outside [{lo}, {hi})");
+        }
+    }
+
+    #[test]
+    fn quantiles_track_the_sample_set() {
+        let h = LatencyHist::new();
+        // 90 fast samples at ~1us, 10 slow at ~1ms
+        for _ in 0..90 {
+            h.record(1_000);
+        }
+        for _ in 0..10 {
+            h.record(1_000_000);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        let p50 = s.quantile(0.50);
+        let p95 = s.quantile(0.95);
+        let p99 = s.quantile(0.99);
+        assert!((800.0..1_300.0).contains(&p50), "p50 {p50}");
+        assert!((800_000.0..1_300_000.0).contains(&p95), "p95 {p95}");
+        assert!(p99 >= p95, "p99 {p99} < p95 {p95}");
+        // mean is exact: (90*1e3 + 10*1e6) / 100 ns = 0.1009 ms
+        assert!((s.mean_ms() - 0.1009).abs() < 1e-9);
+        assert!(s.fmt_ms().contains("p99"));
+    }
+
+    #[test]
+    fn merge_is_union_not_average() {
+        // two shards with disjoint latency regimes: the merged p99 must
+        // see the slow shard's tail even though each shard's own p99
+        // differs wildly — averaging per-shard p99s would not
+        let fast = LatencyHist::new();
+        let slow = LatencyHist::new();
+        for _ in 0..99 {
+            fast.record(10_000);
+        }
+        for _ in 0..99 {
+            slow.record(10_000_000);
+        }
+        let mut merged = fast.snapshot();
+        merged.merge(&slow.snapshot());
+        assert_eq!(merged.count, 198);
+        let p99 = merged.quantile(0.99);
+        assert!(p99 > 5_000_000.0, "merged p99 {p99} must come from the slow shard");
+        let p50 = merged.quantile(0.50);
+        assert!(p50 < 20_000.0, "merged p50 {p50} must stay in the fast regime");
+    }
+
+    #[test]
+    fn empty_snapshot_is_finite() {
+        let s = HistSnapshot::default();
+        assert_eq!(s.quantile(0.99), 0.0);
+        assert_eq!(s.mean_ms(), 0.0);
+        assert_eq!(s.fmt_ms(), "-");
+        let mut m = s.clone();
+        m.merge(&s);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn bucket_relative_error_is_bounded() {
+        // log-bucket contract: above the linear range, a bucket's width
+        // is at most a quarter of its lower bound, so any quantile read
+        // is within ~12.5% of the true sample (midpoint reporting)
+        check(Config::default().cases(64), "hist bucket width bound", |rng| {
+            let v = rng.next_u64() >> (rng.below(48) as u32);
+            let (lo, hi) = bucket_bounds(bucket_index(v));
+            if v >= 16 && hi != u64::MAX {
+                assert!(hi - lo <= lo / 4 + 1, "bucket [{lo},{hi}) too wide for {v}");
+            }
+        });
+    }
+
+    #[test]
+    fn merged_quantile_equals_pooled_histogram() {
+        // sharding must be invisible to the observer: samples scattered
+        // across N histograms and merged give bit-identical buckets,
+        // count, sum — and therefore identical quantiles — to the same
+        // samples recorded into one histogram
+        check(Config::default().cases(24), "hist merge == pooled", |rng| {
+            let pooled = LatencyHist::new();
+            let parts: Vec<LatencyHist> = (0..3).map(|_| LatencyHist::new()).collect();
+            for _ in 0..rng.range(1, 200) {
+                let v = rng.next_u64() >> (32 + rng.below(20) as u32);
+                pooled.record(v);
+                parts[rng.below(3) as usize].record(v);
+            }
+            let mut merged = HistSnapshot::default();
+            for p in &parts {
+                merged.merge(&p.snapshot());
+            }
+            assert_eq!(merged, pooled.snapshot());
+        });
+    }
+}

@@ -10,8 +10,16 @@
 //! Occupancy is busy worker-seconds over elapsed wall-clock ×
 //! pool size — the serving analog of the paper's §4.4 concern that
 //! neither engine stream sits idle.
+//!
+//! Each phase also feeds a log-bucketed [`LatencyHist`], so a report
+//! carries p50/p95/p99 per phase next to the means — and because
+//! histogram snapshots merge exactly (bucket-wise sums),
+//! [`MetricsReport::merge`] can fold N shard engines into one
+//! cluster-wide report whose tail percentiles are those of the union
+//! sample set, not an average of per-shard percentiles.
 
 use super::cache::CacheStats;
+use super::hist::{HistSnapshot, LatencyHist};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -61,6 +69,13 @@ pub struct ServeMetrics {
     /// Resolved-θ distribution: how many requests were served at each
     /// effective threshold (`usize::MAX` = flexible-only).
     theta_hist: Mutex<BTreeMap<usize, u64>>,
+    /// Per-request queue-wait distribution (same samples the
+    /// `queue_nanos` mean is built from).
+    pub queue_hist: LatencyHist,
+    /// Per-request plan-resolution-time distribution.
+    pub prep_hist: LatencyHist,
+    /// Per-request execution-time distribution.
+    pub exec_hist: LatencyHist,
 }
 
 impl ServeMetrics {
@@ -82,6 +97,9 @@ impl ServeMetrics {
             delta_patched: AtomicU64::new(0),
             delta_rebuilt: AtomicU64::new(0),
             theta_hist: Mutex::new(BTreeMap::new()),
+            queue_hist: LatencyHist::new(),
+            prep_hist: LatencyHist::new(),
+            exec_hist: LatencyHist::new(),
         }
     }
 
@@ -141,6 +159,9 @@ impl ServeMetrics {
             delta_patched: load(&self.delta_patched),
             delta_rebuilt: load(&self.delta_rebuilt),
             theta_dist: self.theta_hist.lock().unwrap().iter().map(|(&t, &c)| (t, c)).collect(),
+            queue_hist: self.queue_hist.snapshot(),
+            prep_hist: self.prep_hist.snapshot(),
+            exec_hist: self.exec_hist.snapshot(),
             cache,
         }
     }
@@ -182,7 +203,107 @@ pub struct MetricsReport {
     /// Resolved-θ distribution: `(θ, requests served at θ)`, ascending
     /// (`usize::MAX` = flexible-only).
     pub theta_dist: Vec<(usize, u64)>,
+    /// Queue-wait distribution (p50/p95/p99 via
+    /// [`HistSnapshot::quantile_ms`]).
+    pub queue_hist: HistSnapshot,
+    /// Plan-resolution-time distribution.
+    pub prep_hist: HistSnapshot,
+    /// Execution-time distribution.
+    pub exec_hist: HistSnapshot,
     pub cache: CacheStats,
+}
+
+impl MetricsReport {
+    /// An all-zero report — the identity element of [`merge`].
+    ///
+    /// [`merge`]: MetricsReport::merge
+    pub fn zero() -> Self {
+        Self {
+            requests: 0,
+            errors: 0,
+            prep_full: 0,
+            prep_fast: 0,
+            batches: 0,
+            mean_queue_ms: 0.0,
+            mean_prep_ms: 0.0,
+            mean_exec_ms: 0.0,
+            occupancy: 0.0,
+            throughput_rps: 0.0,
+            elapsed_secs: 0.0,
+            workers: 0,
+            peak_worker_workspace_bytes: 0,
+            theta_tuned: 0,
+            theta_memo_hits: 0,
+            delta_patched: 0,
+            delta_rebuilt: 0,
+            theta_dist: Vec::new(),
+            queue_hist: HistSnapshot::default(),
+            prep_hist: HistSnapshot::default(),
+            exec_hist: HistSnapshot::default(),
+            cache: CacheStats::default(),
+        }
+    }
+
+    /// Fold per-shard reports into one cluster-wide view. Counters
+    /// sum; histograms merge bucket-wise (union quantiles — never an
+    /// average of per-shard percentiles); derived rates are recomputed
+    /// from the summed counts: means are request-weighted, occupancy
+    /// is weighted by each shard's worker-seconds, throughput is total
+    /// requests over the longest-lived shard's window, and the cache
+    /// hit rate falls out of the summed [`CacheStats`] counts.
+    pub fn merge(reports: &[MetricsReport]) -> Self {
+        let mut out = Self::zero();
+        let mut theta: BTreeMap<usize, u64> = BTreeMap::new();
+        let mut busy_worker_secs = 0.0; // Σ occupancy·workers·elapsed
+        let mut worker_secs = 0.0; // Σ workers·elapsed
+        let mut queue_req_ms = 0.0; // Σ mean·requests, per phase
+        let mut prep_req_ms = 0.0;
+        let mut exec_req_ms = 0.0;
+        for r in reports {
+            out.requests += r.requests;
+            out.errors += r.errors;
+            out.prep_full += r.prep_full;
+            out.prep_fast += r.prep_fast;
+            out.batches += r.batches;
+            out.theta_tuned += r.theta_tuned;
+            out.theta_memo_hits += r.theta_memo_hits;
+            out.delta_patched += r.delta_patched;
+            out.delta_rebuilt += r.delta_rebuilt;
+            out.workers += r.workers;
+            out.elapsed_secs = out.elapsed_secs.max(r.elapsed_secs);
+            out.peak_worker_workspace_bytes =
+                out.peak_worker_workspace_bytes.max(r.peak_worker_workspace_bytes);
+            queue_req_ms += r.mean_queue_ms * r.requests as f64;
+            prep_req_ms += r.mean_prep_ms * r.requests as f64;
+            exec_req_ms += r.mean_exec_ms * r.requests as f64;
+            worker_secs += r.workers as f64 * r.elapsed_secs;
+            busy_worker_secs += r.occupancy * r.workers as f64 * r.elapsed_secs;
+            for &(t, c) in &r.theta_dist {
+                *theta.entry(t).or_insert(0) += c;
+            }
+            out.queue_hist.merge(&r.queue_hist);
+            out.prep_hist.merge(&r.prep_hist);
+            out.exec_hist.merge(&r.exec_hist);
+            out.cache.hits += r.cache.hits;
+            out.cache.misses += r.cache.misses;
+            out.cache.insertions += r.cache.insertions;
+            out.cache.evictions += r.cache.evictions;
+            out.cache.rejected += r.cache.rejected;
+        }
+        if out.requests > 0 {
+            out.mean_queue_ms = queue_req_ms / out.requests as f64;
+            out.mean_prep_ms = prep_req_ms / out.requests as f64;
+            out.mean_exec_ms = exec_req_ms / out.requests as f64;
+        }
+        if worker_secs > 0.0 {
+            out.occupancy = (busy_worker_secs / worker_secs).min(1.0);
+        }
+        if out.elapsed_secs > 0.0 {
+            out.throughput_rps = out.requests as f64 / out.elapsed_secs;
+        }
+        out.theta_dist = theta.into_iter().collect();
+        out
+    }
 }
 
 impl std::fmt::Display for MetricsReport {
@@ -202,6 +323,9 @@ impl std::fmt::Display for MetricsReport {
             "latency per request: queue {:.3} ms | prep {:.3} ms | exec {:.3} ms",
             self.mean_queue_ms, self.mean_prep_ms, self.mean_exec_ms
         )?;
+        writeln!(f, "queue tail: {}", self.queue_hist.fmt_ms())?;
+        writeln!(f, "prep tail: {}", self.prep_hist.fmt_ms())?;
+        writeln!(f, "exec tail: {}", self.exec_hist.fmt_ms())?;
         writeln!(
             f,
             "plan cache: {:.1}% hit rate ({} hits / {} misses), {} insertions, {} evictions",
@@ -290,5 +414,55 @@ mod tests {
         assert_eq!(r.mean_queue_ms, 0.0);
         assert_eq!(r.occupancy, 0.0);
         assert!(r.throughput_rps.is_finite());
+    }
+
+    #[test]
+    fn merge_sums_counters_and_recomputes_rates() {
+        let a = ServeMetrics::new();
+        a.add(&a.requests, 3);
+        a.add(&a.exec_nanos, 3_000_000); // mean 1 ms
+        a.add(&a.prep_full, 1);
+        a.add(&a.prep_fast, 2);
+        a.record_theta(5);
+        a.exec_hist.record(1_000_000);
+        let b = ServeMetrics::new();
+        b.add(&b.requests, 1);
+        b.add(&b.exec_nanos, 5_000_000); // mean 5 ms
+        b.add(&b.prep_full, 1);
+        b.record_theta(5);
+        b.record_theta(usize::MAX);
+        b.exec_hist.record(5_000_000);
+        let ra = a.report(2, CacheStats { hits: 2, misses: 1, ..Default::default() });
+        let rb = b.report(2, CacheStats { hits: 0, misses: 1, ..Default::default() });
+        let m = MetricsReport::merge(&[ra, rb]);
+        assert_eq!(m.requests, 4);
+        assert_eq!((m.prep_full, m.prep_fast), (2, 2));
+        assert_eq!(m.workers, 4);
+        // request-weighted mean: (3·1 + 1·5) / 4 = 2 ms
+        assert!((m.mean_exec_ms - 2.0).abs() < 1e-9, "{}", m.mean_exec_ms);
+        // hit rate recomputed from summed counts: 2 / 4, NOT the
+        // average of the per-shard rates (2/3 and 0)
+        assert!((m.cache.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(m.theta_dist, vec![(5, 2), (usize::MAX, 1)]);
+        // histograms merged: both samples visible in the union
+        assert_eq!(m.exec_hist.count, 2);
+        assert!(m.exec_hist.quantile(0.99) > 4_000_000.0);
+        assert!(m.exec_hist.quantile(0.01) < 2_000_000.0);
+        assert!(m.occupancy >= 0.0 && m.occupancy <= 1.0);
+        assert!(m.throughput_rps.is_finite());
+    }
+
+    #[test]
+    fn merge_of_nothing_is_zero() {
+        let m = MetricsReport::merge(&[]);
+        assert_eq!(m.requests, 0);
+        assert_eq!(m.mean_exec_ms, 0.0);
+        assert_eq!(m.occupancy, 0.0);
+        assert!(m.exec_hist.is_empty());
+        // zero() really is the identity
+        let one = ServeMetrics::new().report(1, CacheStats::default());
+        let merged = MetricsReport::merge(&[MetricsReport::zero(), one.clone()]);
+        assert_eq!(merged.requests, one.requests);
+        assert_eq!(merged.workers, one.workers);
     }
 }

@@ -33,13 +33,33 @@
 //! cached plan window-locally (bit-identical to a cold preprocess of
 //! the mutated matrix) instead of being a cold miss; metrics count
 //! `delta_patched` vs `delta_rebuilt`.
+//!
+//! Above the single engine sits the scale-out layer:
+//!
+//! * [`cluster`] — a [`Cluster`] of N shard engines behind
+//!   fingerprint-affinity rendezvous routing (each shard's plan cache
+//!   and θ-memo stay hot on its slice of patterns) with
+//!   power-of-two-choices spill, plus [`Cluster::report`] merging the
+//!   shards into one [`ClusterReport`].
+//! * [`admission`] — per-shard bounded queues that shed with an
+//!   explicit [`Rejected::QueueFull`] instead of queueing unboundedly,
+//!   and deficit-round-robin weighted fairness over [`TenantId`]s.
+//! * [`hist`] — lock-free log-bucketed latency histograms
+//!   ([`LatencyHist`]) behind the per-phase p50/p95/p99 in every
+//!   report; snapshots merge exactly across shards.
 
+pub mod admission;
 pub mod cache;
+pub mod cluster;
+pub mod hist;
 pub mod metrics;
 pub mod sched;
 pub mod session;
 
+pub use admission::{Admission, Rejected, TenantId, TenantStat};
 pub use cache::{CacheStats, CachedPlan, DeltaApplied, PatternState, PlanCache, PlanKey, SddmmEntry};
+pub use cluster::{Cluster, ClusterConfig, ClusterReport, ClusterTicket, Routing};
+pub use hist::{HistSnapshot, LatencyHist};
 pub use metrics::{MetricsReport, ServeMetrics};
 pub use sched::{
     MicroBatchParams, MicroBatchReport, MicroBatcher, MicroTicket, Occupancy, SchedParams,

@@ -317,6 +317,13 @@ struct BatcherState {
 /// runs auto-θ resolution) and completion are handled off-thread, so
 /// a slow batch never holds other width groups past their linger
 /// deadlines and the engine's worker pool is the concurrency limit.
+///
+/// A batcher is bound to exactly one engine (the `Arc<Engine>` it is
+/// constructed over). Under scale-out this makes ownership per shard:
+/// [`crate::serve::Cluster`] builds one batcher per shard engine, so
+/// members coalesce only with same-shard neighbors and the
+/// supermatrix plans a batcher produces populate its own shard's
+/// cache — never a neighbor's.
 pub struct MicroBatcher {
     engine: Arc<Engine>,
     params: MicroBatchParams,

@@ -57,7 +57,10 @@ pub enum Payload {
 }
 
 impl Payload {
-    fn fingerprint(&self) -> PatternFingerprint {
+    /// The pattern fingerprint this payload resolves to — computed for
+    /// a matrix, carried for a handle. The cluster routes on this (a
+    /// request's home shard is a pure function of it).
+    pub fn fingerprint(&self) -> PatternFingerprint {
         match self {
             Payload::Matrix(m) => m.pattern_fingerprint(),
             Payload::Handle { fp, .. } => *fp,
@@ -690,6 +693,9 @@ fn process_job(
     metrics.add(&metrics.queue_nanos, (timing.queue_secs * 1e9) as u64);
     metrics.add(&metrics.prep_nanos, (timing.prep_secs * 1e9) as u64);
     metrics.add(&metrics.exec_nanos, (timing.exec_secs * 1e9) as u64);
+    metrics.queue_hist.record_secs(timing.queue_secs);
+    metrics.prep_hist.record_secs(timing.prep_secs);
+    metrics.exec_hist.record_secs(timing.exec_secs);
     slot.put(Response { id, result, cache_hit, timing });
 }
 

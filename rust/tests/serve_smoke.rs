@@ -2,12 +2,37 @@
 //! pattern (cold then warm, asserted via prep metrics), then an edge
 //! delta submitted through [`Engine::submit_delta`] and served warm —
 //! the evolving-graph path must be a patch, never a silent rebuild.
+//! The scale-out half does the same through a sharded [`Cluster`]:
+//! affinity routing must pin a pattern's warm hits to one home shard,
+//! full admission queues must shed with an explicit
+//! [`Rejected::QueueFull`] instead of blocking, and routing must stay
+//! deterministic and shard-stable under `apply_delta`
+//! re-fingerprinting.
 
 use libra::delta::EdgeDelta;
 use libra::exec::TcBackend;
-use libra::serve::{DeltaRequest, Engine, EngineConfig, Request, SchedParams};
+use libra::serve::{
+    Cluster, ClusterConfig, DeltaRequest, Engine, EngineConfig, Rejected, Request, Routing,
+    SchedParams, TenantId,
+};
 use libra::sparse::{gen, Dense};
+use libra::util::propcheck::{check, Config};
 use libra::util::SplitMix64;
+
+fn mk_cluster(shards: usize, qdepth: usize, spill_at: usize) -> Cluster {
+    Cluster::new(ClusterConfig {
+        shards,
+        engine: EngineConfig {
+            sched: SchedParams { workers: 1, max_batch: 8 },
+            cache_bytes: 64 << 20,
+            backend: TcBackend::NativeBitmap,
+        },
+        qdepth,
+        spill_at,
+        routing: Routing::Affinity,
+        microbatch: None,
+    })
+}
 
 #[test]
 fn serve_smoke_warm_sessions_then_delta() {
@@ -66,4 +91,118 @@ fn serve_smoke_warm_sessions_then_delta() {
     assert!(out.allclose(&new_m.spmm_dense_ref(&b), 1e-3));
     let rep = eng.report();
     assert_eq!(rep.prep_full, 1, "the delta must not trigger a cold prep");
+}
+
+#[test]
+fn cluster_smoke_warm_hits_stay_on_the_home_shard() {
+    // spill_at > qdepth: sequential blocking submits never spill, so
+    // every request for one pattern must land on its home shard
+    let cluster = mk_cluster(4, 16, 64);
+    let mut rng = SplitMix64::new(2025);
+    let m = gen::power_law(&mut rng, 256, 8.0, 2.0);
+    let b = Dense::random(&mut rng, 256, 16);
+    let home = cluster.home_shard(m.pattern_fingerprint());
+
+    // cold: exactly one full prep, on the home shard
+    let cold = cluster.submit(TenantId(0), Request::spmm(m.clone(), b.clone())).unwrap();
+    assert!(!cold.cache_hit);
+    assert!(cold.result.unwrap().into_dense().unwrap().allclose(&m.spmm_dense_ref(&b), 1e-3));
+    assert_eq!(cluster.shard_engine(home).report().prep_full, 1, "cold prep on home shard");
+
+    // 4 repeats with fresh values: all warm, all on the SAME shard
+    for session in 0..4 {
+        let mut m2 = m.clone();
+        for v in m2.values.iter_mut() {
+            *v = rng.f32_range(-2.0, 2.0);
+        }
+        let t = cluster.submit_async(TenantId(0), Request::spmm(m2, b.clone())).unwrap();
+        assert_eq!(t.shard(), home, "repeat {session} must route to the home shard");
+        assert!(t.wait().cache_hit, "repeat {session} must hit the home shard's cache");
+    }
+    let home_rep = cluster.shard_engine(home).report();
+    assert_eq!(home_rep.prep_full, 1);
+    assert_eq!(home_rep.prep_fast, 4, "every repeat warm on the home shard");
+    for i in (0..4).filter(|&i| i != home) {
+        assert_eq!(cluster.shard_engine(i).report().requests, 0, "shard {i} must stay idle");
+    }
+    let rep = cluster.report();
+    assert_eq!(rep.merged.requests, 5);
+    assert_eq!(rep.spilled, 0);
+    assert!((rep.warm_hit_rate() - 0.8).abs() < 1e-9);
+}
+
+#[test]
+fn cluster_full_queue_sheds_instead_of_blocking() {
+    // 1 shard, 1 worker (= 1 runner), qdepth 2, no spill target: once
+    // the runner is busy and both queue slots are held, the next offer
+    // must come back QueueFull immediately — never block the submitter
+    let cluster = mk_cluster(1, 2, 64);
+    let mut rng = SplitMix64::new(2026);
+    let m = gen::power_law(&mut rng, 512, 12.0, 2.0);
+    let b = Dense::random(&mut rng, 512, 64);
+    let fresh = |rng: &mut SplitMix64| {
+        let mut m2 = m.clone();
+        for v in m2.values.iter_mut() {
+            *v = rng.f32_range(-1.0, 1.0);
+        }
+        m2
+    };
+
+    let t1 = cluster.submit_async(TenantId(0), Request::spmm(fresh(&mut rng), b.clone())).unwrap();
+    // wait for the runner to pick the first request up (it then blocks
+    // in the engine for the whole prep+exec, i.e. milliseconds)
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while cluster.pending(0) > 0 {
+        assert!(std::time::Instant::now() < deadline, "runner never took the first request");
+        std::thread::yield_now();
+    }
+    let t2 = cluster.submit_async(TenantId(0), Request::spmm(fresh(&mut rng), b.clone())).unwrap();
+    let t3 = cluster.submit_async(TenantId(0), Request::spmm(fresh(&mut rng), b.clone())).unwrap();
+    // both queue slots held -> the fourth submission is shed, with the
+    // shard and bound named in the rejection
+    let err = cluster
+        .submit_async(TenantId(0), Request::spmm(fresh(&mut rng), b.clone()))
+        .err()
+        .expect("offer past qdepth must be rejected");
+    assert_eq!(err, Rejected::QueueFull { shard: 0, depth: 2, limit: 2 });
+    for t in [t1, t2, t3] {
+        t.wait().result.unwrap();
+    }
+    let rep = cluster.report();
+    assert_eq!(rep.merged.requests, 3, "shed requests never reach the engine");
+    assert_eq!(rep.rejected, 1);
+    assert_eq!(rep.tenants[0].admitted, 3);
+    assert_eq!(rep.tenants[0].rejected, 1);
+}
+
+#[test]
+fn routing_is_deterministic_and_shard_stable_under_deltas() {
+    check(Config::default().cases(6), "cluster routing stability", |rng| {
+        let c1 = mk_cluster(4, 16, 64);
+        let c2 = mk_cluster(4, 16, 64);
+        let m = gen::power_law(rng, 96, 6.0, 2.0);
+        let b = Dense::random(rng, 96, 8);
+        let fp = m.pattern_fingerprint();
+        // determinism: independent cluster instances agree on the home
+        let home = c1.home_shard(fp);
+        assert_eq!(home, c2.home_shard(fp), "instances must agree on first sight");
+        assert_eq!(home, c1.home_shard(fp), "re-asking must not move the pattern");
+
+        // serve it (caches plan + pattern state on the home shard),
+        // then mutate the structure through the cluster delta path
+        c1.submit(TenantId(0), Request::spmm(m.clone(), b.clone())).unwrap().result.unwrap();
+        let row = rng.range(0, m.rows);
+        let ins = (0..m.cols).find(|&c| m.get(row, c).is_none()).unwrap();
+        let mut delta = EdgeDelta::new();
+        delta.upsert(row, ins, 0.5);
+        let out = c1.submit_delta(DeltaRequest::spmm(fp, delta, 8)).unwrap();
+        assert_ne!(out.new_fp, fp, "the insertion must re-fingerprint the pattern");
+        // shard stability: the patched fingerprint inherits the home,
+        // even when raw HRW would have placed it elsewhere
+        assert_eq!(
+            c1.home_shard(out.new_fp),
+            home,
+            "delta re-fingerprinting must not move the pattern off its home shard"
+        );
+    });
 }

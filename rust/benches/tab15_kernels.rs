@@ -1,0 +1,172 @@
+//! Table 15 (kernels): scalar vs 8-wide lane kernels vs reduced
+//! precision, swept across feature widths.
+//!
+//! The kernel layer (`exec::kernels`) gives every hot stream three
+//! independent levers: explicit 8-wide lane kernels, cache-blocked
+//! column panels, and bf16/f16 value storage with f32 accumulation.
+//! This bench measures what each buys on real hybrid plans: for every
+//! (matrix, N) cell a plan is resolved once through the Planner, then
+//! executed exec-only under four kernel modes — scalar (lanes off,
+//! panels off), lane (the default 8-wide + panel path), and lane with
+//! bf16 / f16 quantized values.
+//!
+//! Timing discipline follows tab12: inline single-stream execution,
+//! min-of-reps per cell, aggregate = total corpus time. **Gate**:
+//! CI's bench-smoke job fails (nonzero exit) if the lane kernels lose
+//! to the scalar path on aggregate SpMM time over the N >= 32 cells
+//! (2% tolerance for timer noise); narrow widths are reported but not
+//! gated — below one lane the kernel degenerates to the scalar tail
+//! by construction. SDDMM is reported ungated (its dot-kernel win is
+//! width-bound on this substrate).
+
+use libra::balance::BalanceParams;
+use libra::bench::Table;
+use libra::dist::{DistParams, Op};
+use libra::exec::sddmm::SddmmExecutor;
+use libra::exec::{KernelParams, SpmmExecutor, TcBackend, Threading};
+use libra::format::Precision;
+use libra::planner::{Planner, ThetaPolicy};
+use libra::sparse::{gen, Csr, Dense};
+use libra::util::SplitMix64;
+
+/// Mixed corpus: skewed, clustered, banded, and uniform patterns so
+/// both the structured and flexible streams carry real work.
+fn corpus(rng: &mut SplitMix64, rows: usize) -> Vec<(String, Csr)> {
+    vec![
+        ("powerlaw-2.2".into(), gen::power_law(rng, rows, 10.0, 2.2)),
+        ("clustered-0.4".into(), gen::column_clustered(rng, rows, rows, rows * 12, 0.4, 6)),
+        ("banded".into(), gen::banded(rng, rows, 5, 0.8)),
+        ("uniform-mid".into(), gen::uniform_random(rng, rows, rows, 4.0 / rows as f64)),
+    ]
+}
+
+/// Exec-only min-of-reps SpMM time under one kernel mode.
+fn time_spmm(
+    m: &Csr,
+    params: &DistParams,
+    b: &Dense,
+    reps: usize,
+    setup: impl Fn(&mut SpmmExecutor),
+) -> f64 {
+    let mut e = SpmmExecutor::new(m, params, &BalanceParams::default(), TcBackend::NativeBitmap);
+    e.threading = Threading::Inline;
+    e.flex_threads = 1;
+    setup(&mut e);
+    let mut out = Dense::zeros(m.rows, b.cols);
+    e.execute_into(b, &mut out).unwrap(); // warm
+    let mut best = f64::MAX;
+    for _ in 0..reps {
+        out.data.fill(0.0);
+        let t = std::time::Instant::now();
+        e.execute_into(b, &mut out).unwrap();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Exec-only min-of-reps SDDMM time under one kernel mode.
+fn time_sddmm(
+    m: &Csr,
+    params: &DistParams,
+    a: &Dense,
+    b: &Dense,
+    reps: usize,
+    setup: impl Fn(&mut SddmmExecutor),
+) -> f64 {
+    let mut e = SddmmExecutor::new(m, params, TcBackend::NativeBitmap);
+    e.threading = Threading::Inline;
+    e.flex_threads = 1;
+    setup(&mut e);
+    e.execute(a, b).unwrap(); // warm
+    let mut best = f64::MAX;
+    for _ in 0..reps {
+        let t = std::time::Instant::now();
+        std::hint::black_box(e.execute(a, b).unwrap());
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    let (reps, rows, widths): (usize, usize, &[usize]) = match libra::bench::scale() {
+        "smoke" => (5, 384, &[8, 32]),
+        "full" => (10, 2048, &[7, 8, 32, 128, 250]),
+        _ => (6, 1024, &[7, 32, 128]),
+    };
+    let mut rng = SplitMix64::new(15);
+    let mats = corpus(&mut rng, rows);
+    println!(
+        "kernels: {} matrices (~{rows} rows), N sweep {widths:?}, min-of-{reps} inline timing",
+        mats.len()
+    );
+
+    // --- SpMM ---
+    let mut t = Table::new(
+        "Table 15a: SpMM exec time by kernel mode (scalar vs lane vs bf16/f16 values)",
+        &["matrix", "N", "scalar ms", "lane ms", "lane x", "bf16 ms", "f16 ms"],
+    );
+    let (mut scalar_total, mut lane_total) = (0.0f64, 0.0f64);
+    for (name, m) in &mats {
+        for &n in widths {
+            let params = Planner::new(ThetaPolicy::Auto).resolve(m, Op::Spmm, n);
+            let b = Dense::random(&mut rng, m.cols, n);
+            let t_sc = time_spmm(m, &params, &b, reps, |e| e.kernel = KernelParams::scalar());
+            let t_lane = time_spmm(m, &params, &b, reps, |_| {});
+            let t_bf16 = time_spmm(m, &params, &b, reps, |e| e.set_precision(Precision::Bf16));
+            let t_f16 = time_spmm(m, &params, &b, reps, |e| e.set_precision(Precision::F16));
+            if n >= 32 {
+                scalar_total += t_sc;
+                lane_total += t_lane;
+            }
+            t.add(vec![
+                name.clone(),
+                n.to_string(),
+                format!("{:.3}", t_sc * 1e3),
+                format!("{:.3}", t_lane * 1e3),
+                format!("{:.2}x", t_sc / t_lane.max(1e-12)),
+                format!("{:.3}", t_bf16 * 1e3),
+                format!("{:.3}", t_f16 * 1e3),
+            ]);
+        }
+    }
+    t.print();
+
+    // --- SDDMM (reported, not gated — see module docs) ---
+    let k = 32;
+    let mut t2 = Table::new(
+        "Table 15b: SDDMM exec time by kernel mode (K=32)",
+        &["matrix", "scalar ms", "lane ms", "lane x", "bf16 ms"],
+    );
+    for (name, m) in &mats {
+        let params = Planner::new(ThetaPolicy::Auto).resolve(m, Op::Sddmm, k);
+        let a = Dense::random(&mut rng, m.rows, k);
+        let b = Dense::random(&mut rng, m.cols, k);
+        let t_sc = time_sddmm(m, &params, &a, &b, reps, |e| e.kernel = KernelParams::scalar());
+        let t_lane = time_sddmm(m, &params, &a, &b, reps, |_| {});
+        let t_bf16 = time_sddmm(m, &params, &a, &b, reps, |e| e.set_precision(Precision::Bf16));
+        t2.add(vec![
+            name.clone(),
+            format!("{:.3}", t_sc * 1e3),
+            format!("{:.3}", t_lane * 1e3),
+            format!("{:.2}x", t_sc / t_lane.max(1e-12)),
+            format!("{:.3}", t_bf16 * 1e3),
+        ]);
+    }
+    t2.print();
+
+    // The gate: the lane kernels must not lose to the scalar path on
+    // aggregate SpMM time over the wide cells (2% tolerance).
+    let ok = lane_total <= scalar_total * 1.02;
+    println!(
+        "\nlane kernels {} the scalar aggregate SpMM time at N >= 32 \
+         (lane {:.3} ms vs scalar {:.3} ms, gate: lane <= scalar x 1.02)",
+        if ok { "met or beat" } else { "did NOT meet" },
+        lane_total * 1e3,
+        scalar_total * 1e3
+    );
+    if !ok {
+        // a red exit fails CI's bench-smoke job instead of letting a
+        // kernel-layer regression land silently
+        std::process::exit(1);
+    }
+}

@@ -78,6 +78,78 @@ impl HardwareProfile {
     }
 }
 
+/// Kernel-layer execution mode priced into the model's candidate set:
+/// the lane width of the vectorized inner kernels, the cache-blocked
+/// column panel size, and the stored sparse-value width. Deltas are
+/// relative to the scalar f32 baseline the [`HardwareProfile`] peaks
+/// describe: lanes raise the effective compute rate (sub-linearly —
+/// the axpy kernels are partly memory-bound, so the gain is modeled as
+/// `sqrt(lane_width)`), panels cut dense re-fetch traffic for operands
+/// wider than one panel, and 16-bit values shave sparse-stream bytes.
+///
+/// [`tune_threshold`] prices the executors' default mode (lanes +
+/// panels, f32); the `_with` variants take an explicit profile so the
+/// [`crate::planner::Planner`] can tune for any mode — including the
+/// reduced-precision paths — before committing a plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelProfile {
+    /// SIMD lane width of the inner kernels (1 = scalar)
+    pub lane_width: usize,
+    /// column-panel size of the cache-blocked traversal (0 = full width)
+    pub panel: usize,
+    /// bytes per stored sparse value (4 = f32, 2 = bf16 / f16)
+    pub value_bytes: usize,
+}
+
+impl Default for KernelProfile {
+    /// The executors' default mode: 8 lanes, 128-column panels, f32.
+    fn default() -> Self {
+        Self { lane_width: 8, panel: 128, value_bytes: 4 }
+    }
+}
+
+impl KernelProfile {
+    /// The scalar f32 baseline. Pricing with this profile reproduces
+    /// the plain prediction functions exactly.
+    pub fn scalar() -> Self {
+        Self { lane_width: 1, panel: 0, value_bytes: 4 }
+    }
+
+    /// The profile describing an executor-level
+    /// [`crate::exec::KernelParams`] mode.
+    pub fn from_params(kp: &crate::exec::KernelParams) -> Self {
+        Self {
+            lane_width: if kp.lanes { crate::exec::kernels::LANE } else { 1 },
+            panel: kp.panel,
+            value_bytes: kp.precision.value_bytes(),
+        }
+    }
+
+    /// Effective compute-rate multiplier from lane vectorization.
+    fn compute_gain(&self) -> f64 {
+        if self.lane_width > 1 {
+            (self.lane_width as f64).sqrt()
+        } else {
+            1.0
+        }
+    }
+
+    /// Dense-traffic multiplier from cache-blocked panels at width `n`.
+    fn dense_factor(&self, n: usize) -> f64 {
+        if self.panel > 0 && n > self.panel {
+            0.75
+        } else {
+            1.0
+        }
+    }
+
+    /// Extra sparse-value bytes per nonzero relative to f32 (negative
+    /// on the 16-bit value path).
+    fn value_delta(&self) -> f64 {
+        self.value_bytes as f64 - 4.0
+    }
+}
+
 /// Data-access-cost ratio for an SpMM vector (paper Eq. 2):
 /// flexible cost `NNZ·n` over structured cost `k·n`.
 pub fn r_spmm(nnz: usize) -> f64 {
@@ -97,25 +169,44 @@ pub fn r_sddmm(nnz: usize) -> f64 {
 /// flexible engine once per nonzero. Compute term: the structured
 /// engine always issues the full padded tile.
 pub fn predict_unit_times(hw: &HardwareProfile, op: Op, nnz: usize, n: usize) -> (f64, f64) {
+    predict_unit_times_with(hw, op, nnz, n, &KernelProfile::scalar())
+}
+
+/// [`predict_unit_times`] under an explicit kernel-layer mode. With
+/// [`KernelProfile::scalar`] this reproduces the plain prediction
+/// bit-for-bit; other profiles scale the compute and memory terms per
+/// the profile's deltas.
+pub fn predict_unit_times_with(
+    hw: &HardwareProfile,
+    op: Op,
+    nnz: usize,
+    n: usize,
+    kp: &KernelProfile,
+) -> (f64, f64) {
+    let gain = kp.compute_gain();
+    let dense = kp.dense_factor(n);
+    let dv = kp.value_delta();
     match op {
         Op::Spmm => {
             // per-vector: structured issues 8·n MACs (a full vector
             // lane) and loads one dense row of n floats; flexible
             // issues nnz·n MACs and loads nnz rows.
-            let structured = (WINDOW * n) as f64 / hw.structured_peak
-                + hw.structured_mem_factor * (n * 4) as f64 / hw.mem_bw;
-            let flexible =
-                (nnz * n) as f64 / hw.flexible_peak + (nnz * n * 4) as f64 / hw.mem_bw;
+            let s_bytes = dense * (n * 4) as f64 + nnz as f64 * dv;
+            let f_bytes = dense * (nnz * n * 4) as f64 + nnz as f64 * dv;
+            let structured = (WINDOW * n) as f64 / (hw.structured_peak * gain)
+                + hw.structured_mem_factor * s_bytes / hw.mem_bw;
+            let flexible = (nnz * n) as f64 / (hw.flexible_peak * gain) + f_bytes / hw.mem_bw;
             (structured, flexible)
         }
         Op::Sddmm => {
             // per-block: structured issues 8·k·16 MACs, loads (8+16)·k
             // floats; flexible issues nnz·k MACs, loads 2·nnz·k floats.
             let k = n; // feature dim
-            let structured = (WINDOW * k * SDDMM_BLOCK_N) as f64 / hw.structured_peak
-                + hw.structured_mem_factor * ((WINDOW + SDDMM_BLOCK_N) * k * 4) as f64 / hw.mem_bw;
-            let flexible =
-                (nnz * k) as f64 / hw.flexible_peak + (2 * nnz * k * 4) as f64 / hw.mem_bw;
+            let s_bytes = dense * ((WINDOW + SDDMM_BLOCK_N) * k * 4) as f64 + nnz as f64 * dv;
+            let f_bytes = dense * (2 * nnz * k * 4) as f64 + nnz as f64 * dv;
+            let structured = (WINDOW * k * SDDMM_BLOCK_N) as f64 / (hw.structured_peak * gain)
+                + hw.structured_mem_factor * s_bytes / hw.mem_bw;
+            let flexible = (nnz * k) as f64 / (hw.flexible_peak * gain) + f_bytes / hw.mem_bw;
             (structured, flexible)
         }
     }
@@ -146,6 +237,18 @@ pub fn predict_hybrid_time(
     n: usize,
     theta: usize,
 ) -> f64 {
+    predict_hybrid_time_with(hw, op, hist, n, theta, &KernelProfile::scalar())
+}
+
+/// [`predict_hybrid_time`] under an explicit kernel-layer mode.
+pub fn predict_hybrid_time_with(
+    hw: &HardwareProfile,
+    op: Op,
+    hist: &[usize],
+    n: usize,
+    theta: usize,
+    kp: &KernelProfile,
+) -> f64 {
     let mut structured = 0.0;
     let mut flexible = 0.0;
     let mut structured_units = 0usize;
@@ -153,7 +256,7 @@ pub fn predict_hybrid_time(
         if count == 0 {
             continue;
         }
-        let (s, f) = predict_unit_times(hw, op, nnz, n);
+        let (s, f) = predict_unit_times_with(hw, op, nnz, n, kp);
         if nnz >= theta {
             structured += s * count as f64;
             structured_units += count;
@@ -187,10 +290,28 @@ pub fn max_unit_nnz(op: Op) -> usize {
 /// save). Callers that build [`crate::dist::DistParams`] from the
 /// result should normalize a sentinel to `DistParams::flex_only()`
 /// ([`crate::planner::Planner`] does).
+///
+/// Prices the executors' default kernel mode
+/// ([`KernelProfile::default`]); use [`tune_threshold_with`] to tune
+/// for another mode.
 pub fn tune_threshold(hw: &HardwareProfile, op: Op, hist: &[usize], n: usize) -> usize {
+    tune_threshold_with(hw, op, hist, n, &KernelProfile::default())
+}
+
+/// [`tune_threshold`] under an explicit kernel-layer mode: every θ
+/// candidate is priced with the mode's lane / panel / value-width
+/// deltas, so a planner tuning for (say) the bf16 lane path picks the
+/// θ optimal for *that* execution mode rather than the scalar one.
+pub fn tune_threshold_with(
+    hw: &HardwareProfile,
+    op: Op,
+    hist: &[usize],
+    n: usize,
+    kp: &KernelProfile,
+) -> usize {
     let mut best = (f64::MAX, 1usize);
     for theta in 1..=max_unit_nnz(op) + 1 {
-        let t = predict_hybrid_time(hw, op, hist, n, theta);
+        let t = predict_hybrid_time_with(hw, op, hist, n, theta, kp);
         if t < best.0 {
             best = (t, theta);
         }
@@ -412,6 +533,80 @@ mod tests {
                 ranged[0].iter().zip(&ranged[1]).map(|(&a, &b)| a + b).collect();
             assert_eq!(full, merged);
         }
+    }
+
+    #[test]
+    fn scalar_profile_reproduces_plain_predictions() {
+        let kp = KernelProfile::scalar();
+        for hw in [HardwareProfile::h100(), HardwareProfile::cpu_substrate()] {
+            for op in [Op::Spmm, Op::Sddmm] {
+                for nnz in [1, 3, 8, 60] {
+                    let plain = predict_unit_times(&hw, op, nnz, 128);
+                    assert_eq!(plain, predict_unit_times_with(&hw, op, nnz, 128, &kp));
+                }
+                let mut hist = vec![0usize; max_unit_nnz(op) + 1];
+                hist[1] = 40;
+                hist[max_unit_nnz(op)] = 9;
+                for theta in [1, 3, max_unit_nnz(op) + 1] {
+                    let plain = predict_hybrid_time(&hw, op, &hist, 64, theta);
+                    let with = predict_hybrid_time_with(&hw, op, &hist, 64, theta, &kp);
+                    assert_eq!(plain, with);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_profile_deltas_point_the_right_way() {
+        let hw = HardwareProfile::cpu_substrate();
+        let scalar = KernelProfile::scalar();
+        let lane = KernelProfile::default();
+        // lanes never slow a unit down; they strictly help compute
+        let (s0, f0) = predict_unit_times_with(&hw, Op::Spmm, 6, 64, &scalar);
+        let (s1, f1) = predict_unit_times_with(&hw, Op::Spmm, 6, 64, &lane);
+        assert!(s1 < s0 && f1 < f0, "lane profile must cut compute time");
+        // panels only matter beyond one panel width
+        let no_panel = KernelProfile { panel: 0, ..lane };
+        let narrow = predict_unit_times_with(&hw, Op::Spmm, 6, 64, &lane);
+        assert_eq!(narrow, predict_unit_times_with(&hw, Op::Spmm, 6, 64, &no_panel));
+        let wide = predict_unit_times_with(&hw, Op::Spmm, 6, 256, &lane);
+        let wide_no_panel = predict_unit_times_with(&hw, Op::Spmm, 6, 256, &no_panel);
+        assert!(wide.1 < wide_no_panel.1, "panel must cut wide dense traffic");
+        // 16-bit values shave sparse bytes on both engines
+        let half = KernelProfile { value_bytes: 2, ..lane };
+        let (sh, fh) = predict_unit_times_with(&hw, Op::Spmm, 6, 64, &half);
+        assert!(sh < s1 && fh < f1, "16-bit values must cut memory time");
+    }
+
+    #[test]
+    fn tune_threshold_with_prices_the_mode() {
+        // the tuner must consume the profile: an artificial profile
+        // with a huge lane gain makes compute free, shifting the
+        // decision to pure memory terms — and the plain tuner must
+        // equal the default-profile tuner by construction
+        let hw = HardwareProfile::cpu_substrate();
+        let mut rng = SplitMix64::new(144);
+        let m = gen::power_law(&mut rng, 300, 6.0, 2.0);
+        let hist = vector_histogram(&m);
+        let plain = tune_threshold(&hw, Op::Spmm, &hist, 128);
+        let with_default =
+            tune_threshold_with(&hw, Op::Spmm, &hist, 128, &KernelProfile::default());
+        assert_eq!(plain, with_default);
+        let half = KernelProfile { value_bytes: 2, ..Default::default() };
+        for kp in [KernelProfile::scalar(), half] {
+            let t = tune_threshold_with(&hw, Op::Spmm, &hist, 128, &kp);
+            assert!((1..=max_unit_nnz(Op::Spmm) + 1).contains(&t));
+        }
+    }
+
+    #[test]
+    fn from_params_maps_executor_modes() {
+        use crate::exec::KernelParams;
+        use crate::format::Precision;
+        assert_eq!(KernelProfile::from_params(&KernelParams::default()), KernelProfile::default());
+        assert_eq!(KernelProfile::from_params(&KernelParams::scalar()), KernelProfile::scalar());
+        let bf16 = KernelParams::with_precision(Precision::Bf16);
+        assert_eq!(KernelProfile::from_params(&bf16).value_bytes, 2);
     }
 
     #[test]

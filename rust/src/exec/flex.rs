@@ -6,8 +6,15 @@
 //! single merge pass into the shared output (the paper's
 //! register-accumulate-then-atomicAdd pattern); short tiles merge
 //! directly (the paper's bypass-shared-memory path).
+//!
+//! The inner loops route through [`super::kernels`]: 8-wide lane
+//! kernels over the feature dimension (bit-identical to the scalar
+//! loops), cache-blocked column panels for long tiles, and the
+//! lane-partial SDDMM dot. A [`KernelParams`] selects the mode; the
+//! `scalar()` mode reproduces the pre-kernel-layer loops exactly.
 
 use super::counters::Counters;
+use super::kernels::{self, KernelParams};
 use super::output::SharedOut;
 use crate::balance::FlexTile;
 use crate::sparse::Dense;
@@ -27,6 +34,7 @@ pub fn spmm_tile(
     out: &SharedOut,
     scratch: &mut [f32],
     counters: &Counters,
+    kp: &KernelParams,
 ) {
     let n = b.cols;
     let (s, e) = (tile.elem_start as usize, tile.elem_end as usize);
@@ -36,46 +44,47 @@ pub fn spmm_tile(
     }
     let row_off = tile.row as usize * n;
     if len == 1 {
-        // short-tile fast path: no scratch, single axpy
-        let c = cols[s] as usize;
+        // short-tile fast path: stage `v * B[col]` into scratch, then
+        // merge with one batched add_slice (atomic or plain per the
+        // balancer's flag) instead of n separate element adds
         let v = vals[s];
-        let brow = b.row(c);
-        if tile.atomic {
-            for j in 0..n {
-                out.add_atomic(row_off + j, v * brow[j]);
-            }
+        let brow = b.row(cols[s] as usize);
+        let acc = &mut scratch[..n];
+        if kp.lanes {
+            kernels::scale_into(acc, v, brow);
         } else {
-            unsafe {
-                for j in 0..n {
-                    out.add_plain(row_off + j, v * brow[j]);
-                }
+            for j in 0..n {
+                acc[j] = v * brow[j];
             }
         }
+        out.add_slice(row_off, acc, tile.atomic);
     } else {
         let acc = &mut scratch[..n];
         acc.fill(0.0);
-        // 4-wide unroll over the nonzeros: keeps 4 dense rows in
-        // flight per pass (the vector-memory-op pattern)
-        let mut i = s;
-        while i + 4 <= e {
-            let b0 = b.row(cols[i] as usize);
-            let b1 = b.row(cols[i + 1] as usize);
-            let b2 = b.row(cols[i + 2] as usize);
-            let b3 = b.row(cols[i + 3] as usize);
-            let (v0, v1, v2, v3) = (vals[i], vals[i + 1], vals[i + 2], vals[i + 3]);
-            for j in 0..n {
-                acc[j] += v0 * b0[j] + v1 * b1[j] + v2 * b2[j] + v3 * b3[j];
+        // cache-blocked traversal: re-walk the tile's nonzeros once
+        // per column panel so the accumulator panel plus the four
+        // in-flight dense rows stay cache-resident. Per output
+        // element the accumulation order is unchanged — panels are
+        // bit-identical to the full-width walk.
+        for (p0, p1) in kp.panels(n) {
+            let accp = &mut acc[p0..p1];
+            // 4-wide unroll over the nonzeros: keeps 4 dense rows in
+            // flight per pass (the vector-memory-op pattern)
+            let mut i = s;
+            while i + 4 <= e {
+                let b0 = &b.row(cols[i] as usize)[p0..p1];
+                let b1 = &b.row(cols[i + 1] as usize)[p0..p1];
+                let b2 = &b.row(cols[i + 2] as usize)[p0..p1];
+                let b3 = &b.row(cols[i + 3] as usize)[p0..p1];
+                let v = [vals[i], vals[i + 1], vals[i + 2], vals[i + 3]];
+                kernels::axpy4_mode(kp.lanes, accp, v, b0, b1, b2, b3);
+                i += 4;
             }
-            i += 4;
-        }
-        while i < e {
-            let c = cols[i] as usize;
-            let v = vals[i];
-            let brow = b.row(c);
-            for j in 0..n {
-                acc[j] += v * brow[j];
+            while i < e {
+                let brow = &b.row(cols[i] as usize)[p0..p1];
+                kernels::axpy_mode(kp.lanes, accp, vals[i], brow);
+                i += 1;
             }
-            i += 1;
         }
         out.add_slice(row_off, acc, tile.atomic);
     }
@@ -89,7 +98,9 @@ pub fn spmm_tile(
 /// `out[pos_i] = v_i * dot(A[row_i], B[col_i])`.
 ///
 /// Writes are per-element to distinct positions — no atomics needed
-/// (paper §4.3: SDDMM has no write conflicts).
+/// (paper §4.3: SDDMM has no write conflicts). The lane dot kernel is
+/// a pure function of its operand rows, so results stay schedule-
+/// invariant in every mode.
 #[inline]
 pub fn sddmm_range(
     range: std::ops::Range<usize>,
@@ -101,15 +112,13 @@ pub fn sddmm_range(
     b: &Dense,
     out_values: &SharedOut,
     counters: &Counters,
+    kp: &KernelParams,
 ) {
     let k = a.cols;
     for i in range.clone() {
         let ar = a.row(rows[i] as usize);
         let br = b.row(cols[i] as usize);
-        let mut dot = 0f32;
-        for kk in 0..k {
-            dot += ar[kk] * br[kk];
-        }
+        let dot = kernels::dot_mode(kp.lanes, ar, br);
         // distinct positions: plain store is race-free
         unsafe {
             out_values.add_plain(out_idx[i] as usize, vals[i] * dot);
@@ -135,6 +144,7 @@ mod tests {
         let vals = vec![2.0f32, -1.0, 0.5, 3.0];
         let mut out_buf = vec![0f32; 3 * 4];
         let counters = Counters::new();
+        let kp = KernelParams::default();
         {
             let out = SharedOut::new(&mut out_buf);
             let mut scratch = vec![0f32; 4];
@@ -147,6 +157,7 @@ mod tests {
                 &out,
                 &mut scratch,
                 &counters,
+                &kp,
             );
             // long tile: 3 elements, row 2, atomic
             spmm_tile(
@@ -157,6 +168,7 @@ mod tests {
                 &out,
                 &mut scratch,
                 &counters,
+                &kp,
             );
         }
         for j in 0..4 {
@@ -170,6 +182,43 @@ mod tests {
     }
 
     #[test]
+    fn lane_and_panel_modes_are_bit_identical_to_scalar() {
+        // the tentpole's core property at the tile level: default mode
+        // (lanes + panels) produces the same bits as the scalar
+        // baseline for every feature width, including n % 8 != 0 and
+        // n far beyond one panel
+        let mut rng = SplitMix64::new(52);
+        for n in crate::util::testgen::WIDE_FEATURE_WIDTHS {
+            let rows = 40;
+            let b = Dense::random(&mut rng, rows, n);
+            let len = rng.range(2, 40);
+            let cols: Vec<u32> = (0..len).map(|_| rng.range(0, rows) as u32).collect();
+            let vals: Vec<f32> = (0..len).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+            let tile = FlexTile {
+                elem_start: 0,
+                elem_end: len as u32,
+                row: 1,
+                atomic: false,
+                row_split: false,
+            };
+            let run = |kp: &KernelParams| {
+                let mut out_buf = vec![0f32; 3 * n];
+                let mut scratch = vec![0f32; n];
+                let counters = Counters::new();
+                let out = SharedOut::new(&mut out_buf);
+                spmm_tile(&tile, &cols, &vals, &b, &out, &mut scratch, &counters, kp);
+                drop(out);
+                out_buf
+            };
+            let scalar = run(&KernelParams::scalar());
+            let lane = run(&KernelParams::default());
+            let tiny_panel = run(&KernelParams { panel: 5, ..KernelParams::default() });
+            assert_eq!(lane, scalar, "lane+panel diverged at n={n}");
+            assert_eq!(tiny_panel, scalar, "panel=5 diverged at n={n}");
+        }
+    }
+
+    #[test]
     fn sddmm_range_dots() {
         let mut rng = SplitMix64::new(51);
         let a = Dense::random(&mut rng, 4, 3);
@@ -180,9 +229,10 @@ mod tests {
         let out_idx = vec![5u32, 0];
         let mut out_buf = vec![0f32; 6];
         let counters = Counters::new();
+        let kp = KernelParams::default();
         {
             let out = SharedOut::new(&mut out_buf);
-            sddmm_range(0..2, &rows, &cols, &vals, &out_idx, &a, &b, &out, &counters);
+            sddmm_range(0..2, &rows, &cols, &vals, &out_idx, &a, &b, &out, &counters, &kp);
         }
         let dot = |r: usize, c: usize| -> f32 {
             (0..3).map(|k| a.row(r)[k] * b.row(c)[k]).sum()

@@ -1,0 +1,464 @@
+//! Explicit lane kernels and cache-blocked panel traversal — the
+//! shared inner loops of all four hot streams (flex/structured ×
+//! SpMM/SDDMM).
+//!
+//! The paper's CUDA kernels earn their throughput from `float4`-style
+//! vector memory ops, shared-memory tiling, and unrolled accumulation.
+//! The CPU substrate mirrors those three tricks here, dependency-free:
+//!
+//! * **Lanes** — a hand-rolled [`F32x8`] type over `[f32; 8]` chunks
+//!   with scalar tails. Each lane op is a fixed-width loop over an
+//!   array held by value, the shape LLVM reliably turns into vector
+//!   instructions at any `target-cpu`; there is no FMA contraction and
+//!   no reassociation in the SpMM kernels, so lane results are
+//!   **bit-identical** to the scalar loops they replace.
+//! * **Panels** — [`KernelParams::panels`] tiles the dense feature
+//!   dimension `n` into column panels sized to stay cache-resident, so
+//!   long flex tiles and staged TC blocks re-walk their nonzeros per
+//!   panel instead of streaming full `n`-wide rows through cache.
+//!   Panels only reorder *which output column* is touched when; the
+//!   per-element accumulation order is unchanged, so this too is
+//!   bit-identical.
+//! * **Precision** — [`Precision`](crate::format::Precision) selects
+//!   16-bit value storage (bf16 / f16) with f32 accumulation, the TCU
+//!   reduced-precision analogue. Quantization happens at the buffer
+//!   level (see [`crate::format::half`]); the kernels themselves are
+//!   precision-agnostic.
+//!
+//! The one deliberate reassociation is the SDDMM [`dot`] kernel: it
+//! keeps 8 partial sums and reduces them pairwise. That changes
+//! rounding versus a sequential dot (within the documented error
+//! bounds) but is a pure function of its operands — every schedule
+//! produces the same bits for the same element, preserving the
+//! executors' schedule-invariance guarantees.
+
+use crate::format::Precision;
+
+/// Lane width of [`F32x8`] (elements per vector chunk).
+pub const LANE: usize = 8;
+
+/// Default feature-dimension panel width (f32 elements). Four dense
+/// rows of 128 columns plus the accumulator panel stay within a
+/// typical 32 KiB L1 slice.
+pub const PANEL_COLS: usize = 128;
+
+/// An 8-wide f32 lane: a value-held `[f32; 8]` whose elementwise ops
+/// compile to vector instructions. All ops are two-rounding
+/// (`mul` then `add` — never contracted to FMA), keeping lane results
+/// bit-identical to the scalar expression per element.
+#[derive(Debug, Clone, Copy)]
+pub struct F32x8(pub [f32; LANE]);
+
+impl F32x8 {
+    /// Load the first 8 elements of `s`.
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> Self {
+        let mut v = [0.0f32; LANE];
+        v.copy_from_slice(&s[..LANE]);
+        F32x8(v)
+    }
+
+    /// Broadcast one scalar to all lanes.
+    #[inline(always)]
+    pub fn splat(x: f32) -> Self {
+        F32x8([x; LANE])
+    }
+
+    /// Store into the first 8 elements of `d`.
+    #[inline(always)]
+    pub fn store(self, d: &mut [f32]) {
+        d[..LANE].copy_from_slice(&self.0);
+    }
+
+    /// Lanewise `self + o`.
+    #[inline(always)]
+    pub fn add(self, o: Self) -> Self {
+        let mut r = [0.0f32; LANE];
+        for i in 0..LANE {
+            r[i] = self.0[i] + o.0[i];
+        }
+        F32x8(r)
+    }
+
+    /// Lanewise `self * o`.
+    #[inline(always)]
+    pub fn mul(self, o: Self) -> Self {
+        let mut r = [0.0f32; LANE];
+        for i in 0..LANE {
+            r[i] = self.0[i] * o.0[i];
+        }
+        F32x8(r)
+    }
+
+    /// Lanewise `self + a * b` with two rounding steps per lane (no
+    /// FMA), matching the scalar `acc + v * b` bit-for-bit.
+    #[inline(always)]
+    pub fn mul_add(self, a: Self, b: Self) -> Self {
+        let mut r = [0.0f32; LANE];
+        for i in 0..LANE {
+            r[i] = self.0[i] + a.0[i] * b.0[i];
+        }
+        F32x8(r)
+    }
+
+    /// Pairwise horizontal sum: `((v0+v1)+(v2+v3)) + ((v4+v5)+(v6+v7))`.
+    #[inline(always)]
+    pub fn reduce_add(self) -> f32 {
+        let v = self.0;
+        ((v[0] + v[1]) + (v[2] + v[3])) + ((v[4] + v[5]) + (v[6] + v[7]))
+    }
+}
+
+/// `acc[j] += v * b[j]` over the whole slice, 8 lanes at a time with a
+/// scalar tail. Bit-identical to [`axpy_scalar`].
+#[inline]
+pub fn axpy(acc: &mut [f32], v: f32, b: &[f32]) {
+    let n = acc.len();
+    debug_assert!(b.len() >= n);
+    let vv = F32x8::splat(v);
+    let lanes = n - n % LANE;
+    let mut j = 0;
+    while j < lanes {
+        let r = F32x8::load(&acc[j..]).mul_add(vv, F32x8::load(&b[j..]));
+        r.store(&mut acc[j..]);
+        j += LANE;
+    }
+    for j in lanes..n {
+        acc[j] += v * b[j];
+    }
+}
+
+/// Scalar reference for [`axpy`] (the pre-kernel-layer loop).
+#[inline]
+pub fn axpy_scalar(acc: &mut [f32], v: f32, b: &[f32]) {
+    for j in 0..acc.len() {
+        acc[j] += v * b[j];
+    }
+}
+
+/// Four-row fused axpy: `acc[j] += v0*b0[j] + v1*b1[j] + v2*b2[j] +
+/// v3*b3[j]`, with the left-associated sum tree of the scalar
+/// expression — bit-identical to [`axpy4_scalar`].
+#[inline]
+pub fn axpy4(acc: &mut [f32], v: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) {
+    let n = acc.len();
+    debug_assert!(b0.len() >= n && b1.len() >= n && b2.len() >= n && b3.len() >= n);
+    let (v0, v1, v2, v3) =
+        (F32x8::splat(v[0]), F32x8::splat(v[1]), F32x8::splat(v[2]), F32x8::splat(v[3]));
+    let lanes = n - n % LANE;
+    let mut j = 0;
+    while j < lanes {
+        // ((m0 + m1) + m2) + m3, then acc + sum: the scalar tree
+        let m01 = v0.mul(F32x8::load(&b0[j..])).add(v1.mul(F32x8::load(&b1[j..])));
+        let m012 = m01.add(v2.mul(F32x8::load(&b2[j..])));
+        let m = m012.add(v3.mul(F32x8::load(&b3[j..])));
+        F32x8::load(&acc[j..]).add(m).store(&mut acc[j..]);
+        j += LANE;
+    }
+    for j in lanes..n {
+        acc[j] += v[0] * b0[j] + v[1] * b1[j] + v[2] * b2[j] + v[3] * b3[j];
+    }
+}
+
+/// Scalar reference for [`axpy4`] (the pre-kernel-layer 4-wide unroll).
+#[inline]
+pub fn axpy4_scalar(acc: &mut [f32], v: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) {
+    for j in 0..acc.len() {
+        acc[j] += v[0] * b0[j] + v[1] * b1[j] + v[2] * b2[j] + v[3] * b3[j];
+    }
+}
+
+/// `dst[j] += src[j]` (merge pass / plain `add_slice` body),
+/// lane-vectorized; elementwise, so trivially bit-identical.
+#[inline]
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len().min(src.len());
+    let lanes = n - n % LANE;
+    let mut j = 0;
+    while j < lanes {
+        F32x8::load(&dst[j..]).add(F32x8::load(&src[j..])).store(&mut dst[j..]);
+        j += LANE;
+    }
+    for j in lanes..n {
+        dst[j] += src[j];
+    }
+}
+
+/// `dst[j] = v * b[j]` (single-nonzero short-tile staging),
+/// lane-vectorized; elementwise, so trivially bit-identical.
+#[inline]
+pub fn scale_into(dst: &mut [f32], v: f32, b: &[f32]) {
+    let n = dst.len();
+    debug_assert!(b.len() >= n);
+    let vv = F32x8::splat(v);
+    let lanes = n - n % LANE;
+    let mut j = 0;
+    while j < lanes {
+        vv.mul(F32x8::load(&b[j..])).store(&mut dst[j..]);
+        j += LANE;
+    }
+    for j in lanes..n {
+        dst[j] = v * b[j];
+    }
+}
+
+/// Dot product with 8 lane-partial accumulators reduced pairwise, plus
+/// a sequential scalar tail. For `n < 8` this **is** the sequential
+/// dot; for larger `n` it reassociates the reduction (documented error
+/// bound: the usual `O(u * n)` dot-product bound with a shallower,
+/// more accurate tree than sequential). Deterministic per operand
+/// pair — independent of caller scheduling.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    debug_assert!(b.len() >= n);
+    if n < LANE {
+        return dot_scalar(a, &b[..n]);
+    }
+    let lanes = n - n % LANE;
+    let mut acc = F32x8::splat(0.0);
+    let mut i = 0;
+    while i < lanes {
+        acc = acc.mul_add(F32x8::load(&a[i..]), F32x8::load(&b[i..]));
+        i += LANE;
+    }
+    let mut s = acc.reduce_add();
+    for i in lanes..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Sequential scalar dot product (the pre-kernel-layer loop).
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0f32;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Mode-dispatched [`axpy`]: lane kernel when `lanes`, scalar loop
+/// otherwise (the baseline the bench and property tests compare).
+#[inline]
+pub fn axpy_mode(lanes: bool, acc: &mut [f32], v: f32, b: &[f32]) {
+    if lanes {
+        axpy(acc, v, b);
+    } else {
+        axpy_scalar(acc, v, b);
+    }
+}
+
+/// Mode-dispatched [`axpy4`].
+#[inline]
+pub fn axpy4_mode(
+    lanes: bool,
+    acc: &mut [f32],
+    v: [f32; 4],
+    b0: &[f32],
+    b1: &[f32],
+    b2: &[f32],
+    b3: &[f32],
+) {
+    if lanes {
+        axpy4(acc, v, b0, b1, b2, b3);
+    } else {
+        axpy4_scalar(acc, v, b0, b1, b2, b3);
+    }
+}
+
+/// Mode-dispatched [`dot`]: lane-partial kernel when `lanes`, the
+/// sequential scalar dot otherwise.
+#[inline]
+pub fn dot_mode(lanes: bool, a: &[f32], b: &[f32]) -> f32 {
+    if lanes {
+        dot(a, b)
+    } else {
+        dot_scalar(a, b)
+    }
+}
+
+/// Column-panel ranges `[start, end)` covering `0..n`. `panel == 0`
+/// disables blocking (one full-width panel).
+pub fn panels(panel: usize, n: usize) -> impl Iterator<Item = (usize, usize)> {
+    let step = if panel == 0 { n.max(1) } else { panel };
+    (0..n).step_by(step).map(move |s| (s, (s + step).min(n)))
+}
+
+/// Execution-mode knobs for the kernel layer, carried by both
+/// executors and threaded into every hot stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelParams {
+    /// Use the 8-wide lane kernels (false = the scalar baseline).
+    pub lanes: bool,
+    /// Feature-dimension panel width for cache-blocked traversal
+    /// (0 disables panel blocking).
+    pub panel: usize,
+    /// Storage precision for sparse values (f32 accumulation always).
+    pub precision: Precision,
+    /// Also quantize the dense operand(s) to `precision` (staged
+    /// through the workspace; a no-op at [`Precision::F32`]).
+    pub quant_dense: bool,
+}
+
+impl Default for KernelParams {
+    fn default() -> Self {
+        Self { lanes: true, panel: PANEL_COLS, precision: Precision::F32, quant_dense: false }
+    }
+}
+
+impl KernelParams {
+    /// The pre-kernel-layer baseline: scalar loops, no panel blocking,
+    /// full f32 storage.
+    pub fn scalar() -> Self {
+        Self { lanes: false, panel: 0, precision: Precision::F32, quant_dense: false }
+    }
+
+    /// Default kernels at a given storage precision.
+    pub fn with_precision(precision: Precision) -> Self {
+        Self { precision, ..Self::default() }
+    }
+
+    /// Column panels covering `0..n` under this mode's panel width.
+    pub fn panels(&self, n: usize) -> impl Iterator<Item = (usize, usize)> {
+        panels(self.panel, n)
+    }
+
+    /// The precision the dense operand(s) should be quantized to, if
+    /// any.
+    pub fn dense_quant(&self) -> Option<Precision> {
+        if self.quant_dense && self.precision != Precision::F32 {
+            Some(self.precision)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn vecs(rng: &mut SplitMix64, n: usize, count: usize) -> Vec<Vec<f32>> {
+        (0..count).map(|_| (0..n).map(|_| rng.f32_range(-2.0, 2.0)).collect()).collect()
+    }
+
+    #[test]
+    fn axpy_bit_identical_to_scalar() {
+        let mut rng = SplitMix64::new(700);
+        for n in [0usize, 1, 3, 7, 8, 9, 16, 31, 32, 100, 250] {
+            let vs = vecs(&mut rng, n, 3);
+            let v = rng.f32_range(-3.0, 3.0);
+            let mut lane = vs[0].clone();
+            let mut scalar = vs[0].clone();
+            axpy(&mut lane, v, &vs[1]);
+            axpy_scalar(&mut scalar, v, &vs[1]);
+            assert_eq!(lane, scalar, "axpy n={n}");
+            axpy_mode(true, &mut lane, v, &vs[2]);
+            axpy_mode(false, &mut scalar, v, &vs[2]);
+            assert_eq!(lane, scalar, "axpy_mode n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy4_bit_identical_to_scalar() {
+        let mut rng = SplitMix64::new(701);
+        for n in [0usize, 1, 5, 7, 8, 13, 32, 99, 128, 250] {
+            let vs = vecs(&mut rng, n, 5);
+            let v = [
+                rng.f32_range(-3.0, 3.0),
+                rng.f32_range(-3.0, 3.0),
+                rng.f32_range(-3.0, 3.0),
+                rng.f32_range(-3.0, 3.0),
+            ];
+            let mut lane = vs[0].clone();
+            let mut scalar = vs[0].clone();
+            axpy4(&mut lane, v, &vs[1], &vs[2], &vs[3], &vs[4]);
+            axpy4_scalar(&mut scalar, v, &vs[1], &vs[2], &vs[3], &vs[4]);
+            assert_eq!(lane, scalar, "axpy4 n={n}");
+        }
+    }
+
+    #[test]
+    fn add_assign_and_scale_into_bit_identical() {
+        let mut rng = SplitMix64::new(702);
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 250] {
+            let vs = vecs(&mut rng, n, 2);
+            let v = rng.f32_range(-3.0, 3.0);
+            let mut lane = vs[0].clone();
+            let mut scalar = vs[0].clone();
+            add_assign(&mut lane, &vs[1]);
+            for j in 0..n {
+                scalar[j] += vs[1][j];
+            }
+            assert_eq!(lane, scalar, "add_assign n={n}");
+            scale_into(&mut lane, v, &vs[1]);
+            for j in 0..n {
+                scalar[j] = v * vs[1][j];
+            }
+            assert_eq!(lane, scalar, "scale_into n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_sequential_below_lane_width_and_accurate_above() {
+        let mut rng = SplitMix64::new(703);
+        for n in [0usize, 1, 3, 7] {
+            let vs = vecs(&mut rng, n, 2);
+            assert_eq!(
+                dot(&vs[0], &vs[1]).to_bits(),
+                dot_scalar(&vs[0], &vs[1]).to_bits(),
+                "dot below LANE must be exactly sequential (n={n})"
+            );
+        }
+        for n in [8usize, 9, 32, 100, 250] {
+            let vs = vecs(&mut rng, n, 2);
+            let got = dot(&vs[0], &vs[1]);
+            let want: f64 =
+                vs[0].iter().zip(&vs[1]).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let scale: f64 = vs[0].iter().zip(&vs[1]).map(|(&x, &y)| (x * y).abs() as f64).sum();
+            assert!(
+                (got as f64 - want).abs() <= 1e-6 * scale.max(1.0),
+                "dot n={n}: {got} vs {want}"
+            );
+            // deterministic: same operands, same bits
+            assert_eq!(got.to_bits(), dot(&vs[0], &vs[1]).to_bits());
+        }
+    }
+
+    #[test]
+    fn panels_cover_exactly() {
+        for (panel, n) in [(0usize, 10usize), (4, 10), (8, 8), (128, 40), (7, 250), (1, 3)] {
+            let ps: Vec<(usize, usize)> = panels(panel, n).collect();
+            let mut next = 0;
+            for &(s, e) in &ps {
+                assert_eq!(s, next, "panel {panel} n={n}");
+                assert!(e > s && e <= n);
+                if panel > 0 {
+                    assert!(e - s <= panel);
+                }
+                next = e;
+            }
+            assert_eq!(next, n, "panels must cover 0..n for panel={panel} n={n}");
+        }
+        assert_eq!(panels(16, 0).count(), 0);
+        assert_eq!(KernelParams::default().panels(300).count(), 3);
+    }
+
+    #[test]
+    fn params_modes() {
+        let d = KernelParams::default();
+        assert!(d.lanes && d.panel == PANEL_COLS && d.precision == Precision::F32);
+        assert_eq!(d.dense_quant(), None);
+        let s = KernelParams::scalar();
+        assert!(!s.lanes && s.panel == 0);
+        let h = KernelParams::with_precision(Precision::F16);
+        assert_eq!(h.dense_quant(), None, "dense quant is opt-in");
+        let hq = KernelParams { quant_dense: true, ..h };
+        assert_eq!(hq.dense_quant(), Some(Precision::F16));
+        let fq = KernelParams { quant_dense: true, ..KernelParams::default() };
+        assert_eq!(fq.dense_quant(), None, "f32 dense quant is a no-op");
+    }
+}

@@ -23,6 +23,7 @@
 
 pub mod counters;
 pub mod flex;
+pub mod kernels;
 pub mod output;
 pub mod pack;
 pub mod pool;
@@ -32,6 +33,7 @@ pub mod structured;
 pub mod workspace;
 
 pub use counters::Counters;
+pub use kernels::KernelParams;
 pub use pool::{global_pool, Threading, WorkerPool};
 pub use spmm::{SpmmExecutor, TcBackendKind};
 pub use workspace::Workspace;

@@ -81,12 +81,10 @@ impl SharedOut {
                 self.add_atomic(offset + j, v);
             }
         } else {
-            // exclusive writer: vectorizable plain loop
+            // exclusive writer: lane-vectorized plain merge
             unsafe {
                 let dst = std::slice::from_raw_parts_mut(self.ptr.add(offset), src.len());
-                for (d, &s) in dst.iter_mut().zip(src) {
-                    *d += s;
-                }
+                super::kernels::add_assign(dst, src);
             }
         }
     }

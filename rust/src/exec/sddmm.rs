@@ -8,6 +8,7 @@
 
 use super::counters::Counters;
 use super::flex;
+use super::kernels::KernelParams;
 use super::output::SharedOut;
 use super::pack::{self, PackBufs};
 use super::pool::Threading;
@@ -17,6 +18,7 @@ use super::TcBackend;
 use crate::balance::{balance_sddmm, BalanceParams, SddmmSchedule};
 use crate::dist::{DistParams, SddmmDist};
 use crate::format::legacy::TcfBlocks;
+use crate::format::Precision;
 use crate::prep::SddmmPlan;
 use crate::runtime::Input;
 use crate::sparse::{Csr, Dense, GraphBatch};
@@ -36,6 +38,9 @@ pub struct SddmmExecutor {
     /// how the streams are mapped onto threads (persistent pool by
     /// default; `Scoped` restores the spawn-per-call behavior)
     pub threading: Threading,
+    /// kernel-layer mode: lane vectorization, column-panel size, and
+    /// the stored value precision (see [`SddmmExecutor::set_precision`])
+    pub kernel: KernelParams,
     pub counters: Counters,
     /// pattern of the sparse matrix (row_ptr/col_idx reused for output)
     pub pattern: Csr,
@@ -70,18 +75,42 @@ impl SddmmExecutor {
             backend,
             flex_threads: super::default_flex_threads(),
             threading: Threading::default(),
+            kernel: KernelParams::default(),
             counters: Counters::new(),
             pattern,
         }
     }
 
     /// Refresh all stored pattern values (CSR order, same pattern),
-    /// keeping the distribution fixed.
+    /// keeping the distribution fixed. The executor's current precision
+    /// is re-applied to the fresh values.
     pub fn set_values(&mut self, vals: &[f32]) {
         self.dist.set_values(vals);
         self.pattern.values.copy_from_slice(vals);
+        self.requantize();
         if let Some(tcf) = &mut self.tcf {
             *tcf = TcfBlocks::from_bitmap(&self.dist.tc);
+        }
+    }
+
+    /// Switch the stored value precision: round the flexible and TC
+    /// sampling values through the 16-bit target format in place
+    /// (dot products and the final scale stay f32) and record the mode
+    /// for the cost model and serving cache key. Mirrors
+    /// [`crate::exec::SpmmExecutor::set_precision`].
+    pub fn set_precision(&mut self, p: Precision) {
+        self.kernel.precision = p;
+        self.requantize();
+        if let Some(tcf) = &mut self.tcf {
+            *tcf = TcfBlocks::from_bitmap(&self.dist.tc);
+        }
+    }
+
+    fn requantize(&mut self) {
+        let p = self.kernel.precision;
+        if p != Precision::F32 {
+            p.round_trip_slice(&mut self.dist.flex_vals);
+            p.round_trip_slice(&mut self.dist.tc.values);
         }
     }
 
@@ -170,6 +199,24 @@ impl SddmmExecutor {
         ws: &mut Workspace,
     ) -> Result<()> {
         self.check_shapes(a, b)?;
+        // optional reduced-precision dense operands: round `A`/`B`
+        // through the 16-bit format into workspace-owned staging
+        // copies. The buffers are moved out of `ws` here (before
+        // `pack_bufs` borrows it) and returned before exiting.
+        let staged = self.kernel.dense_quant().map(|p| {
+            let (mut qa, mut qb) = ws.take_half_dense();
+            qa.clear();
+            qa.extend_from_slice(&a.data);
+            p.round_trip_slice(&mut qa);
+            qb.clear();
+            qb.extend_from_slice(&b.data);
+            p.round_trip_slice(&mut qb);
+            (Dense::from_vec(a.rows, a.cols, qa), Dense::from_vec(b.rows, b.cols, qb))
+        });
+        let (a, b) = match &staged {
+            Some((qa, qb)) => (qa, qb),
+            None => (a, b),
+        };
         let n_blocks = self.dist.tc.n_blocks();
         let structured_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
         let long_cursor = AtomicUsize::new(0);
@@ -188,6 +235,7 @@ impl SddmmExecutor {
                 b,
                 out,
                 &self.counters,
+                &self.kernel,
             );
         };
 
@@ -229,6 +277,9 @@ impl SddmmExecutor {
 
         if let Some(e) = structured_err.into_inner().unwrap() {
             return Err(e);
+        }
+        if let Some((qa, qb)) = staged {
+            ws.put_half_dense(qa.data, qb.data);
         }
         Ok(())
     }
@@ -315,6 +366,7 @@ impl SddmmExecutor {
                         b,
                         out,
                         &self.counters,
+                        &self.kernel,
                     );
                 }
                 Ok(())
@@ -529,6 +581,54 @@ mod tests {
             balanced.flex_threads = rng.range(1, 4);
             let got = balanced.execute(&a, &b).unwrap();
             assert_eq!(got.values, want.values, "balanced schedule diverged");
+        });
+    }
+
+    #[test]
+    fn reduced_precision_sddmm_within_error_bounds() {
+        // bf16/f16 value path: each sampled output errs by at most a
+        // small multiple of the format's unit roundoff times
+        // |v| * dot(|a_row|, |b_col|) — one rounding for the stored
+        // value, two more when the dense operands are quantized — plus
+        // an absolute epsilon for near-zero samples (which also covers
+        // the f32 lane-dot reassociation, orders of magnitude below u).
+        use crate::util::testgen;
+        check(Config::default().cases(10), "16-bit sddmm error bound", |rng| {
+            let m = testgen::pattern_family(rng, 64);
+            let k = testgen::wide_feature_width(rng);
+            let a = Dense::random(rng, m.rows, k);
+            let b = Dense::random(rng, m.cols, k);
+            let d = DistParams { threshold: rng.range(1, 48), fill_padding: true };
+            let want = m.sddmm_dense_ref(&a, &b);
+            // per-nonzero magnitude bound |v| * dot(|a_r|, |b_c|)
+            let mut bound = vec![0f32; m.nnz()];
+            let mut pos = 0usize;
+            for r in 0..m.rows {
+                let (cols, vals) = m.row(r);
+                for (j, &c) in cols.iter().enumerate() {
+                    let ar = a.row(r);
+                    let br = b.row(c as usize);
+                    let dot_abs: f32 = ar.iter().zip(br).map(|(x, y)| (x * y).abs()).sum();
+                    bound[pos] = vals[j].abs() * dot_abs;
+                    pos += 1;
+                }
+            }
+            for p in [Precision::Bf16, Precision::F16] {
+                for quant_dense in [false, true] {
+                    let mut e = SddmmExecutor::new(&m, &d, TcBackend::NativeBitmap);
+                    e.flex_threads = 1;
+                    e.kernel.quant_dense = quant_dense;
+                    e.set_precision(p);
+                    let got = e.execute(&a, &b).unwrap();
+                    let u = p.unit_roundoff();
+                    let factor = if quant_dense { 3.5 } else { 1.25 };
+                    for (i, (&g, &w)) in got.values.iter().zip(&want.values).enumerate() {
+                        let tol = factor * u * bound[i] + 1e-5;
+                        let err = (g - w).abs();
+                        assert!(err <= tol, "p={p} qd={quant_dense} i={i}: err {err} > {tol}");
+                    }
+                }
+            }
         });
     }
 

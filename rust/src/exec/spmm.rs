@@ -8,6 +8,7 @@
 
 use super::counters::Counters;
 use super::flex;
+use super::kernels::{self, KernelParams};
 use super::output::SharedOut;
 use super::pack::{self, PackBufs};
 use super::pool::Threading;
@@ -17,6 +18,7 @@ use super::TcBackend;
 use crate::balance::{BalanceParams, FlexTile, SpmmSchedule};
 use crate::dist::{DistParams, SpmmDist};
 use crate::format::legacy::TcfBlocks;
+use crate::format::Precision;
 use crate::runtime::Input;
 use crate::sparse::{Csr, Dense, GraphBatch};
 use anyhow::Result;
@@ -49,6 +51,9 @@ pub struct SpmmExecutor {
     /// how the streams are mapped onto threads (persistent pool by
     /// default; `Scoped` restores the spawn-per-call behavior)
     pub threading: Threading,
+    /// kernel-layer mode: lane vectorization, column-panel size, and
+    /// the stored value precision (see [`SpmmExecutor::set_precision`])
+    pub kernel: KernelParams,
     pub counters: Counters,
 }
 
@@ -92,16 +97,42 @@ impl SpmmExecutor {
             backend,
             flex_threads: super::default_flex_threads(),
             threading: Threading::default(),
+            kernel: KernelParams::default(),
             counters: Counters::new(),
         }
     }
 
     /// Refresh all stored values from `vals` (CSR order, same pattern),
-    /// keeping the distribution, schedule, and atomic flags fixed.
+    /// keeping the distribution, schedule, and atomic flags fixed. The
+    /// executor's current precision is re-applied to the fresh values.
     pub fn set_values(&mut self, vals: &[f32]) {
         self.dist.set_values(vals);
+        self.requantize();
         if let Some(tcf) = &mut self.tcf {
             *tcf = TcfBlocks::from_bitmap(&self.dist.tc);
+        }
+    }
+
+    /// Switch the stored value precision: round the flexible and TC
+    /// values through the 16-bit target format in place (accumulation
+    /// stays f32) and record the mode so the cost model and serving
+    /// cache key see it. Quantization composes with [`Self::set_values`]
+    /// (fresh values are re-rounded); switching between 16-bit formats
+    /// rounds the already-rounded values, so set full-precision values
+    /// first when changing formats.
+    pub fn set_precision(&mut self, p: Precision) {
+        self.kernel.precision = p;
+        self.requantize();
+        if let Some(tcf) = &mut self.tcf {
+            *tcf = TcfBlocks::from_bitmap(&self.dist.tc);
+        }
+    }
+
+    fn requantize(&mut self) {
+        let p = self.kernel.precision;
+        if p != Precision::F32 {
+            p.round_trip_slice(&mut self.dist.flex_vals);
+            p.round_trip_slice(&mut self.dist.tc.values);
         }
     }
 
@@ -174,6 +205,18 @@ impl SpmmExecutor {
     ) -> Result<()> {
         anyhow::ensure!(b.rows == self.dist.cols, "B rows {} != A cols {}", b.rows, self.dist.cols);
         anyhow::ensure!(out_mat.rows == self.dist.rows && out_mat.cols == b.cols, "bad out shape");
+        // optional reduced-precision dense operand: round `B` through
+        // the 16-bit format into a workspace-owned staging copy. The
+        // buffers are moved out of `ws` here (before `split_spmm`
+        // borrows it) and returned after the merge pass.
+        let staged = self.kernel.dense_quant().map(|p| {
+            let (mut qb, spare) = ws.take_half_dense();
+            qb.clear();
+            qb.extend_from_slice(&b.data);
+            p.round_trip_slice(&mut qb);
+            (Dense::from_vec(b.rows, b.cols, qb), spare)
+        });
+        let b = staged.as_ref().map_or(b, |(qb, _)| qb);
         let n_blocks = self.dist.tc.n_blocks();
         let has_flex = !self.sched.long_tiles.is_empty() || !self.sched.short_tiles.is_empty();
         let privatize = n_blocks > 0 && has_flex;
@@ -242,10 +285,11 @@ impl SpmmExecutor {
             }
         }
         if privatize {
-            // merge pass: one vectorizable sweep
-            for (o, &f) in out_mat.data.iter_mut().zip(flex_buf.iter()) {
-                *o += f;
-            }
+            // merge pass: one lane-vectorized sweep
+            kernels::add_assign(&mut out_mat.data, flex_buf);
+        }
+        if let Some((qb, spare)) = staged {
+            ws.put_half_dense(qb.data, spare);
         }
         Ok(())
     }
@@ -273,6 +317,7 @@ impl SpmmExecutor {
             out,
             scratch,
             &self.counters,
+            &self.kernel,
         );
     }
 
@@ -366,6 +411,7 @@ impl SpmmExecutor {
                     out,
                     &self.counters,
                     &mut workspace::lock(structured_bufs),
+                    &self.kernel,
                 );
                 Ok(())
             }
@@ -637,6 +683,110 @@ mod tests {
         let pooled = Threading::Pooled(Arc::new(crate::exec::WorkerPool::new(3)));
         assert_eq!(inline, snapshot(pooled, 4));
         assert_eq!(inline, snapshot(Threading::default(), 2));
+    }
+
+    #[test]
+    fn lane_and_panel_kernels_bit_identical_to_scalar() {
+        // Tentpole acceptance: the lane + cache-blocked kernel layer
+        // produces the same bits as the scalar baseline through the
+        // whole hybrid executor, across the pattern family, every wide
+        // feature width (n % 8 != 0 included), and all native decode
+        // backends. One flexible stream keeps accumulation order
+        // deterministic so bitwise comparison is meaningful.
+        use crate::util::testgen;
+        check(Config::default().cases(12), "lane spmm == scalar spmm", |rng| {
+            let m = testgen::pattern_family(rng, 96);
+            let n = testgen::wide_feature_width(rng);
+            let b = Dense::random(rng, m.cols, n);
+            let d = DistParams { threshold: rng.range(1, 6), fill_padding: rng.chance(0.5) };
+            let which = rng.below(3);
+            let backend = || match which {
+                0 => TcBackend::NativeBitmap,
+                1 => TcBackend::NativeStaged,
+                _ => TcBackend::NativeTraversal,
+            };
+            let run = |kp: KernelParams| {
+                let mut e = SpmmExecutor::new(&m, &d, &BalanceParams::default(), backend());
+                e.flex_threads = 1;
+                e.threading = Threading::Inline;
+                e.kernel = kp;
+                e.execute(&b).unwrap()
+            };
+            let scalar = run(KernelParams::scalar());
+            let lane = run(KernelParams::default());
+            let tiny_panel = run(KernelParams { panel: 9, ..KernelParams::default() });
+            assert_eq!(lane.data, scalar.data, "lane+panel diverged (n={n})");
+            assert_eq!(tiny_panel.data, scalar.data, "panel=9 diverged (n={n})");
+        });
+    }
+
+    #[test]
+    fn reduced_precision_spmm_within_error_bounds() {
+        // bf16/f16 value path: with stored values (and optionally the
+        // dense operand) rounded to 16 bits but f32 accumulation, each
+        // output element errs by at most a small multiple of the
+        // format's unit roundoff times the absolute product sum
+        // |A|*|B| — one rounding per factor, so 1.25u without dense
+        // quantization and 2.5u with it, plus an absolute epsilon for
+        // near-zero elements.
+        use crate::util::testgen;
+        check(Config::default().cases(10), "16-bit spmm error bound", |rng| {
+            let m = testgen::pattern_family(rng, 80);
+            let n = testgen::wide_feature_width(rng);
+            let b = Dense::random(rng, m.cols, n);
+            let d = DistParams { threshold: rng.range(1, 6), fill_padding: true };
+            let want = m.spmm_dense_ref(&b);
+            let mut m_abs = m.clone();
+            for v in &mut m_abs.values {
+                *v = v.abs();
+            }
+            let mut b_abs = b.clone();
+            for v in &mut b_abs.data {
+                *v = v.abs();
+            }
+            let c_abs = m_abs.spmm_dense_ref(&b_abs);
+            for p in [Precision::Bf16, Precision::F16] {
+                for quant_dense in [false, true] {
+                    let mut e = SpmmExecutor::new(
+                        &m,
+                        &d,
+                        &BalanceParams::default(),
+                        TcBackend::NativeBitmap,
+                    );
+                    e.flex_threads = 1;
+                    e.threading = Threading::Inline;
+                    e.kernel.quant_dense = quant_dense;
+                    e.set_precision(p);
+                    let got = e.execute(&b).unwrap();
+                    let u = p.unit_roundoff();
+                    let factor = if quant_dense { 2.5 } else { 1.25 };
+                    for i in 0..got.data.len() {
+                        let tol = factor * u * c_abs.data[i] + 1e-5;
+                        let err = (got.data[i] - want.data[i]).abs();
+                        assert!(err <= tol, "p={p} qd={quant_dense} i={i}: err {err} > tol {tol}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn set_values_reapplies_precision() {
+        let mut rng = SplitMix64::new(89);
+        let m = gen::uniform_random(&mut rng, 64, 64, 0.1);
+        let mut e = SpmmExecutor::new(
+            &m,
+            &DistParams::default(),
+            &BalanceParams::default(),
+            TcBackend::NativeBitmap,
+        );
+        e.set_precision(Precision::Bf16);
+        // fresh full-precision values must come back bf16-rounded
+        let vals: Vec<f32> = (0..m.nnz()).map(|i| 1.0 + i as f32 * 1e-3).collect();
+        e.set_values(&vals);
+        for &v in e.dist.flex_vals.iter().chain(e.dist.tc.values.iter()) {
+            assert_eq!(v, Precision::Bf16.round_trip(v), "value {v} not bf16-representable");
+        }
     }
 
     #[test]

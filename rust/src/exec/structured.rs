@@ -3,10 +3,18 @@
 //! unavailable and (b) for the Bit-Decoding format ablation (Table 8),
 //! where the three decode strategies differ exactly as the paper's
 //! TCF / ME-TCF / Bit-Decoding variants do.
+//!
+//! All decode arms route their accumulation through the lane kernels
+//! in [`super::kernels`] (bit-identical to the scalar loops), and the
+//! staged arm additionally walks its decoded tile once per dense
+//! column panel — the cache-blocked traversal that keeps the
+//! shared-memory-style tile plus the accumulator panel L1-resident at
+//! large feature widths.
 
 use super::counters::Counters;
+use super::kernels::{self, KernelParams};
 use super::output::SharedOut;
-use super::workspace::StructuredBufs;
+use super::workspace::{self, StructuredBufs};
 use crate::format::{bitmap, legacy::TcfBlocks, TcBlocks, PAD_COL, WINDOW};
 use crate::sparse::Dense;
 
@@ -26,8 +34,10 @@ pub enum Decode {
 
 /// Execute SpMM for blocks `[b0, b1)` of `tc` against `b`, accumulating
 /// into `out`. `atomic[b]` gates per-block accumulation mode.
-/// `rows` bounds tail-window scatter. Allocates its staging buffers
-/// per call; the hot path uses [`spmm_blocks_with`] and a workspace.
+/// `rows` bounds tail-window scatter. Borrows its staging buffers from
+/// the thread-local default workspace (like the flexible path), so the
+/// documented fallback entry point never allocates in a loop; the hot
+/// path uses [`spmm_blocks_with`] and an explicit workspace.
 #[allow(clippy::too_many_arguments)]
 pub fn spmm_blocks(
     tc: &TcBlocks,
@@ -40,9 +50,12 @@ pub fn spmm_blocks(
     b: &Dense,
     out: &SharedOut,
     counters: &Counters,
+    kp: &KernelParams,
 ) {
-    let mut bufs = StructuredBufs::default();
-    spmm_blocks_with(tc, tcf, decode, atomic, b0, b1, rows, b, out, counters, &mut bufs);
+    workspace::with_default(|ws| {
+        let mut bufs = workspace::lock(ws.structured_bufs());
+        spmm_blocks_with(tc, tcf, decode, atomic, b0, b1, rows, b, out, counters, &mut bufs, kp);
+    });
 }
 
 /// [`spmm_blocks`] with caller-owned staging buffers (the
@@ -61,6 +74,7 @@ pub fn spmm_blocks_with(
     out: &SharedOut,
     counters: &Counters,
     bufs: &mut StructuredBufs,
+    kp: &KernelParams,
 ) {
     let k = tc.k;
     let n = b.cols;
@@ -86,9 +100,7 @@ pub fn spmm_blocks_with(
                     debug_assert_ne!(col, PAD_COL);
                     let brow = b.row(col as usize);
                     let arow = &mut acc[r * n..(r + 1) * n];
-                    for j in 0..n {
-                        arow[j] += v * brow[j];
-                    }
+                    kernels::axpy_mode(kp.lanes, arow, v, brow);
                     i += 1;
                     rest &= rest - 1;
                 }
@@ -96,19 +108,23 @@ pub fn spmm_blocks_with(
             Decode::Staged => {
                 // stage the dense tile (the shared-memory construction),
                 // then run the full dense 8xK x KxN product including
-                // the padded zeros — the structured redundancy.
+                // the padded zeros — the structured redundancy. The
+                // tile is re-walked once per column panel so the
+                // accumulator panel stays cache-resident at large n;
+                // per output element the accumulation order (ascending
+                // c) is unchanged, so panels are bit-identical.
                 bitmap::decode_block(bm, vals, WINDOW, k, tile);
                 counters.add(&counters.staged_decodes, 1);
-                for (c, &col) in cols.iter().enumerate() {
-                    if col == PAD_COL {
-                        continue;
-                    }
-                    let brow = b.row(col as usize);
-                    for r in 0..WINDOW {
-                        let v = tile[r * k + c];
-                        let arow = &mut acc[r * n..(r + 1) * n];
-                        for j in 0..n {
-                            arow[j] += v * brow[j];
+                for (p0, p1) in kp.panels(n) {
+                    for (c, &col) in cols.iter().enumerate() {
+                        if col == PAD_COL {
+                            continue;
+                        }
+                        let brow = &b.row(col as usize)[p0..p1];
+                        for r in 0..WINDOW {
+                            let v = tile[r * k + c];
+                            let accp = &mut acc[r * n + p0..r * n + p1];
+                            kernels::axpy_mode(kp.lanes, accp, v, brow);
                         }
                     }
                 }
@@ -125,9 +141,7 @@ pub fn spmm_blocks_with(
                         if let Some(v) = tcf.find_traverse(blk, r, c, &mut steps) {
                             let brow = b.row(col as usize);
                             let arow = &mut acc[r * n..(r + 1) * n];
-                            for j in 0..n {
-                                arow[j] += v * brow[j];
-                            }
+                            kernels::axpy_mode(kp.lanes, arow, v, brow);
                         }
                     }
                 }
@@ -163,7 +177,9 @@ fn count_block(counters: &Counters, tc: &TcBlocks, blk: usize, n: usize) {
 
 /// Execute SDDMM for blocks `[b0, b1)`: sample `A_win @ B_cols` at the
 /// block's nonzero positions, scaled by the block values, written to
-/// `out_values` via `out_idx` (bit-ascending order per block).
+/// `out_values` via `out_idx` (bit-ascending order per block). The dot
+/// kernel is a pure function of its operand rows, so results are
+/// schedule-invariant in every mode.
 #[allow(clippy::too_many_arguments)]
 pub fn sddmm_blocks(
     tc: &TcBlocks,
@@ -176,6 +192,7 @@ pub fn sddmm_blocks(
     b: &Dense,
     out_values: &SharedOut,
     counters: &Counters,
+    kp: &KernelParams,
 ) {
     let kdim = a.cols;
     let nslots = tc.k; // 16
@@ -197,12 +214,7 @@ pub fn sddmm_blocks(
                     let row = win * WINDOW + r;
                     let col = cols[c];
                     debug_assert_ne!(col, PAD_COL);
-                    let arow = a.row(row);
-                    let brow = b.row(col as usize);
-                    let mut dot = 0f32;
-                    for kk in 0..kdim {
-                        dot += arow[kk] * brow[kk];
-                    }
+                    let dot = kernels::dot_mode(kp.lanes, a.row(row), b.row(col as usize));
                     unsafe {
                         out_values.add_plain(out_idx[base + i] as usize, vals[i] * dot);
                     }
@@ -226,12 +238,7 @@ pub fn sddmm_blocks(
                     let _ = tcf.find_traverse(blk, r, c, &mut steps);
                     let row = win * WINDOW + r;
                     let col = cols[c] as usize;
-                    let arow = a.row(row);
-                    let brow = b.row(col);
-                    let mut dot = 0f32;
-                    for kk in 0..kdim {
-                        dot += arow[kk] * brow[kk];
-                    }
+                    let dot = kernels::dot_mode(kp.lanes, a.row(row), b.row(col));
                     unsafe {
                         out_values.add_plain(out_idx[base + i] as usize, vals[i] * dot);
                     }
@@ -268,9 +275,10 @@ mod tests {
         let counters = Counters::new();
         let flags = vec![false; d.tc.n_blocks()];
         let nb = d.tc.n_blocks();
+        let kp = KernelParams::default();
         {
             let out = SharedOut::new(&mut out_buf);
-            spmm_blocks(&d.tc, Some(&tcf), decode, &flags, 0, nb, 64, &b, &out, &counters);
+            spmm_blocks(&d.tc, Some(&tcf), decode, &flags, 0, nb, 64, &b, &out, &counters, &kp);
         }
         let expect = m.spmm_dense_ref(&b);
         let got = Dense::from_vec(64, 16, out_buf);
@@ -297,6 +305,49 @@ mod tests {
     }
 
     #[test]
+    fn lane_and_panel_modes_are_bit_identical_to_scalar() {
+        // every decode arm, every wide feature width: the default lane
+        // + panel mode (and an adversarial tiny panel) must reproduce
+        // the scalar baseline bit-for-bit
+        let mut rng = SplitMix64::new(65);
+        for &n in crate::util::testgen::WIDE_FEATURE_WIDTHS.iter() {
+            let m = gen::uniform_random(&mut rng, 40, 48, 0.2);
+            let b = Dense::random(&mut rng, 48, n);
+            let d = distribute_spmm(&m, &DistParams { threshold: 1, fill_padding: false });
+            let tcf = TcfBlocks::from_bitmap(&d.tc);
+            let flags = vec![false; d.tc.n_blocks()];
+            let nb = d.tc.n_blocks();
+            for decode in [Decode::Bitmap, Decode::Staged, Decode::Traversal] {
+                let run = |kp: &KernelParams| {
+                    let mut out_buf = vec![0f32; 40 * n];
+                    let counters = Counters::new();
+                    let out = SharedOut::new(&mut out_buf);
+                    spmm_blocks(
+                        &d.tc,
+                        Some(&tcf),
+                        decode,
+                        &flags,
+                        0,
+                        nb,
+                        40,
+                        &b,
+                        &out,
+                        &counters,
+                        kp,
+                    );
+                    drop(out);
+                    out_buf
+                };
+                let scalar = run(&KernelParams::scalar());
+                let lane = run(&KernelParams::default());
+                let tiny = run(&KernelParams { panel: 3, ..KernelParams::default() });
+                assert_eq!(lane, scalar, "{decode:?} lane+panel diverged at n={n}");
+                assert_eq!(tiny, scalar, "{decode:?} panel=3 diverged at n={n}");
+            }
+        }
+    }
+
+    #[test]
     fn traversal_counts_more_steps_than_bitmap() {
         let mut rng = SplitMix64::new(63);
         let m = gen::uniform_random(&mut rng, 64, 64, 0.2);
@@ -309,11 +360,24 @@ mod tests {
         let mut buf1 = vec![0f32; 64 * 8];
         let mut buf2 = vec![0f32; 64 * 8];
         let nb = d.tc.n_blocks();
+        let kp = KernelParams::default();
         {
             let o1 = SharedOut::new(&mut buf1);
-            spmm_blocks(&d.tc, Some(&tcf), Decode::Bitmap, &flags, 0, nb, 64, &b, &o1, &c1);
+            spmm_blocks(&d.tc, Some(&tcf), Decode::Bitmap, &flags, 0, nb, 64, &b, &o1, &c1, &kp);
             let o2 = SharedOut::new(&mut buf2);
-            spmm_blocks(&d.tc, Some(&tcf), Decode::Traversal, &flags, 0, nb, 64, &b, &o2, &c2);
+            spmm_blocks(
+                &d.tc,
+                Some(&tcf),
+                Decode::Traversal,
+                &flags,
+                0,
+                nb,
+                64,
+                &b,
+                &o2,
+                &c2,
+                &kp,
+            );
         }
         assert_eq!(c1.snapshot().traversal_steps, 0);
         assert!(c2.snapshot().traversal_steps > d.tc.nnz() as u64);
@@ -342,6 +406,7 @@ mod tests {
                 &b,
                 &out,
                 &counters,
+                &KernelParams::default(),
             );
         }
         let expect = m.sddmm_dense_ref(&a, &b);

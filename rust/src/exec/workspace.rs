@@ -79,6 +79,10 @@ pub struct Workspace {
     scratch: Vec<Mutex<Vec<f32>>>,
     structured: Mutex<StructuredBufs>,
     pack: Mutex<PackBufs>,
+    /// Staging copies of the dense operand(s) for the reduced-precision
+    /// `quant_dense` path (empty unless that mode is used).
+    half_dense: Vec<f32>,
+    half_dense_b: Vec<f32>,
 }
 
 impl Workspace {
@@ -118,7 +122,12 @@ impl Workspace {
             (p.bm_words.capacity() + p.values.capacity()) * 4
                 + (p.gathered.capacity() + p.scale.capacity()) * 4
         };
-        self.flex_buf.capacity() * 4 + scratch + lock(&self.structured).resident_bytes() + pack
+        let half = (self.half_dense.capacity() + self.half_dense_b.capacity()) * 4;
+        self.flex_buf.capacity() * 4
+            + scratch
+            + lock(&self.structured).resident_bytes()
+            + pack
+            + half
     }
 
     /// Grow the per-task scratch pool to `tasks` slots of at least
@@ -160,6 +169,27 @@ impl Workspace {
     /// scratch-free).
     pub(crate) fn pack_bufs(&self) -> &Mutex<PackBufs> {
         &self.pack
+    }
+
+    /// The structured engine's staging buffers — the slot the
+    /// standalone [`crate::exec::structured::spmm_blocks`] fallback
+    /// borrows via [`with_default`] so it stops allocating per call.
+    pub(crate) fn structured_bufs(&self) -> &Mutex<StructuredBufs> {
+        &self.structured
+    }
+
+    /// Take the dense-operand quantization staging buffer (returned
+    /// via [`Workspace::put_half_dense`] so its allocation is reused
+    /// across calls). Two slots: SDDMM quantizes both A and B.
+    pub(crate) fn take_half_dense(&mut self) -> (Vec<f32>, Vec<f32>) {
+        (std::mem::take(&mut self.half_dense), std::mem::take(&mut self.half_dense_b))
+    }
+
+    /// Return the quantization staging buffers taken by
+    /// [`Workspace::take_half_dense`].
+    pub(crate) fn put_half_dense(&mut self, a: Vec<f32>, b: Vec<f32>) {
+        self.half_dense = a;
+        self.half_dense_b = b;
     }
 
     /// Drop every buffer if residency exceeds `max_bytes`. Bounds the

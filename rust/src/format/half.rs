@@ -1,0 +1,300 @@
+//! Reduced-precision value storage: software bf16 / f16 codecs.
+//!
+//! The paper's structured engine feeds Tensor Cores in 16-bit (tf32 /
+//! fp16) with f32 accumulation; FlashSparse (PAPERS.md) makes the
+//! error-bound story for that path explicit. The CPU substrate mirrors
+//! it here: a [`Precision`] selects how sparse values (and optionally
+//! the dense operand) are *stored* — compute always runs in f32. The
+//! codecs are self-contained round-to-nearest-even conversions, so the
+//! reduced-precision path adds no dependencies and stays MSRV-safe.
+//!
+//! Quantization is applied by round-tripping f32 buffers through the
+//! 16-bit encoding in place: the stored f32 values are then exactly
+//! the values a real 16-bit buffer would decode to, which makes the
+//! executor kernels precision-agnostic while the *numerics* match a
+//! true 16-bit value path bit-for-bit.
+
+/// Storage precision for sparse values (and optionally the dense
+/// operand). Compute and accumulation are always f32.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Full single precision (the default; numerically exact path).
+    #[default]
+    F32,
+    /// bfloat16: 8 exponent bits, 7 mantissa bits (f32 range, ~2–3
+    /// significant decimal digits). The TCU tf32/bf16 analogue.
+    Bf16,
+    /// IEEE 754 half: 5 exponent bits, 10 mantissa bits (narrow range,
+    /// ~3 significant decimal digits). The TCU fp16 analogue.
+    F16,
+}
+
+impl Precision {
+    /// Bytes one stored value occupies under this precision.
+    pub fn value_bytes(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::Bf16 => 2,
+            Precision::F16 => 2,
+        }
+    }
+
+    /// Unit roundoff `u`: round-to-nearest quantization satisfies
+    /// `|q(x) - x| <= u * |x|` for `x` in the format's normal range.
+    pub fn unit_roundoff(self) -> f32 {
+        match self {
+            Precision::F32 => f32::EPSILON / 2.0, // 2^-24
+            Precision::Bf16 => 1.0 / 256.0,       // 2^-8
+            Precision::F16 => 1.0 / 2048.0,       // 2^-11
+        }
+    }
+
+    /// Parse a CLI-style name (`f32` | `bf16` | `f16`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f32" => Some(Precision::F32),
+            "bf16" => Some(Precision::Bf16),
+            "f16" => Some(Precision::F16),
+            _ => None,
+        }
+    }
+
+    /// Quantize one value to this precision's storage grid.
+    #[inline]
+    pub fn round_trip(self, x: f32) -> f32 {
+        match self {
+            Precision::F32 => x,
+            Precision::Bf16 => bf16_to_f32(f32_to_bf16(x)),
+            Precision::F16 => f16_to_f32(f32_to_f16(x)),
+        }
+    }
+
+    /// Quantize a buffer in place (no-op at [`Precision::F32`]).
+    pub fn round_trip_slice(self, xs: &mut [f32]) {
+        match self {
+            Precision::F32 => {}
+            Precision::Bf16 => {
+                for x in xs.iter_mut() {
+                    *x = bf16_to_f32(f32_to_bf16(*x));
+                }
+            }
+            Precision::F16 => {
+                for x in xs.iter_mut() {
+                    *x = f16_to_f32(f32_to_f16(*x));
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Precision::F32 => write!(f, "f32"),
+            Precision::Bf16 => write!(f, "bf16"),
+            Precision::F16 => write!(f, "f16"),
+        }
+    }
+}
+
+/// Encode an f32 as bfloat16 (round-to-nearest-even truncation of the
+/// low 16 mantissa bits).
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // keep it a NaN after truncation by forcing a payload bit
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = bits & 0xffff;
+    let mut hi = (bits >> 16) as u16;
+    if round > 0x8000 || (round == 0x8000 && hi & 1 == 1) {
+        // ties-to-even; the carry may ripple into the exponent, which
+        // correctly rounds up to the next binade (or to infinity)
+        hi = hi.wrapping_add(1);
+    }
+    hi
+}
+
+/// Decode a bfloat16 to f32 (exact: bf16 is a prefix of f32).
+#[inline]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Encode an f32 as IEEE 754 binary16 with round-to-nearest-even,
+/// including subnormal outputs and overflow-to-infinity.
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    if x.is_nan() {
+        return sign | 0x7e00;
+    }
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        return sign | 0x7c00; // infinity
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow to infinity
+    }
+    if e <= 0 {
+        // subnormal half (or zero): the implicit bit joins the
+        // mantissa and the whole significand shifts right
+        if e < -10 {
+            return sign; // below half the smallest subnormal: zero
+        }
+        let full = man | 0x0080_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let half_man = full >> shift;
+        let rem = full & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let mut h = half_man as u16;
+        if rem > halfway || (rem == halfway && h & 1 == 1) {
+            h += 1; // may carry up into the normal range: still correct
+        }
+        return sign | h;
+    }
+    // normal half: round the dropped 13 mantissa bits to nearest-even
+    let half_man = (man >> 13) as u16;
+    let rem = man & 0x1fff;
+    let mut h = ((e as u16) << 10) | half_man;
+    if rem > 0x1000 || (rem == 0x1000 && h & 1 == 1) {
+        h += 1; // carry ripples into the exponent correctly
+    }
+    sign | h
+}
+
+/// Decode an IEEE 754 binary16 to f32 (exact).
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let man = (h & 0x03ff) as u32;
+    if exp == 0x1f {
+        let bits = if man == 0 { 0x7f80_0000 } else { 0x7fc0_0000 | (man << 13) };
+        return f32::from_bits(sign | bits);
+    }
+    if exp == 0 {
+        // subnormal: man * 2^-24, exactly representable in f32
+        let mag = man as f32 * (1.0 / 16_777_216.0);
+        return if sign != 0 { -mag } else { mag };
+    }
+    f32::from_bits(sign | ((exp as u32 + 112) << 23) | (man << 13))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn bf16_exact_values_round_trip() {
+        // every value with <= 8 significand bits is exact in bf16
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, -2.5, 3.625, 1024.0, -1.5e30] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(x)).to_bits(), x.to_bits(), "{x}");
+        }
+        assert_eq!(f32_to_bf16(f32::INFINITY), 0x7f80);
+        assert_eq!(f32_to_bf16(f32::NEG_INFINITY), 0xff80);
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1.0 + 2^-8 sits exactly halfway between 1.0 and 1.0078125
+        // (the next bf16): ties-to-even keeps the even mantissa (1.0)
+        let tie = f32::from_bits(0x3f80_8000);
+        assert_eq!(bf16_to_f32(f32_to_bf16(tie)), 1.0);
+        // just above the tie rounds up
+        let above = f32::from_bits(0x3f80_8001);
+        assert_eq!(bf16_to_f32(f32_to_bf16(above)), 1.0078125);
+        // odd-mantissa tie rounds up to even
+        let odd_tie = f32::from_bits(0x3f81_8000);
+        assert_eq!(bf16_to_f32(f32_to_bf16(odd_tie)), 1.015625);
+    }
+
+    #[test]
+    fn f16_exact_values_round_trip() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.5, 65504.0, -65504.0, 6.103515625e-5] {
+            assert_eq!(f16_to_f32(f32_to_f16(x)).to_bits(), x.to_bits(), "{x}");
+        }
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16(-70000.0), 0xfc00, "overflow must saturate to -inf");
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        // smallest positive subnormal: 2^-24
+        let tiny = f32::from_bits(0x3380_0000); // 2^-24
+        assert_eq!(f32_to_f16(tiny), 0x0001);
+        assert_eq!(f16_to_f32(0x0001), tiny);
+        // 2^-25 is exactly halfway to zero: ties-to-even gives zero
+        assert_eq!(f32_to_f16(f32::from_bits(0x3300_0000)), 0x0000);
+        // just above the halfway point rounds up to the subnormal
+        assert_eq!(f32_to_f16(f32::from_bits(0x3300_0001)), 0x0001);
+        // largest subnormal round-trips
+        assert_eq!(f16_to_f32(0x03ff).to_bits(), f32::from_bits(0x387f_c000).to_bits());
+        assert_eq!(f32_to_f16(f16_to_f32(0x03ff)), 0x03ff);
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1.0 + 2^-11 is halfway between 1.0 and the next half: even
+        let tie = f32::from_bits(0x3f80_1000);
+        assert_eq!(f16_to_f32(f32_to_f16(tie)), 1.0);
+        let above = f32::from_bits(0x3f80_1001);
+        assert_eq!(f16_to_f32(f32_to_f16(above)).to_bits(), f32::from_bits(0x3f80_2000).to_bits());
+    }
+
+    #[test]
+    fn quantization_respects_unit_roundoff() {
+        let mut rng = SplitMix64::new(900);
+        for p in [Precision::Bf16, Precision::F16] {
+            let u = p.unit_roundoff();
+            for _ in 0..2000 {
+                // magnitudes in [1e-4, 1e3]: inside f16's *normal*
+                // range, where the relative bound is guaranteed
+                let mag = 10f32.powi(rng.range(0, 7) as i32 - 3);
+                let sign = if rng.chance(0.5) { 1.0 } else { -1.0 };
+                let x = sign * rng.f32_range(0.1, 1.0) * mag;
+                let q = p.round_trip(x);
+                assert!(
+                    (q - x).abs() <= u * x.abs(),
+                    "{p}: q({x}) = {q} outside the {u} relative bound"
+                );
+                // idempotent: the grid is a fixed point
+                assert_eq!(p.round_trip(q).to_bits(), q.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip_slice_matches_scalar() {
+        let mut rng = SplitMix64::new(901);
+        let xs: Vec<f32> = (0..64).map(|_| rng.f32_range(-3.0, 3.0)).collect();
+        for p in [Precision::F32, Precision::Bf16, Precision::F16] {
+            let mut ys = xs.clone();
+            p.round_trip_slice(&mut ys);
+            for (x, y) in xs.iter().zip(&ys) {
+                assert_eq!(p.round_trip(*x).to_bits(), y.to_bits());
+            }
+        }
+        // empty slices are fine
+        Precision::F16.round_trip_slice(&mut []);
+    }
+
+    #[test]
+    fn parse_and_display() {
+        for p in [Precision::F32, Precision::Bf16, Precision::F16] {
+            assert_eq!(Precision::parse(&p.to_string()), Some(p));
+        }
+        assert_eq!(Precision::parse("fp64"), None);
+        assert_eq!(Precision::default(), Precision::F32);
+        assert_eq!(Precision::F32.value_bytes(), 4);
+        assert_eq!(Precision::Bf16.value_bytes(), 2);
+        assert_eq!(Precision::F16.value_bytes(), 2);
+    }
+}

@@ -12,10 +12,12 @@
 
 pub mod bitmap;
 pub mod blocks;
+pub mod half;
 pub mod legacy;
 
 pub use bitmap::{decode_block, encode_block, prefix_popcount};
 pub use blocks::{TcBlocks, PAD_COL};
+pub use half::Precision;
 
 /// Rows per window (the paper's SGT window height / MMA `m`).
 pub const WINDOW: usize = 8;

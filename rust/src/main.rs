@@ -1,8 +1,8 @@
 //! Libra CLI: preprocess, run, serve, and inspect hybrid sparse operators.
 //!
 //! Subcommands:
-//!   spmm   --matrix <.mtx|gen:SPEC> [--n 128] [--theta auto|auto-refined|N] [--backend ...]
-//!   sddmm  --matrix <.mtx|gen:SPEC> [--k 32]  [--theta auto|auto-refined|N] [--backend ...]
+//!   spmm   --matrix <.mtx|gen:SPEC> [--n 128] [--theta auto|auto-refined|N] [--precision f32|bf16|f16]
+//!   sddmm  --matrix <.mtx|gen:SPEC> [--k 32]  [--theta auto|auto-refined|N] [--precision f32|bf16|f16]
 //!   stats  --matrix <.mtx|gen:SPEC>            sparsity profile + distribution preview
 //!   tune   [--matrix SPEC] [--n 128] [--k 32]  resolve θ through the serving Planner path
 //!   gnn    [--model gcn|agnn] [--epochs 50]    train on a synthetic citation graph
@@ -21,6 +21,7 @@ use libra::costmodel::{self, HardwareProfile};
 use libra::dist::{DistParams, Op};
 use libra::exec::sddmm::SddmmExecutor;
 use libra::exec::{SpmmExecutor, TcBackend};
+use libra::format::Precision;
 use libra::planner::{fmt_theta, Planner, ThetaPolicy};
 use libra::serve::{
     Cluster, ClusterConfig, Engine, EngineConfig, MicroBatchParams, MicroBatcher, Request, Routing,
@@ -41,11 +42,12 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "spmm" => cmd_spmm(&parse_flags(
             rest,
-            &["matrix", "n", "theta", "backend", "seed", "json", "batch"],
+            &["matrix", "n", "theta", "backend", "seed", "json", "batch", "precision"],
         )?),
-        "sddmm" => {
-            cmd_sddmm(&parse_flags(rest, &["matrix", "k", "theta", "backend", "seed", "json"])?)
-        }
+        "sddmm" => cmd_sddmm(&parse_flags(
+            rest,
+            &["matrix", "k", "theta", "backend", "seed", "json", "precision"],
+        )?),
         "stats" => cmd_stats(&parse_flags(rest, &["matrix", "seed"])?),
         "tune" => cmd_tune(&parse_flags(rest, &["matrix", "n", "k", "seed"])?),
         "gnn" => cmd_gnn(&parse_flags(rest, &["model", "epochs", "batch", "graphs", "theta"])?),
@@ -54,7 +56,7 @@ fn main() -> Result<()> {
             &[
                 "patterns", "requests", "workers", "n", "size", "theta", "backend", "seed",
                 "cache-mb", "batch", "microbatch", "linger-us", "batch-kb", "shards", "tenants",
-                "qdepth",
+                "qdepth", "precision",
             ],
         )?),
         "--help" | "-h" | "help" => {
@@ -70,8 +72,9 @@ fn print_usage() {
         "libra — heterogeneous sparse matrix multiplication\n\n\
          usage: libra <spmm|sddmm|stats|tune|gnn|serve> [flags]\n\
          \x20 spmm   --matrix <path.mtx|gen:SPEC> [--n 128] [--theta auto|auto-refined|N] [--backend native|pjrt] [--seed 42] [--json]\n\
-         \x20        [--batch N]  (N>1: compose N member graphs block-diagonally; compare vs the per-graph loop)\n\
+         \x20        [--precision f32|bf16|f16] [--batch N]  (N>1: compose N member graphs block-diagonally)\n\
          \x20 sddmm  --matrix <path.mtx|gen:SPEC> [--k 32]  [--theta auto|auto-refined|N] [--backend native|pjrt] [--seed 42] [--json]\n\
+         \x20        [--precision f32|bf16|f16]  (store sparse values bf16/f16-quantized; compute stays f32)\n\
          \x20 stats  --matrix <path.mtx|gen:SPEC> [--seed 42]\n\
          \x20 tune   [--matrix <path.mtx|gen:SPEC>] [--n 128] [--k 32] [--seed 42]\n\
          \x20 gnn    [--model gcn|agnn] [--epochs 50] [--theta auto|auto-refined|N] [--batch B] [--graphs G]\n\
@@ -80,6 +83,7 @@ fn print_usage() {
          \x20        [--theta auto|auto-refined|N] [--backend native|pjrt] [--seed 42] [--cache-mb 256] [--batch 8]\n\
          \x20        [--microbatch] [--linger-us 2000] [--batch-kb 2048]  (coalesce requests into block-diagonal batches)\n\
          \x20        [--shards S] [--tenants T] [--qdepth Q]  (scale-out: shard cluster, zipf tenant tags, bounded admission)\n\
+         \x20        [--precision f32|bf16|f16]  (precision-qualified plan-cache entries; not with --microbatch)\n\
          gen:SPEC: gen:powerlaw:N:DEG | gen:banded:N:BAND | gen:uniform:N:DENSITY | gen:blockdiag:N:BLOCKS\n\
          (--theta defaults to auto: cost-model tuning on the matrix histogram, one Planner path\n\
          \x20 shared by every subcommand and the serving engine; unknown flags are rejected)"
@@ -195,6 +199,16 @@ fn theta(flags: &HashMap<String, String>, m: &Csr, op: Op, n: usize) -> Result<D
     Ok(Planner::new(theta_policy(flags)?).resolve(m, op, n))
 }
 
+/// Parse `--precision f32|bf16|f16` (default: f32).
+fn precision(flags: &HashMap<String, String>) -> Result<Precision> {
+    match flags.get("precision").map(String::as_str) {
+        None => Ok(Precision::F32),
+        Some(v) => Precision::parse(v).ok_or_else(|| {
+            anyhow::anyhow!("invalid value '{v}' for --precision (f32, bf16, or f16)")
+        }),
+    }
+}
+
 fn cmd_spmm(flags: &HashMap<String, String>) -> Result<()> {
     let batch: usize = flags.get("batch").and_then(|s| s.parse().ok()).unwrap_or(1);
     if batch > 1 {
@@ -204,7 +218,11 @@ fn cmd_spmm(flags: &HashMap<String, String>) -> Result<()> {
     let n: usize = flags.get("n").and_then(|s| s.parse().ok()).unwrap_or(128);
     let json = flags.contains_key("json");
     let params = theta(flags, &m, Op::Spmm, n)?;
-    let exec = SpmmExecutor::new(&m, &params, &BalanceParams::default(), backend(flags)?);
+    let prec = precision(flags)?;
+    let mut exec = SpmmExecutor::new(&m, &params, &BalanceParams::default(), backend(flags)?);
+    if prec != Precision::F32 {
+        exec.set_precision(prec);
+    }
     if !json {
         println!(
             "matrix {}x{} nnz={} | theta={} ({}) -> {} blocks ({:.1}% padding), {} flex nnz",
@@ -272,6 +290,7 @@ fn cmd_spmm_batch(flags: &HashMap<String, String>, n_members: usize) -> Result<(
     let params = Planner::new(theta_policy(flags)?)
         .resolve_batch(&GraphBatch::compose(&members)?, Op::Spmm, n);
     let backend = backend(flags)?;
+    let prec = precision(flags)?;
     let nnz: usize = members.iter().map(|m| m.nnz()).sum();
     let mut rng = SplitMix64::new(1);
     let bs: Vec<Dense> = members.iter().map(|m| Dense::random(&mut rng, m.cols, n)).collect();
@@ -282,7 +301,11 @@ fn cmd_spmm_batch(flags: &HashMap<String, String>, n_members: usize) -> Result<(
     let t = std::time::Instant::now();
     for _ in 0..reps {
         for (m, b) in members.iter().zip(&bs) {
-            let exec = SpmmExecutor::new(m, &params, &BalanceParams::default(), backend.clone());
+            let mut exec =
+                SpmmExecutor::new(m, &params, &BalanceParams::default(), backend.clone());
+            if prec != Precision::F32 {
+                exec.set_precision(prec);
+            }
             std::hint::black_box(exec.execute(b)?);
         }
     }
@@ -294,7 +317,10 @@ fn cmd_spmm_batch(flags: &HashMap<String, String>, n_members: usize) -> Result<(
         let gb = GraphBatch::compose(&members)?;
         let plan =
             preprocess_spmm_batch(&gb, &params, &BalanceParams::default(), PrepMode::Sequential);
-        let exec = SpmmExecutor::from_plan(plan.plan, backend.clone());
+        let mut exec = SpmmExecutor::from_plan(plan.plan, backend.clone());
+        if prec != Precision::F32 {
+            exec.set_precision(prec);
+        }
         std::hint::black_box(exec.execute_batch(&gb, &bs)?);
     }
     let bat = t.elapsed().as_secs_f64() / reps as f64;
@@ -327,7 +353,11 @@ fn cmd_sddmm(flags: &HashMap<String, String>) -> Result<()> {
     let k: usize = flags.get("k").and_then(|s| s.parse().ok()).unwrap_or(32);
     let json = flags.contains_key("json");
     let params = theta(flags, &m, Op::Sddmm, k)?;
-    let exec = SddmmExecutor::new(&m, &params, backend(flags)?);
+    let prec = precision(flags)?;
+    let mut exec = SddmmExecutor::new(&m, &params, backend(flags)?);
+    if prec != Precision::F32 {
+        exec.set_precision(prec);
+    }
     let mut rng = SplitMix64::new(2);
     let a = Dense::random(&mut rng, m.rows, k);
     let b = Dense::random(&mut rng, m.cols, k);
@@ -516,6 +546,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let batch = get(flags, "batch", 8)?.max(1);
     let seed: u64 = get(flags, "seed", 42)?;
     let microbatch = flags.contains_key("microbatch");
+    let prec = precision(flags)?;
+    if microbatch && prec != Precision::F32 {
+        bail!("--precision is not supported with --microbatch (coalesced batch plans are f32)");
+    }
     let linger_us: u64 = get(flags, "linger-us", 2000)?;
     let batch_kb: usize = get(flags, "batch-kb", 2048)?.max(1);
     let shards = get(flags, "shards", 1)?.max(1);
@@ -609,8 +643,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
                 for v in m.values.iter_mut() {
                     *v = rng.f32_range(-1.0, 1.0);
                 }
-                match cluster.submit_async(tenant, Request::spmm(m, b.clone()).with_theta(policy))
-                {
+                let req = Request::spmm(m, b.clone()).with_theta(policy).with_precision(prec);
+                match cluster.submit_async(tenant, req) {
                     Ok(t) => in_flight.push_back(t),
                     Err(_) => shed += 1,
                 }
@@ -687,8 +721,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             for v in m.values.iter_mut() {
                 *v = rng.f32_range(-1.0, 1.0);
             }
-            in_flight
-                .push_back(engine.submit_async(Request::spmm(m, b.clone()).with_theta(policy)));
+            let req = Request::spmm(m, b.clone()).with_theta(policy).with_precision(prec);
+            in_flight.push_back(engine.submit_async(req));
         }
         for t in in_flight {
             errors += t.wait().result.is_err() as usize;

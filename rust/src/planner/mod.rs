@@ -32,7 +32,7 @@
 //! tuning can never disagree.
 
 use crate::balance::BalanceParams;
-use crate::costmodel::{self, HardwareProfile};
+use crate::costmodel::{self, HardwareProfile, KernelProfile};
 use crate::dist::{DistParams, Op};
 use crate::exec::sddmm::SddmmExecutor;
 use crate::exec::{SpmmExecutor, TcBackend, Threading};
@@ -100,6 +100,10 @@ pub struct Planner {
     pub fill_padding: bool,
     /// Preprocessing mode for the `plan_*` helpers.
     pub mode: PrepMode,
+    /// Kernel-layer mode θ is priced for (defaults to the executors'
+    /// default lanes + panels mode; set via [`Planner::with_kernel`]
+    /// when planning for the scalar or reduced-precision paths).
+    pub kernel: KernelProfile,
 }
 
 impl Default for Planner {
@@ -118,6 +122,7 @@ impl Planner {
             balance: BalanceParams::default(),
             fill_padding: true,
             mode: PrepMode::Sequential,
+            kernel: KernelProfile::default(),
         }
     }
 
@@ -133,6 +138,11 @@ impl Planner {
 
     pub fn with_mode(mut self, mode: PrepMode) -> Self {
         self.mode = mode;
+        self
+    }
+
+    pub fn with_kernel(mut self, kernel: KernelProfile) -> Self {
+        self.kernel = kernel;
         self
     }
 
@@ -160,7 +170,7 @@ impl Planner {
             }
             ThetaPolicy::AutoRefined => {
                 let hist = costmodel::unit_histogram(m, op);
-                let star = costmodel::tune_threshold(&self.hw, op, &hist, n);
+                let star = costmodel::tune_threshold_with(&self.hw, op, &hist, n, &self.kernel);
                 self.params_for_theta(op, self.refine(m, op, n, star))
             }
         }
@@ -174,7 +184,10 @@ impl Planner {
     pub fn resolve_from_hist(&self, hist: &[usize], op: Op, n: usize) -> DistParams {
         match self.policy {
             ThetaPolicy::Fixed(t) => self.params_for_theta(op, t),
-            _ => self.params_for_theta(op, costmodel::tune_threshold(&self.hw, op, hist, n)),
+            _ => {
+                let t = costmodel::tune_threshold_with(&self.hw, op, hist, n, &self.kernel);
+                self.params_for_theta(op, t)
+            }
         }
     }
 
@@ -393,6 +406,17 @@ mod tests {
     }
 
     #[test]
+    fn with_kernel_threads_profile_into_tuning() {
+        let mut rng = SplitMix64::new(907);
+        let m = gen::power_law(&mut rng, 300, 8.0, 2.0);
+        let sc = KernelProfile::scalar();
+        let p = Planner::new(ThetaPolicy::Auto).with_kernel(sc);
+        let hist = costmodel::unit_histogram(&m, Op::Spmm);
+        let want = costmodel::tune_threshold_with(&p.hw, Op::Spmm, &hist, 64, &sc);
+        assert_eq!(p.resolve(&m, Op::Spmm, 64), p.params_for_theta(Op::Spmm, want));
+    }
+
+    #[test]
     fn auto_refined_stays_near_the_model_optimum() {
         let p = Planner::new(ThetaPolicy::AutoRefined);
         let mut rng = SplitMix64::new(902);
@@ -496,8 +520,10 @@ mod tests {
             let p = Planner::new(ThetaPolicy::Auto);
             for (op, n) in [(Op::Spmm, 32), (Op::Sddmm, 16)] {
                 let hist = costmodel::unit_histogram(&m, op);
-                let star = costmodel::tune_threshold(&p.hw, op, &hist, n);
-                let t = |theta| costmodel::predict_hybrid_time(&p.hw, op, &hist, n, theta);
+                let star = costmodel::tune_threshold_with(&p.hw, op, &hist, n, &p.kernel);
+                let t = |theta| {
+                    costmodel::predict_hybrid_time_with(&p.hw, op, &hist, n, theta, &p.kernel)
+                };
                 let auto = t(star);
                 assert!(auto <= t(1) + 1e-18, "{op:?}: auto worse than tc-only");
                 let sentinel = costmodel::max_unit_nnz(op) + 1;

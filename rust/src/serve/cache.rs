@@ -18,6 +18,7 @@
 use crate::balance::BalanceParams;
 use crate::delta::EdgeDelta;
 use crate::dist::{DistParams, Op};
+use crate::format::Precision;
 use crate::prep::{SddmmPlan, SpmmPlan};
 use crate::sparse::{Csr, PatternDigests, PatternFingerprint};
 use std::collections::HashMap;
@@ -43,6 +44,12 @@ pub struct PlanKey {
     pub cs: usize,
     pub short_len: usize,
     pub balance_enabled: bool,
+    /// Requested value precision. Cached plan *contents* are always
+    /// full-precision f32 (quantization happens on the executor's
+    /// private clone at resolve time), but the executor a request
+    /// resolves to depends on it, so it is part of the key: a bf16
+    /// request must never be served a warm f32 executor or vice versa.
+    pub precision: Precision,
 }
 
 impl PlanKey {
@@ -56,6 +63,7 @@ impl PlanKey {
             cs: b.cs,
             short_len: b.short_len,
             balance_enabled: b.enabled,
+            precision: Precision::F32,
         }
     }
 
@@ -72,7 +80,13 @@ impl PlanKey {
             cs: b.cs,
             short_len: b.short_len,
             balance_enabled: b.enabled,
+            precision: Precision::F32,
         }
+    }
+
+    /// The same key at another value precision.
+    pub fn with_precision(self, precision: Precision) -> Self {
+        Self { precision, ..self }
     }
 }
 
@@ -481,6 +495,11 @@ mod tests {
         // now embeds the balanced schedule)
         let b2 = BalanceParams { ts: 7, ..b };
         assert_ne!(PlanKey::sddmm(fp, &d1, &b), PlanKey::sddmm(fp, &d1, &b2));
+        // a bf16 request must never share a warm entry with f32
+        let k = PlanKey::spmm(fp, &d1, &b);
+        assert_eq!(k.precision, Precision::F32);
+        assert_ne!(k, k.with_precision(Precision::Bf16));
+        assert_eq!(k.with_precision(Precision::F32), k);
     }
 
     #[test]

@@ -38,6 +38,7 @@ use crate::delta::EdgeDelta;
 use crate::dist::{DistParams, Op};
 use crate::exec::sddmm::SddmmExecutor;
 use crate::exec::{SpmmExecutor, TcBackend, Workspace};
+use crate::format::Precision;
 use crate::planner::{Planner, ThetaPolicy};
 use crate::sparse::{Csr, Dense, PatternFingerprint};
 use std::collections::HashMap;
@@ -90,6 +91,10 @@ pub struct Request {
     pub dist: Option<DistParams>,
     /// Balancing override (both ops); `None` uses the defaults.
     pub balance: Option<BalanceParams>,
+    /// Value precision for execution (defaults to f32). Non-f32
+    /// requests resolve to an executor whose stored values are rounded
+    /// through the 16-bit format; the cached plan itself stays f32.
+    pub precision: Precision,
 }
 
 impl Request {
@@ -100,6 +105,7 @@ impl Request {
             theta: ThetaPolicy::Auto,
             dist: None,
             balance: None,
+            precision: Precision::F32,
         }
     }
 
@@ -110,6 +116,7 @@ impl Request {
             theta: ThetaPolicy::Auto,
             dist: None,
             balance: None,
+            precision: Precision::F32,
         }
     }
 
@@ -121,6 +128,7 @@ impl Request {
             theta: ThetaPolicy::Auto,
             dist: None,
             balance: None,
+            precision: Precision::F32,
         }
     }
 
@@ -132,6 +140,7 @@ impl Request {
             theta: ThetaPolicy::Auto,
             dist: None,
             balance: None,
+            precision: Precision::F32,
         }
     }
 
@@ -149,6 +158,12 @@ impl Request {
 
     pub fn with_balance(mut self, b: BalanceParams) -> Self {
         self.balance = Some(b);
+        self
+    }
+
+    /// Request execution at a reduced value precision (bf16 / f16).
+    pub fn with_precision(mut self, p: Precision) -> Self {
+        self.precision = p;
         self
     }
 
@@ -176,6 +191,9 @@ pub struct DeltaRequest {
     pub theta: ThetaPolicy,
     pub dist: Option<DistParams>,
     pub balance: Option<BalanceParams>,
+    /// Precision of the cached plan entry the delta patches (the
+    /// serving key is precision-qualified).
+    pub precision: Precision,
     /// The base matrix; enables a cold rebuild when the patch path is
     /// unavailable (base plan evicted / pattern state shed).
     pub base: Option<Csr>,
@@ -191,6 +209,7 @@ impl DeltaRequest {
             theta: ThetaPolicy::Auto,
             dist: None,
             balance: None,
+            precision: Precision::F32,
             base: None,
         }
     }
@@ -217,6 +236,12 @@ impl DeltaRequest {
 
     pub fn with_balance(mut self, b: BalanceParams) -> Self {
         self.balance = Some(b);
+        self
+    }
+
+    /// Target a precision-qualified cache entry (bf16 / f16).
+    pub fn with_precision(mut self, p: Precision) -> Self {
+        self.precision = p;
         self
     }
 }
@@ -493,7 +518,8 @@ impl Engine {
         Ok(match op {
             Op::Spmm => PlanKey::spmm(fp, &d, &bal),
             Op::Sddmm => PlanKey::sddmm(fp, &d, &bal),
-        })
+        }
+        .with_precision(req.precision))
     }
 
     /// Resolve `DistParams` under a [`ThetaPolicy`], memoized per
@@ -553,7 +579,8 @@ impl Engine {
         let old_key = match req.op {
             Op::Spmm => PlanKey::spmm(req.fp, &d, &bal),
             Op::Sddmm => PlanKey::sddmm(req.fp, &d, &bal),
-        };
+        }
+        .with_precision(req.precision);
         match self.cache.apply_delta(&old_key, &req.delta) {
             Ok(applied) => {
                 self.metrics.add(&self.metrics.delta_patched, 1);
@@ -720,6 +747,9 @@ fn execute_one(
             let mut exec =
                 resolve_spmm(key, payload, &dparams, cache, metrics, backend, cache_hit)?;
             exec.flex_threads = flex_threads;
+            if key.precision != Precision::F32 {
+                exec.set_precision(key.precision);
+            }
             timing.prep_secs = t.elapsed().as_secs_f64();
             let t = Instant::now();
             let mut out = Dense::zeros(exec.dist.rows, b.cols);
@@ -731,6 +761,9 @@ fn execute_one(
             let mut exec =
                 resolve_sddmm(key, payload, &dparams, cache, metrics, backend, cache_hit)?;
             exec.flex_threads = flex_threads;
+            if key.precision != Precision::F32 {
+                exec.set_precision(key.precision);
+            }
             timing.prep_secs = t.elapsed().as_secs_f64();
             let t = Instant::now();
             let out = exec.execute_with(&a, &b, ws)?;
@@ -950,6 +983,31 @@ mod tests {
         // the worker's persistent workspace held flexible-stream
         // buffers after serving (honest resident-memory accounting)
         assert!(rep.peak_worker_workspace_bytes > 0, "workspace residency must be reported");
+    }
+
+    #[test]
+    fn reduced_precision_requests_are_keyed_separately() {
+        let eng = engine(1, 64 << 20);
+        let mut rng = SplitMix64::new(503);
+        let m = gen::power_law(&mut rng, 250, 8.0, 2.0);
+        let b = Dense::random(&mut rng, 250, 32);
+        let reference = m.spmm_dense_ref(&b);
+
+        let full = eng.submit(Request::spmm(m.clone(), b.clone()));
+        assert!(!full.cache_hit);
+        assert!(full.result.unwrap().into_dense().unwrap().allclose(&reference, 1e-3));
+
+        // a bf16 request against the same pattern is a distinct cache
+        // entry — it must never be served off the warm f32 executor
+        let req = Request::spmm(m.clone(), b.clone()).with_precision(Precision::Bf16);
+        let quant = eng.submit(req);
+        assert!(!quant.cache_hit, "precision must qualify the plan key");
+        assert!(quant.result.unwrap().into_dense().unwrap().allclose(&reference, 5e-2));
+
+        // and the bf16 entry itself warms up on repeat traffic
+        let again = eng.submit(Request::spmm(m, b).with_precision(Precision::Bf16));
+        assert!(again.cache_hit, "repeat bf16 traffic must hit its own entry");
+        assert!(again.result.unwrap().into_dense().unwrap().allclose(&reference, 5e-2));
     }
 
     #[test]

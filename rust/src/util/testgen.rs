@@ -13,6 +13,17 @@ use crate::format::WINDOW;
 use crate::sparse::{gen, Coo, Csr};
 use crate::util::SplitMix64;
 
+/// Realistic GNN feature widths for kernel tests and the tab15 sweep:
+/// below one lane (7), exactly one lane (8), the common hidden sizes
+/// (32, 128), and a wide non-multiple-of-8 width spanning multiple
+/// cache panels (250).
+pub const WIDE_FEATURE_WIDTHS: [usize; 5] = [7, 8, 32, 128, 250];
+
+/// Draw one width from [`WIDE_FEATURE_WIDTHS`].
+pub fn wide_feature_width(rng: &mut SplitMix64) -> usize {
+    WIDE_FEATURE_WIDTHS[rng.below(WIDE_FEATURE_WIDTHS.len())]
+}
+
 /// Dense-Bernoulli random CSR: each cell is present with probability
 /// `density`, values uniform in `[-1, 1)`. O(rows x cols) — meant for
 /// small property-test matrices where exact per-cell control matters;

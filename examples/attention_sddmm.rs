@@ -5,10 +5,10 @@
 //!
 //!     cargo run --release --example attention_sddmm
 
-use libra::costmodel;
-use libra::dist::{distribute_sddmm, DistParams, Op};
+use libra::dist::{distribute_sddmm, DistParams};
 use libra::exec::sddmm::SddmmExecutor;
 use libra::exec::TcBackend;
+use libra::planner::{fmt_theta, Planner, ThetaPolicy};
 use libra::sparse::{gen, Dense};
 use libra::util::SplitMix64;
 
@@ -35,10 +35,14 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // attention scores via the tuned hybrid executor
-    let params = costmodel::substrate_params(Op::Sddmm, k);
-    println!("\ntuned threshold: {}", params.threshold);
-    let exec = SddmmExecutor::new(&adj, &params, TcBackend::NativeBitmap);
+    // attention scores via the tuned hybrid executor: θ resolution and
+    // plan building go through the Planner — the same path the serving
+    // engine and the CLI use (add `.with_reorder(ReorderPolicy::Auto)`
+    // to let the planner row-cluster the graph when profitable)
+    let planner = Planner::new(ThetaPolicy::Auto);
+    let (plan, params) = planner.plan_sddmm(&adj, k);
+    println!("\ntuned threshold: {}", fmt_theta(params.threshold));
+    let exec = SddmmExecutor::from_plan(plan, adj.clone(), TcBackend::NativeBitmap);
     let t = std::time::Instant::now();
     let scores = exec.execute(&q, &kmat)?;
     let secs = t.elapsed().as_secs_f64();

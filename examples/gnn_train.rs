@@ -39,8 +39,15 @@ fn main() -> anyhow::Result<()> {
     };
 
     // ---- GCN: 5 layers (128 -> 64 -> 64 -> 64 -> 16 classes pad) ----
-    let cfg =
-        TrainConfig { epochs, lr: 0.01, hidden: 64, layers: 5, precision: Precision::F32, seed: 7 };
+    let cfg = TrainConfig {
+        epochs,
+        lr: 0.01,
+        hidden: 64,
+        layers: 5,
+        precision: Precision::F32,
+        seed: 7,
+        ..Default::default()
+    };
     let params = costmodel::substrate_params(Op::Spmm, cfg.hidden);
     println!("\n== GCN ({} layers, {} epochs, theta={}) ==", cfg.layers, epochs, params.threshold);
     let stats = train_gcn(&data, &cfg, &params, TcBackend::NativeBitmap, dense.clone())?;
@@ -64,6 +71,7 @@ fn main() -> anyhow::Result<()> {
         layers: 4,
         precision: Precision::F32,
         seed: 9,
+        ..Default::default()
     };
     println!("\n== AGNN ({} prop layers, {} epochs) ==", acfg.layers - 2, acfg.epochs);
     let astats = train_agnn(&data, &acfg, &params, TcBackend::NativeBitmap, dense)?;

@@ -2,11 +2,14 @@
 //! profiles — shows that the optimal threshold is a property of the
 //! hardware (engine peak ratio), not of the matrix, and reproduces the
 //! paper's H100 optima (theta = 3 SpMM / ~24 SDDMM) from the model.
+//! Per-matrix resolution goes through `planner::Planner` — the same
+//! entry point the serving engine, the GNN trainer, and the CLI use.
 //!
 //!     cargo run --release --example threshold_tuning
 
 use libra::costmodel::{self, HardwareProfile};
 use libra::dist::Op;
+use libra::planner::{fmt_theta, Planner, ThetaPolicy};
 use libra::sparse::gen;
 use libra::util::SplitMix64;
 
@@ -34,13 +37,14 @@ fn main() {
     println!("\nhistogram-aware tuning per matrix (should match the analytic value):");
     for hw in &profiles {
         println!("  profile {}:", hw.name);
+        let planner = Planner::new(ThetaPolicy::Auto).with_hw(*hw);
         for (name, m) in &matrices {
-            let hist = costmodel::vector_histogram(m);
-            let theta = costmodel::tune_threshold(hw, Op::Spmm, &hist, 128);
+            let d = planner.resolve(m, Op::Spmm, 128);
             let nnz1 = libra::sparse::stats::nnz1_vector_ratio(m, 8);
             println!(
-                "    {name:<18} nnz1_ratio {:.2} -> theta = {theta}",
-                nnz1
+                "    {name:<18} nnz1_ratio {:.2} -> theta = {}",
+                nnz1,
+                fmt_theta(d.threshold)
             );
         }
     }

@@ -31,6 +31,7 @@ fn main() {
                 layers: 3,
                 precision: prec,
                 seed: 33,
+                ..Default::default()
             };
             let stats = train_gcn(
                 &data,

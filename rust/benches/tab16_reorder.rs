@@ -1,0 +1,140 @@
+//! Table 16 (reorder): affinity-based row reordering as a plan stage.
+//!
+//! The reorder stage (`reorder::decide`) clusters rows by degree
+//! bucket and column-support sketch before distribution, so rows with
+//! shared column structure land in the same 8-row window and densify
+//! the TC blocks; the executor folds the inverse permutation back out
+//! at write-back. This bench runs a skewed corpus — power-law plus
+//! row-shuffled column-clustered patterns (the adversarial case: real
+//! cluster structure hidden by row order) — through the Planner twice,
+//! `--reorder off` vs `auto`, and measures what the stage buys.
+//!
+//! Timing discipline follows tab15: inline single-stream execution,
+//! min-of-reps per cell, aggregate = total corpus time. The reordered
+//! timing includes the inverse-fold scatter — the stage pays its own
+//! overhead. **Gate**: CI's bench-smoke job fails (nonzero exit)
+//! unless Auto (a) strictly improves the aggregate TC-routed nonzero
+//! count over Off, and (b) improves aggregate SpMM exec time (2%
+//! tolerance for timer noise). Cells where the pre-metric declines to
+//! reorder produce identical plans and contribute zero delta.
+
+use libra::bench::Table;
+use libra::exec::{SpmmExecutor, TcBackend, Threading};
+use libra::planner::{Planner, ReorderPolicy, ThetaPolicy};
+use libra::reorder::RowPerm;
+use libra::sparse::{gen, Csr, Dense};
+use libra::util::SplitMix64;
+
+/// Skewed corpus: one power-law pattern plus column-clustered
+/// patterns whose rows are shuffled so the cluster structure is
+/// invisible to window-order distribution.
+fn corpus(rng: &mut SplitMix64, rows: usize) -> Vec<(String, Csr)> {
+    let shuffled = |rng: &mut SplitMix64, m: Csr| {
+        let mut order: Vec<u32> = (0..m.rows as u32).collect();
+        rng.shuffle(&mut order);
+        RowPerm::from_perm(order).apply_rows(&m)
+    };
+    let mut out = vec![("powerlaw-2.2".into(), gen::power_law(rng, rows, 10.0, 2.2))];
+    for (label, tightness, clusters) in
+        [("clustered-0.85x8", 0.85, 8), ("clustered-0.7x6", 0.7, 6), ("clustered-0.9x12", 0.9, 12)]
+    {
+        let m = gen::column_clustered(rng, rows, rows, rows * 14, tightness, clusters);
+        out.push((format!("{label}-shuffled"), shuffled(rng, m)));
+    }
+    out
+}
+
+/// Exec-only min-of-reps SpMM time on one plan (fold cost included
+/// when the plan carries a permutation).
+fn time_exec(e: &SpmmExecutor, b: &Dense, reps: usize) -> f64 {
+    let mut out = Dense::zeros(e.dist.rows, b.cols);
+    e.execute_into(b, &mut out).unwrap(); // warm
+    let mut best = f64::MAX;
+    for _ in 0..reps {
+        out.data.fill(0.0);
+        let t = std::time::Instant::now();
+        e.execute_into(b, &mut out).unwrap();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    let (reps, rows, widths): (usize, usize, &[usize]) = match libra::bench::scale() {
+        "smoke" => (4, 384, &[32]),
+        "full" => (8, 2048, &[32, 128]),
+        _ => (5, 1024, &[32, 64]),
+    };
+    let mut rng = SplitMix64::new(16);
+    let mats = corpus(&mut rng, rows);
+    println!(
+        "reorder: {} matrices (~{rows} rows), N sweep {widths:?}, min-of-{reps} inline timing",
+        mats.len()
+    );
+
+    let mut t = Table::new(
+        "Table 16: SpMM with --reorder off vs auto (TC routing and exec time)",
+        &["matrix", "N", "off tc%", "auto tc%", "reordered", "off ms", "auto ms", "speedup"],
+    );
+    let (mut tc_off, mut tc_auto) = (0usize, 0usize);
+    let (mut time_off, mut time_auto) = (0.0f64, 0.0f64);
+    for (name, m) in &mats {
+        for &n in widths {
+            let off = Planner::new(ThetaPolicy::Auto);
+            let auto = Planner::new(ThetaPolicy::Auto).with_reorder(ReorderPolicy::Auto);
+            let (plan_off, _) = off.plan_spmm(m, n);
+            let (plan_auto, _) = auto.plan_spmm(m, n);
+            let applied = plan_auto.perm.is_some();
+            let (s_off, s_auto) = (plan_off.dist.stats, plan_auto.dist.stats);
+            tc_off += s_off.nnz_tc;
+            tc_auto += s_auto.nnz_tc;
+
+            let b = Dense::random(&mut rng, m.cols, n);
+            let mut e_off = SpmmExecutor::from_plan(plan_off, TcBackend::NativeBitmap);
+            let mut e_auto = SpmmExecutor::from_plan(plan_auto, TcBackend::NativeBitmap);
+            for e in [&mut e_off, &mut e_auto] {
+                e.threading = Threading::Inline;
+                e.flex_threads = 1;
+            }
+            let t_off = time_exec(&e_off, &b, reps);
+            let t_auto = time_exec(&e_auto, &b, reps);
+            time_off += t_off;
+            time_auto += t_auto;
+            t.add(vec![
+                name.clone(),
+                n.to_string(),
+                format!("{:.1}", s_off.tc_fraction() * 100.0),
+                format!("{:.1}", s_auto.tc_fraction() * 100.0),
+                if applied { "yes".into() } else { "no".into() },
+                format!("{:.3}", t_off * 1e3),
+                format!("{:.3}", t_auto * 1e3),
+                format!("{:.2}x", t_off / t_auto.max(1e-12)),
+            ]);
+        }
+    }
+    t.print();
+
+    // The gates: Auto must route strictly more nonzeros to the
+    // structured engine than Off in aggregate, and must not pay for it
+    // in aggregate exec time (2% timer-noise tolerance).
+    let ok_density = tc_auto > tc_off;
+    let ok_time = time_auto <= time_off * 1.02;
+    println!(
+        "\nauto-reorder {} the aggregate TC routing ({} vs {} nonzeros, gate: auto > off)",
+        if ok_density { "improved" } else { "did NOT improve" },
+        tc_auto,
+        tc_off
+    );
+    println!(
+        "auto-reorder {} the aggregate SpMM exec time (auto {:.3} ms vs off {:.3} ms, \
+         gate: auto <= off x 1.02)",
+        if ok_time { "met or beat" } else { "did NOT meet" },
+        time_auto * 1e3,
+        time_off * 1e3
+    );
+    if !(ok_density && ok_time) {
+        // a red exit fails CI's bench-smoke job instead of letting a
+        // reorder-stage regression land silently
+        std::process::exit(1);
+    }
+}

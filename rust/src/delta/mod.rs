@@ -625,6 +625,11 @@ impl SpmmPlan {
     /// (see module docs). `old_m` is the matrix this plan was built
     /// from; `dist_params`/`balance_params` must match the plan's.
     /// Bit-identical to `preprocess_spmm(new_m, ...)`.
+    ///
+    /// Only unpermuted plans can be patched: a reordered plan's
+    /// windows do not align with the edit batch's row windows, so the
+    /// serving layer rebuilds those instead (`PlanCache::apply_delta`
+    /// refuses them before this is reached).
     pub fn apply_delta(
         &self,
         old_m: &Csr,
@@ -633,9 +638,10 @@ impl SpmmPlan {
         dist_params: &DistParams,
         balance_params: &BalanceParams,
     ) -> SpmmPlan {
+        assert!(self.perm.is_none(), "cannot patch a reordered plan");
         let dist = patch_spmm_dist(&self.dist, old_m, new_m, touched, dist_params);
         let sched = patch_spmm_schedule(&self.sched, &self.dist, &dist, touched, balance_params);
-        SpmmPlan { dist, sched }
+        SpmmPlan { dist, sched, perm: None }
     }
 }
 
@@ -650,9 +656,10 @@ impl SddmmPlan {
         dist_params: &DistParams,
         balance_params: &BalanceParams,
     ) -> SddmmPlan {
+        assert!(self.perm.is_none(), "cannot patch a reordered plan");
         let dist = patch_sddmm_dist(&self.dist, old_m, new_m, touched, dist_params);
         let sched = patch_sddmm_schedule(&self.sched, &self.dist, &dist, touched, balance_params);
-        SddmmPlan { dist, sched }
+        SddmmPlan { dist, sched, perm: None }
     }
 }
 

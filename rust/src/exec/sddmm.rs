@@ -41,6 +41,11 @@ pub struct SddmmExecutor {
     /// kernel-layer mode: lane vectorization, column-panel size, and
     /// the stored value precision (see [`SddmmExecutor::set_precision`])
     pub kernel: KernelParams,
+    /// Row permutation the plan was built under (reorder stage).
+    /// `A`'s rows are gathered through it at execute time; the plan's
+    /// write-back indices are already remapped to the original CSR,
+    /// so the output needs no inverse fold.
+    pub perm: Option<std::sync::Arc<crate::reorder::RowPerm>>,
     pub counters: Counters,
     /// pattern of the sparse matrix (row_ptr/col_idx reused for output)
     pub pattern: Csr,
@@ -58,14 +63,14 @@ impl SddmmExecutor {
     /// exists — e.g. out of the serving cache — so nothing re-runs.)
     pub fn from_dist(dist: SddmmDist, pattern: Csr, backend: TcBackend) -> Self {
         let sched = balance_sddmm(&dist, &BalanceParams::default());
-        Self::from_plan(SddmmPlan { dist, sched }, pattern, backend)
+        Self::from_plan(SddmmPlan { dist, sched, perm: None }, pattern, backend)
     }
 
     /// Build from a fully preprocessed plan. Neither distribution nor
     /// balancing runs here — the serving layer's warm-cache fast path,
     /// mirroring `SpmmExecutor::from_plan`.
     pub fn from_plan(plan: SddmmPlan, pattern: Csr, backend: TcBackend) -> Self {
-        let SddmmPlan { dist, sched } = plan;
+        let SddmmPlan { dist, sched, perm } = plan;
         let tcf = matches!(backend, TcBackend::NativeTraversal)
             .then(|| TcfBlocks::from_bitmap(&dist.tc));
         Self {
@@ -76,6 +81,7 @@ impl SddmmExecutor {
             flex_threads: super::default_flex_threads(),
             threading: Threading::default(),
             kernel: KernelParams::default(),
+            perm,
             counters: Counters::new(),
             pattern,
         }
@@ -217,6 +223,19 @@ impl SddmmExecutor {
             Some((qa, qb)) => (qa, qb),
             None => (a, b),
         };
+        // reorder stage: gather `A`'s rows into the plan's permuted
+        // row space (row `i` of the gathered copy is the original row
+        // `perm[i]`). The output write-back indices already point at
+        // the original CSR, so this is the only permuted ingredient.
+        let gathered = self.perm.as_ref().map(|p| {
+            let k = a.cols;
+            let mut buf = ws.take_reorder_buf(a.rows * k);
+            for (i, &old) in p.perm.iter().enumerate() {
+                buf[i * k..(i + 1) * k].copy_from_slice(a.row(old as usize));
+            }
+            Dense::from_vec(a.rows, k, buf)
+        });
+        let a = gathered.as_ref().unwrap_or(a);
         let n_blocks = self.dist.tc.n_blocks();
         let structured_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
         let long_cursor = AtomicUsize::new(0);
@@ -277,6 +296,9 @@ impl SddmmExecutor {
 
         if let Some(e) = structured_err.into_inner().unwrap() {
             return Err(e);
+        }
+        if let Some(pa) = gathered {
+            ws.put_reorder_buf(pa.data);
         }
         if let Some((qa, qb)) = staged {
             ws.put_half_dense(qa.data, qb.data);
@@ -559,6 +581,7 @@ mod tests {
                         &dist,
                         &crate::balance::BalanceParams::disabled(),
                     ),
+                    perm: None,
                 },
                 m.clone(),
                 TcBackend::NativeBitmap,
@@ -574,6 +597,7 @@ mod tests {
                 crate::prep::SddmmPlan {
                     sched: crate::balance::balance_sddmm(&dist, &p),
                     dist,
+                    perm: None,
                 },
                 m.clone(),
                 TcBackend::NativeBitmap,

@@ -54,6 +54,10 @@ pub struct SpmmExecutor {
     /// kernel-layer mode: lane vectorization, column-panel size, and
     /// the stored value precision (see [`SpmmExecutor::set_precision`])
     pub kernel: KernelParams,
+    /// Row permutation the plan was built under (reorder stage).
+    /// Execution runs in permuted row space and the inverse is folded
+    /// back at write-back, so callers never see permuted output.
+    pub perm: Option<Arc<crate::reorder::RowPerm>>,
     pub counters: Counters,
 }
 
@@ -72,7 +76,7 @@ impl SpmmExecutor {
     /// Build from an existing distribution (used by `prep`).
     pub fn from_dist(dist: SpmmDist, balance_params: &BalanceParams, backend: TcBackend) -> Self {
         let sched = crate::balance::balance_spmm(&dist, balance_params);
-        Self::from_plan(crate::prep::SpmmPlan { dist, sched }, backend)
+        Self::from_plan(crate::prep::SpmmPlan { dist, sched, perm: None }, backend)
     }
 
     /// Build from a fully preprocessed plan. Neither distribution nor
@@ -80,7 +84,7 @@ impl SpmmExecutor {
     /// fast path, where the plan comes out of `serve::PlanCache` and
     /// only the per-block atomic flags (O(n_blocks)) are derived.
     pub fn from_plan(plan: crate::prep::SpmmPlan, backend: TcBackend) -> Self {
-        let crate::prep::SpmmPlan { dist, sched } = plan;
+        let crate::prep::SpmmPlan { dist, sched, perm } = plan;
         let mut block_atomic = vec![true; dist.tc.n_blocks()];
         for seg in &sched.tc_segments {
             for b in seg.block_start..seg.block_end {
@@ -98,6 +102,7 @@ impl SpmmExecutor {
             flex_threads: super::default_flex_threads(),
             threading: Threading::default(),
             kernel: KernelParams::default(),
+            perm,
             counters: Counters::new(),
         }
     }
@@ -197,6 +202,12 @@ impl SpmmExecutor {
     /// the structured scatter and flexible tiles both use plain
     /// vectorizable stores. CAS atomics remain only for row-split
     /// flexible chunks racing each other (`FlexTile::row_split`).
+    ///
+    /// A plan carrying a row permutation (the reorder stage) executes
+    /// in permuted row space into a workspace-owned buffer, then
+    /// row-scatters `out[perm[i]] += tmp[i]` — the inverse fold, so
+    /// the caller's output is in original row order. The fold is
+    /// exact: each output row is one accumulate into a zeroed row.
     pub fn execute_into_with(
         &self,
         b: &Dense,
@@ -205,6 +216,28 @@ impl SpmmExecutor {
     ) -> Result<()> {
         anyhow::ensure!(b.rows == self.dist.cols, "B rows {} != A cols {}", b.rows, self.dist.cols);
         anyhow::ensure!(out_mat.rows == self.dist.rows && out_mat.cols == b.cols, "bad out shape");
+        let Some(perm) = &self.perm else {
+            return self.execute_core(b, out_mat, ws);
+        };
+        let n = b.cols;
+        let mut tmp = Dense::from_vec(self.dist.rows, n, ws.take_reorder_buf(self.dist.rows * n));
+        let res = self.execute_core(b, &mut tmp, ws);
+        if res.is_ok() {
+            for (i, &old) in perm.perm.iter().enumerate() {
+                let dst = old as usize * n;
+                kernels::add_assign(
+                    &mut out_mat.data[dst..dst + n],
+                    &tmp.data[i * n..(i + 1) * n],
+                );
+            }
+        }
+        ws.put_reorder_buf(tmp.data);
+        res
+    }
+
+    /// The permutation-oblivious execution core: both engines over the
+    /// plan's own row space (permuted when the reorder stage fired).
+    fn execute_core(&self, b: &Dense, out_mat: &mut Dense, ws: &mut Workspace) -> Result<()> {
         // optional reduced-precision dense operand: round `B` through
         // the 16-bit format into a workspace-owned staging copy. The
         // buffers are moved out of `ws` here (before `split_spmm`

@@ -83,6 +83,9 @@ pub struct Workspace {
     /// `quant_dense` path (empty unless that mode is used).
     half_dense: Vec<f32>,
     half_dense_b: Vec<f32>,
+    /// Permuted-row-space output buffer for plans carrying a reorder
+    /// permutation (empty unless the reorder stage fired).
+    reorder_buf: Vec<f32>,
 }
 
 impl Workspace {
@@ -108,6 +111,9 @@ impl Workspace {
             lock(&ws.structured)
                 .ensure(crate::format::WINDOW * plan.dist.tc.k, crate::format::WINDOW * n);
         }
+        if plan.perm.is_some() {
+            ws.reorder_buf.resize(plan.dist.rows * n, 0.0);
+        }
         ws
     }
 
@@ -128,6 +134,7 @@ impl Workspace {
             + lock(&self.structured).resident_bytes()
             + pack
             + half
+            + self.reorder_buf.capacity() * 4
     }
 
     /// Grow the per-task scratch pool to `tasks` slots of at least
@@ -190,6 +197,22 @@ impl Workspace {
     pub(crate) fn put_half_dense(&mut self, a: Vec<f32>, b: Vec<f32>) {
         self.half_dense = a;
         self.half_dense_b = b;
+    }
+
+    /// Take the reorder-fold staging buffer, zeroed and sized to
+    /// `len` elements (returned via [`Workspace::put_reorder_buf`] so
+    /// the allocation is reused across calls).
+    pub(crate) fn take_reorder_buf(&mut self, len: usize) -> Vec<f32> {
+        let mut v = std::mem::take(&mut self.reorder_buf);
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Return the staging buffer taken by
+    /// [`Workspace::take_reorder_buf`].
+    pub(crate) fn put_reorder_buf(&mut self, v: Vec<f32>) {
+        self.reorder_buf = v;
     }
 
     /// Drop every buffer if residency exceeds `max_bytes`. Bounds the

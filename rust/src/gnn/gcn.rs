@@ -7,8 +7,9 @@
 use super::dense;
 use super::{DenseBackend, Precision};
 use crate::balance::BalanceParams;
-use crate::dist::DistParams;
+use crate::dist::{DistParams, Op};
 use crate::exec::{SpmmExecutor, TcBackend, Workspace};
+use crate::planner::ReorderPolicy;
 use crate::sparse::Dense;
 use crate::util::SplitMix64;
 use anyhow::Result;
@@ -44,10 +45,17 @@ pub struct GcnForward {
 
 impl Gcn {
     /// Build a GCN with dims `[in, hidden, ..., classes]`.
+    ///
+    /// When `reorder` fires (see [`crate::reorder::decide`]), the
+    /// aggregation plan is built on the row-clustered adjacency and
+    /// the executor folds the inverse permutation back out at
+    /// write-back, so layer activations stay in original node order —
+    /// labels, masks, and features never need re-indexing.
     pub fn new(
         adj: &crate::sparse::Csr,
         dims: &[usize],
         dist: &DistParams,
+        reorder: ReorderPolicy,
         tc_backend: TcBackend,
         backend: DenseBackend,
         precision: Precision,
@@ -59,7 +67,13 @@ impl Gcn {
             .windows(2)
             .map(|d| Dense::glorot(&mut rng, d[0], d[1]))
             .collect();
-        let spmm = SpmmExecutor::new(adj, dist, &BalanceParams::default(), tc_backend);
+        let bal = BalanceParams::default();
+        let mode = crate::prep::PrepMode::Sequential;
+        let plan = match crate::reorder::decide(reorder, adj, Op::Spmm, dist) {
+            Some(perm) => crate::prep::preprocess_spmm_reordered(adj, dist, &bal, mode, &perm),
+            None => crate::prep::preprocess_spmm(adj, dist, &bal, mode),
+        };
+        let spmm = SpmmExecutor::from_plan(plan, tc_backend);
         Self {
             weights,
             spmm,
@@ -164,6 +178,7 @@ mod tests {
             &data.adj,
             &[16, 8, 4],
             &DistParams::default(),
+            ReorderPolicy::Off,
             TcBackend::NativeBitmap,
             DenseBackend::Native,
             precision,
@@ -226,6 +241,41 @@ mod tests {
             losses[0],
             losses.last().unwrap()
         );
+    }
+
+    #[test]
+    fn reordered_aggregation_matches_unreordered() {
+        // adjacency whose rows were drawn from column clusters and
+        // then shuffled: the Auto pre-metric fires, and the folded
+        // output must match the unreordered model up to f32
+        // reassociation (the permuted execution sums window
+        // contributions in a different order)
+        let mut rng = SplitMix64::new(77);
+        let m = crate::sparse::gen::column_clustered(&mut rng, 256, 256, 4_000, 0.85, 8);
+        let mut order: Vec<u32> = (0..m.rows as u32).collect();
+        rng.shuffle(&mut order);
+        let adj = crate::reorder::RowPerm::from_perm(order).apply_rows(&m);
+        let feats = Dense::random(&mut rng, adj.cols, 16);
+        let build = |rp: ReorderPolicy| {
+            Gcn::new(
+                &adj,
+                &[16, 8, 4],
+                &DistParams::default(),
+                rp,
+                TcBackend::NativeBitmap,
+                DenseBackend::Native,
+                Precision::F32,
+                42,
+            )
+        };
+        let mut plain = build(ReorderPolicy::Off);
+        let mut reord = build(ReorderPolicy::Auto);
+        assert!(plain.spmm.perm.is_none());
+        assert!(reord.spmm.perm.is_some(), "Auto must fire on a shuffled clustered adjacency");
+        let a = plain.forward(&feats).unwrap();
+        let b = reord.forward(&feats).unwrap();
+        let diff = a.logits.max_abs_diff(&b.logits);
+        assert!(diff < 1e-3, "reordered logits diverged: {diff}");
     }
 
     #[test]

@@ -9,7 +9,7 @@ use super::gcn::Gcn;
 use super::{DenseBackend, Precision};
 use crate::dist::{DistParams, Op};
 use crate::exec::TcBackend;
-use crate::planner::{Planner, ThetaPolicy};
+use crate::planner::{Planner, ReorderPolicy, ThetaPolicy};
 use crate::sparse::{Dense, GraphBatch};
 use crate::util::Timer;
 use anyhow::Result;
@@ -22,12 +22,26 @@ pub struct TrainConfig {
     pub hidden: usize,
     pub layers: usize,
     pub precision: Precision,
+    /// Structure-optimization policy for the GCN aggregation plan
+    /// (full-graph and mini-batched): when `Auto` fires, aggregation
+    /// runs on the row-clustered adjacency and folds the inverse back
+    /// out, so activations stay in original node order. AGNN's
+    /// attention pipeline always plans unreordered.
+    pub reorder: ReorderPolicy,
     pub seed: u64,
 }
 
 impl Default for TrainConfig {
     fn default() -> Self {
-        Self { epochs: 300, lr: 0.01, hidden: 64, layers: 5, precision: Precision::F32, seed: 1 }
+        Self {
+            epochs: 300,
+            lr: 0.01,
+            hidden: 64,
+            layers: 5,
+            precision: Precision::F32,
+            reorder: ReorderPolicy::Off,
+            seed: 1,
+        }
     }
 }
 
@@ -111,7 +125,16 @@ pub fn train_gcn(
         dims.push(cfg.hidden);
     }
     dims.push(data.n_classes);
-    let mut gcn = Gcn::new(&data.adj, &dims, dist, tc_backend, backend, cfg.precision, cfg.seed);
+    let mut gcn = Gcn::new(
+        &data.adj,
+        &dims,
+        dist,
+        cfg.reorder,
+        tc_backend,
+        backend,
+        cfg.precision,
+        cfg.seed,
+    );
     let prep_time = prep_timer.elapsed_secs();
 
     let shapes: Vec<usize> = gcn.weights.iter().map(|w| w.data.len()).collect();
@@ -299,6 +322,7 @@ impl Trainer {
                 &gb.matrix,
                 &dims,
                 &dist,
+                self.cfg.reorder,
                 self.tc_backend.clone(),
                 self.dense_backend.clone(),
                 self.cfg.precision,
@@ -382,7 +406,16 @@ pub fn time_gcn_inference(
         dims.push(cfg.hidden);
     }
     dims.push(data.n_classes);
-    let mut gcn = Gcn::new(&data.adj, &dims, dist, tc_backend, backend, cfg.precision, cfg.seed);
+    let mut gcn = Gcn::new(
+        &data.adj,
+        &dims,
+        dist,
+        cfg.reorder,
+        tc_backend,
+        backend,
+        cfg.precision,
+        cfg.seed,
+    );
     let t = Timer::start();
     let mut out = None;
     for _ in 0..reps {

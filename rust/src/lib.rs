@@ -22,6 +22,7 @@ pub mod delta;
 pub mod exec;
 pub mod planner;
 pub mod prep;
+pub mod reorder;
 pub mod runtime;
 pub mod dist;
 pub mod format;

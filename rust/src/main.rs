@@ -1,8 +1,8 @@
 //! Libra CLI: preprocess, run, serve, and inspect hybrid sparse operators.
 //!
 //! Subcommands:
-//!   spmm   --matrix <.mtx|gen:SPEC> [--n 128] [--theta auto|auto-refined|N] [--precision f32|bf16|f16]
-//!   sddmm  --matrix <.mtx|gen:SPEC> [--k 32]  [--theta auto|auto-refined|N] [--precision f32|bf16|f16]
+//!   spmm   --matrix <.mtx|gen:SPEC> [--n 128] [--theta auto|auto-refined|N] [--precision f32|bf16|f16] [--reorder off|auto]
+//!   sddmm  --matrix <.mtx|gen:SPEC> [--k 32]  [--theta auto|auto-refined|N] [--precision f32|bf16|f16] [--reorder off|auto]
 //!   stats  --matrix <.mtx|gen:SPEC>            sparsity profile + distribution preview
 //!   tune   [--matrix SPEC] [--n 128] [--k 32]  resolve θ through the serving Planner path
 //!   gnn    [--model gcn|agnn] [--epochs 50]    train on a synthetic citation graph
@@ -22,7 +22,7 @@ use libra::dist::{DistParams, Op};
 use libra::exec::sddmm::SddmmExecutor;
 use libra::exec::{SpmmExecutor, TcBackend};
 use libra::format::Precision;
-use libra::planner::{fmt_theta, Planner, ThetaPolicy};
+use libra::planner::{fmt_theta, Planner, ReorderPolicy, ThetaPolicy};
 use libra::serve::{
     Cluster, ClusterConfig, Engine, EngineConfig, MicroBatchParams, MicroBatcher, Request, Routing,
     SchedParams, TenantId,
@@ -42,21 +42,24 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "spmm" => cmd_spmm(&parse_flags(
             rest,
-            &["matrix", "n", "theta", "backend", "seed", "json", "batch", "precision"],
+            &["matrix", "n", "theta", "backend", "seed", "json", "batch", "precision", "reorder"],
         )?),
         "sddmm" => cmd_sddmm(&parse_flags(
             rest,
-            &["matrix", "k", "theta", "backend", "seed", "json", "precision"],
+            &["matrix", "k", "theta", "backend", "seed", "json", "precision", "reorder"],
         )?),
         "stats" => cmd_stats(&parse_flags(rest, &["matrix", "seed"])?),
         "tune" => cmd_tune(&parse_flags(rest, &["matrix", "n", "k", "seed"])?),
-        "gnn" => cmd_gnn(&parse_flags(rest, &["model", "epochs", "batch", "graphs", "theta"])?),
+        "gnn" => cmd_gnn(&parse_flags(
+            rest,
+            &["model", "epochs", "batch", "graphs", "theta", "reorder"],
+        )?),
         "serve" => cmd_serve(&parse_flags(
             rest,
             &[
                 "patterns", "requests", "workers", "n", "size", "theta", "backend", "seed",
                 "cache-mb", "batch", "microbatch", "linger-us", "batch-kb", "shards", "tenants",
-                "qdepth", "precision",
+                "qdepth", "precision", "reorder",
             ],
         )?),
         "--help" | "-h" | "help" => {
@@ -73,17 +76,19 @@ fn print_usage() {
          usage: libra <spmm|sddmm|stats|tune|gnn|serve> [flags]\n\
          \x20 spmm   --matrix <path.mtx|gen:SPEC> [--n 128] [--theta auto|auto-refined|N] [--backend native|pjrt] [--seed 42] [--json]\n\
          \x20        [--precision f32|bf16|f16] [--batch N]  (N>1: compose N member graphs block-diagonally)\n\
+         \x20        [--reorder off|auto]  (auto: row-cluster the plan when the density pre-metric fires; not with --batch)\n\
          \x20 sddmm  --matrix <path.mtx|gen:SPEC> [--k 32]  [--theta auto|auto-refined|N] [--backend native|pjrt] [--seed 42] [--json]\n\
-         \x20        [--precision f32|bf16|f16]  (store sparse values bf16/f16-quantized; compute stays f32)\n\
+         \x20        [--precision f32|bf16|f16] [--reorder off|auto]  (store sparse values bf16/f16-quantized; compute stays f32)\n\
          \x20 stats  --matrix <path.mtx|gen:SPEC> [--seed 42]\n\
          \x20 tune   [--matrix <path.mtx|gen:SPEC>] [--n 128] [--k 32] [--seed 42]\n\
          \x20 gnn    [--model gcn|agnn] [--epochs 50] [--theta auto|auto-refined|N] [--batch B] [--graphs G]\n\
-         \x20        (B>0: mini-batch train over G small graphs)\n\
+         \x20        [--reorder off|auto]  (B>0: mini-batch train over G small graphs; --reorder auto is gcn-only)\n\
          \x20 serve  [--patterns 6] [--requests 120] [--workers W] [--n 64] [--size 1024]\n\
          \x20        [--theta auto|auto-refined|N] [--backend native|pjrt] [--seed 42] [--cache-mb 256] [--batch 8]\n\
          \x20        [--microbatch] [--linger-us 2000] [--batch-kb 2048]  (coalesce requests into block-diagonal batches)\n\
          \x20        [--shards S] [--tenants T] [--qdepth Q]  (scale-out: shard cluster, zipf tenant tags, bounded admission)\n\
          \x20        [--precision f32|bf16|f16]  (precision-qualified plan-cache entries; not with --microbatch)\n\
+         \x20        [--reorder off|auto]  (auto: engines row-cluster cached plans when profitable; not with --microbatch)\n\
          gen:SPEC: gen:powerlaw:N:DEG | gen:banded:N:BAND | gen:uniform:N:DENSITY | gen:blockdiag:N:BLOCKS\n\
          (--theta defaults to auto: cost-model tuning on the matrix histogram, one Planner path\n\
          \x20 shared by every subcommand and the serving engine; unknown flags are rejected)"
@@ -193,10 +198,13 @@ fn theta_policy(flags: &HashMap<String, String>) -> Result<ThetaPolicy> {
     }
 }
 
-/// Resolve effective distribution parameters for one matrix through
-/// the Planner — the identical path `serve::Engine` runs.
-fn theta(flags: &HashMap<String, String>, m: &Csr, op: Op, n: usize) -> Result<DistParams> {
-    Ok(Planner::new(theta_policy(flags)?).resolve(m, op, n))
+/// Parse `--reorder off|auto` (default: off).
+fn reorder_policy(flags: &HashMap<String, String>) -> Result<ReorderPolicy> {
+    match flags.get("reorder").map(String::as_str) {
+        None => Ok(ReorderPolicy::Off),
+        Some(v) => ReorderPolicy::parse(v)
+            .ok_or_else(|| anyhow::anyhow!("invalid value '{v}' for --reorder (off or auto)")),
+    }
 }
 
 /// Parse `--precision f32|bf16|f16` (default: f32).
@@ -217,20 +225,26 @@ fn cmd_spmm(flags: &HashMap<String, String>) -> Result<()> {
     let m = load_matrix(flags)?;
     let n: usize = flags.get("n").and_then(|s| s.parse().ok()).unwrap_or(128);
     let json = flags.contains_key("json");
-    let params = theta(flags, &m, Op::Spmm, n)?;
     let prec = precision(flags)?;
-    let mut exec = SpmmExecutor::new(&m, &params, &BalanceParams::default(), backend(flags)?);
+    // the full plan path (θ resolution, optional row reorder,
+    // distribution, balancing) — identical to what serving runs
+    let planner = Planner::new(theta_policy(flags)?).with_reorder(reorder_policy(flags)?);
+    let (plan, params) = planner.plan_spmm(&m, n);
+    let reordered = plan.perm.is_some();
+    let mut exec = SpmmExecutor::from_plan(plan, backend(flags)?);
     if prec != Precision::F32 {
         exec.set_precision(prec);
     }
     if !json {
         println!(
-            "matrix {}x{} nnz={} | theta={} ({}) -> {} blocks ({:.1}% padding), {} flex nnz",
+            "matrix {}x{} nnz={} | theta={} ({}) reorder={} -> {} blocks ({:.1}% padding), \
+             {} flex nnz",
             m.rows,
             m.cols,
             m.nnz(),
             fmt_theta(params.threshold),
             theta_policy(flags)?,
+            if reordered { "applied" } else { "off" },
             exec.dist.stats.n_blocks,
             exec.dist.stats.padding_ratio * 100.0,
             exec.dist.stats.nnz_flex
@@ -250,8 +264,8 @@ fn cmd_spmm(flags: &HashMap<String, String>) -> Result<()> {
         // machine-readable bench point (one JSON object per run)
         println!(
             "{{\"op\":\"spmm\",\"rows\":{},\"cols\":{},\"nnz\":{},\"n\":{n},\"theta\":\"{}\",\
-             \"blocks\":{},\"padding_ratio\":{:.6},\"nnz_flex\":{},\"ms\":{:.6},\
-             \"gflops\":{:.4},\"pjrt_calls\":{}}}",
+             \"reorder\":{reordered},\"blocks\":{},\"padding_ratio\":{:.6},\"nnz_flex\":{},\
+             \"ms\":{:.6},\"gflops\":{:.4},\"pjrt_calls\":{}}}",
             m.rows,
             m.cols,
             m.nnz(),
@@ -281,6 +295,9 @@ fn cmd_spmm(flags: &HashMap<String, String>) -> Result<()> {
 fn cmd_spmm_batch(flags: &HashMap<String, String>, n_members: usize) -> Result<()> {
     use libra::prep::{preprocess_spmm_batch, PrepMode};
     use libra::sparse::GraphBatch;
+    if reorder_policy(flags)? != ReorderPolicy::Off {
+        bail!("--reorder is not supported with --batch (batched plans are window-aligned per member)");
+    }
     let members = load_members(flags, n_members)?;
     let n: usize = flags.get("n").and_then(|s| s.parse().ok()).unwrap_or(128);
     let json = flags.contains_key("json");
@@ -352,9 +369,11 @@ fn cmd_sddmm(flags: &HashMap<String, String>) -> Result<()> {
     let m = load_matrix(flags)?;
     let k: usize = flags.get("k").and_then(|s| s.parse().ok()).unwrap_or(32);
     let json = flags.contains_key("json");
-    let params = theta(flags, &m, Op::Sddmm, k)?;
     let prec = precision(flags)?;
-    let mut exec = SddmmExecutor::new(&m, &params, backend(flags)?);
+    let planner = Planner::new(theta_policy(flags)?).with_reorder(reorder_policy(flags)?);
+    let (plan, params) = planner.plan_sddmm(&m, k);
+    let reordered = plan.perm.is_some();
+    let mut exec = SddmmExecutor::from_plan(plan, m.clone(), backend(flags)?);
     if prec != Precision::F32 {
         exec.set_precision(prec);
     }
@@ -372,7 +391,7 @@ fn cmd_sddmm(flags: &HashMap<String, String>) -> Result<()> {
     if json {
         println!(
             "{{\"op\":\"sddmm\",\"rows\":{},\"cols\":{},\"nnz\":{},\"k\":{k},\"theta\":\"{}\",\
-             \"tc_fraction\":{:.6},\"ms\":{:.6},\"gflops\":{:.4}}}",
+             \"reorder\":{reordered},\"tc_fraction\":{:.6},\"ms\":{:.6},\"gflops\":{:.4}}}",
             m.rows,
             m.cols,
             m.nnz(),
@@ -383,9 +402,10 @@ fn cmd_sddmm(flags: &HashMap<String, String>) -> Result<()> {
         );
     } else {
         println!(
-            "sddmm K={k}: theta={} ({}) | {:.3} ms, {:.2} GFLOPS ({:.1}% nnz structured)",
+            "sddmm K={k}: theta={} ({}) reorder={} | {:.3} ms, {:.2} GFLOPS ({:.1}% nnz structured)",
             fmt_theta(params.threshold),
             theta_policy(flags)?,
+            if reordered { "applied" } else { "off" },
             secs * 1e3,
             gflops,
             exec.dist.stats.tc_fraction() * 100.0
@@ -472,7 +492,18 @@ fn cmd_gnn(flags: &HashMap<String, String>) -> Result<()> {
     let model = flags.get("model").map(String::as_str).unwrap_or("gcn");
     let epochs: usize = flags.get("epochs").and_then(|s| s.parse().ok()).unwrap_or(50);
     let batch: usize = flags.get("batch").and_then(|s| s.parse().ok()).unwrap_or(0);
-    let cfg = TrainConfig { epochs, lr: 0.01, hidden: 64, layers: 5, ..Default::default() };
+    let rp = reorder_policy(flags)?;
+    if rp != ReorderPolicy::Off && model != "gcn" {
+        bail!("--reorder auto supports only --model gcn (AGNN plans its attention unreordered)");
+    }
+    let cfg = TrainConfig {
+        epochs,
+        lr: 0.01,
+        hidden: 64,
+        layers: 5,
+        reorder: rp,
+        ..Default::default()
+    };
     let policy = theta_policy(flags)?;
     if batch > 0 {
         // mini-batch training over a corpus of small graphs; the
@@ -549,6 +580,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let prec = precision(flags)?;
     if microbatch && prec != Precision::F32 {
         bail!("--precision is not supported with --microbatch (coalesced batch plans are f32)");
+    }
+    let rp = reorder_policy(flags)?;
+    if microbatch && rp != ReorderPolicy::Off {
+        bail!("--reorder is not supported with --microbatch (coalesced batch plans are unreordered)");
     }
     let linger_us: u64 = get(flags, "linger-us", 2000)?;
     let batch_kb: usize = get(flags, "batch-kb", 2048)?.max(1);
@@ -643,7 +678,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
                 for v in m.values.iter_mut() {
                     *v = rng.f32_range(-1.0, 1.0);
                 }
-                let req = Request::spmm(m, b.clone()).with_theta(policy).with_precision(prec);
+                let req = Request::spmm(m, b.clone())
+                    .with_theta(policy)
+                    .with_precision(prec)
+                    .with_reorder(rp);
                 match cluster.submit_async(tenant, req) {
                     Ok(t) => in_flight.push_back(t),
                     Err(_) => shed += 1,
@@ -721,7 +759,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             for v in m.values.iter_mut() {
                 *v = rng.f32_range(-1.0, 1.0);
             }
-            let req = Request::spmm(m, b.clone()).with_theta(policy).with_precision(prec);
+            let req = Request::spmm(m, b.clone())
+                .with_theta(policy)
+                .with_precision(prec)
+                .with_reorder(rp);
             in_flight.push_back(engine.submit_async(req));
         }
         for t in in_flight {

@@ -41,6 +41,7 @@ use crate::prep::{
     preprocess_sddmm, preprocess_sddmm_batch, preprocess_spmm, preprocess_spmm_batch, BatchPlan,
     PrepMode, SddmmBatchPlan, SddmmPlan, SpmmPlan,
 };
+pub use crate::reorder::ReorderPolicy;
 use crate::sparse::{Csr, Dense, GraphBatch};
 use crate::util::SplitMix64;
 
@@ -104,6 +105,11 @@ pub struct Planner {
     /// default lanes + panels mode; set via [`Planner::with_kernel`]
     /// when planning for the scalar or reduced-precision paths).
     pub kernel: KernelProfile,
+    /// Structure-optimization stage: whether the `plan_*` helpers may
+    /// row-reorder the matrix before distributing (see
+    /// [`crate::reorder`]). Defaults to [`ReorderPolicy::Off`], which
+    /// is byte-identical to the pre-reorder pipeline.
+    pub reorder: ReorderPolicy,
 }
 
 impl Default for Planner {
@@ -123,6 +129,7 @@ impl Planner {
             fill_padding: true,
             mode: PrepMode::Sequential,
             kernel: KernelProfile::default(),
+            reorder: ReorderPolicy::Off,
         }
     }
 
@@ -146,6 +153,11 @@ impl Planner {
         self
     }
 
+    pub fn with_reorder(mut self, reorder: ReorderPolicy) -> Self {
+        self.reorder = reorder;
+        self
+    }
+
     /// Turn a resolved θ into `DistParams`, normalizing anything past
     /// the operator's max unit NNZ (including the tuner's all-flex
     /// sentinel) to the canonical `flex_only` preset so equivalent
@@ -161,6 +173,22 @@ impl Planner {
     /// Resolve distribution parameters for one matrix under this
     /// planner's policy. `n` is the dense feature width (output
     /// columns for SpMM, the contraction dim K for SDDMM).
+    ///
+    /// ```
+    /// use libra::dist::Op;
+    /// use libra::planner::{Planner, ThetaPolicy};
+    /// use libra::sparse::gen;
+    /// use libra::util::SplitMix64;
+    ///
+    /// let mut rng = SplitMix64::new(5);
+    /// let m = gen::banded(&mut rng, 256, 4, 0.8);
+    /// // Auto feeds the unit histogram to the §4.2 cost model ...
+    /// let auto = Planner::new(ThetaPolicy::Auto).resolve(&m, Op::Spmm, 128);
+    /// assert!(auto.threshold >= 1);
+    /// // ... while Fixed pins θ (normalized past the max unit NNZ)
+    /// let pinned = Planner::new(ThetaPolicy::Fixed(3)).resolve(&m, Op::Spmm, 128);
+    /// assert_eq!(pinned.threshold, 3);
+    /// ```
     pub fn resolve(&self, m: &Csr, op: Op, n: usize) -> DistParams {
         match self.policy {
             ThetaPolicy::Fixed(t) => self.params_for_theta(op, t),
@@ -207,16 +235,40 @@ impl Planner {
         }
     }
 
-    /// Resolve and preprocess one SpMM workload.
+    /// Resolve and preprocess one SpMM workload. When this planner's
+    /// [`ReorderPolicy`] fires (see [`crate::reorder::decide`]), the
+    /// plan is built on the row-clustered matrix and carries the
+    /// permutation for the executor's inverse fold.
     pub fn plan_spmm(&self, m: &Csr, n: usize) -> (SpmmPlan, DistParams) {
         let d = self.resolve(m, Op::Spmm, n);
-        (preprocess_spmm(m, &d, &self.balance, self.mode), d)
+        let plan = match crate::reorder::decide(self.reorder, m, Op::Spmm, &d) {
+            Some(perm) => crate::prep::preprocess_spmm_reordered(
+                m,
+                &d,
+                &self.balance,
+                self.mode,
+                &perm,
+            ),
+            None => preprocess_spmm(m, &d, &self.balance, self.mode),
+        };
+        (plan, d)
     }
 
-    /// Resolve and preprocess one SDDMM workload.
+    /// Resolve and preprocess one SDDMM workload (reorder-aware, like
+    /// [`Planner::plan_spmm`]).
     pub fn plan_sddmm(&self, m: &Csr, k: usize) -> (SddmmPlan, DistParams) {
         let d = self.resolve(m, Op::Sddmm, k);
-        (preprocess_sddmm(m, &d, &self.balance, self.mode), d)
+        let plan = match crate::reorder::decide(self.reorder, m, Op::Sddmm, &d) {
+            Some(perm) => crate::prep::preprocess_sddmm_reordered(
+                m,
+                &d,
+                &self.balance,
+                self.mode,
+                &perm,
+            ),
+            None => preprocess_sddmm(m, &d, &self.balance, self.mode),
+        };
+        (plan, d)
     }
 
     /// Resolve (merged member histograms) and preprocess a
@@ -339,8 +391,9 @@ pub fn fmt_theta(threshold: usize) -> String {
 
 /// Evenly strided window sample of `m`, at most `max_windows` windows
 /// concatenated into an independent CSR (columns unchanged). `None`
-/// when the matrix is already small enough to probe whole.
-fn sample_window_slice(m: &Csr, max_windows: usize) -> Option<Csr> {
+/// when the matrix is already small enough to probe whole. Shared
+/// with the reorder stage's pre-metric (`reorder::predicted_gain`).
+pub(crate) fn sample_window_slice(m: &Csr, max_windows: usize) -> Option<Csr> {
     let nwin = m.rows.div_ceil(WINDOW);
     if nwin <= max_windows {
         return None;

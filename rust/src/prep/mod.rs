@@ -27,17 +27,25 @@ use crossbeam_utils::thread;
 pub struct SpmmPlan {
     pub dist: SpmmDist,
     pub sched: SpmmSchedule,
+    /// Row permutation the distribution was built under, if the
+    /// reorder stage fired: `dist`/`sched` describe the *permuted*
+    /// matrix (`perm.apply_rows`), with source indices already
+    /// remapped to the original CSR. The executor folds the inverse
+    /// back out at write-back, so callers never see permuted data.
+    pub perm: Option<std::sync::Arc<crate::reorder::RowPerm>>,
 }
 
 impl SpmmPlan {
     /// Estimated resident bytes of the plan (distribution arrays plus
-    /// schedule segments) — the eviction unit of `serve::PlanCache`.
+    /// schedule segments and any row permutation) — the eviction unit
+    /// of `serve::PlanCache`.
     pub fn plan_bytes(&self) -> usize {
         let seg = std::mem::size_of::<crate::balance::TcSegment>();
         let tile = std::mem::size_of::<crate::balance::FlexTile>();
         self.dist.plan_bytes()
             + self.sched.tc_segments.len() * seg
             + (self.sched.long_tiles.len() + self.sched.short_tiles.len()) * tile
+            + self.perm.as_ref().map_or(0, |p| p.perm_bytes())
     }
 
     /// Bytes of execution workspace one call on this plan needs, for
@@ -62,6 +70,9 @@ impl SpmmPlan {
         if n_blocks > 0 {
             bytes += (WINDOW * self.dist.tc.k + WINDOW * n) * 4; // tile + acc
         }
+        if self.perm.is_some() {
+            bytes += self.dist.rows * n * 4; // reorder-fold staging buffer
+        }
         bytes
     }
 }
@@ -74,13 +85,21 @@ impl SpmmPlan {
 pub struct SddmmPlan {
     pub dist: SddmmDist,
     pub sched: SddmmSchedule,
+    /// Row permutation the distribution was built under, if the
+    /// reorder stage fired. The executor gathers `A`'s rows through
+    /// it at execute time; output needs no fold because the plan's
+    /// write-back indices are already remapped to the original CSR.
+    pub perm: Option<std::sync::Arc<crate::reorder::RowPerm>>,
 }
 
 impl SddmmPlan {
     /// Estimated resident bytes of the plan (distribution arrays plus
-    /// schedule segments) — the eviction unit of `serve::PlanCache`.
+    /// schedule segments and any row permutation) — the eviction unit
+    /// of `serve::PlanCache`.
     pub fn plan_bytes(&self) -> usize {
-        self.dist.plan_bytes() + self.sched.sched_bytes()
+        self.dist.plan_bytes()
+            + self.sched.sched_bytes()
+            + self.perm.as_ref().map_or(0, |p| p.perm_bytes())
     }
 
     /// Bytes of execution workspace one call on this plan needs.
@@ -90,7 +109,10 @@ impl SddmmPlan {
     /// backend's pack buffers are sized by its artifact buckets, not by
     /// the plan). Kept as a method for symmetry with
     /// [`SpmmPlan::workspace_bytes`] so the serving layer can price any
-    /// plan kind uniformly.
+    /// plan kind uniformly. (A reordered plan additionally stages a
+    /// permuted copy of `A` — `rows x K` floats — at execute time; K is
+    /// a per-call property, so that cost shows up in
+    /// `Workspace::resident_bytes`, not here.)
     pub fn workspace_bytes(&self) -> usize {
         0
     }
@@ -115,7 +137,41 @@ pub fn preprocess_spmm(
         PrepMode::Parallel => distribute_spmm_parallel(m, dist_params),
     };
     let sched = balance_spmm(&dist, balance_params);
-    SpmmPlan { dist, sched }
+    SpmmPlan { dist, sched, perm: None }
+}
+
+/// Preprocess an SpMM workload under a row permutation (the reorder
+/// stage): distribution and balancing run on the *permuted* matrix
+/// (`perm.apply_rows`), then the plan's CSR source indices are
+/// remapped back to the original matrix through [`RowPerm::pos_map`]
+/// so `set_values` keeps taking values in original CSR order, and the
+/// permutation is attached for the executor's inverse fold.
+///
+/// Note: because the source indices point at the *original* CSR, the
+/// resulting distribution intentionally does not satisfy
+/// `validate_cover` against either matrix — the exactly-once cover
+/// still holds (every original position appears exactly once across
+/// the two streams), but flex row membership is permuted.
+///
+/// [`RowPerm::pos_map`]: crate::reorder::RowPerm::pos_map
+pub fn preprocess_spmm_reordered(
+    m: &Csr,
+    dist_params: &DistParams,
+    balance_params: &BalanceParams,
+    mode: PrepMode,
+    perm: &std::sync::Arc<crate::reorder::RowPerm>,
+) -> SpmmPlan {
+    let pm = perm.apply_rows(m);
+    let pos = perm.pos_map(m);
+    let mut plan = preprocess_spmm(&pm, dist_params, balance_params, mode);
+    for i in plan.dist.tc_src_idx.iter_mut() {
+        *i = pos[*i as usize];
+    }
+    for i in plan.dist.flex_src_idx.iter_mut() {
+        *i = pos[*i as usize];
+    }
+    plan.perm = Some(perm.clone());
+    plan
 }
 
 /// Per-member view of a batched plan: the member's window span in the
@@ -267,7 +323,37 @@ pub fn preprocess_sddmm(
         }
     };
     let sched = balance_sddmm(&dist, balance_params);
-    SddmmPlan { dist, sched }
+    SddmmPlan { dist, sched, perm: None }
+}
+
+/// Preprocess an SDDMM workload under a row permutation (the reorder
+/// stage) — [`preprocess_spmm_reordered`]'s SDDMM counterpart.
+/// Distribution and balancing run on the permuted matrix, then the
+/// plan's write-back indices (`tc_out_idx` / `flex_out_idx`) are
+/// remapped to the *original* CSR through [`RowPerm::pos_map`]: the
+/// executed output lands in original CSR order directly, so SDDMM
+/// needs no output fold at all — only `A`'s rows are gathered through
+/// the permutation at execute time.
+///
+/// [`RowPerm::pos_map`]: crate::reorder::RowPerm::pos_map
+pub fn preprocess_sddmm_reordered(
+    m: &Csr,
+    dist_params: &DistParams,
+    balance_params: &BalanceParams,
+    mode: PrepMode,
+    perm: &std::sync::Arc<crate::reorder::RowPerm>,
+) -> SddmmPlan {
+    let pm = perm.apply_rows(m);
+    let pos = perm.pos_map(m);
+    let mut plan = preprocess_sddmm(&pm, dist_params, balance_params, mode);
+    for i in plan.dist.tc_out_idx.iter_mut() {
+        *i = pos[*i as usize];
+    }
+    for i in plan.dist.flex_out_idx.iter_mut() {
+        *i = pos[*i as usize];
+    }
+    plan.perm = Some(perm.clone());
+    plan
 }
 
 /// One preprocessed plan for a whole [`GraphBatch`] of SDDMM members:

@@ -1,0 +1,354 @@
+//! Structure optimization: affinity-based row reordering as a plan
+//! stage (ROADMAP item 2; Acc-SpMM / HC-SpMM in PAPERS.md).
+//!
+//! Libra's 2D-aware distribution picks the best θ for the pattern it
+//! is *given*, but on power-law graphs the pattern itself is the
+//! bottleneck: scattered neighborhoods leave TC blocks sparse no
+//! matter where θ lands. This module permutes rows so that 8-row
+//! windows group rows whose column supports overlap — densifying the
+//! bitmap blocks the structured engine feeds on — and hands the
+//! planner a [`RowPerm`] that the executors fold back out at
+//! write-back time, so callers never observe permuted data.
+//!
+//! The pipeline is: `cluster_rows` → distribute/balance the permuted
+//! matrix → remap the plan's CSR source indices back to the original
+//! matrix ([`RowPerm::pos_map`], done in `prep`) → execute in
+//! permuted row space → inverse-fold rows on output (SpMM scatters
+//! output rows; SDDMM's write-back indices already point at the
+//! original CSR, so its output needs no fold at all).
+//!
+//! [`ReorderPolicy`] controls the stage: `Off` is byte-identical to
+//! the unreordered pipeline; `Auto` reorders only when a cheap
+//! pre-metric — predicted TC-block density gain measured by
+//! distributing a sampled window slice both ways — clears
+//! [`MIN_DENSITY_GAIN`]. The decision is deterministic, so serving
+//! can recompute the same permutation on a cache rebuild.
+
+use crate::dist::{DistParams, Op};
+use crate::format::WINDOW;
+use crate::sparse::Csr;
+use std::sync::Arc;
+
+/// Whether (and how) the planner may permute rows before
+/// distribution. Parsed from the CLI's `--reorder off|auto`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ReorderPolicy {
+    /// Never permute: plans are byte-identical to the pre-reorder
+    /// pipeline.
+    #[default]
+    Off,
+    /// Permute when the pre-metric predicts a TC-block density gain
+    /// of at least [`MIN_DENSITY_GAIN`] on a sampled window slice.
+    Auto,
+}
+
+impl ReorderPolicy {
+    /// Parse a CLI-style policy: `off` or `auto`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(ReorderPolicy::Off),
+            "auto" => Some(ReorderPolicy::Auto),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ReorderPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReorderPolicy::Off => write!(f, "off"),
+            ReorderPolicy::Auto => write!(f, "auto"),
+        }
+    }
+}
+
+/// A row permutation and its inverse.
+///
+/// Gather convention: `perm[new_row] = old_row` (the permuted
+/// matrix's row `i` is the original's row `perm[i]`), and
+/// `inv[old_row] = new_row`. Both directions are stored because the
+/// plan build gathers (`perm`) while delta folding and diagnostics
+/// look up where an original row went (`inv`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RowPerm {
+    pub perm: Vec<u32>,
+    pub inv: Vec<u32>,
+}
+
+impl RowPerm {
+    /// Build from a gather permutation (`perm[new] = old`), deriving
+    /// the inverse. Panics if `perm` is not a permutation of `0..n`.
+    pub fn from_perm(perm: Vec<u32>) -> Self {
+        let mut inv = vec![u32::MAX; perm.len()];
+        for (new, &old) in perm.iter().enumerate() {
+            assert!(
+                (old as usize) < perm.len() && inv[old as usize] == u32::MAX,
+                "not a permutation"
+            );
+            inv[old as usize] = new as u32;
+        }
+        RowPerm { perm, inv }
+    }
+
+    /// The identity permutation over `n` rows.
+    pub fn identity(n: usize) -> Self {
+        let perm: Vec<u32> = (0..n as u32).collect();
+        RowPerm { inv: perm.clone(), perm }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.perm.iter().enumerate().all(|(i, &p)| p == i as u32)
+    }
+
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+
+    /// The permuted matrix: row `i` of the result is row `perm[i]` of
+    /// `m`. Per-row column order is preserved, so the result is a
+    /// valid CSR with sorted columns.
+    pub fn apply_rows(&self, m: &Csr) -> Csr {
+        assert_eq!(self.perm.len(), m.rows, "permutation length != rows");
+        let mut row_ptr: Vec<u32> = Vec::with_capacity(m.rows + 1);
+        let mut col_idx: Vec<u32> = Vec::with_capacity(m.nnz());
+        let mut values: Vec<f32> = Vec::with_capacity(m.nnz());
+        row_ptr.push(0);
+        for &old in &self.perm {
+            let (cols, vals) = m.row(old as usize);
+            col_idx.extend_from_slice(cols);
+            values.extend_from_slice(vals);
+            row_ptr.push(col_idx.len() as u32);
+        }
+        Csr { rows: m.rows, cols: m.cols, row_ptr, col_idx, values }
+    }
+
+    /// Map each CSR position of the *permuted* matrix to the position
+    /// of the same nonzero in the *original* matrix. Plans built on
+    /// the permuted matrix remap their `src_idx` / `out_idx` arrays
+    /// through this once, after which `set_values` (values in original
+    /// CSR order) and SDDMM write-back work on original coordinates
+    /// with zero per-execute cost.
+    pub fn pos_map(&self, m: &Csr) -> Vec<u32> {
+        assert_eq!(self.perm.len(), m.rows, "permutation length != rows");
+        let mut map: Vec<u32> = Vec::with_capacity(m.nnz());
+        for &old in &self.perm {
+            let (s, e) = (m.row_ptr[old as usize], m.row_ptr[old as usize + 1]);
+            map.extend(s..e);
+        }
+        map
+    }
+
+    /// Resident bytes of the permutation arrays (plan-cache budgeting).
+    pub fn perm_bytes(&self) -> usize {
+        (self.perm.len() + self.inv.len()) * 4
+    }
+}
+
+/// Column-support sketch width (bits). Each row's support is hashed
+/// into which 64ths of the column space it touches; rows sorting
+/// adjacent on the sketch share column regions, so their union
+/// support — and hence their windows' TC blocks — stays narrow.
+const SKETCH_BITS: usize = 64;
+
+/// Minimum predicted TC-density (`tc_fraction`) gain for
+/// [`ReorderPolicy::Auto`] to pay for a permutation.
+pub const MIN_DENSITY_GAIN: f64 = 0.02;
+
+/// Windows sampled by the pre-metric (mirrors the planner's
+/// `AutoRefined` probe budget).
+const METRIC_WINDOWS: usize = 48;
+
+/// Degree/affinity row clustering: sort rows by (degree bucket
+/// descending, column-support sketch, original index).
+///
+/// Degree bucketing packs similarly-dense rows into the same 8-row
+/// window (a window's TC eligibility is decided per column vector, so
+/// mixing a hub row with six near-empty rows wastes the block's other
+/// seven lanes); within a bucket the sketch groups rows whose
+/// supports overlap, so the window's column union stays small and
+/// each retained vector is tall. Deterministic: equal keys tie-break
+/// on the original row index.
+pub fn cluster_rows(m: &Csr) -> RowPerm {
+    let mut keys: Vec<(std::cmp::Reverse<u32>, u64, u32)> = Vec::with_capacity(m.rows);
+    let cols = m.cols.max(1);
+    for r in 0..m.rows {
+        let (rcols, _) = m.row(r);
+        // floor(log2(deg + 1)): rows within 2x of each other share a bucket
+        let bucket = u32::BITS - ((rcols.len() as u32) + 1).leading_zeros() - 1;
+        let mut sketch = 0u64;
+        for &c in rcols {
+            sketch |= 1u64 << (c as usize * SKETCH_BITS / cols).min(SKETCH_BITS - 1);
+        }
+        keys.push((std::cmp::Reverse(bucket), sketch, r as u32));
+    }
+    keys.sort_unstable();
+    RowPerm::from_perm(keys.into_iter().map(|(_, _, r)| r).collect())
+}
+
+/// The `Auto` pre-metric: distribute a sampled window slice of `m`
+/// both as-is and row-clustered, and report the TC-density
+/// (`tc_fraction`) gain the permutation would buy. Positive means the
+/// clustered slice pushed more nonzeros into bitmap blocks at the
+/// same θ. Cheap by construction: at most [`METRIC_WINDOWS`] windows
+/// are distributed, twice.
+pub fn predicted_gain(m: &Csr, op: Op, params: &DistParams) -> f64 {
+    let slice = crate::planner::sample_window_slice(m, METRIC_WINDOWS);
+    let probe = slice.as_ref().unwrap_or(m);
+    let clustered = cluster_rows(probe).apply_rows(probe);
+    let (base, reord) = match op {
+        Op::Spmm => (
+            crate::dist::distribute_spmm(probe, params).stats,
+            crate::dist::distribute_spmm(&clustered, params).stats,
+        ),
+        Op::Sddmm => (
+            crate::dist::distribute_sddmm(probe, params).stats,
+            crate::dist::distribute_sddmm(&clustered, params).stats,
+        ),
+    };
+    reord.tc_fraction() - base.tc_fraction()
+}
+
+/// Resolve a policy into an optional permutation for `m`: `None`
+/// means plan unpermuted (policy off, matrix too small to matter,
+/// pre-metric below threshold, or clustering returned the identity).
+/// Deterministic — a serving-cache rebuild recomputes the same
+/// decision and the same permutation.
+pub fn decide(policy: ReorderPolicy, m: &Csr, op: Op, params: &DistParams) -> Option<Arc<RowPerm>> {
+    match policy {
+        ReorderPolicy::Off => None,
+        ReorderPolicy::Auto => {
+            if m.rows <= WINDOW {
+                return None; // a single window cannot regroup rows
+            }
+            if predicted_gain(m, op, params) < MIN_DENSITY_GAIN {
+                return None;
+            }
+            let p = cluster_rows(m);
+            if p.is_identity() {
+                None
+            } else {
+                Some(Arc::new(p))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::util::propcheck::{check, Config};
+    use crate::util::{testgen, SplitMix64};
+
+    #[test]
+    fn policy_parsing_round_trips() {
+        assert_eq!(ReorderPolicy::parse("off"), Some(ReorderPolicy::Off));
+        assert_eq!(ReorderPolicy::parse("auto"), Some(ReorderPolicy::Auto));
+        assert_eq!(ReorderPolicy::parse("on"), None);
+        assert_eq!(ReorderPolicy::Off.to_string(), "off");
+        assert_eq!(ReorderPolicy::Auto.to_string(), "auto");
+        assert_eq!(ReorderPolicy::default(), ReorderPolicy::Off);
+    }
+
+    #[test]
+    fn identity_round_trips() {
+        let id = RowPerm::identity(5);
+        assert!(id.is_identity());
+        assert_eq!(id.perm, id.inv);
+        let p = RowPerm::from_perm(vec![2, 0, 1]);
+        assert!(!p.is_identity());
+        assert_eq!(p.inv, vec![1, 2, 0]);
+        for old in 0..3 {
+            assert_eq!(p.perm[p.inv[old] as usize] as usize, old);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not a permutation")]
+    fn duplicate_rows_rejected() {
+        RowPerm::from_perm(vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn apply_rows_and_pos_map_agree() {
+        check(Config::default().cases(25), "permuted rows and pos_map", |rng| {
+            let m = testgen::pattern_family(rng, 120);
+            let p = cluster_rows(&m);
+            let pm = p.apply_rows(&m);
+            pm.validate().unwrap();
+            assert_eq!((pm.rows, pm.cols, pm.nnz()), (m.rows, m.cols, m.nnz()));
+            let pos = p.pos_map(&m);
+            assert_eq!(pos.len(), m.nnz());
+            for i in 0..pm.rows {
+                assert_eq!(pm.row(i), m.row(p.perm[i] as usize), "row {i}");
+            }
+            for (i, &src) in pos.iter().enumerate() {
+                assert_eq!(pm.col_idx[i], m.col_idx[src as usize]);
+                assert_eq!(pm.values[i], m.values[src as usize]);
+            }
+        });
+    }
+
+    #[test]
+    fn clustering_is_deterministic_and_valid() {
+        let mut rng = SplitMix64::new(9100);
+        let m = gen::power_law(&mut rng, 300, 8.0, 2.2);
+        let a = cluster_rows(&m);
+        let b = cluster_rows(&m);
+        assert_eq!(a, b);
+        // every row appears exactly once
+        let mut seen = vec![false; m.rows];
+        for &r in &a.perm {
+            assert!(!seen[r as usize]);
+            seen[r as usize] = true;
+        }
+    }
+
+    #[test]
+    fn clustering_densifies_shuffled_clusters() {
+        // rows drawn from disjoint column clusters, then shuffled:
+        // clustering must recover enough locality that distribution
+        // packs a denser structured share than on the shuffled input
+        let mut rng = SplitMix64::new(9101);
+        let m = gen::column_clustered(&mut rng, 512, 512, 10_000, 0.85, 8);
+        let mut order: Vec<u32> = (0..m.rows as u32).collect();
+        rng.shuffle(&mut order);
+        let shuffled = RowPerm::from_perm(order).apply_rows(&m);
+        let params = DistParams::default();
+        let base = crate::dist::distribute_spmm(&shuffled, &params).stats;
+        let clustered = cluster_rows(&shuffled).apply_rows(&shuffled);
+        let reord = crate::dist::distribute_spmm(&clustered, &params).stats;
+        assert!(
+            reord.tc_fraction() > base.tc_fraction(),
+            "clustering must densify: {} -> {}",
+            base.tc_fraction(),
+            reord.tc_fraction()
+        );
+        assert!(predicted_gain(&shuffled, Op::Spmm, &params) > 0.0);
+    }
+
+    #[test]
+    fn decide_respects_policy_and_gate() {
+        let mut rng = SplitMix64::new(9102);
+        let m = gen::column_clustered(&mut rng, 512, 512, 10_000, 0.85, 8);
+        let mut order: Vec<u32> = (0..m.rows as u32).collect();
+        rng.shuffle(&mut order);
+        let shuffled = RowPerm::from_perm(order).apply_rows(&m);
+        let params = DistParams::default();
+        assert!(decide(ReorderPolicy::Off, &shuffled, Op::Spmm, &params).is_none());
+        // a shuffled clustered matrix is the motivating case: Auto fires
+        let p = decide(ReorderPolicy::Auto, &shuffled, Op::Spmm, &params)
+            .expect("Auto must reorder a shuffled clustered matrix");
+        assert_eq!(p.len(), shuffled.rows);
+        // flex-only plans have no TC blocks to densify: gain 0, skip
+        assert!(decide(ReorderPolicy::Auto, &shuffled, Op::Spmm, &DistParams::flex_only())
+            .is_none());
+        // sub-window matrices cannot regroup
+        let tiny = gen::uniform_random(&mut rng, 6, 20, 0.3);
+        assert!(decide(ReorderPolicy::Auto, &tiny, Op::Spmm, &params).is_none());
+    }
+}

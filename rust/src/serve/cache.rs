@@ -50,6 +50,13 @@ pub struct PlanKey {
     /// resolves to depends on it, so it is part of the key: a bf16
     /// request must never be served a warm f32 executor or vice versa.
     pub precision: Precision,
+    /// True when the plan was built through the affinity row-reorder
+    /// stage ([`crate::reorder`]). Like the resolved θ, this is
+    /// *provenance*: an `Auto` reorder request that fired records
+    /// `true` here, so repeat traffic — values-only handles included —
+    /// warm-hits the reordered plan, and an `Off` request for the same
+    /// pattern keeps its own separate entry.
+    pub reorder: bool,
 }
 
 impl PlanKey {
@@ -64,6 +71,7 @@ impl PlanKey {
             short_len: b.short_len,
             balance_enabled: b.enabled,
             precision: Precision::F32,
+            reorder: false,
         }
     }
 
@@ -81,12 +89,18 @@ impl PlanKey {
             short_len: b.short_len,
             balance_enabled: b.enabled,
             precision: Precision::F32,
+            reorder: false,
         }
     }
 
     /// The same key at another value precision.
     pub fn with_precision(self, precision: Precision) -> Self {
         Self { precision, ..self }
+    }
+
+    /// The same key with the reorder-stage provenance bit set.
+    pub fn with_reorder(self, reorder: bool) -> Self {
+        Self { reorder, ..self }
     }
 }
 
@@ -344,6 +358,15 @@ impl PlanCache {
     /// served before), the existing entry is reused instead of
     /// inserting a twin. Errors if the base pattern state or the base
     /// plan is gone — the caller decides whether to rebuild cold.
+    ///
+    /// Row-reordered plans are refused here with an error: their
+    /// windows live in permuted row space, so the edit batch's
+    /// original-space row windows do not align with the plan's and a
+    /// window-local patch would be wrong. [`Engine::submit_delta`]
+    /// catches the error and rebuilds from the base matrix instead
+    /// (counted as `delta_rebuilt`).
+    ///
+    /// [`Engine::submit_delta`]: super::Engine::submit_delta
     pub fn apply_delta(
         &self,
         old_key: &PlanKey,
@@ -359,6 +382,16 @@ impl PlanCache {
         let old_plan = self.get(old_key).ok_or_else(|| {
             anyhow::anyhow!("no cached plan under the delta's base key (evicted or never built)")
         })?;
+        let reordered = match &old_plan {
+            CachedPlan::Spmm(p) => p.perm.is_some(),
+            CachedPlan::Sddmm(e) => e.plan.perm.is_some(),
+        };
+        if reordered {
+            anyhow::bail!(
+                "cached plan is row-reordered: its windows live in permuted row space and \
+                 cannot be patched window-locally; rebuild from the base matrix instead"
+            );
+        }
         let new_m = state.pattern.apply_delta(delta)?;
         let touched = delta.touched_windows();
         let mut digests = state.digests.clone();
@@ -500,6 +533,10 @@ mod tests {
         assert_eq!(k.precision, Precision::F32);
         assert_ne!(k, k.with_precision(Precision::Bf16));
         assert_eq!(k.with_precision(Precision::F32), k);
+        // ...and so is the reorder-stage provenance bit
+        assert!(!k.reorder);
+        assert_ne!(k, k.with_reorder(true));
+        assert_eq!(k.with_reorder(false), k);
     }
 
     #[test]

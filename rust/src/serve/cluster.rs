@@ -314,6 +314,21 @@ impl Cluster {
     }
 
     /// Route, enqueue, and wait for one request.
+    ///
+    /// ```
+    /// use libra::serve::{Cluster, ClusterConfig, Request, TenantId};
+    /// use libra::sparse::{gen, Dense};
+    /// use libra::util::SplitMix64;
+    ///
+    /// let cluster = Cluster::new(ClusterConfig { shards: 2, ..Default::default() });
+    /// let mut rng = SplitMix64::new(11);
+    /// let m = gen::power_law(&mut rng, 64, 4.0, 2.0);
+    /// let b = Dense::random(&mut rng, 64, 8);
+    ///
+    /// let resp = cluster.submit(TenantId(0), Request::spmm(m, b)).unwrap();
+    /// let out = resp.result.unwrap().into_dense().unwrap();
+    /// assert_eq!(out.rows, 64);
+    /// ```
     pub fn submit(&self, tenant: TenantId, req: Request) -> Result<Response, Rejected> {
         Ok(self.submit_async(tenant, req)?.wait())
     }

@@ -64,8 +64,18 @@ pub struct ServeMetrics {
     /// plan (window-local re-distribution + schedule splicing).
     pub delta_patched: AtomicU64,
     /// Edge-batch deltas that fell back to a full from-scratch
-    /// preprocess (base plan or pattern state gone).
+    /// preprocess (base plan or pattern state gone, or the cached plan
+    /// is row-reordered and cannot be patched window-locally).
     pub delta_rebuilt: AtomicU64,
+    /// Auto-reorder decisions where the affinity pre-metric fired and
+    /// the plan was built through the row-reorder stage: at most one
+    /// per distinct (pattern, op, resolved params) thanks to the
+    /// engine's reorder-decision memo.
+    pub reorder_applied: AtomicU64,
+    /// Auto-reorder decisions where the pre-metric predicted no gain
+    /// and the plan was built unpermuted (also memoized; `Off`
+    /// requests never decide and count nowhere).
+    pub reorder_skipped: AtomicU64,
     /// Resolved-θ distribution: how many requests were served at each
     /// effective threshold (`usize::MAX` = flexible-only).
     theta_hist: Mutex<BTreeMap<usize, u64>>,
@@ -96,6 +106,8 @@ impl ServeMetrics {
             theta_memo_hits: AtomicU64::new(0),
             delta_patched: AtomicU64::new(0),
             delta_rebuilt: AtomicU64::new(0),
+            reorder_applied: AtomicU64::new(0),
+            reorder_skipped: AtomicU64::new(0),
             theta_hist: Mutex::new(BTreeMap::new()),
             queue_hist: LatencyHist::new(),
             prep_hist: LatencyHist::new(),
@@ -158,6 +170,8 @@ impl ServeMetrics {
             theta_memo_hits: load(&self.theta_memo_hits),
             delta_patched: load(&self.delta_patched),
             delta_rebuilt: load(&self.delta_rebuilt),
+            reorder_applied: load(&self.reorder_applied),
+            reorder_skipped: load(&self.reorder_skipped),
             theta_dist: self.theta_hist.lock().unwrap().iter().map(|(&t, &c)| (t, c)).collect(),
             queue_hist: self.queue_hist.snapshot(),
             prep_hist: self.prep_hist.snapshot(),
@@ -200,6 +214,10 @@ pub struct MetricsReport {
     pub delta_patched: u64,
     /// Edge-batch deltas that rebuilt the plan from scratch.
     pub delta_rebuilt: u64,
+    /// Auto-reorder decisions that fired (plan built row-reordered).
+    pub reorder_applied: u64,
+    /// Auto-reorder decisions that predicted no gain (plan unpermuted).
+    pub reorder_skipped: u64,
     /// Resolved-θ distribution: `(θ, requests served at θ)`, ascending
     /// (`usize::MAX` = flexible-only).
     pub theta_dist: Vec<(usize, u64)>,
@@ -236,6 +254,8 @@ impl MetricsReport {
             theta_memo_hits: 0,
             delta_patched: 0,
             delta_rebuilt: 0,
+            reorder_applied: 0,
+            reorder_skipped: 0,
             theta_dist: Vec::new(),
             queue_hist: HistSnapshot::default(),
             prep_hist: HistSnapshot::default(),
@@ -269,6 +289,8 @@ impl MetricsReport {
             out.theta_memo_hits += r.theta_memo_hits;
             out.delta_patched += r.delta_patched;
             out.delta_rebuilt += r.delta_rebuilt;
+            out.reorder_applied += r.reorder_applied;
+            out.reorder_skipped += r.reorder_skipped;
             out.workers += r.workers;
             out.elapsed_secs = out.elapsed_secs.max(r.elapsed_secs);
             out.peak_worker_workspace_bytes =
@@ -345,6 +367,11 @@ impl std::fmt::Display for MetricsReport {
             "deltas: {} patched onto cached plans, {} rebuilt from scratch",
             self.delta_patched, self.delta_rebuilt
         )?;
+        writeln!(
+            f,
+            "auto-reorder: {} applied, {} skipped (per-pattern decisions)",
+            self.reorder_applied, self.reorder_skipped
+        )?;
         let dist = self
             .theta_dist
             .iter()
@@ -383,6 +410,8 @@ mod tests {
         m.add(&m.theta_memo_hits, 3);
         m.add(&m.delta_patched, 2);
         m.add(&m.delta_rebuilt, 1);
+        m.add(&m.reorder_applied, 2);
+        m.add(&m.reorder_skipped, 1);
         m.record_theta(5);
         m.record_theta(5);
         m.record_theta(usize::MAX);
@@ -397,12 +426,14 @@ mod tests {
         assert_eq!(r.theta_tuned, 1);
         assert_eq!(r.theta_memo_hits, 3);
         assert_eq!((r.delta_patched, r.delta_rebuilt), (2, 1));
+        assert_eq!((r.reorder_applied, r.reorder_skipped), (2, 1));
         assert_eq!(r.theta_dist, vec![(5, 2), (usize::MAX, 1)]);
         // Display renders without panicking and mentions the hit rate
         // and the resolved-θ distribution
         let text = format!("{r}");
         assert!(text.contains("75.0% hit rate"));
         assert!(text.contains("2 patched onto cached plans, 1 rebuilt"), "{text}");
+        assert!(text.contains("auto-reorder: 2 applied, 1 skipped"), "{text}");
         assert!(text.contains("[5:2 flex:1]"), "{text}");
     }
 
@@ -423,12 +454,14 @@ mod tests {
         a.add(&a.exec_nanos, 3_000_000); // mean 1 ms
         a.add(&a.prep_full, 1);
         a.add(&a.prep_fast, 2);
+        a.add(&a.reorder_applied, 1);
         a.record_theta(5);
         a.exec_hist.record(1_000_000);
         let b = ServeMetrics::new();
         b.add(&b.requests, 1);
         b.add(&b.exec_nanos, 5_000_000); // mean 5 ms
         b.add(&b.prep_full, 1);
+        b.add(&b.reorder_skipped, 1);
         b.record_theta(5);
         b.record_theta(usize::MAX);
         b.exec_hist.record(5_000_000);
@@ -437,6 +470,7 @@ mod tests {
         let m = MetricsReport::merge(&[ra, rb]);
         assert_eq!(m.requests, 4);
         assert_eq!((m.prep_full, m.prep_fast), (2, 2));
+        assert_eq!((m.reorder_applied, m.reorder_skipped), (1, 1));
         assert_eq!(m.workers, 4);
         // request-weighted mean: (3·1 + 1·5) / 4 = 2 ms
         assert!((m.mean_exec_ms - 2.0).abs() < 1e-9, "{}", m.mean_exec_ms);

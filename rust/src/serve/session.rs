@@ -39,7 +39,7 @@ use crate::dist::{DistParams, Op};
 use crate::exec::sddmm::SddmmExecutor;
 use crate::exec::{SpmmExecutor, TcBackend, Workspace};
 use crate::format::Precision;
-use crate::planner::{Planner, ThetaPolicy};
+use crate::planner::{Planner, ReorderPolicy, ThetaPolicy};
 use crate::sparse::{Csr, Dense, PatternFingerprint};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -95,6 +95,11 @@ pub struct Request {
     /// requests resolve to an executor whose stored values are rounded
     /// through the 16-bit format; the cached plan itself stays f32.
     pub precision: Precision,
+    /// Whether the affinity row-reorder stage may fire (defaults to
+    /// [`ReorderPolicy::Off`]). Like θ, the *decision* is memoized per
+    /// pattern and recorded in the [`PlanKey`], so an `Auto` request
+    /// that reordered once warm-hits the reordered plan forever.
+    pub reorder: ReorderPolicy,
 }
 
 impl Request {
@@ -106,6 +111,7 @@ impl Request {
             dist: None,
             balance: None,
             precision: Precision::F32,
+            reorder: ReorderPolicy::Off,
         }
     }
 
@@ -117,6 +123,7 @@ impl Request {
             dist: None,
             balance: None,
             precision: Precision::F32,
+            reorder: ReorderPolicy::Off,
         }
     }
 
@@ -129,6 +136,7 @@ impl Request {
             dist: None,
             balance: None,
             precision: Precision::F32,
+            reorder: ReorderPolicy::Off,
         }
     }
 
@@ -141,6 +149,7 @@ impl Request {
             dist: None,
             balance: None,
             precision: Precision::F32,
+            reorder: ReorderPolicy::Off,
         }
     }
 
@@ -164,6 +173,12 @@ impl Request {
     /// Request execution at a reduced value precision (bf16 / f16).
     pub fn with_precision(mut self, p: Precision) -> Self {
         self.precision = p;
+        self
+    }
+
+    /// Allow (or forbid) the affinity row-reorder plan stage.
+    pub fn with_reorder(mut self, r: ReorderPolicy) -> Self {
+        self.reorder = r;
         self
     }
 
@@ -194,8 +209,14 @@ pub struct DeltaRequest {
     /// Precision of the cached plan entry the delta patches (the
     /// serving key is precision-qualified).
     pub precision: Precision,
+    /// Reorder policy of the cached plan entry the delta targets (the
+    /// serving key is reorder-qualified). Reordered plans cannot be
+    /// patched window-locally — the engine rebuilds them from
+    /// [`DeltaRequest::base`] instead (counted as `delta_rebuilt`).
+    pub reorder: ReorderPolicy,
     /// The base matrix; enables a cold rebuild when the patch path is
-    /// unavailable (base plan evicted / pattern state shed).
+    /// unavailable (base plan evicted / pattern state shed / plan
+    /// row-reordered).
     pub base: Option<Csr>,
 }
 
@@ -210,6 +231,7 @@ impl DeltaRequest {
             dist: None,
             balance: None,
             precision: Precision::F32,
+            reorder: ReorderPolicy::Off,
             base: None,
         }
     }
@@ -242,6 +264,12 @@ impl DeltaRequest {
     /// Target a precision-qualified cache entry (bf16 / f16).
     pub fn with_precision(mut self, p: Precision) -> Self {
         self.precision = p;
+        self
+    }
+
+    /// Target a reorder-qualified cache entry.
+    pub fn with_reorder(mut self, r: ReorderPolicy) -> Self {
+        self.reorder = r;
         self
     }
 }
@@ -377,6 +405,13 @@ pub struct Engine {
     /// unique-fingerprint traffic cannot grow the memo unboundedly
     /// *and* cannot starve long-lived handle tenants of their θ.
     theta_memo: Mutex<ThetaMemo>,
+    /// Reorder-decision provenance: (fingerprint, op, θ, padding) →
+    /// whether the affinity pre-metric fired. Same bounded
+    /// recency-stamped shape as the θ memo: the clustering + sampled
+    /// re-distribution behind [`crate::reorder::decide`] runs at most
+    /// once per pattern, and values-only handles resolve the reorder
+    /// bit without ever seeing the matrix.
+    reorder_memo: Mutex<ReorderMemo>,
 }
 
 /// Max resolved-θ provenance entries kept before the LRU half is
@@ -419,6 +454,40 @@ impl ThetaMemo {
     }
 }
 
+type ReorderMemoKey = (PatternFingerprint, Op, usize, bool);
+
+/// The reorder-decision provenance table (same recency-stamped,
+/// evict-oldest-half shape as [`ThetaMemo`], capped at the same
+/// [`THETA_MEMO_CAP`]).
+#[derive(Default)]
+struct ReorderMemo {
+    map: HashMap<ReorderMemoKey, (bool, u64)>,
+    tick: u64,
+}
+
+impl ReorderMemo {
+    fn get(&mut self, key: &ReorderMemoKey) -> Option<bool> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(key).map(|e| {
+            e.1 = tick;
+            e.0
+        })
+    }
+
+    fn insert(&mut self, key: ReorderMemoKey, applied: bool) {
+        if self.map.len() >= THETA_MEMO_CAP {
+            let mut ticks: Vec<u64> = self.map.values().map(|&(_, t)| t).collect();
+            ticks.sort_unstable();
+            let cutoff = ticks[ticks.len() / 2];
+            self.map.retain(|_, &mut (_, t)| t > cutoff);
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.insert(key, (applied, tick));
+    }
+}
+
 impl Engine {
     /// Start the worker pool.
     pub fn new(cfg: EngineConfig) -> Self {
@@ -450,10 +519,30 @@ impl Engine {
             next_id: AtomicU64::new(0),
             sched: SchedParams { workers: n_workers, ..cfg.sched },
             theta_memo: Mutex::new(ThetaMemo::default()),
+            reorder_memo: Mutex::new(ReorderMemo::default()),
         }
     }
 
     /// Serve one request, blocking until its response is ready.
+    ///
+    /// Same pattern + fresh values rides the plan cache's `set_values`
+    /// fast path (no distribution, no balancing):
+    ///
+    /// ```
+    /// use libra::serve::{Engine, EngineConfig, Request};
+    /// use libra::sparse::{gen, Dense};
+    /// use libra::util::SplitMix64;
+    ///
+    /// let engine = Engine::new(EngineConfig::default());
+    /// let mut rng = SplitMix64::new(7);
+    /// let m = gen::power_law(&mut rng, 64, 4.0, 2.0);
+    /// let b = Dense::random(&mut rng, 64, 8);
+    ///
+    /// let cold = engine.submit(Request::spmm(m.clone(), b.clone()));
+    /// assert!(!cold.cache_hit);
+    /// let warm = engine.submit(Request::spmm(m, b));
+    /// assert!(warm.cache_hit);
+    /// ```
     pub fn submit(&self, req: Request) -> Response {
         self.submit_async(req).wait()
     }
@@ -515,11 +604,13 @@ impl Engine {
             None => self.resolve_dist(matrix, fp, op, n, req.theta)?,
         };
         self.metrics.record_theta(d.threshold);
+        let reorder = self.resolve_reorder(matrix, fp, op, req.reorder, &d)?;
         Ok(match op {
             Op::Spmm => PlanKey::spmm(fp, &d, &bal),
             Op::Sddmm => PlanKey::sddmm(fp, &d, &bal),
         }
-        .with_precision(req.precision))
+        .with_precision(req.precision)
+        .with_reorder(reorder))
     }
 
     /// Resolve `DistParams` under a [`ThetaPolicy`], memoized per
@@ -558,6 +649,46 @@ impl Engine {
         Ok(d)
     }
 
+    /// Resolve the reorder-stage decision under a [`ReorderPolicy`],
+    /// memoized per (fingerprint, op, resolved `DistParams`): the
+    /// affinity pre-metric runs at most once per pattern, and the
+    /// decision becomes [`PlanKey`] provenance so repeat traffic —
+    /// values-only handles included — lands on the same plan entry.
+    fn resolve_reorder(
+        &self,
+        matrix: Option<&Csr>,
+        fp: PatternFingerprint,
+        op: Op,
+        policy: ReorderPolicy,
+        d: &DistParams,
+    ) -> anyhow::Result<bool> {
+        if policy == ReorderPolicy::Off {
+            return Ok(false);
+        }
+        let memo_key = (fp, op, d.threshold, d.fill_padding);
+        if let Some(applied) = self.reorder_memo.lock().unwrap().get(&memo_key) {
+            return Ok(applied);
+        }
+        let Some(m) = matrix else {
+            anyhow::bail!(
+                "pattern handle {:#018x} ({}x{}, nnz {}) has no reorder decision yet; auto \
+                 reorder decides on first sight of the full matrix — resubmit it once",
+                fp.hash,
+                fp.rows,
+                fp.cols,
+                fp.nnz
+            );
+        };
+        let applied = crate::reorder::decide(policy, m, op, d).is_some();
+        if applied {
+            self.metrics.add(&self.metrics.reorder_applied, 1);
+        } else {
+            self.metrics.add(&self.metrics.reorder_skipped, 1);
+        }
+        self.reorder_memo.lock().unwrap().insert(memo_key, applied);
+        Ok(applied)
+    }
+
     /// Apply an edge-batch delta to a previously-served pattern,
     /// synchronously on the caller thread. The normal outcome is an
     /// incremental **patch**: the cached plan is updated window-locally
@@ -570,24 +701,36 @@ impl Engine {
     /// surfaces to the caller. The two paths are counted separately as
     /// `delta_patched` / `delta_rebuilt` in [`ServeMetrics`] — a delta
     /// that silently fell back would show up there.
+    ///
+    /// Reordered plan entries (`reorder: Auto` requests whose affinity
+    /// pre-metric fired) always take the rebuild path: their windows
+    /// live in permuted row space, so [`PlanCache::apply_delta`]
+    /// refuses to patch them and the engine re-preprocesses the patched
+    /// matrix through the reorder stage instead. The clustering is
+    /// deterministic, so the rebuilt plan is exactly what a cold serve
+    /// of the patched matrix would build.
     pub fn submit_delta(&self, req: DeltaRequest) -> anyhow::Result<DeltaOutcome> {
         let bal = req.balance.unwrap_or_default();
         let d = match req.dist {
             Some(d) => d,
             None => self.resolve_dist(req.base.as_ref(), req.fp, req.op, req.width, req.theta)?,
         };
+        let reorder = self.resolve_reorder(req.base.as_ref(), req.fp, req.op, req.reorder, &d)?;
         let old_key = match req.op {
             Op::Spmm => PlanKey::spmm(req.fp, &d, &bal),
             Op::Sddmm => PlanKey::sddmm(req.fp, &d, &bal),
         }
-        .with_precision(req.precision);
+        .with_precision(req.precision)
+        .with_reorder(reorder);
         match self.cache.apply_delta(&old_key, &req.delta) {
             Ok(applied) => {
                 self.metrics.add(&self.metrics.delta_patched, 1);
-                // seed the θ provenance so traffic against the patched
-                // pattern resolves without re-tuning
+                // seed the θ + reorder provenance so traffic against
+                // the patched pattern resolves without re-tuning
                 let memo_key = (applied.new_fp, req.op, req.width, req.theta);
                 self.theta_memo.lock().unwrap().insert(memo_key, d);
+                let rkey = (applied.new_fp, req.op, d.threshold, d.fill_padding);
+                self.reorder_memo.lock().unwrap().insert(rkey, old_key.reorder);
                 Ok(DeltaOutcome { new_fp: applied.new_fp, patched: true, nnz: applied.nnz })
             }
             Err(patch_err) => {
@@ -598,27 +741,19 @@ impl Engine {
                 let nnz = new_m.nnz();
                 let plan = match req.op {
                     Op::Spmm => {
-                        let p = crate::prep::preprocess_spmm(
-                            &new_m,
-                            &d,
-                            &bal,
-                            crate::prep::PrepMode::Sequential,
-                        );
+                        let p = build_spmm_plan(&new_m, &d, &bal, old_key.reorder);
                         CachedPlan::Spmm(Arc::new(p))
                     }
                     Op::Sddmm => {
-                        let p = crate::prep::preprocess_sddmm(
-                            &new_m,
-                            &d,
-                            &bal,
-                            crate::prep::PrepMode::Sequential,
-                        );
+                        let p = build_sddmm_plan(&new_m, &d, &bal, old_key.reorder);
                         CachedPlan::Sddmm(Arc::new(SddmmEntry { plan: p, pattern: new_m }))
                     }
                 };
                 self.cache.insert(new_key, plan);
                 let memo_key = (new_fp, req.op, req.width, req.theta);
                 self.theta_memo.lock().unwrap().insert(memo_key, d);
+                let rkey = (new_fp, req.op, d.threshold, d.fill_padding);
+                self.reorder_memo.lock().unwrap().insert(rkey, old_key.reorder);
                 self.metrics.add(&self.metrics.delta_rebuilt, 1);
                 Ok(DeltaOutcome { new_fp, patched: false, nnz })
             }
@@ -773,6 +908,52 @@ fn execute_one(
     }
 }
 
+/// Cold-path SpMM preprocessing, routed through the affinity reorder
+/// stage when the plan key carries the reorder provenance bit. The
+/// decision (`decide`) is deterministic on (pattern, op, params), so
+/// re-running it here reproduces exactly the permutation the key's
+/// provenance was recorded against.
+fn build_spmm_plan(
+    m: &Csr,
+    d: &DistParams,
+    b: &BalanceParams,
+    reorder: bool,
+) -> crate::prep::SpmmPlan {
+    if reorder {
+        if let Some(perm) = crate::reorder::decide(ReorderPolicy::Auto, m, Op::Spmm, d) {
+            return crate::prep::preprocess_spmm_reordered(
+                m,
+                d,
+                b,
+                crate::prep::PrepMode::Sequential,
+                &perm,
+            );
+        }
+    }
+    crate::prep::preprocess_spmm(m, d, b, crate::prep::PrepMode::Sequential)
+}
+
+/// Cold-path SDDMM preprocessing (see [`build_spmm_plan`]).
+fn build_sddmm_plan(
+    m: &Csr,
+    d: &DistParams,
+    b: &BalanceParams,
+    reorder: bool,
+) -> crate::prep::SddmmPlan {
+    if reorder {
+        if let Some(perm) = crate::reorder::decide(ReorderPolicy::Auto, m, Op::Sddmm, d) {
+            return crate::prep::preprocess_sddmm_reordered(
+                m,
+                d,
+                b,
+                crate::prep::PrepMode::Sequential,
+                &perm,
+            );
+        }
+    }
+    crate::prep::preprocess_sddmm(m, d, b, crate::prep::PrepMode::Sequential)
+}
+
 /// Resolve an SpMM executor: warm (cached plan + `set_values`, no
 /// distribution or balancing) or cold (full prep, plan published).
 fn resolve_spmm(
@@ -800,12 +981,7 @@ fn resolve_spmm(
                 return Ok(SpmmExecutor::from_plan(p, backend));
             }
             metrics.add(&metrics.prep_full, 1);
-            let plan = crate::prep::preprocess_spmm(
-                &m,
-                dparams,
-                &bparams,
-                crate::prep::PrepMode::Sequential,
-            );
+            let plan = build_spmm_plan(&m, dparams, &bparams, key.reorder);
             if plan.plan_bytes() <= cache.capacity_bytes() {
                 // record the pattern's structural state alongside the
                 // plan so edge-batch deltas can patch it incrementally
@@ -879,12 +1055,7 @@ fn resolve_sddmm(
                 return Ok(SddmmExecutor::from_plan(plan, m, backend));
             }
             metrics.add(&metrics.prep_full, 1);
-            let plan = crate::prep::preprocess_sddmm(
-                &m,
-                dparams,
-                &bparams,
-                crate::prep::PrepMode::Sequential,
-            );
+            let plan = build_sddmm_plan(&m, dparams, &bparams, key.reorder);
             let entry = SddmmEntry { plan, pattern: m };
             if entry.bytes() <= cache.capacity_bytes() {
                 // record structural state for incremental delta patching

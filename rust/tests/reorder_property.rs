@@ -1,0 +1,261 @@
+//! Property suite for the affinity-reorder plan stage.
+//!
+//! Three guarantees are checked across the adversarial
+//! `testgen::pattern_family` mix, with forced random permutations (not
+//! just the ones `reorder::decide` would pick — any valid permutation
+//! must round-trip):
+//!
+//! - **Fold exactness.** A reordered plan executes in permuted row
+//!   space and row-scatters the result back; at deterministic executor
+//!   configs the output must be bit-identical to manually scattering a
+//!   plain execution of the permuted matrix. For the flexible-only
+//!   extreme the fold is bit-identical to the *unreordered* execution
+//!   outright (per-row chunk boundaries depend only on the row's own
+//!   length, so permutation cannot change any accumulation order). The
+//!   hybrid/TC paths are exempt from that stronger claim by design:
+//!   window regrouping changes which columns share a TC block, which
+//!   reassociates the f32 block partials.
+//! - **SDDMM schedule invariance.** The sampled-dot kernel is a pure
+//!   function of its operand rows and the reordered plan's output
+//!   indices are remapped to original CSR positions at build time, so
+//!   reordered SDDMM output is bit-identical to unreordered at any θ.
+//! - **`ReorderPolicy::Off` is inert.** A planner with the stage off
+//!   must produce plans byte-identical to the direct preprocess
+//!   pipeline, with no permutation attached.
+//!
+//! Plus the serving contract: reordered plans are cached under
+//! reorder-qualified keys and repeat traffic warm-hits them, while
+//! `off` traffic for the same pattern builds (and then hits) its own
+//! separate entry.
+
+use libra::balance::BalanceParams;
+use libra::dist::DistParams;
+use libra::exec::sddmm::SddmmExecutor;
+use libra::exec::{SpmmExecutor, TcBackend, Threading};
+use libra::planner::{Planner, ReorderPolicy, ThetaPolicy};
+use libra::prep::{
+    preprocess_sddmm, preprocess_sddmm_reordered, preprocess_spmm, preprocess_spmm_reordered,
+    PrepMode,
+};
+use libra::reorder::RowPerm;
+use libra::serve::{Engine, EngineConfig, Request, SchedParams};
+use libra::sparse::{gen, Dense};
+use libra::util::propcheck::{check, Config};
+use libra::util::{testgen, SplitMix64};
+
+fn random_perm(rng: &mut SplitMix64, rows: usize) -> RowPerm {
+    let mut order: Vec<u32> = (0..rows as u32).collect();
+    rng.shuffle(&mut order);
+    RowPerm::from_perm(order)
+}
+
+fn random_dist_params(rng: &mut SplitMix64) -> DistParams {
+    match rng.below(4) {
+        0 => DistParams::default(),
+        1 => DistParams::flex_only(),
+        2 => DistParams::tc_only(),
+        _ => DistParams { threshold: rng.range(1, 10), fill_padding: rng.chance(0.5) },
+    }
+}
+
+fn random_balance_params(rng: &mut SplitMix64) -> BalanceParams {
+    if rng.chance(0.3) {
+        BalanceParams::default()
+    } else {
+        BalanceParams {
+            ts: rng.range(1, 8),
+            cs: rng.range(2, 40),
+            short_len: rng.range(1, 6),
+            enabled: rng.chance(0.8),
+        }
+    }
+}
+
+/// Deterministic single-stream executor: inline threading, one
+/// flexible stream, so every accumulation order is fixed.
+fn deterministic(e: &mut SpmmExecutor) {
+    e.flex_threads = 1;
+    e.threading = Threading::Inline;
+}
+
+#[test]
+fn reordered_spmm_fold_matches_manual_scatter() {
+    check(Config::default().cases(24), "reorder fold == manual scatter", |rng| {
+        let m = testgen::pattern_family(rng, 96);
+        let perm = random_perm(rng, m.rows);
+        let d = random_dist_params(rng);
+        let bal = random_balance_params(rng);
+        let n = rng.range(1, 12);
+        let b = Dense::random(rng, m.cols, n);
+
+        let mut folded = SpmmExecutor::from_plan(
+            preprocess_spmm_reordered(&m, &d, &bal, PrepMode::Sequential, &perm),
+            TcBackend::NativeBitmap,
+        );
+        deterministic(&mut folded);
+        assert!(folded.perm.is_some());
+        let got = folded.execute(&b).unwrap();
+
+        // plain execution of the permuted matrix, scattered by hand
+        let permuted = perm.apply_rows(&m);
+        let mut plain = SpmmExecutor::from_plan(
+            preprocess_spmm(&permuted, &d, &bal, PrepMode::Sequential),
+            TcBackend::NativeBitmap,
+        );
+        deterministic(&mut plain);
+        let tmp = plain.execute(&b).unwrap();
+        let mut want = Dense::zeros(m.rows, n);
+        for (new, &old) in perm.perm.iter().enumerate() {
+            let dst = old as usize * n;
+            want.data[dst..dst + n].copy_from_slice(&tmp.data[new * n..(new + 1) * n]);
+        }
+        assert_eq!(got.data, want.data, "inverse fold diverged from manual scatter");
+    });
+}
+
+#[test]
+fn reordered_spmm_bit_identical_at_flex_only() {
+    // at the flexible-only extreme the whole claim strengthens to
+    // bit-identity against the *unreordered* execution: tile chunk
+    // boundaries are a function of each row's own length, so the
+    // permutation cannot reassociate any per-row sum
+    check(Config::default().cases(24), "flex-only reorder == unreordered", |rng| {
+        let m = testgen::pattern_family(rng, 96);
+        let perm = random_perm(rng, m.rows);
+        let d = DistParams::flex_only();
+        let bal = random_balance_params(rng);
+        let n = rng.range(1, 12);
+        let b = Dense::random(rng, m.cols, n);
+
+        let mut reord = SpmmExecutor::from_plan(
+            preprocess_spmm_reordered(&m, &d, &bal, PrepMode::Sequential, &perm),
+            TcBackend::NativeBitmap,
+        );
+        let mut plain = SpmmExecutor::from_plan(
+            preprocess_spmm(&m, &d, &bal, PrepMode::Sequential),
+            TcBackend::NativeBitmap,
+        );
+        deterministic(&mut reord);
+        deterministic(&mut plain);
+        let got = reord.execute(&b).unwrap();
+        let want = plain.execute(&b).unwrap();
+        assert_eq!(got.data, want.data, "flex-only reordered output diverged");
+    });
+}
+
+#[test]
+fn reordered_sddmm_bit_identical_at_any_theta() {
+    check(Config::default().cases(20), "reordered sddmm == unreordered", |rng| {
+        let m = testgen::pattern_family(rng, 80);
+        let perm = random_perm(rng, m.rows);
+        let d = match rng.below(3) {
+            0 => DistParams::sddmm_default(),
+            1 => DistParams::flex_only(),
+            _ => DistParams { threshold: rng.range(1, 48), fill_padding: true },
+        };
+        let bal = random_balance_params(rng);
+        let k = rng.range(1, 10);
+        let a = Dense::random(rng, m.rows, k);
+        let b = Dense::random(rng, m.cols, k);
+
+        let reord = SddmmExecutor::from_plan(
+            preprocess_sddmm_reordered(&m, &d, &bal, PrepMode::Sequential, &perm),
+            m.clone(),
+            TcBackend::NativeBitmap,
+        );
+        let plain = SddmmExecutor::from_plan(
+            preprocess_sddmm(&m, &d, &bal, PrepMode::Sequential),
+            m.clone(),
+            TcBackend::NativeBitmap,
+        );
+        let got = reord.execute(&a, &b).unwrap();
+        let want = plain.execute(&a, &b).unwrap();
+        assert_eq!(got.values, want.values, "reordered SDDMM output diverged");
+    });
+}
+
+#[test]
+fn policy_off_is_byte_identical_to_direct_preprocess() {
+    check(Config::default().cases(16), "reorder off == direct pipeline", |rng| {
+        let m = testgen::pattern_family(rng, 96);
+        let n = rng.range(1, 16);
+        let planner = Planner::new(ThetaPolicy::Auto).with_reorder(ReorderPolicy::Off);
+
+        let (plan, d) = planner.plan_spmm(&m, n);
+        assert!(plan.perm.is_none(), "Off must never attach a permutation");
+        let want = preprocess_spmm(&m, &d, &BalanceParams::default(), PrepMode::Sequential);
+        assert_eq!(plan.dist.tc.window_of, want.dist.tc.window_of);
+        assert_eq!(plan.dist.tc.cols, want.dist.tc.cols);
+        assert_eq!(plan.dist.tc.bitmaps, want.dist.tc.bitmaps);
+        assert_eq!(plan.dist.tc.values, want.dist.tc.values);
+        assert_eq!(plan.dist.tc_src_idx, want.dist.tc_src_idx);
+        assert_eq!(plan.dist.flex_row_ptr, want.dist.flex_row_ptr);
+        assert_eq!(plan.dist.flex_cols, want.dist.flex_cols);
+        assert_eq!(plan.dist.flex_vals, want.dist.flex_vals);
+        assert_eq!(plan.dist.flex_src_idx, want.dist.flex_src_idx);
+        assert_eq!(plan.dist.stats, want.dist.stats);
+        assert_eq!(plan.sched.long_tiles, want.sched.long_tiles);
+        assert_eq!(plan.sched.short_tiles, want.sched.short_tiles);
+        assert_eq!(plan.sched.tc_segments, want.sched.tc_segments);
+
+        let (splan, sd) = planner.plan_sddmm(&m, n);
+        assert!(splan.perm.is_none(), "Off must never attach a permutation");
+        let swant = preprocess_sddmm(&m, &sd, &BalanceParams::default(), PrepMode::Sequential);
+        assert_eq!(splan.dist.tc.bitmaps, swant.dist.tc.bitmaps);
+        assert_eq!(splan.dist.tc.values, swant.dist.tc.values);
+        assert_eq!(splan.dist.tc_out_idx, swant.dist.tc_out_idx);
+        assert_eq!(splan.dist.flex_rows, swant.dist.flex_rows);
+        assert_eq!(splan.dist.flex_cols, swant.dist.flex_cols);
+        assert_eq!(splan.dist.flex_out_idx, swant.dist.flex_out_idx);
+        assert_eq!(splan.dist.stats, swant.dist.stats);
+    });
+}
+
+#[test]
+fn reordered_plans_warm_hit_the_serve_cache() {
+    let eng = Engine::new(EngineConfig {
+        sched: SchedParams { workers: 2, max_batch: 8 },
+        cache_bytes: 64 << 20,
+        backend: TcBackend::NativeBitmap,
+    });
+    // a shuffled column-clustered pattern: the affinity pre-metric
+    // demonstrably fires on it (same construction as the reorder-stage
+    // unit tests)
+    let mut rng = SplitMix64::new(77);
+    let base = gen::column_clustered(&mut rng, 256, 256, 4_000, 0.85, 8);
+    let m = random_perm(&mut rng, base.rows).apply_rows(&base);
+    let b = Dense::random(&mut rng, 256, 16);
+
+    // cold: the pre-metric runs once, the plan lands under a
+    // reorder-qualified key
+    let cold = eng.submit(Request::spmm(m.clone(), b.clone()).with_reorder(ReorderPolicy::Auto));
+    assert!(!cold.cache_hit);
+    let got = cold.result.unwrap().into_dense().unwrap();
+    assert!(got.allclose(&m.spmm_dense_ref(&b), 1e-3));
+
+    // repeat traffic, fresh values each time: all warm, and the memoed
+    // decision means the pre-metric never reruns
+    for session in 0..3 {
+        let mut m2 = m.clone();
+        for v in m2.values.iter_mut() {
+            *v = rng.f32_range(-2.0, 2.0);
+        }
+        let r = eng.submit(Request::spmm(m2.clone(), b.clone()).with_reorder(ReorderPolicy::Auto));
+        assert!(r.cache_hit, "session {session} must warm-hit the reordered plan");
+        let out = r.result.unwrap().into_dense().unwrap();
+        assert!(out.allclose(&m2.spmm_dense_ref(&b), 1e-3));
+    }
+    let rep = eng.report();
+    assert_eq!(rep.reorder_applied, 1, "the pre-metric must run exactly once");
+    assert_eq!(rep.reorder_skipped, 0);
+    assert_eq!(rep.prep_full, 1);
+    assert_eq!(rep.prep_fast, 3);
+
+    // the same pattern served with the stage off is a different key:
+    // one more cold build, then its own warm hits
+    let off = eng.submit(Request::spmm(m.clone(), b.clone()));
+    assert!(!off.cache_hit, "off traffic must not hit the reordered entry");
+    let off2 = eng.submit(Request::spmm(m.clone(), b.clone()));
+    assert!(off2.cache_hit);
+    assert_eq!(eng.report().prep_full, 2);
+}

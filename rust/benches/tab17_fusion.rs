@@ -1,0 +1,198 @@
+//! Table 17 (fusion): one-pass SDDMM→softmax→SpMM vs the three-stage
+//! chain.
+//!
+//! The fused executor (`exec::FusedAttention`) walks both halves of an
+//! `AttentionPlan` window by window: each 8-row window's edge scores
+//! live in a per-task workspace segment that is scored, softmaxed, and
+//! aggregated before the next window starts — the full edge-score CSR
+//! the unfused chain materializes (and re-reads twice) never exists.
+//! This bench runs the power-law corpus through both pipelines built
+//! from the *same* plans, so the comparison isolates fusion: no θ or
+//! schedule differences.
+//!
+//! Timing discipline follows tab15/tab16: inline single-stream
+//! execution, min-of-reps per cell, aggregate = total corpus time per
+//! output width. **Gate**: CI's bench-smoke job fails (nonzero exit)
+//! unless (a) the fused pipeline beats the unfused chain on aggregate
+//! edge-throughput at every measured width (N ∈ {32, 128}), and (b)
+//! every fused run's peak score-segment stays bounded by the widest
+//! 8-row window — the observable no-full-edge-intermediate guarantee.
+
+use libra::bench::Table;
+use libra::exec::output::SharedOut;
+use libra::exec::sddmm::SddmmExecutor;
+use libra::exec::{FusedAttention, SpmmExecutor, TcBackend, Threading, Workspace};
+use libra::planner::{Planner, ThetaPolicy};
+use libra::sparse::{gen, Csr, Dense};
+use libra::util::SplitMix64;
+use std::sync::Arc;
+
+/// One unfused three-stage pass: SDDMM into `cos`, the AGNN edge
+/// softmax into `alpha`, value refresh, SpMM. Exactly the chain
+/// `gnn::Agnn` runs without `with_fused`.
+#[allow(clippy::too_many_arguments)]
+fn unfused_pass(
+    sd: &SddmmExecutor,
+    sp: &mut SpmmExecutor,
+    m: &Csr,
+    q: &Dense,
+    kmat: &Dense,
+    v: &Dense,
+    beta: f32,
+    cos: &mut [f32],
+    alpha: &mut [f32],
+    out: &mut Dense,
+    ws: &mut Workspace,
+) {
+    {
+        let shared = SharedOut::new(cos);
+        sd.execute_values_with(q, kmat, &shared, ws).unwrap();
+    }
+    for r in 0..m.rows {
+        let (s, e) = (m.row_ptr[r] as usize, m.row_ptr[r + 1] as usize);
+        if s == e {
+            continue;
+        }
+        let mut zmax = f32::MIN;
+        for i in s..e {
+            zmax = zmax.max(beta * cos[i]);
+        }
+        let mut sum = 0f32;
+        for i in s..e {
+            let ev = (beta * cos[i] - zmax).exp();
+            alpha[i] = ev;
+            sum += ev;
+        }
+        for a in &mut alpha[s..e] {
+            *a /= sum;
+        }
+    }
+    sp.dist.set_values(alpha);
+    out.data.fill(0.0);
+    sp.execute_into_with(v, out, ws).unwrap();
+}
+
+fn main() {
+    let (reps, sizes): (usize, &[(usize, f64)]) = match libra::bench::scale() {
+        "smoke" => (3, &[(512, 8.0)]),
+        "full" => (8, &[(4096, 8.0), (4096, 16.0), (8192, 12.0)]),
+        _ => (5, &[(2048, 8.0), (2048, 16.0)]),
+    };
+    // the widths the fusion gate covers: attention over a narrow and a
+    // wide value/feature matrix
+    let widths = [32usize, 128];
+    let k = 32usize;
+    let beta = 1.0f32;
+    let mut rng = SplitMix64::new(17);
+    let planner = Planner::new(ThetaPolicy::Auto);
+    println!(
+        "fusion: {} power-law matrices, K={k}, N sweep {widths:?}, min-of-{reps} inline timing",
+        sizes.len()
+    );
+
+    let mut t = Table::new(
+        "Table 17: fused SDDMM\u{2192}softmax\u{2192}SpMM vs three-stage chain (one plan, two pipelines)",
+        &["matrix", "N", "fused ms", "chain ms", "speedup", "fused Medge/s", "peak seg", "win bound"],
+    );
+    // aggregates per width (indexed like `widths`)
+    let mut edges = [0f64; 2];
+    let mut time_fused = [0f64; 2];
+    let mut time_chain = [0f64; 2];
+    let mut seg_bounded = true;
+    for &(rows, deg) in sizes {
+        let m = Arc::new(gen::power_law(&mut rng, rows, deg, 2.0));
+        let name = format!("powerlaw-{rows}x{deg}");
+        let q = Dense::random(&mut rng, m.rows, k);
+        let kmat = Dense::random(&mut rng, m.cols, k);
+        for (wi, &n) in widths.iter().enumerate() {
+            let v = Dense::random(&mut rng, m.cols, n);
+            let (plan, _, _) = planner.plan_attention(&m, k, n);
+            let mut ws = Workspace::new();
+
+            let mut fx =
+                FusedAttention::from_plan(plan.clone(), Arc::clone(&m), TcBackend::NativeBitmap)
+                    .unwrap();
+            fx.threading = Threading::Inline;
+            fx.flex_threads = 1;
+            let mut out_f = fx.execute_with(&q, &kmat, &v, beta, &mut ws).unwrap(); // warm
+            let mut best_f = f64::MAX;
+            for _ in 0..reps {
+                let tm = std::time::Instant::now();
+                out_f = fx.execute_with(&q, &kmat, &v, beta, &mut ws).unwrap();
+                best_f = best_f.min(tm.elapsed().as_secs_f64());
+            }
+            std::hint::black_box(&out_f);
+
+            // the unfused chain reuses the *same* plan halves
+            let mut sd = SddmmExecutor::from_plan(
+                plan.sddmm.clone(),
+                Arc::clone(&m),
+                TcBackend::NativeBitmap,
+            );
+            sd.threading = Threading::Inline;
+            sd.flex_threads = 1;
+            let mut sp = SpmmExecutor::from_plan(plan.spmm, TcBackend::NativeBitmap);
+            sp.threading = Threading::Inline;
+            sp.flex_threads = 1;
+            let mut cos = vec![0f32; m.nnz()];
+            let mut alpha = vec![0f32; m.nnz()];
+            let mut out_u = Dense::zeros(m.rows, n);
+            unfused_pass(
+                &sd, &mut sp, &m, &q, &kmat, &v, beta, &mut cos, &mut alpha, &mut out_u, &mut ws,
+            ); // warm
+            let mut best_u = f64::MAX;
+            for _ in 0..reps {
+                let tm = std::time::Instant::now();
+                unfused_pass(
+                    &sd, &mut sp, &m, &q, &kmat, &v, beta, &mut cos, &mut alpha, &mut out_u,
+                    &mut ws,
+                );
+                best_u = best_u.min(tm.elapsed().as_secs_f64());
+            }
+            std::hint::black_box(&out_u);
+
+            let (peak, bound) = (fx.peak_seg_elems(), fx.max_window_nnz());
+            seg_bounded &= peak <= bound && bound < m.nnz();
+            edges[wi] += m.nnz() as f64;
+            time_fused[wi] += best_f;
+            time_chain[wi] += best_u;
+            t.add(vec![
+                name.clone(),
+                n.to_string(),
+                format!("{:.3}", best_f * 1e3),
+                format!("{:.3}", best_u * 1e3),
+                format!("{:.2}x", best_u / best_f.max(1e-12)),
+                format!("{:.1}", m.nnz() as f64 / best_f.max(1e-12) / 1e6),
+                peak.to_string(),
+                bound.to_string(),
+            ]);
+        }
+    }
+    t.print();
+
+    // The gates: fusion must win on aggregate edge-throughput at every
+    // width, and the peak segment counter must prove no run ever held
+    // a full-edge intermediate.
+    let mut ok_speed = true;
+    for (wi, &n) in widths.iter().enumerate() {
+        let thr_f = edges[wi] / time_fused[wi].max(1e-12) / 1e6;
+        let thr_u = edges[wi] / time_chain[wi].max(1e-12) / 1e6;
+        let won = thr_f > thr_u;
+        ok_speed &= won;
+        println!(
+            "\nN={n}: fused {thr_f:.1} Medge/s vs chain {thr_u:.1} Medge/s — fusion {} \
+             (gate: fused > chain)",
+            if won { "won" } else { "did NOT win" }
+        );
+    }
+    println!(
+        "peak score segments {} bounded by one 8-row window on every run \
+         (gate: peak <= window nnz < edges)",
+        if seg_bounded { "stayed" } else { "were NOT" }
+    );
+    if !(ok_speed && seg_bounded) {
+        // a red exit fails CI's bench-smoke job instead of letting a
+        // fusion regression land silently
+        std::process::exit(1);
+    }
+}

@@ -16,6 +16,7 @@
 use super::counters::Counters;
 use super::kernels::{self, KernelParams};
 use super::output::SharedOut;
+use super::semiring::{self, Semiring};
 use crate::balance::FlexTile;
 use crate::sparse::Dense;
 
@@ -25,6 +26,10 @@ use crate::sparse::Dense;
 /// tile selects its range. `scratch` must be at least `b.cols` long —
 /// the executors hand each stream task its own reusable slot from the
 /// call's [`crate::exec::Workspace`] so the hot loop never allocates.
+///
+/// The default `mul+sum` semiring ([`Semiring::mul_sum`]) runs the
+/// exact pre-semiring axpy path; see [`spmm_tile_sr`] for the
+/// generalized tile.
 #[inline]
 pub fn spmm_tile(
     tile: &FlexTile,
@@ -94,15 +99,60 @@ pub fn spmm_tile(
     counters.add(&counters.bytes_out, (n * 4) as u64);
 }
 
-/// Execute a range of SDDMM flexible elements: per-element dot product
-/// `out[pos_i] = v_i * dot(A[row_i], B[col_i])`.
+/// Semiring-generalized SpMM flexible tile:
+/// `C[row, j] = fold_i op(v_i, B[col_i, j])`. The `mul+sum`
+/// instantiation routes straight to [`spmm_tile`] (the hardwired axpy
+/// path — bit-identical by construction); every other pair accumulates
+/// from the reduce identity into scratch and merges with the matching
+/// [`SharedOut::merge_slice`]. `Mean` accumulates as a sum — the
+/// executor divides by the row degree after all tiles have merged
+/// (row-split tiles make the divisor a whole-row property).
+#[inline]
+pub fn spmm_tile_sr(
+    sr: Semiring,
+    tile: &FlexTile,
+    cols: &[u32],
+    vals: &[f32],
+    b: &Dense,
+    out: &SharedOut,
+    scratch: &mut [f32],
+    counters: &Counters,
+    kp: &KernelParams,
+) {
+    if sr.is_mul_sum() {
+        spmm_tile(tile, cols, vals, b, out, scratch, counters, kp);
+        return;
+    }
+    let n = b.cols;
+    let (s, e) = (tile.elem_start as usize, tile.elem_end as usize);
+    let len = e - s;
+    if len == 0 {
+        return;
+    }
+    let acc = &mut scratch[..n];
+    acc.fill(sr.reduce.identity());
+    for i in s..e {
+        semiring::fold_row(sr, acc, vals[i], b.row(cols[i] as usize));
+    }
+    out.merge_slice(tile.row as usize * n, acc, tile.atomic, sr.reduce);
+    counters.add(&counters.flops_flex, (len * n) as u64);
+    counters.add(&counters.bytes_sparse, (len * 8) as u64);
+    counters.add(&counters.bytes_dense, (len * n * 4) as u64);
+    counters.add(&counters.bytes_out, (n * 4) as u64);
+}
+
+/// Execute a range of SDDMM flexible elements: per-element reduction
+/// `out[pos_i] = v_i * reduce_k op(A[row_i, k], B[col_i, k])` — the
+/// classical `mul+sum` pair is the lane dot product, routed through
+/// the exact pre-semiring kernel by [`semiring::edge_reduce`].
 ///
 /// Writes are per-element to distinct positions — no atomics needed
-/// (paper §4.3: SDDMM has no write conflicts). The lane dot kernel is
-/// a pure function of its operand rows, so results stay schedule-
+/// (paper §4.3: SDDMM has no write conflicts). The per-edge reduction
+/// is a pure function of its operand rows, so results stay schedule-
 /// invariant in every mode.
 #[inline]
 pub fn sddmm_range(
+    sr: Semiring,
     range: std::ops::Range<usize>,
     rows: &[u32],
     cols: &[u32],
@@ -118,10 +168,10 @@ pub fn sddmm_range(
     for i in range.clone() {
         let ar = a.row(rows[i] as usize);
         let br = b.row(cols[i] as usize);
-        let dot = kernels::dot_mode(kp.lanes, ar, br);
+        let score = semiring::edge_reduce(sr, kp.lanes, ar, br);
         // distinct positions: plain store is race-free
         unsafe {
-            out_values.add_plain(out_idx[i] as usize, vals[i] * dot);
+            out_values.add_plain(out_idx[i] as usize, vals[i] * score);
         }
     }
     let len = (range.end - range.start) as u64;
@@ -232,12 +282,62 @@ mod tests {
         let kp = KernelParams::default();
         {
             let out = SharedOut::new(&mut out_buf);
-            sddmm_range(0..2, &rows, &cols, &vals, &out_idx, &a, &b, &out, &counters, &kp);
+            sddmm_range(
+                Semiring::mul_sum(),
+                0..2,
+                &rows,
+                &cols,
+                &vals,
+                &out_idx,
+                &a,
+                &b,
+                &out,
+                &counters,
+                &kp,
+            );
         }
         let dot = |r: usize, c: usize| -> f32 {
             (0..3).map(|k| a.row(r)[k] * b.row(c)[k]).sum()
         };
         assert!((out_buf[5] - 2.0 * dot(1, 2)).abs() < 1e-5);
         assert!((out_buf[0] - -1.0 * dot(3, 0)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn spmm_tile_sr_mul_sum_is_bit_identical_and_max_reduces() {
+        let mut rng = SplitMix64::new(53);
+        let b = Dense::random(&mut rng, 8, 5);
+        let cols = vec![1u32, 4, 6];
+        let vals = vec![0.5f32, -2.0, 1.5];
+        let tile = FlexTile { elem_start: 0, elem_end: 3, row: 0, atomic: false, row_split: false };
+        let counters = Counters::new();
+        let kp = KernelParams::default();
+        let run = |sr: Semiring, init: f32| {
+            let mut out_buf = vec![init; 5];
+            let mut scratch = vec![0f32; 5];
+            let out = SharedOut::new(&mut out_buf);
+            spmm_tile_sr(sr, &tile, &cols, &vals, &b, &out, &mut scratch, &counters, &kp);
+            drop(out);
+            out_buf
+        };
+        // mul+sum routes to the hardwired tile: same bits
+        let hardwired = {
+            let mut out_buf = vec![0f32; 5];
+            let mut scratch = vec![0f32; 5];
+            let out = SharedOut::new(&mut out_buf);
+            spmm_tile(&tile, &cols, &vals, &b, &out, &mut scratch, &counters, &kp);
+            drop(out);
+            out_buf
+        };
+        assert_eq!(run(Semiring::mul_sum(), 0.0), hardwired);
+        // mul+max against the naive fold (output pre-set to identity)
+        use crate::exec::semiring::{BinaryOp, Reduce};
+        let got = run(Semiring::new(BinaryOp::Mul, Reduce::Max), f32::NEG_INFINITY);
+        for j in 0..5 {
+            let want = (0..3)
+                .map(|i| vals[i] * b.row(cols[i] as usize)[j])
+                .fold(f32::NEG_INFINITY, f32::max);
+            assert_eq!(got[j], want, "col {j}");
+        }
     }
 }

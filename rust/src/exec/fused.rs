@@ -1,0 +1,703 @@
+//! Fused sparse attention: SDDMM → row-softmax → SpMM as one pass.
+//!
+//! The unfused chain materializes two full-edge intermediates per
+//! layer — the score CSR written by SDDMM and the attention-weight
+//! array fed back into SpMM — and walks the pattern three times. The
+//! fused executor walks it **once per 8-row window**: edge scores live
+//! in a per-task segment sized by the widest window (never the whole
+//! edge set), the softmax runs in place on that segment, and the SpMM
+//! consumes it immediately while it is still cache-resident. Windows
+//! are the natural fusion grain because every plan structure in the
+//! pipeline — TC blocks, balance segments, flexible tiles — is
+//! window-local by construction, and a window's output rows have
+//! exactly one writer, so the fused pass needs no atomics at all.
+//!
+//! Numerics: each stage mirrors the unfused kernels operation for
+//! operation — the SDDMM edge reduction is [`semiring::edge_reduce`]
+//! (the lane dot kernel), the softmax is the exact loop
+//! `gnn::agnn::row_softmax_scaled_into` runs, and the flexible SpMM
+//! tiles are executed by the *same* [`flex::spmm_tile`] function on an
+//! index-shifted view of the segment. On a flex-only plan the fused
+//! result is therefore bit-identical to the three-stage chain; TC
+//! blocks reassociate the per-row accumulation exactly as they do
+//! unfused (tolerance-compared in the property tests).
+//!
+//! Training callers that need the intermediates (AGNN's backward pass
+//! reads both the raw scores and the attention weights) use
+//! [`FusedAttention::execute_spill_with`], which additionally streams
+//! the per-window segment into caller-owned full-edge buffers — the
+//! spill is explicit and opt-in, never a hidden allocation.
+
+use super::counters::Counters;
+use super::flex;
+use super::kernels::{self, KernelParams};
+use super::output::SharedOut;
+use super::pool::Threading;
+use super::semiring::{self, Semiring};
+use super::workspace::{self, Workspace};
+use super::TcBackend;
+use crate::balance::FlexTile;
+use crate::format::{PAD_COL, WINDOW};
+use crate::prep::AttentionPlan;
+use crate::sparse::{Csr, Dense};
+use anyhow::{ensure, Result};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Caller-owned spill targets for the training path: raw scores
+/// (`cos`) and post-softmax attention weights (`alpha`), both full-edge
+/// length. Windows write disjoint CSR ranges, so plain stores through
+/// the shared pointers are race-free.
+#[derive(Clone, Copy)]
+struct SpillBufs {
+    cos: *mut f32,
+    alpha: *mut f32,
+}
+
+unsafe impl Send for SpillBufs {}
+unsafe impl Sync for SpillBufs {}
+
+/// One-pass fused attention executor over a single [`AttentionPlan`].
+///
+/// `out = softmax_row(beta * (vals ⊙ (Q·Kᵀ))) · V`, sampled at the
+/// pattern's nonzeros — the AGNN propagation step, executed without
+/// ever forming a full-edge intermediate.
+pub struct FusedAttention {
+    plan: AttentionPlan,
+    pattern: Arc<Csr>,
+    backend: TcBackend,
+    /// Worker tasks pulling windows from the shared cursor.
+    pub flex_threads: usize,
+    /// Thread mapping strategy (persistent pool by default).
+    pub threading: Threading,
+    /// Kernel mode (lanes / panels); shared by all three fused stages.
+    pub kernel: KernelParams,
+    pub counters: Counters,
+    /// High-water mark of the per-window segment actually used, in
+    /// elements — the observable proof that the fused pass bounds its
+    /// intermediate by one window, not the edge count.
+    peak_seg: AtomicU64,
+    max_win_nnz: usize,
+    n_windows: usize,
+    /// Per-window boundary arrays (`len == n_windows + 1`) into the
+    /// window-ascending plan lists: SDDMM TC blocks, SDDMM flexible
+    /// elements, SpMM TC blocks, SpMM long tiles, SpMM short tiles.
+    sd_blk_start: Vec<u32>,
+    sd_flex_start: Vec<u32>,
+    sp_blk_start: Vec<u32>,
+    sp_long_start: Vec<u32>,
+    sp_short_start: Vec<u32>,
+}
+
+/// Boundary-scan a window-ascending list: `starts[w]..starts[w + 1]`
+/// is the item range of window `w`.
+fn window_starts(n_items: usize, n_windows: usize, win_of: impl Fn(usize) -> usize) -> Vec<u32> {
+    let mut starts = vec![0u32; n_windows + 1];
+    let mut w = 0usize;
+    for i in 0..n_items {
+        let wi = win_of(i);
+        debug_assert!(wi >= w, "list not window-ascending at item {i}");
+        while w < wi {
+            w += 1;
+            starts[w] = i as u32;
+        }
+    }
+    while w < n_windows {
+        w += 1;
+        starts[w] = n_items as u32;
+    }
+    starts
+}
+
+impl FusedAttention {
+    /// Build a fused executor from an attention plan. Requires a
+    /// native structured backend (the PJRT path packs whole-edge value
+    /// buffers per call, which is exactly the intermediate fusion
+    /// exists to avoid) and unreordered plans (a row permutation would
+    /// break the window-exclusive output ownership the no-atomics pass
+    /// relies on).
+    pub fn from_plan(plan: AttentionPlan, pattern: Arc<Csr>, backend: TcBackend) -> Result<Self> {
+        ensure!(
+            !matches!(backend, TcBackend::Pjrt(_)),
+            "fused attention needs a native structured backend: the PJRT path stages \
+             full-edge value buffers, defeating the fusion"
+        );
+        ensure!(
+            plan.sddmm.perm.is_none() && plan.spmm.perm.is_none(),
+            "fused attention does not support reordered plans"
+        );
+        for (name, rows, cols, nnz) in [
+            ("sddmm", plan.sddmm.dist.rows, plan.sddmm.dist.cols, plan.sddmm.dist.stats.nnz_total),
+            ("spmm", plan.spmm.dist.rows, plan.spmm.dist.cols, plan.spmm.dist.stats.nnz_total),
+        ] {
+            ensure!(
+                rows == pattern.rows && cols == pattern.cols && nnz == pattern.nnz(),
+                "{name} plan shape {rows}x{cols}/{nnz} does not match pattern {}x{}/{}",
+                pattern.rows,
+                pattern.cols,
+                pattern.nnz()
+            );
+        }
+        let n_windows = pattern.rows.div_ceil(WINDOW);
+        let rp = &pattern.row_ptr;
+        let max_win_nnz = (0..n_windows)
+            .map(|w| {
+                let lo = w * WINDOW;
+                let hi = ((w + 1) * WINDOW).min(pattern.rows);
+                (rp[hi] - rp[lo]) as usize
+            })
+            .max()
+            .unwrap_or(0);
+        let sd = &plan.sddmm;
+        let sp = &plan.spmm;
+        let sd_blk_start = window_starts(sd.dist.tc.n_blocks(), n_windows, |i| {
+            sd.dist.tc.window_of[i] as usize
+        });
+        let sd_flex_start = window_starts(sd.dist.flex_rows.len(), n_windows, |i| {
+            sd.dist.flex_rows[i] as usize / WINDOW
+        });
+        let sp_blk_start = window_starts(sp.dist.tc.n_blocks(), n_windows, |i| {
+            sp.dist.tc.window_of[i] as usize
+        });
+        let sp_long_start = window_starts(sp.sched.long_tiles.len(), n_windows, |i| {
+            sp.sched.long_tiles[i].row as usize / WINDOW
+        });
+        let sp_short_start = window_starts(sp.sched.short_tiles.len(), n_windows, |i| {
+            sp.sched.short_tiles[i].row as usize / WINDOW
+        });
+        Ok(Self {
+            plan,
+            pattern,
+            backend,
+            flex_threads: super::default_flex_threads(),
+            threading: Threading::default(),
+            kernel: KernelParams::default(),
+            counters: Counters::new(),
+            peak_seg: AtomicU64::new(0),
+            max_win_nnz,
+            n_windows,
+            sd_blk_start,
+            sd_flex_start,
+            sp_blk_start,
+            sp_long_start,
+            sp_short_start,
+        })
+    }
+
+    /// The plan this executor runs (both halves share one fingerprint).
+    pub fn plan(&self) -> &AttentionPlan {
+        &self.plan
+    }
+
+    /// The sparsity pattern (shared, not cloned, with the caller).
+    pub fn pattern(&self) -> &Arc<Csr> {
+        &self.pattern
+    }
+
+    /// The structured backend the executor was constructed with.
+    pub fn backend(&self) -> &TcBackend {
+        &self.backend
+    }
+
+    /// High-water mark of per-window segment elements used so far —
+    /// always bounded by [`Self::max_window_nnz`], never by the edge
+    /// count (the no-full-intermediate guarantee, asserted in tests).
+    pub fn peak_seg_elems(&self) -> usize {
+        self.peak_seg.load(Ordering::Relaxed) as usize
+    }
+
+    /// Nonzeros of the widest 8-row window — the segment sizing bound.
+    pub fn max_window_nnz(&self) -> usize {
+        self.max_win_nnz
+    }
+
+    /// `softmax_row(beta * (vals ⊙ (Q·Kᵀ))) · V` via the thread-local
+    /// default workspace.
+    pub fn execute(&self, q: &Dense, k: &Dense, v: &Dense, beta: f32) -> Result<Dense> {
+        workspace::with_default(|ws| self.execute_with(q, k, v, beta, ws))
+    }
+
+    /// [`Self::execute`] with a caller-owned workspace.
+    pub fn execute_with(
+        &self,
+        q: &Dense,
+        k: &Dense,
+        v: &Dense,
+        beta: f32,
+        ws: &mut Workspace,
+    ) -> Result<Dense> {
+        self.execute_core(q, k, v, beta, None, ws)
+    }
+
+    /// [`Self::execute_with`], additionally spilling the raw scores
+    /// into `cos` and the attention weights into `alpha` (both
+    /// full-edge length, CSR order) — the training path: AGNN's
+    /// backward pass needs both intermediates, so they spill by
+    /// design instead of by accident.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_spill_with(
+        &self,
+        q: &Dense,
+        k: &Dense,
+        v: &Dense,
+        beta: f32,
+        cos: &mut [f32],
+        alpha: &mut [f32],
+        ws: &mut Workspace,
+    ) -> Result<Dense> {
+        let nnz = self.pattern.nnz();
+        ensure!(
+            cos.len() == nnz && alpha.len() == nnz,
+            "spill buffers must be full-edge length {nnz} (got {} / {})",
+            cos.len(),
+            alpha.len()
+        );
+        let spill = SpillBufs { cos: cos.as_mut_ptr(), alpha: alpha.as_mut_ptr() };
+        self.execute_core(q, k, v, beta, Some(spill), ws)
+    }
+
+    fn execute_core(
+        &self,
+        q: &Dense,
+        kmat: &Dense,
+        v: &Dense,
+        beta: f32,
+        spill: Option<SpillBufs>,
+        ws: &mut Workspace,
+    ) -> Result<Dense> {
+        let rows = self.pattern.rows;
+        let cols = self.pattern.cols;
+        ensure!(
+            q.rows == rows && kmat.rows == cols && q.cols == kmat.cols,
+            "Q {}x{} / K {}x{} do not match pattern {rows}x{cols}",
+            q.rows,
+            q.cols,
+            kmat.rows,
+            kmat.cols
+        );
+        ensure!(v.rows == cols, "V has {} rows, pattern has {cols} columns", v.rows);
+        let n = v.cols;
+        let mut out = Dense::zeros(rows, n);
+        if self.n_windows == 0 || self.pattern.nnz() == 0 {
+            return Ok(out);
+        }
+        let tasks = match self.threading {
+            Threading::Inline => 1,
+            _ => self.flex_threads.max(1),
+        };
+        // one scratch slot per task: score segment + window-local
+        // alpha (each <= max_win_nnz) + 8xN accumulator + one row
+        let slot = 2 * self.max_win_nnz + (WINDOW + 1) * n;
+        let (_flex, scratch, _structured, _pack) = ws.split_spmm(None, tasks, slot);
+        let out_shared = SharedOut::new(&mut out.data);
+        let cursor = AtomicUsize::new(0);
+        let n_windows = self.n_windows;
+        let task = |t: usize| {
+            let mut guard = workspace::lock(&scratch[t]);
+            let buf = &mut guard[..slot];
+            let (seg_buf, rest) = buf.split_at_mut(self.max_win_nnz);
+            let (aflex_buf, rest) = rest.split_at_mut(self.max_win_nnz);
+            let (acc8, rowscr) = rest.split_at_mut(WINDOW * n);
+            loop {
+                let w = cursor.fetch_add(1, Ordering::Relaxed);
+                if w >= n_windows {
+                    break;
+                }
+                self.run_window(
+                    w, q, kmat, v, beta, spill, &out_shared, seg_buf, aflex_buf, acc8, rowscr,
+                );
+            }
+        };
+        self.threading.run(tasks, &task)?;
+        drop(out_shared);
+        Ok(out)
+    }
+
+    /// The fused pass for one 8-row window: SDDMM scores into the
+    /// segment, softmax in place, SpMM out — all per-task, no atomics
+    /// (the window's output rows have exactly one writer).
+    #[allow(clippy::too_many_arguments)]
+    fn run_window(
+        &self,
+        w: usize,
+        q: &Dense,
+        kmat: &Dense,
+        vmat: &Dense,
+        beta: f32,
+        spill: Option<SpillBufs>,
+        out: &SharedOut,
+        seg_buf: &mut [f32],
+        aflex_buf: &mut [f32],
+        acc8: &mut [f32],
+        rowscr: &mut [f32],
+    ) {
+        let rows = self.pattern.rows;
+        let n = vmat.cols;
+        let kdim = q.cols;
+        let lo = w * WINDOW;
+        let hi = ((w + 1) * WINDOW).min(rows);
+        let rp = &self.pattern.row_ptr;
+        let base = rp[lo] as usize;
+        let win_nnz = rp[hi] as usize - base;
+        if win_nnz == 0 {
+            return;
+        }
+        self.peak_seg.fetch_max(win_nnz as u64, Ordering::Relaxed);
+        let seg = &mut seg_buf[..win_nnz];
+        let c = &self.counters;
+        let kp = &self.kernel;
+        let sr = Semiring::mul_sum();
+
+        // ---- stage 1: SDDMM — scores into the window segment. The
+        // exactly-once cover invariant guarantees every segment slot is
+        // overwritten, so no zeroing pass is needed.
+        let sd = &self.plan.sddmm.dist;
+        let nslots = sd.tc.k;
+        let (b0, b1) = (self.sd_blk_start[w] as usize, self.sd_blk_start[w + 1] as usize);
+        for blk in b0..b1 {
+            let bcols = sd.tc.block_cols(blk);
+            let bvals = sd.tc.block_values(blk);
+            let vbase = sd.tc.val_ptr[blk] as usize;
+            let mut rest = sd.tc.bitmaps[blk];
+            let mut i = 0usize;
+            while rest != 0 {
+                let bit = rest.trailing_zeros() as usize;
+                let (r, col_slot) = (bit / nslots, bit % nslots);
+                let col = bcols[col_slot];
+                debug_assert_ne!(col, PAD_COL);
+                let score = semiring::edge_reduce(sr, kp.lanes, q.row(lo + r), kmat.row(col as usize));
+                seg[sd.tc_out_idx[vbase + i] as usize - base] = bvals[i] * score;
+                i += 1;
+                rest &= rest - 1;
+            }
+            c.add(&c.flops_structured, (WINDOW * kdim * nslots) as u64);
+            c.add(&c.blocks_executed, 1);
+            c.add(&c.bytes_dense, ((WINDOW + nslots) * kdim * 4) as u64);
+            c.add(&c.bytes_sparse, (16 + nslots * 4 + bvals.len() * 4) as u64);
+        }
+        let (fs, fe) = (self.sd_flex_start[w] as usize, self.sd_flex_start[w + 1] as usize);
+        for i in fs..fe {
+            let ar = q.row(sd.flex_rows[i] as usize);
+            let br = kmat.row(sd.flex_cols[i] as usize);
+            let score = semiring::edge_reduce(sr, kp.lanes, ar, br);
+            seg[sd.flex_out_idx[i] as usize - base] = sd.flex_vals[i] * score;
+        }
+        c.add(&c.flops_flex, ((fe - fs) * kdim) as u64);
+        c.add(&c.bytes_dense, ((fe - fs) * 2 * kdim * 4) as u64);
+        c.add(&c.bytes_sparse, ((fe - fs) * 12) as u64);
+        if let Some(sp) = spill {
+            // windows own disjoint CSR ranges: plain stores are race-free
+            unsafe {
+                std::ptr::copy_nonoverlapping(seg.as_ptr(), sp.cos.add(base), win_nnz);
+            }
+        }
+
+        // ---- stage 2: row softmax in place — the exact loop
+        // `gnn::agnn::row_softmax_scaled_into` runs (including the
+        // f32::MIN max seed), so fused alpha is bit-identical.
+        for r in lo..hi {
+            let (rs, re) = (rp[r] as usize - base, rp[r + 1] as usize - base);
+            if rs == re {
+                continue;
+            }
+            let mut zmax = f32::MIN;
+            for i in rs..re {
+                zmax = zmax.max(beta * seg[i]);
+            }
+            let mut sum = 0f32;
+            for i in rs..re {
+                let e = (beta * seg[i] - zmax).exp();
+                seg[i] = e;
+                sum += e;
+            }
+            for a in &mut seg[rs..re] {
+                *a /= sum;
+            }
+        }
+        if let Some(sp) = spill {
+            unsafe {
+                std::ptr::copy_nonoverlapping(seg.as_ptr(), sp.alpha.add(base), win_nnz);
+            }
+        }
+
+        // ---- stage 3: SpMM — the segment (now alpha) against V,
+        // consumed while cache-resident. TC blocks first (the unfused
+        // stream-0 convention), then long tiles, then short tiles.
+        let sp_dist = &self.plan.spmm.dist;
+        let kk = sp_dist.tc.k;
+        let (tb0, tb1) = (self.sp_blk_start[w] as usize, self.sp_blk_start[w + 1] as usize);
+        for blk in tb0..tb1 {
+            let bcols = sp_dist.tc.block_cols(blk);
+            let vbase = sp_dist.tc.val_ptr[blk] as usize;
+            let bm = sp_dist.tc.bitmaps[blk];
+            let acc = &mut acc8[..WINDOW * n];
+            acc.fill(0.0);
+            let mut rest = bm;
+            let mut i = 0usize;
+            while rest != 0 {
+                let bit = rest.trailing_zeros() as usize;
+                let (r, col_slot) = (bit / kk, bit % kk);
+                let col = bcols[col_slot];
+                debug_assert_ne!(col, PAD_COL);
+                let alpha = seg[sp_dist.tc_src_idx[vbase + i] as usize - base];
+                let arow = &mut acc[r * n..(r + 1) * n];
+                kernels::axpy_mode(kp.lanes, arow, alpha, vmat.row(col as usize));
+                i += 1;
+                rest &= rest - 1;
+            }
+            for r in lo..hi {
+                out.add_slice(r * n, &acc[(r - lo) * n..(r - lo + 1) * n], false);
+            }
+            c.add(&c.flops_structured, (WINDOW * kk * n) as u64);
+            c.add(&c.blocks_executed, 1);
+            let nnz_blk = bm.count_ones() as usize;
+            c.add(&c.bytes_sparse, (16 + kk * 4 + nnz_blk * 4) as u64);
+            c.add(&c.bytes_dense, (kk * n * 4) as u64);
+            c.add(&c.bytes_out, (WINDOW * n * 4) as u64);
+        }
+        let (ffs, ffe) = (sp_dist.flex_row_ptr[lo] as usize, sp_dist.flex_row_ptr[hi] as usize);
+        if ffe > ffs {
+            // gather the window's alpha into flex element order, then
+            // run the *real* flexible tile kernel on an index-shifted
+            // view — bit-identity with the unfused path by construction
+            let aflex = &mut aflex_buf[..ffe - ffs];
+            for i in ffs..ffe {
+                aflex[i - ffs] = seg[sp_dist.flex_src_idx[i] as usize - base];
+            }
+            let cols_view = &sp_dist.flex_cols[ffs..];
+            let mut run_tiles = |tiles: &[FlexTile]| {
+                for t in tiles {
+                    let shifted = FlexTile {
+                        elem_start: t.elem_start - ffs as u32,
+                        elem_end: t.elem_end - ffs as u32,
+                        ..*t
+                    };
+                    flex::spmm_tile(&shifted, cols_view, aflex, vmat, out, rowscr, c, kp);
+                }
+            };
+            let sched = &self.plan.spmm.sched;
+            let (l0, l1) = (self.sp_long_start[w] as usize, self.sp_long_start[w + 1] as usize);
+            run_tiles(&sched.long_tiles[l0..l1]);
+            let (s0, s1) = (self.sp_short_start[w] as usize, self.sp_short_start[w + 1] as usize);
+            run_tiles(&sched.short_tiles[s0..s1]);
+        }
+        c.add(&c.bytes_out, (win_nnz * 8) as u64); // seg write + read
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::BalanceParams;
+    use crate::dist::DistParams;
+    use crate::exec::sddmm::SddmmExecutor;
+    use crate::exec::spmm::SpmmExecutor;
+    use crate::prep::{preprocess_attention, PrepMode};
+    use crate::sparse::gen;
+    use crate::util::propcheck::{check, Config};
+    use crate::util::{testgen, SplitMix64};
+
+    /// The unfused three-stage chain the fused executor must match:
+    /// real SDDMM executor → the exact AGNN softmax loop → real SpMM
+    /// executor, all single-threaded inline.
+    fn unfused_chain(
+        m: &Csr,
+        sddmm_p: &DistParams,
+        spmm_p: &DistParams,
+        q: &Dense,
+        kmat: &Dense,
+        v: &Dense,
+        beta: f32,
+    ) -> (Vec<f32>, Vec<f32>, Dense) {
+        let bal = BalanceParams::default();
+        let sdp = crate::prep::preprocess_sddmm(m, sddmm_p, &bal, PrepMode::Sequential);
+        let mut sd = SddmmExecutor::from_plan(sdp, Arc::new(m.clone()), TcBackend::NativeBitmap);
+        sd.threading = Threading::Inline;
+        sd.flex_threads = 1;
+        let mut cos = vec![0f32; m.nnz()];
+        {
+            let out = SharedOut::new(&mut cos);
+            sd.execute_values(q, kmat, &out).unwrap();
+        }
+        let mut alpha = vec![0f32; m.nnz()];
+        for r in 0..m.rows {
+            let (s, e) = (m.row_ptr[r] as usize, m.row_ptr[r + 1] as usize);
+            if s == e {
+                continue;
+            }
+            let mut zmax = f32::MIN;
+            for i in s..e {
+                zmax = zmax.max(beta * cos[i]);
+            }
+            let mut sum = 0f32;
+            for i in s..e {
+                let ev = (beta * cos[i] - zmax).exp();
+                alpha[i] = ev;
+                sum += ev;
+            }
+            for a in &mut alpha[s..e] {
+                *a /= sum;
+            }
+        }
+        let spp = crate::prep::preprocess_spmm(m, spmm_p, &bal, PrepMode::Sequential);
+        let mut sx = SpmmExecutor::from_plan(spp, TcBackend::NativeBitmap);
+        sx.threading = Threading::Inline;
+        sx.flex_threads = 1;
+        sx.set_values(&alpha);
+        let out = sx.execute(v).unwrap();
+        (cos, alpha, out)
+    }
+
+    fn fused_inline(
+        m: &Csr,
+        sddmm_p: &DistParams,
+        spmm_p: &DistParams,
+    ) -> FusedAttention {
+        let plan =
+            preprocess_attention(m, sddmm_p, spmm_p, &BalanceParams::default(), PrepMode::Sequential);
+        let mut fx =
+            FusedAttention::from_plan(plan, Arc::new(m.clone()), TcBackend::NativeBitmap).unwrap();
+        fx.threading = Threading::Inline;
+        fx.flex_threads = 1;
+        fx
+    }
+
+    #[test]
+    fn fused_matches_unfused_chain_bit_identical_flex_only() {
+        // flex-only plans share every kernel with the unfused chain:
+        // the fused pipeline must reproduce it bit for bit at each
+        // attention width the fusion gate covers
+        check(Config::default().cases(20), "fused == unfused (flex-only)", |rng| {
+            let m = testgen::pattern_family(rng, 60);
+            let n = [7usize, 8, 32, 128][rng.range(0, 4)];
+            let kdim = rng.range(3, 24);
+            let q = Dense::random(rng, m.rows, kdim);
+            let kmat = Dense::random(rng, m.cols, kdim);
+            let v = Dense::random(rng, m.cols, n);
+            let beta = 0.7f32;
+            let p = DistParams::flex_only();
+            let (_, _, want) = unfused_chain(&m, &p, &p, &q, &kmat, &v, beta);
+            let fx = fused_inline(&m, &p, &p);
+            let got = fx.execute(&q, &kmat, &v, beta).unwrap();
+            assert_eq!(got.data, want.data, "fused diverged at n={n} k={kdim}");
+            assert!(fx.peak_seg_elems() <= fx.max_window_nnz());
+        });
+    }
+
+    #[test]
+    fn fused_matches_unfused_chain_hybrid_and_never_materializes_edges() {
+        // hybrid plans: the per-edge score reduction is the same lane
+        // dot on both engines, so cos and alpha spill bit-identically;
+        // the output tolerates TC reassociation. The peak-segment
+        // counter proves the fused pass bounded its intermediate by
+        // one window, never the edge count.
+        check(Config::default().cases(15), "fused == unfused (hybrid)", |rng| {
+            let m = testgen::pattern_family(rng, 60);
+            let n = [7usize, 8, 32, 128][rng.range(0, 4)];
+            let kdim = rng.range(3, 24);
+            let q = Dense::random(rng, m.rows, kdim);
+            let kmat = Dense::random(rng, m.cols, kdim);
+            let v = Dense::random(rng, m.cols, n);
+            let beta = 1.3f32;
+            let sddmm_p = DistParams { threshold: rng.range(1, 48), fill_padding: true };
+            let spmm_p = DistParams { threshold: rng.range(1, 6), fill_padding: rng.chance(0.5) };
+            let (cos_ref, alpha_ref, want) =
+                unfused_chain(&m, &sddmm_p, &spmm_p, &q, &kmat, &v, beta);
+            let fx = fused_inline(&m, &sddmm_p, &spmm_p);
+            let mut cos = vec![0f32; m.nnz()];
+            let mut alpha = vec![0f32; m.nnz()];
+            let mut ws = Workspace::new();
+            let got =
+                fx.execute_spill_with(&q, &kmat, &v, beta, &mut cos, &mut alpha, &mut ws).unwrap();
+            assert_eq!(cos, cos_ref, "spilled scores diverged");
+            assert_eq!(alpha, alpha_ref, "spilled attention weights diverged");
+            for (i, (g, w_)) in got.data.iter().zip(&want.data).enumerate() {
+                assert!(
+                    (g - w_).abs() <= 1e-4 * (1.0 + w_.abs()),
+                    "out[{i}]: {g} vs {w_} (n={n} k={kdim})"
+                );
+            }
+            assert!(fx.peak_seg_elems() <= fx.max_window_nnz());
+            if m.rows > WINDOW {
+                // multi-window patterns: the segment bound is strictly
+                // tighter than a full-edge intermediate would be
+                assert!(fx.max_window_nnz() <= m.nnz());
+            }
+        });
+    }
+
+    #[test]
+    fn fused_rejects_reordered_plans_and_bad_shapes() {
+        let mut rng = SplitMix64::new(91);
+        let m = gen::power_law(&mut rng, 64, 6.0, 2.0);
+        let sddmm_p = DistParams { threshold: 24, fill_padding: true };
+        let spmm_p = DistParams::default();
+        let bal = BalanceParams::default();
+        let mut plan = preprocess_attention(&m, &sddmm_p, &spmm_p, &bal, PrepMode::Sequential);
+        plan.spmm.perm = Some(Arc::new(crate::reorder::RowPerm::identity(m.rows)));
+        assert!(
+            FusedAttention::from_plan(plan, Arc::new(m.clone()), TcBackend::NativeBitmap).is_err()
+        );
+
+        let plan = preprocess_attention(&m, &sddmm_p, &spmm_p, &bal, PrepMode::Sequential);
+        let fx = FusedAttention::from_plan(plan, Arc::new(m.clone()), TcBackend::NativeBitmap)
+            .unwrap();
+        let q = Dense::zeros(m.rows + 1, 4); // wrong Q rows
+        let kmat = Dense::zeros(m.cols, 4);
+        let v = Dense::zeros(m.cols, 8);
+        assert!(fx.execute(&q, &kmat, &v, 1.0).is_err());
+        let q = Dense::zeros(m.rows, 4);
+        let v_bad = Dense::zeros(m.cols + 3, 8); // wrong V rows
+        assert!(fx.execute(&q, &kmat, &v_bad, 1.0).is_err());
+    }
+
+    #[test]
+    fn fused_handles_empty_and_single_edge() {
+        // empty pattern: zero windows, zero output
+        let empty = Csr { rows: 0, cols: 0, row_ptr: vec![0], col_idx: vec![], values: vec![] };
+        let p = DistParams::flex_only();
+        let fx = fused_inline(&empty, &p, &p);
+        let out = fx
+            .execute(&Dense::zeros(0, 4), &Dense::zeros(0, 4), &Dense::zeros(0, 3), 1.0)
+            .unwrap();
+        assert_eq!((out.rows, out.cols), (0, 3));
+
+        // single edge: softmax collapses to 1, so out row 0 == V row 0
+        let one = Csr { rows: 1, cols: 1, row_ptr: vec![0, 1], col_idx: vec![0], values: vec![2.0] };
+        let mut rng = SplitMix64::new(92);
+        let q = Dense::random(&mut rng, 1, 5);
+        let kmat = Dense::random(&mut rng, 1, 5);
+        let v = Dense::random(&mut rng, 1, 6);
+        let fx = fused_inline(&one, &p, &p);
+        let out = fx.execute(&q, &kmat, &v, 0.5).unwrap();
+        assert_eq!(out.data, v.data);
+        assert_eq!(fx.peak_seg_elems(), 1);
+    }
+
+    #[test]
+    fn fused_pooled_matches_inline() {
+        // window-parallel execution (atomic cursor, per-task segments)
+        // must agree with the single-task walk exactly: windows own
+        // disjoint output rows, so no ordering hazard exists
+        let mut rng = SplitMix64::new(93);
+        let m = gen::power_law(&mut rng, 300, 8.0, 2.0);
+        let q = Dense::random(&mut rng, m.rows, 16);
+        let kmat = Dense::random(&mut rng, m.cols, 16);
+        let v = Dense::random(&mut rng, m.cols, 32);
+        let sddmm_p = DistParams { threshold: 24, fill_padding: true };
+        let spmm_p = DistParams::default();
+        let inline = fused_inline(&m, &sddmm_p, &spmm_p);
+        let want = inline.execute(&q, &kmat, &v, 0.9).unwrap();
+        let plan = preprocess_attention(
+            &m,
+            &sddmm_p,
+            &spmm_p,
+            &BalanceParams::default(),
+            PrepMode::Sequential,
+        );
+        let fx = FusedAttention::from_plan(plan, Arc::new(m.clone()), TcBackend::NativeBitmap)
+            .unwrap();
+        let got = fx.execute(&q, &kmat, &v, 0.9).unwrap();
+        assert_eq!(got.data, want.data);
+    }
+}

@@ -23,18 +23,22 @@
 
 pub mod counters;
 pub mod flex;
+pub mod fused;
 pub mod kernels;
 pub mod output;
 pub mod pack;
 pub mod pool;
 pub mod sddmm;
+pub mod semiring;
 pub mod spmm;
 pub mod structured;
 pub mod workspace;
 
 pub use counters::Counters;
+pub use fused::FusedAttention;
 pub use kernels::KernelParams;
 pub use pool::{global_pool, Threading, WorkerPool};
+pub use semiring::{BinaryOp, Reduce, Semiring};
 pub use spmm::{SpmmExecutor, TcBackendKind};
 pub use workspace::Workspace;
 

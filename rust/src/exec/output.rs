@@ -7,6 +7,7 @@
 //! read-modify-write is race-free; flagged segments use a lock-free
 //! CAS add on the f32 bits.
 
+use super::semiring::Reduce;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 /// Shared mutable view over an output f32 buffer.
@@ -88,6 +89,59 @@ impl SharedOut {
             }
         }
     }
+
+    /// Lock-free atomic reduce-merge: folds `v` into the cell under
+    /// `red`. Sum-accumulating reduces are exactly [`add_atomic`];
+    /// max/min short-circuit once the cell already dominates `v`.
+    #[inline]
+    pub fn merge_atomic(&self, idx: usize, v: f32, red: Reduce) {
+        if red.accumulates_as_sum() {
+            self.add_atomic(idx, v);
+            return;
+        }
+        debug_assert!(idx < self.len);
+        let cell = unsafe { &*(self.ptr.add(idx) as *const AtomicU32) };
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            let folded = red.fold(f32::from_bits(cur), v);
+            if folded.to_bits() == cur {
+                return; // the cell already dominates
+            }
+            match cell.compare_exchange_weak(
+                cur,
+                folded.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+        self.atomic_adds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Reduce-merge a contiguous row slice starting at `offset`. The
+    /// sum-accumulating reduces delegate to [`add_slice`] (the exact
+    /// pre-semiring merge, bit-identical by construction).
+    #[inline]
+    pub fn merge_slice(&self, offset: usize, src: &[f32], atomic: bool, red: Reduce) {
+        if red.accumulates_as_sum() {
+            self.add_slice(offset, src, atomic);
+            return;
+        }
+        if atomic {
+            for (j, &v) in src.iter().enumerate() {
+                self.merge_atomic(offset + j, v, red);
+            }
+        } else {
+            unsafe {
+                let dst = std::slice::from_raw_parts_mut(self.ptr.add(offset), src.len());
+                for (d, &v) in dst.iter_mut().zip(src) {
+                    *d = red.fold(*d, v);
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -145,5 +199,35 @@ mod tests {
         let out = SharedOut::new(&mut buf);
         out.add_atomic(0, 0.0);
         assert_eq!(out.atomic_adds.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn merge_slice_reduces_and_sum_delegates() {
+        let mut buf = vec![1.0f32, -5.0, 2.0, 0.0];
+        {
+            let out = SharedOut::new(&mut buf);
+            out.merge_slice(0, &[3.0, -9.0], false, Reduce::Max);
+            out.merge_slice(2, &[1.0, 1.0], true, Reduce::Sum);
+        }
+        assert_eq!(buf, vec![3.0, -5.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn merge_atomic_max_under_contention() {
+        let mut buf = vec![f32::NEG_INFINITY; 1];
+        let out = SharedOut::new(&mut buf);
+        thread::scope(|s| {
+            for t in 0..8 {
+                let out = &out;
+                s.spawn(move |_| {
+                    for i in 0..1000 {
+                        out.merge_atomic(0, (t * 1000 + i) as f32, Reduce::Max);
+                    }
+                });
+            }
+        })
+        .unwrap();
+        drop(out);
+        assert_eq!(buf[0], 7999.0);
     }
 }

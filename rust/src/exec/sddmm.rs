@@ -12,6 +12,7 @@ use super::kernels::KernelParams;
 use super::output::SharedOut;
 use super::pack::{self, PackBufs};
 use super::pool::Threading;
+use super::semiring::Semiring;
 use super::structured::{self, Decode};
 use super::workspace::{self, Workspace};
 use super::TcBackend;
@@ -24,7 +25,7 @@ use crate::runtime::Input;
 use crate::sparse::{Csr, Dense, GraphBatch};
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// A preprocessed SDDMM operator.
 pub struct SddmmExecutor {
@@ -46,30 +47,38 @@ pub struct SddmmExecutor {
     /// write-back indices are already remapped to the original CSR,
     /// so the output needs no inverse fold.
     pub perm: Option<std::sync::Arc<crate::reorder::RowPerm>>,
+    /// Per-edge semiring (`reduce_k op(A[r,k], B[c,k])`; default
+    /// `mul+sum` = the lane dot product). See
+    /// [`SddmmExecutor::set_semiring`].
+    pub semiring: Semiring,
     pub counters: Counters,
-    /// pattern of the sparse matrix (row_ptr/col_idx reused for output)
-    pub pattern: Csr,
+    /// Pattern of the sparse matrix (row_ptr/col_idx reused for
+    /// output) — `Arc`-shared with the caller, so models and serving
+    /// entries that already hold the CSR pay no duplicate copy.
+    pub pattern: Arc<Csr>,
 }
 
 impl SddmmExecutor {
     pub fn new(m: &Csr, dist_params: &DistParams, backend: TcBackend) -> Self {
         let dist = crate::dist::distribute_sddmm(m, dist_params);
-        Self::from_dist(dist, m.clone(), backend)
+        Self::from_dist(dist, Arc::new(m.clone()), backend)
     }
 
     /// Build from an existing distribution and its source pattern,
     /// balancing with the default parameters. (Prefer
     /// [`SddmmExecutor::from_plan`] when a balanced plan already
     /// exists — e.g. out of the serving cache — so nothing re-runs.)
-    pub fn from_dist(dist: SddmmDist, pattern: Csr, backend: TcBackend) -> Self {
+    pub fn from_dist(dist: SddmmDist, pattern: Arc<Csr>, backend: TcBackend) -> Self {
         let sched = balance_sddmm(&dist, &BalanceParams::default());
         Self::from_plan(SddmmPlan { dist, sched, perm: None }, pattern, backend)
     }
 
     /// Build from a fully preprocessed plan. Neither distribution nor
     /// balancing runs here — the serving layer's warm-cache fast path,
-    /// mirroring `SpmmExecutor::from_plan`.
-    pub fn from_plan(plan: SddmmPlan, pattern: Csr, backend: TcBackend) -> Self {
+    /// mirroring `SpmmExecutor::from_plan`. The pattern is `Arc`-shared
+    /// rather than cloned: a caller that keeps its own handle (a model,
+    /// a cache entry) shares one copy with the executor.
+    pub fn from_plan(plan: SddmmPlan, pattern: Arc<Csr>, backend: TcBackend) -> Self {
         let SddmmPlan { dist, sched, perm } = plan;
         let tcf = matches!(backend, TcBackend::NativeTraversal)
             .then(|| TcfBlocks::from_bitmap(&dist.tc));
@@ -82,9 +91,24 @@ impl SddmmExecutor {
             threading: Threading::default(),
             kernel: KernelParams::default(),
             perm,
+            semiring: Semiring::mul_sum(),
             counters: Counters::new(),
             pattern,
         }
+    }
+
+    /// Select the per-edge semiring: `out[r,c] = v_{rc} * reduce_k
+    /// op(A[r,k], B[c,k])`. Every pair is legal on any hybrid plan —
+    /// SDDMM evaluates only real nonzeros, so TC padding never feeds
+    /// the reduce — except on the PJRT backend, whose AOT artifacts
+    /// hardwire the dot product.
+    pub fn set_semiring(&mut self, sr: Semiring) -> Result<()> {
+        anyhow::ensure!(
+            sr.is_mul_sum() || !matches!(self.backend, TcBackend::Pjrt(_)),
+            "PJRT SDDMM artifacts hardwire mul+sum; semiring {sr} needs a native backend"
+        );
+        self.semiring = sr;
+        Ok(())
     }
 
     /// Refresh all stored pattern values (CSR order, same pattern),
@@ -92,7 +116,8 @@ impl SddmmExecutor {
     /// is re-applied to the fresh values.
     pub fn set_values(&mut self, vals: &[f32]) {
         self.dist.set_values(vals);
-        self.pattern.values.copy_from_slice(vals);
+        // clones the shared pattern only if a caller still holds it
+        Arc::make_mut(&mut self.pattern).values.copy_from_slice(vals);
         self.requantize();
         if let Some(tcf) = &mut self.tcf {
             *tcf = TcfBlocks::from_bitmap(&self.dist.tc);
@@ -131,7 +156,7 @@ impl SddmmExecutor {
     pub fn execute_with(&self, a: &Dense, b: &Dense, ws: &mut Workspace) -> Result<Csr> {
         // validate before paying the O(nnz) output-pattern clone
         self.check_shapes(a, b)?;
-        let mut out = self.pattern.clone();
+        let mut out = (*self.pattern).clone();
         out.values.fill(0.0);
         {
             let shared = SharedOut::new(&mut out.values);
@@ -245,6 +270,7 @@ impl SddmmExecutor {
 
         let run_tile = |tile: &crate::balance::FlexTile| {
             flex::sddmm_range(
+                self.semiring,
                 tile.elem_start as usize..tile.elem_end as usize,
                 &self.dist.flex_rows,
                 &self.dist.flex_cols,
@@ -378,6 +404,7 @@ impl SddmmExecutor {
                 };
                 for seg in &self.sched.tc_segments {
                     structured::sddmm_blocks(
+                        self.semiring,
                         &self.dist.tc,
                         tcf,
                         decode,
@@ -496,6 +523,65 @@ mod tests {
     }
 
     #[test]
+    fn semiring_sddmm_matches_naive_and_mul_sum_is_bit_identical() {
+        // Tentpole acceptance (semiring half): the generalized SDDMM at
+        // mul+sum is bit-identical to the hardwired path, and every
+        // other (op, reduce) pair matches a naive per-edge fold on the
+        // *full hybrid plan* — both streams evaluate only set bits, so
+        // TC padding never feeds a non-sum reduce.
+        use crate::exec::semiring::{BinaryOp, Reduce, Semiring};
+        use crate::util::testgen;
+        check(Config::default().cases(10), "semiring sddmm == naive", |rng| {
+            let m = testgen::pattern_family(rng, 60);
+            let k = testgen::wide_feature_width(rng);
+            let a = Dense::random(rng, m.rows, k);
+            let b = Dense::random(rng, m.cols, k);
+            let d = DistParams { threshold: rng.range(1, 48), fill_padding: true };
+            let build = || {
+                let mut e = SddmmExecutor::new(&m, &d, TcBackend::NativeBitmap);
+                e.flex_threads = 1;
+                e.threading = Threading::Inline;
+                e
+            };
+            let want = build().execute(&a, &b).unwrap();
+            let mut explicit = build();
+            explicit.set_semiring(Semiring::mul_sum()).unwrap();
+            let got = explicit.execute(&a, &b).unwrap();
+            assert_eq!(got.values, want.values, "mul+sum diverged from the hardwired path");
+            for sr in [
+                Semiring::new(BinaryOp::Add, Reduce::Sum),
+                Semiring::new(BinaryOp::Mul, Reduce::Max),
+                Semiring::new(BinaryOp::Sub, Reduce::Min),
+                Semiring::new(BinaryOp::Mul, Reduce::Mean),
+            ] {
+                let mut e = build();
+                e.set_semiring(sr).unwrap();
+                let got = e.execute(&a, &b).unwrap();
+                // (mul, mean) rides the reassociating lane dot; the
+                // fully generic pairs fold sequentially — exact
+                let lane_pair = (sr.op, sr.reduce) == (BinaryOp::Mul, Reduce::Mean);
+                for r in 0..m.rows {
+                    let (s, t) = (m.row_ptr[r] as usize, m.row_ptr[r + 1] as usize);
+                    for p in s..t {
+                        let c = m.col_idx[p] as usize;
+                        let mut acc = sr.reduce.identity();
+                        for kk in 0..k {
+                            acc = sr.reduce.fold(acc, sr.op.apply(a.row(r)[kk], b.row(c)[kk]));
+                        }
+                        if sr.reduce == Reduce::Mean {
+                            acc /= k as f32;
+                        }
+                        let want_v = m.values[p] * acc;
+                        let err = (got.values[p] - want_v).abs();
+                        let tol = if lane_pair { 1e-4 * (1.0 + want_v.abs()) } else { 0.0 };
+                        assert!(err <= tol, "{sr} edge ({r},{c}): {} vs {want_v}", got.values[p]);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
     fn pooled_workspace_reuse_is_bit_identical_to_scoped() {
         // Acceptance property: pooled + workspace-reusing SDDMM is
         // bit-identical to the spawn-per-call scoped-thread path.
@@ -583,7 +669,7 @@ mod tests {
                     ),
                     perm: None,
                 },
-                m.clone(),
+                Arc::new(m.clone()),
                 TcBackend::NativeBitmap,
             );
             let want = unbalanced.execute(&a, &b).unwrap();
@@ -599,7 +685,7 @@ mod tests {
                     dist,
                     perm: None,
                 },
-                m.clone(),
+                Arc::new(m.clone()),
                 TcBackend::NativeBitmap,
             );
             balanced.flex_threads = rng.range(1, 4);
@@ -668,9 +754,10 @@ mod tests {
             &crate::balance::BalanceParams::default(),
             crate::prep::PrepMode::Sequential,
         );
-        let via_plan = SddmmExecutor::from_plan(plan.clone(), m.clone(), TcBackend::NativeBitmap);
+        let via_plan =
+            SddmmExecutor::from_plan(plan.clone(), Arc::new(m.clone()), TcBackend::NativeBitmap);
         let dist = crate::dist::distribute_sddmm(&m, &DistParams::sddmm_default());
-        let via_dist = SddmmExecutor::from_dist(dist, m.clone(), TcBackend::NativeBitmap);
+        let via_dist = SddmmExecutor::from_dist(dist, Arc::new(m.clone()), TcBackend::NativeBitmap);
         assert_eq!(via_plan.sched.tc_segments, via_dist.sched.tc_segments);
         assert_eq!(via_plan.sched.long_tiles, via_dist.sched.long_tiles);
         assert_eq!(via_plan.sched.short_tiles, via_dist.sched.short_tiles);

@@ -1,0 +1,420 @@
+//! Semiring generalization of the executor inner loops (DGL's
+//! `gspmm`/`gsddmm` operator surface on the Libra substrate).
+//!
+//! Both executors are parameterized over a [`Semiring`] — a binary
+//! combine op ([`BinaryOp`]: `add/sub/mul/div/dot`) times a reduction
+//! ([`Reduce`]: `sum/max/min/mean`). The meaning per operator:
+//!
+//! * **SpMM** — `out[r, j] = reduce_{c in row r} op(val[r,c], B[c, j])`.
+//!   `Dot` degenerates to `Mul` (the edge value is a scalar).
+//! * **SDDMM** — `score[r, c] = val[r,c] * reduce_k op(A[r, k], B[c, k])`.
+//!   `Dot` forces the `mul+sum` pair over `k` (DGL's `dot`), whatever
+//!   the configured reduce.
+//!
+//! The hot loops are **monomorphized**: [`fold_row`] and
+//! [`edge_reduce`] dispatch once per call into `const`-generic
+//! instantiations, so each (op, reduce) pair compiles to a dedicated
+//! straight-line loop. The default `mul+sum` pair never even reaches
+//! the generic code — the executors route it to the exact pre-semiring
+//! lane kernels ([`crate::exec::kernels::axpy`] /
+//! [`crate::exec::kernels::dot`]), so the default path is bit-identical
+//! to the hardwired executors by construction (and asserted by the
+//! executor test suites).
+//!
+//! **What generalizes where.** SDDMM is write-once per nonzero, and
+//! its structured stream only evaluates *set* bitmap bits, so every
+//! semiring runs on any hybrid plan. SpMM's structured stream is
+//! different: TC blocks are zero-padded, and `0` is only a neutral
+//! combine input under `mul+sum` (`max(acc, 0)` clamps negatives;
+//! `0/x` poisons `div`). A non-default SpMM semiring therefore
+//! requires a flex-only plan ([`crate::dist::DistParams::flex_only`])
+//! and no row reorder — [`crate::exec::SpmmExecutor::set_semiring`]
+//! enforces both.
+
+use super::kernels;
+
+/// Binary combine op applied per edge (SpMM: value × dense element;
+/// SDDMM: feature × feature per dimension).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinaryOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    /// SDDMM-style inner product: forces `mul+sum` over the feature
+    /// dimension. For SpMM (scalar edge values) it degenerates to
+    /// [`BinaryOp::Mul`].
+    Dot,
+}
+
+impl BinaryOp {
+    /// Scalar combine. `Dot` combines like `Mul`; its sum-reduction
+    /// semantics live in [`edge_reduce`].
+    #[inline(always)]
+    pub fn apply(self, a: f32, b: f32) -> f32 {
+        match self {
+            BinaryOp::Add => a + b,
+            BinaryOp::Sub => a - b,
+            BinaryOp::Mul | BinaryOp::Dot => a * b,
+            BinaryOp::Div => a / b,
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "add" => Some(BinaryOp::Add),
+            "sub" => Some(BinaryOp::Sub),
+            "mul" => Some(BinaryOp::Mul),
+            "div" => Some(BinaryOp::Div),
+            "dot" => Some(BinaryOp::Dot),
+            _ => None,
+        }
+    }
+}
+
+/// Reduction across combined terms (SpMM: across a row's neighbors;
+/// SDDMM: across the feature dimension).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Reduce {
+    Sum,
+    Max,
+    Min,
+    /// Arithmetic mean: accumulates like `Sum`, then divides by the
+    /// term count (row degree for SpMM, feature width for SDDMM).
+    Mean,
+}
+
+impl Reduce {
+    /// The fold identity. `Mean` accumulates as a sum.
+    #[inline(always)]
+    pub fn identity(self) -> f32 {
+        match self {
+            Reduce::Sum | Reduce::Mean => 0.0,
+            Reduce::Max => f32::NEG_INFINITY,
+            Reduce::Min => f32::INFINITY,
+        }
+    }
+
+    /// One fold step.
+    #[inline(always)]
+    pub fn fold(self, acc: f32, x: f32) -> f32 {
+        match self {
+            Reduce::Sum | Reduce::Mean => acc + x,
+            Reduce::Max => acc.max(x),
+            Reduce::Min => acc.min(x),
+        }
+    }
+
+    /// Whether the accumulation is a plain sum (so the executors'
+    /// add-based merge machinery — privatization buffers, atomic adds —
+    /// stays correct as-is).
+    #[inline]
+    pub fn accumulates_as_sum(self) -> bool {
+        matches!(self, Reduce::Sum | Reduce::Mean)
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sum" => Some(Reduce::Sum),
+            "max" => Some(Reduce::Max),
+            "min" => Some(Reduce::Min),
+            "mean" => Some(Reduce::Mean),
+            _ => None,
+        }
+    }
+}
+
+/// One (combine, reduce) pair — the executor-level semiring parameter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Semiring {
+    pub op: BinaryOp,
+    pub reduce: Reduce,
+}
+
+impl Semiring {
+    /// The classical SpMM/SDDMM semiring (the pre-generalization
+    /// hardwired path).
+    pub const fn mul_sum() -> Self {
+        Semiring { op: BinaryOp::Mul, reduce: Reduce::Sum }
+    }
+
+    /// Shorthand constructor.
+    pub const fn new(op: BinaryOp, reduce: Reduce) -> Self {
+        Semiring { op, reduce }
+    }
+
+    /// True for the pairs the hardwired kernels already implement
+    /// (`mul+sum`, and `dot+sum` which is the same computation): these
+    /// route to the exact pre-semiring code path.
+    #[inline]
+    pub fn is_mul_sum(&self) -> bool {
+        matches!(self.op, BinaryOp::Mul | BinaryOp::Dot) && self.reduce == Reduce::Sum
+    }
+}
+
+impl Default for Semiring {
+    fn default() -> Self {
+        Semiring::mul_sum()
+    }
+}
+
+impl std::fmt::Display for Semiring {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let op = match self.op {
+            BinaryOp::Add => "add",
+            BinaryOp::Sub => "sub",
+            BinaryOp::Mul => "mul",
+            BinaryOp::Div => "div",
+            BinaryOp::Dot => "dot",
+        };
+        let red = match self.reduce {
+            Reduce::Sum => "sum",
+            Reduce::Max => "max",
+            Reduce::Min => "min",
+            Reduce::Mean => "mean",
+        };
+        write!(f, "{op}+{red}")
+    }
+}
+
+// Const-generic discriminants: the dispatchers below instantiate one
+// loop per (OP, RED) pair so the combine/fold calls inline to
+// straight-line code (the "monomorphized semiring parameter").
+const OP_ADD: u8 = 0;
+const OP_SUB: u8 = 1;
+const OP_MUL: u8 = 2;
+const OP_DIV: u8 = 3;
+
+const RED_SUM: u8 = 0;
+const RED_MAX: u8 = 1;
+const RED_MIN: u8 = 2;
+
+#[inline(always)]
+fn apply_const<const OP: u8>(a: f32, b: f32) -> f32 {
+    match OP {
+        OP_ADD => a + b,
+        OP_SUB => a - b,
+        OP_MUL => a * b,
+        _ => a / b,
+    }
+}
+
+#[inline(always)]
+fn fold_const<const RED: u8>(acc: f32, x: f32) -> f32 {
+    match RED {
+        RED_SUM => acc + x,
+        RED_MAX => acc.max(x),
+        _ => acc.min(x),
+    }
+}
+
+#[inline(always)]
+fn fold_row_mono<const OP: u8, const RED: u8>(acc: &mut [f32], v: f32, b: &[f32]) {
+    let n = acc.len();
+    debug_assert!(b.len() >= n);
+    for j in 0..n {
+        acc[j] = fold_const::<RED>(acc[j], apply_const::<OP>(v, b[j]));
+    }
+}
+
+#[inline(always)]
+fn edge_reduce_mono<const OP: u8, const RED: u8>(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let mut acc = match RED {
+        RED_SUM => 0.0f32,
+        RED_MAX => f32::NEG_INFINITY,
+        _ => f32::INFINITY,
+    };
+    for i in 0..n {
+        acc = fold_const::<RED>(acc, apply_const::<OP>(a[i], b[i]));
+    }
+    acc
+}
+
+macro_rules! dispatch_semiring {
+    ($op:expr, $red:expr, $mono:ident, ($($args:expr),*)) => {{
+        // Mean accumulates as a sum; the caller applies the divisor.
+        let red = match $red {
+            Reduce::Sum | Reduce::Mean => RED_SUM,
+            Reduce::Max => RED_MAX,
+            Reduce::Min => RED_MIN,
+        };
+        match ($op, red) {
+            (BinaryOp::Add, RED_SUM) => $mono::<OP_ADD, RED_SUM>($($args),*),
+            (BinaryOp::Add, RED_MAX) => $mono::<OP_ADD, RED_MAX>($($args),*),
+            (BinaryOp::Add, _) => $mono::<OP_ADD, RED_MIN>($($args),*),
+            (BinaryOp::Sub, RED_SUM) => $mono::<OP_SUB, RED_SUM>($($args),*),
+            (BinaryOp::Sub, RED_MAX) => $mono::<OP_SUB, RED_MAX>($($args),*),
+            (BinaryOp::Sub, _) => $mono::<OP_SUB, RED_MIN>($($args),*),
+            (BinaryOp::Mul | BinaryOp::Dot, RED_SUM) => $mono::<OP_MUL, RED_SUM>($($args),*),
+            (BinaryOp::Mul | BinaryOp::Dot, RED_MAX) => $mono::<OP_MUL, RED_MAX>($($args),*),
+            (BinaryOp::Mul | BinaryOp::Dot, _) => $mono::<OP_MUL, RED_MIN>($($args),*),
+            (BinaryOp::Div, RED_SUM) => $mono::<OP_DIV, RED_SUM>($($args),*),
+            (BinaryOp::Div, RED_MAX) => $mono::<OP_DIV, RED_MAX>($($args),*),
+            (BinaryOp::Div, _) => $mono::<OP_DIV, RED_MIN>($($args),*),
+        }
+    }};
+}
+
+/// Generalized SpMM row update: `acc[j] = fold(acc[j], op(v, b[j]))`
+/// over the whole slice. The `mul+sum` pair is **not** routed here —
+/// the executors keep calling the specialized axpy lane kernels for
+/// it — so this only runs for non-default semirings. `Mean`
+/// accumulates as a sum; the executor divides by the row degree after
+/// the merge.
+#[inline]
+pub fn fold_row(sr: Semiring, acc: &mut [f32], v: f32, b: &[f32]) {
+    debug_assert!(!sr.is_mul_sum(), "mul+sum routes to the axpy kernels");
+    dispatch_semiring!(sr.op, sr.reduce, fold_row_mono, (acc, v, b))
+}
+
+/// Generalized SDDMM per-edge reduction over the feature dimension:
+/// `reduce_k op(a[k], b[k])`. The `dot`/`mul+sum` pairs delegate to
+/// [`kernels::dot_mode`] — the exact pre-semiring path, bit-identical
+/// by construction — and `mul+mean` reuses it with a final divide. An
+/// empty feature dimension reduces to `0.0` for every semiring (no
+/// `±inf` identity ever leaks into a score).
+#[inline]
+pub fn edge_reduce(sr: Semiring, lanes: bool, a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    if n == 0 {
+        return 0.0;
+    }
+    if sr.op == BinaryOp::Dot || sr.is_mul_sum() {
+        return kernels::dot_mode(lanes, a, b);
+    }
+    if (sr.op, sr.reduce) == (BinaryOp::Mul, Reduce::Mean) {
+        return kernels::dot_mode(lanes, a, b) / n as f32;
+    }
+    let acc = dispatch_semiring!(sr.op, sr.reduce, edge_reduce_mono, (a, b));
+    if sr.reduce == Reduce::Mean {
+        acc / n as f32
+    } else {
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for (s, op) in [
+            ("add", BinaryOp::Add),
+            ("sub", BinaryOp::Sub),
+            ("mul", BinaryOp::Mul),
+            ("div", BinaryOp::Div),
+            ("dot", BinaryOp::Dot),
+        ] {
+            assert_eq!(BinaryOp::parse(s), Some(op));
+        }
+        for (s, red) in [
+            ("sum", Reduce::Sum),
+            ("max", Reduce::Max),
+            ("min", Reduce::Min),
+            ("mean", Reduce::Mean),
+        ] {
+            assert_eq!(Reduce::parse(s), Some(red));
+        }
+        assert_eq!(BinaryOp::parse("xor"), None);
+        assert_eq!(Reduce::parse("prod"), None);
+        assert_eq!(Semiring::mul_sum().to_string(), "mul+sum");
+        assert_eq!(Semiring::new(BinaryOp::Dot, Reduce::Mean).to_string(), "dot+mean");
+    }
+
+    #[test]
+    fn mul_sum_detection() {
+        assert!(Semiring::mul_sum().is_mul_sum());
+        assert!(Semiring::new(BinaryOp::Dot, Reduce::Sum).is_mul_sum());
+        assert!(!Semiring::new(BinaryOp::Mul, Reduce::Max).is_mul_sum());
+        assert!(!Semiring::new(BinaryOp::Add, Reduce::Sum).is_mul_sum());
+        assert!(Semiring::default().is_mul_sum());
+    }
+
+    #[test]
+    fn fold_row_matches_naive_loop() {
+        let mut rng = SplitMix64::new(810);
+        for op in [BinaryOp::Add, BinaryOp::Sub, BinaryOp::Mul, BinaryOp::Div] {
+            for red in [Reduce::Sum, Reduce::Max, Reduce::Min, Reduce::Mean] {
+                let sr = Semiring::new(op, red);
+                if sr.is_mul_sum() {
+                    continue;
+                }
+                for n in [0usize, 1, 7, 8, 33] {
+                    let b: Vec<f32> = (0..n).map(|_| rng.f32_range(0.5, 2.0)).collect();
+                    let v = rng.f32_range(0.5, 2.0);
+                    let mut acc: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+                    let mut want = acc.clone();
+                    for j in 0..n {
+                        want[j] = red.fold(want[j], op.apply(v, b[j]));
+                    }
+                    fold_row(sr, &mut acc, v, &b);
+                    assert_eq!(acc, want, "{sr} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn edge_reduce_dot_paths_are_the_dot_kernel() {
+        let mut rng = SplitMix64::new(811);
+        for n in [1usize, 7, 8, 32, 128] {
+            let a: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+            let want = kernels::dot_mode(true, &a, &b);
+            for sr in [
+                Semiring::mul_sum(),
+                Semiring::new(BinaryOp::Dot, Reduce::Sum),
+                Semiring::new(BinaryOp::Dot, Reduce::Max),
+                Semiring::new(BinaryOp::Dot, Reduce::Mean),
+            ] {
+                assert_eq!(
+                    edge_reduce(sr, true, &a, &b).to_bits(),
+                    want.to_bits(),
+                    "{sr} n={n} must be the exact dot kernel"
+                );
+            }
+            // mean = lane dot / n, bit-exactly
+            let mean = edge_reduce(Semiring::new(BinaryOp::Mul, Reduce::Mean), true, &a, &b);
+            assert_eq!(mean.to_bits(), (want / n as f32).to_bits());
+        }
+    }
+
+    #[test]
+    fn edge_reduce_generic_pairs_match_naive() {
+        let mut rng = SplitMix64::new(812);
+        for op in [BinaryOp::Add, BinaryOp::Sub, BinaryOp::Mul, BinaryOp::Div] {
+            for red in [Reduce::Sum, Reduce::Max, Reduce::Min, Reduce::Mean] {
+                let sr = Semiring::new(op, red);
+                for n in [1usize, 3, 8, 31] {
+                    let a: Vec<f32> = (0..n).map(|_| rng.f32_range(0.5, 2.0)).collect();
+                    let b: Vec<f32> = (0..n).map(|_| rng.f32_range(0.5, 2.0)).collect();
+                    let mut want = red.identity();
+                    for i in 0..n {
+                        want = red.fold(want, op.apply(a[i], b[i]));
+                    }
+                    if red == Reduce::Mean {
+                        want /= n as f32;
+                    }
+                    let got = edge_reduce(sr, false, &a, &b);
+                    let err = (got - want).abs();
+                    // lane-dot pairs reassociate; everything else is exact
+                    let tol = if sr.is_mul_sum() || (op, red) == (BinaryOp::Mul, Reduce::Mean) {
+                        1e-5 * n as f32
+                    } else {
+                        0.0
+                    };
+                    assert!(err <= tol, "{sr} n={n}: {got} vs {want}");
+                }
+            }
+        }
+        // empty feature dimension never leaks an infinity
+        for red in [Reduce::Sum, Reduce::Max, Reduce::Min, Reduce::Mean] {
+            assert_eq!(edge_reduce(Semiring::new(BinaryOp::Mul, red), true, &[], &[]), 0.0);
+        }
+    }
+}

@@ -12,6 +12,7 @@ use super::kernels::{self, KernelParams};
 use super::output::SharedOut;
 use super::pack::{self, PackBufs};
 use super::pool::Threading;
+use super::semiring::Semiring;
 use super::structured::{self, Decode};
 use super::workspace::{self, StructuredBufs, Workspace};
 use super::TcBackend;
@@ -58,6 +59,10 @@ pub struct SpmmExecutor {
     /// Execution runs in permuted row space and the inverse is folded
     /// back at write-back, so callers never see permuted output.
     pub perm: Option<Arc<crate::reorder::RowPerm>>,
+    /// Per-row semiring (`out[r,j] = reduce_c op(v_{rc}, B[c,j])`;
+    /// default `mul+sum` = ordinary SpMM). See
+    /// [`SpmmExecutor::set_semiring`].
+    pub semiring: Semiring,
     pub counters: Counters,
 }
 
@@ -103,8 +108,28 @@ impl SpmmExecutor {
             threading: Threading::default(),
             kernel: KernelParams::default(),
             perm,
+            semiring: Semiring::mul_sum(),
             counters: Counters::new(),
         }
+    }
+
+    /// Select the per-row semiring: `out[r,j] = reduce_{c ∈ row r}
+    /// op(v_{rc}, B[c,j])`. `mul+sum` is always legal (it *is* the
+    /// hardwired hybrid path, bit for bit). Every other pair requires a
+    /// flex-only, unreordered plan: TC blocks zero-pad sampled windows,
+    /// and a padded 0 is only neutral under `+` — `max(acc, op(0, b))`
+    /// clamps negatives and `0 / b` poisons the fold — while the
+    /// reorder write-back folds rows with an add-scatter. Build with
+    /// [`DistParams::flex_only`](crate::dist::DistParams::flex_only)
+    /// and no reorder stage to use these.
+    pub fn set_semiring(&mut self, sr: Semiring) -> Result<()> {
+        anyhow::ensure!(
+            sr.is_mul_sum() || (self.dist.tc.n_blocks() == 0 && self.perm.is_none()),
+            "semiring {sr} needs a flex-only, unreordered plan: TC padding is only \
+             neutral under mul+sum and the reorder fold is an add-scatter"
+        );
+        self.semiring = sr;
+        Ok(())
     }
 
     /// Refresh all stored values from `vals` (CSR order, same pattern),
@@ -256,6 +281,19 @@ impl SpmmExecutor {
         let counters = &self.counters;
         let n = b.cols;
 
+        // Non-sum reduces fold into the destination, so rows with at
+        // least one nonzero start at the reduce identity (empty rows
+        // keep the caller's zeros). set_semiring guarantees flex-only
+        // here, so flex_row_ptr covers every nonzero.
+        if !self.semiring.reduce.accumulates_as_sum() {
+            let ident = self.semiring.reduce.identity();
+            for r in 0..self.dist.rows {
+                if self.dist.flex_row_ptr[r] != self.dist.flex_row_ptr[r + 1] {
+                    out_mat.data[r * n..(r + 1) * n].fill(ident);
+                }
+            }
+        }
+
         // one task for the structured stream plus the flexible width
         let structured_tasks = (n_blocks > 0) as usize;
         let flex_tasks = if has_flex { self.flex_threads.max(1) } else { 0 };
@@ -321,6 +359,17 @@ impl SpmmExecutor {
             // merge pass: one lane-vectorized sweep
             kernels::add_assign(&mut out_mat.data, flex_buf);
         }
+        // Mean accumulates as sum; the per-row divide happens once here.
+        if self.semiring.reduce == super::semiring::Reduce::Mean {
+            for r in 0..self.dist.rows {
+                let deg = (self.dist.flex_row_ptr[r + 1] - self.dist.flex_row_ptr[r]) as f32;
+                if deg > 0.0 {
+                    for v in &mut out_mat.data[r * n..(r + 1) * n] {
+                        *v /= deg;
+                    }
+                }
+            }
+        }
         if let Some((qb, spare)) = staged {
             ws.put_half_dense(qb.data, spare);
         }
@@ -342,7 +391,8 @@ impl SpmmExecutor {
         if privatized {
             t.atomic = t.row_split;
         }
-        flex::spmm_tile(
+        flex::spmm_tile_sr(
+            self.semiring,
             &t,
             &self.dist.flex_cols,
             &self.dist.flex_vals,
@@ -801,6 +851,90 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn semiring_spmm_matches_naive_and_mul_sum_is_bit_identical() {
+        // Tentpole acceptance (semiring half): the generalized executor
+        // at mul+sum is bit-identical to the hardwired hybrid path, and
+        // every other (op, reduce) pair matches a naive per-row fold on
+        // flex-only plans. Dims stay under the Cs bound so each row is
+        // one tile and the fold order is CSR order on both sides.
+        use crate::exec::semiring::{BinaryOp, Reduce, Semiring};
+        use crate::util::testgen;
+        check(Config::default().cases(10), "semiring spmm == naive", |rng| {
+            let m = testgen::pattern_family(rng, 60);
+            let n = testgen::wide_feature_width(rng);
+            let b = Dense::random(rng, m.cols, n);
+            let d = DistParams { threshold: rng.range(1, 6), fill_padding: rng.chance(0.5) };
+            let build = |d: &DistParams| {
+                let mut e =
+                    SpmmExecutor::new(&m, d, &BalanceParams::default(), TcBackend::NativeBitmap);
+                e.flex_threads = 1;
+                e.threading = Threading::Inline;
+                e
+            };
+            let want = build(&d).execute(&b).unwrap();
+            let mut explicit = build(&d);
+            explicit.set_semiring(Semiring::mul_sum()).unwrap();
+            assert_eq!(explicit.execute(&b).unwrap().data, want.data, "mul+sum diverged");
+            for sr in [
+                Semiring::new(BinaryOp::Add, Reduce::Sum),
+                Semiring::new(BinaryOp::Mul, Reduce::Max),
+                Semiring::new(BinaryOp::Sub, Reduce::Min),
+                Semiring::new(BinaryOp::Mul, Reduce::Mean),
+                Semiring::new(BinaryOp::Div, Reduce::Sum),
+            ] {
+                let mut e = build(&DistParams::flex_only());
+                e.set_semiring(sr).unwrap();
+                let got = e.execute(&b).unwrap();
+                let mut naive = Dense::zeros(m.rows, n);
+                for r in 0..m.rows {
+                    let (s, t) = (m.row_ptr[r] as usize, m.row_ptr[r + 1] as usize);
+                    if s == t {
+                        continue; // empty rows stay 0.0, not the identity
+                    }
+                    for j in 0..n {
+                        let mut acc = sr.reduce.identity();
+                        for p in s..t {
+                            let c = m.col_idx[p] as usize;
+                            acc = sr.reduce.fold(acc, sr.op.apply(m.values[p], b.row(c)[j]));
+                        }
+                        if sr.reduce == Reduce::Mean {
+                            acc /= (t - s) as f32;
+                        }
+                        naive.row_mut(r)[j] = acc;
+                    }
+                }
+                assert_eq!(got.data, naive.data, "{sr} diverged from naive fold");
+            }
+        });
+    }
+
+    #[test]
+    fn semiring_rejects_tc_and_reordered_plans() {
+        use crate::exec::semiring::{BinaryOp, Reduce, Semiring};
+        let mut rng = SplitMix64::new(90);
+        let m = gen::banded(&mut rng, 64, 4, 0.9);
+        let mut hybrid = SpmmExecutor::new(
+            &m,
+            &DistParams { threshold: 1, fill_padding: true },
+            &BalanceParams::default(),
+            TcBackend::NativeBitmap,
+        );
+        assert!(hybrid.dist.tc.n_blocks() > 0, "need TC blocks for the rejection case");
+        let max = Semiring::new(BinaryOp::Mul, Reduce::Max);
+        assert!(hybrid.set_semiring(max).is_err());
+        assert!(hybrid.set_semiring(Semiring::mul_sum()).is_ok());
+        let mut flex = SpmmExecutor::new(
+            &m,
+            &DistParams::flex_only(),
+            &BalanceParams::default(),
+            TcBackend::NativeBitmap,
+        );
+        assert!(flex.set_semiring(max).is_ok());
+        flex.perm = Some(Arc::new(crate::reorder::RowPerm::identity(m.rows)));
+        assert!(flex.set_semiring(max).is_err(), "reordered plans must be refused");
     }
 
     #[test]

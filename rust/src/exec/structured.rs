@@ -14,6 +14,7 @@
 use super::counters::Counters;
 use super::kernels::{self, KernelParams};
 use super::output::SharedOut;
+use super::semiring::{self, Semiring};
 use super::workspace::{self, StructuredBufs};
 use crate::format::{bitmap, legacy::TcfBlocks, TcBlocks, PAD_COL, WINDOW};
 use crate::sparse::Dense;
@@ -177,11 +178,15 @@ fn count_block(counters: &Counters, tc: &TcBlocks, blk: usize, n: usize) {
 
 /// Execute SDDMM for blocks `[b0, b1)`: sample `A_win @ B_cols` at the
 /// block's nonzero positions, scaled by the block values, written to
-/// `out_values` via `out_idx` (bit-ascending order per block). The dot
-/// kernel is a pure function of its operand rows, so results are
-/// schedule-invariant in every mode.
+/// `out_values` via `out_idx` (bit-ascending order per block). The
+/// per-edge reduction (`reduce_k op(A[row,k], B[col,k])`; `mul+sum` is
+/// the exact lane dot kernel via [`semiring::edge_reduce`]) is a pure
+/// function of its operand rows, so results are schedule-invariant in
+/// every mode. Every semiring is legal here: only *set* bits are
+/// evaluated, so TC zero-padding never feeds a non-sum reduce.
 #[allow(clippy::too_many_arguments)]
 pub fn sddmm_blocks(
+    sr: Semiring,
     tc: &TcBlocks,
     tcf: Option<&TcfBlocks>,
     decode: Decode,
@@ -214,9 +219,9 @@ pub fn sddmm_blocks(
                     let row = win * WINDOW + r;
                     let col = cols[c];
                     debug_assert_ne!(col, PAD_COL);
-                    let dot = kernels::dot_mode(kp.lanes, a.row(row), b.row(col as usize));
+                    let score = semiring::edge_reduce(sr, kp.lanes, a.row(row), b.row(col as usize));
                     unsafe {
-                        out_values.add_plain(out_idx[base + i] as usize, vals[i] * dot);
+                        out_values.add_plain(out_idx[base + i] as usize, vals[i] * score);
                     }
                     i += 1;
                     rest &= rest - 1;
@@ -238,9 +243,9 @@ pub fn sddmm_blocks(
                     let _ = tcf.find_traverse(blk, r, c, &mut steps);
                     let row = win * WINDOW + r;
                     let col = cols[c] as usize;
-                    let dot = kernels::dot_mode(kp.lanes, a.row(row), b.row(col));
+                    let score = semiring::edge_reduce(sr, kp.lanes, a.row(row), b.row(col));
                     unsafe {
-                        out_values.add_plain(out_idx[base + i] as usize, vals[i] * dot);
+                        out_values.add_plain(out_idx[base + i] as usize, vals[i] * score);
                     }
                     i += 1;
                     rest &= rest - 1;
@@ -396,6 +401,7 @@ mod tests {
         {
             let out = SharedOut::new(&mut out_buf);
             sddmm_blocks(
+                Semiring::mul_sum(),
                 &d.tc,
                 None,
                 Decode::Bitmap,

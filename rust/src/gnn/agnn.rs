@@ -12,7 +12,12 @@
 //! Runtime profile matches the paper's motivation: each propagation
 //! layer is one SDDMM + one SpMM on the hybrid executors; the SpMM
 //! plan is built once on the pattern and its values are refreshed
-//! (`set_values`) every step.
+//! (`set_values`) every step. With [`Agnn::with_fused`] the three
+//! per-layer stages collapse into one [`FusedAttention`] pass: scores
+//! live in per-window workspace segments and the cos/α caches the
+//! backward pass needs are *spilled* by the fused kernel (bit-identical
+//! to the unfused chain's intermediates), so training sees the same
+//! numbers through either forward.
 //!
 //! Backward: exact for W_0, W_1 and β_l; the hidden-state gradient
 //! flows through the aggregation term (`dH += αᵀ dH'`, plus softmax →
@@ -27,10 +32,12 @@ use crate::balance::BalanceParams;
 use crate::dist::DistParams;
 use crate::exec::output::SharedOut;
 use crate::exec::sddmm::SddmmExecutor;
-use crate::exec::{SpmmExecutor, TcBackend, Workspace};
+use crate::exec::{FusedAttention, SpmmExecutor, TcBackend, Workspace};
+use crate::prep::{AttentionPlan, SddmmPlan, SpmmPlan};
 use crate::sparse::{Csr, Dense};
 use crate::util::SplitMix64;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// AGNN model bound to one graph.
 ///
@@ -51,7 +58,14 @@ pub struct Agnn {
     t_perm: Vec<u32>,
     /// SDDMM executor over the pattern (cosine similarities)
     pub sddmm: SddmmExecutor,
-    pub pattern: Csr,
+    /// One-pass SDDMM→softmax→SpMM executor over the same plans;
+    /// `Some` after [`Agnn::with_fused`], and then the forward pass
+    /// runs fused (backward is unchanged — it reads the spilled
+    /// cos/α caches).
+    fused: Option<FusedAttention>,
+    /// Unit-valued edge pattern, `Arc`-shared with the SDDMM (and
+    /// fused) executor — one CSR copy total, not one per consumer.
+    pub pattern: Arc<Csr>,
     pub backend: DenseBackend,
     // forward caches
     cache: Vec<LayerCache>,
@@ -103,18 +117,21 @@ impl Agnn {
         seed: u64,
     ) -> Self {
         let mut rng = SplitMix64::new(seed);
-        // pattern with unit values (SDDMM scale = 1)
+        // pattern with unit values (SDDMM scale = 1), Arc-shared with
+        // every executor that needs the CSR itself
         let mut pattern = adj_raw.clone();
         for v in pattern.values.iter_mut() {
             *v = 1.0;
         }
+        let pattern = Arc::new(pattern);
         let spmm = SpmmExecutor::new(&pattern, dist, &BalanceParams::default(), tc_backend.clone());
         let pattern_t = pattern.transpose();
         let spmm_t =
             SpmmExecutor::new(&pattern_t, dist, &BalanceParams::default(), tc_backend.clone());
         // csr index -> index in transposed csr
         let t_perm = transpose_permutation(&pattern);
-        let sddmm = SddmmExecutor::new(&pattern, &DistParams::sddmm_default(), tc_backend);
+        let sddmm_dist = crate::dist::distribute_sddmm(&pattern, &DistParams::sddmm_default());
+        let sddmm = SddmmExecutor::from_dist(sddmm_dist, Arc::clone(&pattern), tc_backend);
         Self {
             w0: Dense::glorot(&mut rng, feat_dim, hidden),
             w1: Dense::glorot(&mut rng, hidden, classes),
@@ -123,6 +140,7 @@ impl Agnn {
             spmm_t,
             t_perm,
             sddmm,
+            fused: None,
             pattern,
             backend,
             cache: Vec::new(),
@@ -136,6 +154,40 @@ impl Agnn {
             buf_alpha_t: Vec::new(),
             ws: Workspace::new(),
         }
+    }
+
+    /// Switch the forward pass onto the one-pass fused
+    /// SDDMM→softmax→SpMM executor. Reuses the plans the unfused
+    /// executors already built (no re-preprocessing) and the
+    /// `Arc`-shared pattern; backward is untouched because the fused
+    /// kernel spills cos/α bit-identically to the unfused chain.
+    pub fn with_fused(mut self) -> Result<Self> {
+        let plan = AttentionPlan {
+            sddmm: SddmmPlan {
+                dist: self.sddmm.dist.clone(),
+                sched: self.sddmm.sched.clone(),
+                perm: None,
+            },
+            spmm: SpmmPlan {
+                dist: self.spmm.dist.clone(),
+                sched: self.spmm.sched.clone(),
+                perm: None,
+            },
+        };
+        let backend = self.sddmm.backend.clone();
+        self.fused = Some(FusedAttention::from_plan(plan, Arc::clone(&self.pattern), backend)?);
+        Ok(self)
+    }
+
+    /// Whether the forward pass runs on the fused executor.
+    pub fn is_fused(&self) -> bool {
+        self.fused.is_some()
+    }
+
+    /// Peak per-task score-segment size (elements) observed by the
+    /// fused executor so far; 0 when unfused or before any forward.
+    pub fn fused_peak_seg_elems(&self) -> usize {
+        self.fused.as_ref().map_or(0, |f| f.peak_seg_elems())
     }
 
     pub fn forward(&mut self, x: &Dense) -> Result<Dense> {
@@ -153,6 +205,31 @@ impl Agnn {
                 c.h.copy_from(buf_h);
                 c.hnorm.copy_from(buf_h);
                 normalize_rows_inplace(&mut c.hnorm);
+            }
+            if self.fused.is_some() {
+                // one fused pass per layer: scores stay in per-window
+                // workspace segments; cos/α are spilled into the layer
+                // cache for backward (bit-identical to the unfused
+                // three-stage chain below).
+                let Agnn { fused, cache, betas, buf_h, ws, .. } = self;
+                let fx = fused.as_ref().unwrap();
+                let c = &mut cache[l];
+                let nnz = fx.pattern().nnz();
+                c.cos.clear();
+                c.cos.resize(nnz, 0.0);
+                c.alpha.clear();
+                c.alpha.resize(nnz, 0.0);
+                let out = fx.execute_spill_with(
+                    &c.hnorm,
+                    &c.hnorm,
+                    buf_h,
+                    betas[l],
+                    &mut c.cos,
+                    &mut c.alpha,
+                    ws,
+                )?;
+                *buf_h = out;
+                continue;
             }
             {
                 // cos similarities on edges (hybrid SDDMM; pattern
@@ -407,6 +484,66 @@ mod tests {
         assert!(
             losses.last().unwrap() < &(losses[0] * 0.9),
             "loss did not drop: {:.4} -> {:.4}",
+            losses[0],
+            losses.last().unwrap()
+        );
+    }
+
+    #[test]
+    fn fused_forward_matches_unfused() {
+        let (data, mut plain) = tiny();
+        let (_, fused) = tiny();
+        let mut fused = fused.with_fused().unwrap();
+        assert!(fused.is_fused() && !plain.is_fused());
+        let want = plain.forward(&data.features).unwrap();
+        let got = fused.forward(&data.features).unwrap();
+        // layer 0 sees bit-identical inputs, so the spilled cos/α must
+        // match the unfused chain exactly (backward depends on them)
+        assert_eq!(plain.cache[0].cos, fused.cache[0].cos, "layer 0 cos");
+        assert_eq!(plain.cache[0].alpha, fused.cache[0].alpha, "layer 0 alpha");
+        // deeper layers and logits tolerate TC-stage reassociation in
+        // the fused SpMM half
+        for l in 1..plain.cache.len() {
+            for (a, b) in plain.cache[l].alpha.iter().zip(&fused.cache[l].alpha) {
+                assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "layer {l} alpha: {a} vs {b}");
+            }
+        }
+        for (a, b) in want.data.iter().zip(&got.data) {
+            assert!((a - b).abs() <= 1e-3 * (1.0 + b.abs()), "logits: {a} vs {b}");
+        }
+        // the fused pass bounded its intermediate by one window's
+        // nonzeros — never the edge count
+        let peak = fused.fused_peak_seg_elems();
+        let bound = fused.fused.as_ref().unwrap().max_window_nnz();
+        assert!(peak > 0 && peak <= bound, "peak {peak} outside (0, {bound}]");
+        assert_eq!(plain.fused_peak_seg_elems(), 0);
+    }
+
+    #[test]
+    fn fused_training_reduces_loss() {
+        // backward runs unchanged off the spilled cos/α caches
+        let (data, agnn) = tiny();
+        let mut agnn = agnn.with_fused().unwrap();
+        let mask = vec![true; 48];
+        let mut losses = Vec::new();
+        for _ in 0..25 {
+            let logits = agnn.forward(&data.features).unwrap();
+            let (loss, dlogits) = softmax_xent(&logits, &data.labels, &mask);
+            losses.push(loss);
+            let (dw0, dw1, dbetas) = agnn.backward(&dlogits).unwrap();
+            for (w, g) in agnn.w0.data.iter_mut().zip(&dw0.data) {
+                *w -= 0.3 * g;
+            }
+            for (w, g) in agnn.w1.data.iter_mut().zip(&dw1.data) {
+                *w -= 0.3 * g;
+            }
+            for (b, g) in agnn.betas.iter_mut().zip(&dbetas) {
+                *b -= 0.3 * g;
+            }
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.9),
+            "fused loss did not drop: {:.4} -> {:.4}",
             losses[0],
             losses.last().unwrap()
         );

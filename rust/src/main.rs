@@ -2,10 +2,10 @@
 //!
 //! Subcommands:
 //!   spmm   --matrix <.mtx|gen:SPEC> [--n 128] [--theta auto|auto-refined|N] [--precision f32|bf16|f16] [--reorder off|auto]
-//!   sddmm  --matrix <.mtx|gen:SPEC> [--k 32]  [--theta auto|auto-refined|N] [--precision f32|bf16|f16] [--reorder off|auto]
+//!   sddmm  --matrix <.mtx|gen:SPEC> [--k 32]  [--theta auto|auto-refined|N] [--precision f32|bf16|f16] [--reorder off|auto] [--reduce sum|max|mean]
 //!   stats  --matrix <.mtx|gen:SPEC>            sparsity profile + distribution preview
 //!   tune   [--matrix SPEC] [--n 128] [--k 32]  resolve θ through the serving Planner path
-//!   gnn    [--model gcn|agnn] [--epochs 50]    train on a synthetic citation graph
+//!   gnn    [--model gcn|agnn] [--epochs 50] [--fused]  train on a synthetic citation graph
 //!   serve  [--patterns 6] [--requests 120] [--workers W] closed-loop serving-trace replay
 //!
 //! `--theta` defaults to `auto` everywhere: the cost model tunes θ on
@@ -20,7 +20,7 @@ use libra::balance::BalanceParams;
 use libra::costmodel::{self, HardwareProfile};
 use libra::dist::{DistParams, Op};
 use libra::exec::sddmm::SddmmExecutor;
-use libra::exec::{SpmmExecutor, TcBackend};
+use libra::exec::{BinaryOp, Reduce, Semiring, SpmmExecutor, TcBackend};
 use libra::format::Precision;
 use libra::planner::{fmt_theta, Planner, ReorderPolicy, ThetaPolicy};
 use libra::serve::{
@@ -46,13 +46,13 @@ fn main() -> Result<()> {
         )?),
         "sddmm" => cmd_sddmm(&parse_flags(
             rest,
-            &["matrix", "k", "theta", "backend", "seed", "json", "precision", "reorder"],
+            &["matrix", "k", "theta", "backend", "seed", "json", "precision", "reorder", "reduce"],
         )?),
         "stats" => cmd_stats(&parse_flags(rest, &["matrix", "seed"])?),
         "tune" => cmd_tune(&parse_flags(rest, &["matrix", "n", "k", "seed"])?),
         "gnn" => cmd_gnn(&parse_flags(
             rest,
-            &["model", "epochs", "batch", "graphs", "theta", "reorder"],
+            &["model", "epochs", "batch", "graphs", "theta", "reorder", "fused"],
         )?),
         "serve" => cmd_serve(&parse_flags(
             rest,
@@ -79,10 +79,12 @@ fn print_usage() {
          \x20        [--reorder off|auto]  (auto: row-cluster the plan when the density pre-metric fires; not with --batch)\n\
          \x20 sddmm  --matrix <path.mtx|gen:SPEC> [--k 32]  [--theta auto|auto-refined|N] [--backend native|pjrt] [--seed 42] [--json]\n\
          \x20        [--precision f32|bf16|f16] [--reorder off|auto]  (store sparse values bf16/f16-quantized; compute stays f32)\n\
+         \x20        [--reduce sum|max|mean]  (per-edge semiring reduction over the feature dim; native backend only)\n\
          \x20 stats  --matrix <path.mtx|gen:SPEC> [--seed 42]\n\
          \x20 tune   [--matrix <path.mtx|gen:SPEC>] [--n 128] [--k 32] [--seed 42]\n\
          \x20 gnn    [--model gcn|agnn] [--epochs 50] [--theta auto|auto-refined|N] [--batch B] [--graphs G]\n\
          \x20        [--reorder off|auto]  (B>0: mini-batch train over G small graphs; --reorder auto is gcn-only)\n\
+         \x20        [--fused]  (agnn-only: one-pass SDDMM\u{2192}softmax\u{2192}SpMM attention forward)\n\
          \x20 serve  [--patterns 6] [--requests 120] [--workers W] [--n 64] [--size 1024]\n\
          \x20        [--theta auto|auto-refined|N] [--backend native|pjrt] [--seed 42] [--cache-mb 256] [--batch 8]\n\
          \x20        [--microbatch] [--linger-us 2000] [--batch-kb 2048]  (coalesce requests into block-diagonal batches)\n\
@@ -373,9 +375,19 @@ fn cmd_sddmm(flags: &HashMap<String, String>) -> Result<()> {
     let planner = Planner::new(theta_policy(flags)?).with_reorder(reorder_policy(flags)?);
     let (plan, params) = planner.plan_sddmm(&m, k);
     let reordered = plan.perm.is_some();
-    let mut exec = SddmmExecutor::from_plan(plan, m.clone(), backend(flags)?);
+    let mut exec =
+        SddmmExecutor::from_plan(plan, std::sync::Arc::new(m.clone()), backend(flags)?);
     if prec != Precision::F32 {
         exec.set_precision(prec);
+    }
+    if let Some(r) = flags.get("reduce") {
+        let reduce = match r.as_str() {
+            "sum" => Reduce::Sum,
+            "max" => Reduce::Max,
+            "mean" => Reduce::Mean,
+            other => bail!("invalid value '{other}' for --reduce (sum, max, or mean)"),
+        };
+        exec.set_semiring(Semiring { op: BinaryOp::Mul, reduce })?;
     }
     let mut rng = SplitMix64::new(2);
     let a = Dense::random(&mut rng, m.rows, k);
@@ -391,21 +403,25 @@ fn cmd_sddmm(flags: &HashMap<String, String>) -> Result<()> {
     if json {
         println!(
             "{{\"op\":\"sddmm\",\"rows\":{},\"cols\":{},\"nnz\":{},\"k\":{k},\"theta\":\"{}\",\
-             \"reorder\":{reordered},\"tc_fraction\":{:.6},\"ms\":{:.6},\"gflops\":{:.4}}}",
+             \"reorder\":{reordered},\"semiring\":\"{}\",\"tc_fraction\":{:.6},\"ms\":{:.6},\
+             \"gflops\":{:.4}}}",
             m.rows,
             m.cols,
             m.nnz(),
             fmt_theta(params.threshold),
+            exec.semiring,
             exec.dist.stats.tc_fraction(),
             secs * 1e3,
             gflops
         );
     } else {
         println!(
-            "sddmm K={k}: theta={} ({}) reorder={} | {:.3} ms, {:.2} GFLOPS ({:.1}% nnz structured)",
+            "sddmm K={k}: theta={} ({}) reorder={} semiring={} | {:.3} ms, {:.2} GFLOPS \
+             ({:.1}% nnz structured)",
             fmt_theta(params.threshold),
             theta_policy(flags)?,
             if reordered { "applied" } else { "off" },
+            exec.semiring,
             secs * 1e3,
             gflops,
             exec.dist.stats.tc_fraction() * 100.0
@@ -496,12 +512,17 @@ fn cmd_gnn(flags: &HashMap<String, String>) -> Result<()> {
     if rp != ReorderPolicy::Off && model != "gcn" {
         bail!("--reorder auto supports only --model gcn (AGNN plans its attention unreordered)");
     }
+    let fused = flags.contains_key("fused");
+    if fused && model != "agnn" {
+        bail!("--fused supports only --model agnn (the fused pass is the attention pipeline)");
+    }
     let cfg = TrainConfig {
         epochs,
         lr: 0.01,
         hidden: 64,
         layers: 5,
         reorder: rp,
+        fused,
         ..Default::default()
     };
     let policy = theta_policy(flags)?;
@@ -533,7 +554,8 @@ fn cmd_gnn(flags: &HashMap<String, String>) -> Result<()> {
         other => bail!("unknown model '{other}'"),
     };
     println!(
-        "{model}: {} epochs, final acc {:.3}, {:.1} ms/epoch, prep {:.2}%",
+        "{model}{}: {} epochs, final acc {:.3}, {:.1} ms/epoch, prep {:.2}%",
+        if fused { " (fused)" } else { "" },
         epochs,
         stats.final_accuracy,
         stats.total_train_time() / epochs as f64 * 1e3,

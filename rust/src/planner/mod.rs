@@ -38,8 +38,8 @@ use crate::exec::sddmm::SddmmExecutor;
 use crate::exec::{SpmmExecutor, TcBackend, Threading};
 use crate::format::WINDOW;
 use crate::prep::{
-    preprocess_sddmm, preprocess_sddmm_batch, preprocess_spmm, preprocess_spmm_batch, BatchPlan,
-    PrepMode, SddmmBatchPlan, SddmmPlan, SpmmPlan,
+    preprocess_attention, preprocess_sddmm, preprocess_sddmm_batch, preprocess_spmm,
+    preprocess_spmm_batch, AttentionPlan, BatchPlan, PrepMode, SddmmBatchPlan, SddmmPlan, SpmmPlan,
 };
 pub use crate::reorder::ReorderPolicy;
 use crate::sparse::{Csr, Dense, GraphBatch};
@@ -271,6 +271,24 @@ impl Planner {
         (plan, d)
     }
 
+    /// Resolve and preprocess one fused attention workload: both
+    /// halves' θ resolved independently — `k` prices the SDDMM
+    /// contraction, `n` the SpMM output width — over the same matrix,
+    /// producing one [`AttentionPlan`] the serving cache keys by a
+    /// single fingerprint. No reorder stage: the fused executor's
+    /// no-atomics window ownership requires unreordered plans.
+    pub fn plan_attention(
+        &self,
+        m: &Csr,
+        k: usize,
+        n: usize,
+    ) -> (AttentionPlan, DistParams, DistParams) {
+        let d_sddmm = self.resolve(m, Op::Sddmm, k);
+        let d_spmm = self.resolve(m, Op::Spmm, n);
+        let plan = preprocess_attention(m, &d_sddmm, &d_spmm, &self.balance, self.mode);
+        (plan, d_sddmm, d_spmm)
+    }
+
     /// Resolve (merged member histograms) and preprocess a
     /// window-aligned SpMM batch.
     pub fn plan_spmm_batch(&self, batch: &GraphBatch, n: usize) -> (BatchPlan, DistParams) {
@@ -344,7 +362,8 @@ impl Planner {
         // probe the schedule this planner would actually build
         // (matching the SpMM probe, which threads self.balance too)
         let plan = preprocess_sddmm(m, params, &self.balance, PrepMode::Sequential);
-        let mut exec = SddmmExecutor::from_plan(plan, m.clone(), TcBackend::NativeBitmap);
+        let mut exec =
+            SddmmExecutor::from_plan(plan, std::sync::Arc::new(m.clone()), TcBackend::NativeBitmap);
         exec.threading = Threading::Inline;
         exec.flex_threads = 1;
         exec.execute(&a, &b).expect("probe execution"); // warm
@@ -498,6 +517,21 @@ mod tests {
             let (sddmm, _) = p.plan_sddmm(&m, 16);
             sddmm.dist.validate_cover(&m).unwrap();
             assert_eq!(sddmm.sched.flex_elems(), sddmm.dist.flex_vals.len());
+        });
+    }
+
+    #[test]
+    fn plan_attention_resolves_both_halves_independently() {
+        check(Config::default().cases(8), "attention plan == per-op plans", |rng| {
+            let m = gen::uniform_random(rng, rng.range(1, 120), rng.range(1, 90), 0.1);
+            let p = Planner::new(ThetaPolicy::Auto);
+            let (plan, d_sddmm, d_spmm) = p.plan_attention(&m, 16, 64);
+            assert_eq!(d_sddmm, p.resolve(&m, Op::Sddmm, 16));
+            assert_eq!(d_spmm, p.resolve(&m, Op::Spmm, 64));
+            plan.sddmm.dist.validate_cover(&m).unwrap();
+            plan.spmm.dist.validate_cover(&m).unwrap();
+            assert!(plan.sddmm.perm.is_none() && plan.spmm.perm.is_none());
+            assert_eq!(plan.plan_bytes(), plan.sddmm.plan_bytes() + plan.spmm.plan_bytes());
         });
     }
 

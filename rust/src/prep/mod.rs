@@ -125,6 +125,75 @@ pub enum PrepMode {
     Parallel,
 }
 
+/// One fused attention plan: the SDDMM and SpMM halves of the
+/// SDDMM → softmax → SpMM pipeline, planned over a *single* pattern
+/// fingerprint so the serving cache stores (and warms) them as one
+/// unit. Each half keeps its own θ — the score sampling and the
+/// aggregation see different cost tradeoffs — but both distributions
+/// describe the same nonzeros, which is what lets
+/// [`crate::exec::FusedAttention`] route one per-window segment
+/// through all three stages.
+#[derive(Debug, Clone)]
+pub struct AttentionPlan {
+    pub sddmm: SddmmPlan,
+    pub spmm: SpmmPlan,
+}
+
+impl AttentionPlan {
+    /// Estimated resident bytes — the eviction unit of
+    /// `serve::PlanCache`, summed over both halves.
+    pub fn plan_bytes(&self) -> usize {
+        self.sddmm.plan_bytes() + self.spmm.plan_bytes()
+    }
+
+    /// Nonzeros of the widest 8-row window — the fused executor's
+    /// per-task segment bound (its intermediate never exceeds this,
+    /// regardless of the total edge count).
+    pub fn max_window_nnz(&self) -> usize {
+        let d = &self.spmm.dist;
+        let n_windows = d.rows.div_ceil(WINDOW);
+        let mut best = 0usize;
+        let mut blk = 0usize;
+        for w in 0..n_windows {
+            let lo = w * WINDOW;
+            let hi = ((w + 1) * WINDOW).min(d.rows);
+            let flex = (d.flex_row_ptr[hi] - d.flex_row_ptr[lo]) as usize;
+            let b0 = blk;
+            while blk < d.tc.n_blocks() && d.tc.window_of[blk] as usize == w {
+                blk += 1;
+            }
+            let tc = (d.tc.val_ptr[blk] - d.tc.val_ptr[b0]) as usize;
+            best = best.max(flex + tc);
+        }
+        best
+    }
+
+    /// Bytes of execution workspace one fused call needs for `n`
+    /// output columns and `flex_tasks` window-worker tasks: per task,
+    /// the score segment plus the window-local weight gather (each
+    /// bounded by [`Self::max_window_nnz`]), an 8×n accumulator, and
+    /// one scratch row.
+    pub fn workspace_bytes(&self, n: usize, flex_tasks: usize) -> usize {
+        flex_tasks * (2 * self.max_window_nnz() + (WINDOW + 1) * n) * 4
+    }
+}
+
+/// Preprocess a fused attention workload: both halves over the same
+/// pattern in one call (each with its own distribution parameters,
+/// sharing the balance parameters and execution mode).
+pub fn preprocess_attention(
+    m: &Csr,
+    sddmm_params: &DistParams,
+    spmm_params: &DistParams,
+    balance_params: &BalanceParams,
+    mode: PrepMode,
+) -> AttentionPlan {
+    AttentionPlan {
+        sddmm: preprocess_sddmm(m, sddmm_params, balance_params, mode),
+        spmm: preprocess_spmm(m, spmm_params, balance_params, mode),
+    }
+}
+
 /// Preprocess an SpMM workload.
 pub fn preprocess_spmm(
     m: &Csr,
@@ -690,6 +759,39 @@ mod tests {
             assert_eq!(nnz_flex, bp.plan.dist.stats.nnz_flex);
             let segs: usize = bp.segments.iter().map(|s| s.tc_segments).sum();
             assert_eq!(segs, bp.plan.sched.tc_segments.len());
+        });
+    }
+
+    #[test]
+    fn attention_plan_window_bound_matches_pattern() {
+        // the fused segment bound derived from the SpMM distribution
+        // must equal the widest window of the raw pattern (cover
+        // invariant: tc + flex nonzeros per window == CSR nonzeros)
+        check(Config::default().cases(12), "attention window bound", |rng| {
+            let m = testgen::pattern_family(rng, 80);
+            let sddmm_p = DistParams { threshold: rng.range(1, 48), fill_padding: true };
+            let spmm_p = DistParams { threshold: rng.range(1, 6), fill_padding: rng.chance(0.5) };
+            let plan = preprocess_attention(
+                &m,
+                &sddmm_p,
+                &spmm_p,
+                &BalanceParams::default(),
+                PrepMode::Sequential,
+            );
+            let want = (0..m.rows.div_ceil(WINDOW))
+                .map(|w| {
+                    let lo = w * WINDOW;
+                    let hi = ((w + 1) * WINDOW).min(m.rows);
+                    (m.row_ptr[hi] - m.row_ptr[lo]) as usize
+                })
+                .max()
+                .unwrap_or(0);
+            assert_eq!(plan.max_window_nnz(), want);
+            assert_eq!(plan.plan_bytes(), plan.sddmm.plan_bytes() + plan.spmm.plan_bytes());
+            assert_eq!(
+                plan.workspace_bytes(32, 2),
+                2 * (2 * want + (WINDOW + 1) * 32) * 4
+            );
         });
     }
 

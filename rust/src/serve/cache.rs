@@ -19,7 +19,7 @@ use crate::balance::BalanceParams;
 use crate::delta::EdgeDelta;
 use crate::dist::{DistParams, Op};
 use crate::format::Precision;
-use crate::prep::{SddmmPlan, SpmmPlan};
+use crate::prep::{AttentionPlan, SddmmPlan, SpmmPlan};
 use crate::sparse::{Csr, PatternDigests, PatternFingerprint};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -57,6 +57,15 @@ pub struct PlanKey {
     /// warm-hits the reordered plan, and an `Off` request for the same
     /// pattern keeps its own separate entry.
     pub reorder: bool,
+    /// True for a fused-attention entry (one plan carrying both the
+    /// SDDMM and SpMM halves of the SDDMM→softmax→SpMM pipeline).
+    /// `threshold` then holds the SDDMM half's θ and
+    /// [`PlanKey::spmm_threshold`] the SpMM half's; a fused entry never
+    /// shares a key with either standalone op over the same pattern.
+    pub fused: bool,
+    /// SpMM-half θ of a fused plan; normalized to 0 on non-fused keys
+    /// (where `threshold` alone identifies the plan).
+    pub spmm_threshold: usize,
 }
 
 impl PlanKey {
@@ -72,6 +81,8 @@ impl PlanKey {
             balance_enabled: b.enabled,
             precision: Precision::F32,
             reorder: false,
+            fused: false,
+            spmm_threshold: 0,
         }
     }
 
@@ -90,6 +101,33 @@ impl PlanKey {
             balance_enabled: b.enabled,
             precision: Precision::F32,
             reorder: false,
+            fused: false,
+            spmm_threshold: 0,
+        }
+    }
+
+    /// Key for a fused-attention plan: both halves' resolved θs under
+    /// one entry. `fill_padding` is the SpMM half's (the SDDMM
+    /// distribution accepts-but-ignores it, as in [`PlanKey::sddmm`]).
+    pub fn attention(
+        fp: PatternFingerprint,
+        d_sddmm: &DistParams,
+        d_spmm: &DistParams,
+        b: &BalanceParams,
+    ) -> Self {
+        Self {
+            fp,
+            op: Op::Sddmm,
+            threshold: d_sddmm.threshold,
+            fill_padding: d_spmm.fill_padding,
+            ts: b.ts,
+            cs: b.cs,
+            short_len: b.short_len,
+            balance_enabled: b.enabled,
+            precision: Precision::F32,
+            reorder: false,
+            fused: true,
+            spmm_threshold: d_spmm.threshold,
         }
     }
 
@@ -110,16 +148,32 @@ impl PlanKey {
 #[derive(Debug, Clone)]
 pub struct SddmmEntry {
     pub plan: SddmmPlan,
-    pub pattern: Csr,
+    pub pattern: Arc<Csr>,
 }
 
 impl SddmmEntry {
     pub fn bytes(&self) -> usize {
-        self.plan.plan_bytes()
-            + self.pattern.row_ptr.len() * 4
-            + self.pattern.col_idx.len() * 4
-            + self.pattern.values.len() * 4
+        self.plan.plan_bytes() + pattern_bytes(&self.pattern)
     }
+}
+
+/// Cached fused-attention state: both halves' balanced plans plus the
+/// shared pattern CSR the fused executor walks window by window. A warm
+/// hit skips the entire double preprocess.
+#[derive(Debug, Clone)]
+pub struct FusedEntry {
+    pub plan: AttentionPlan,
+    pub pattern: Arc<Csr>,
+}
+
+impl FusedEntry {
+    pub fn bytes(&self) -> usize {
+        self.plan.plan_bytes() + pattern_bytes(&self.pattern)
+    }
+}
+
+fn pattern_bytes(m: &Csr) -> usize {
+    m.row_ptr.len() * 4 + m.col_idx.len() * 4 + m.values.len() * 4
 }
 
 /// A cached, shareable plan.
@@ -127,6 +181,7 @@ impl SddmmEntry {
 pub enum CachedPlan {
     Spmm(Arc<SpmmPlan>),
     Sddmm(Arc<SddmmEntry>),
+    Fused(Arc<FusedEntry>),
 }
 
 impl CachedPlan {
@@ -135,6 +190,7 @@ impl CachedPlan {
         match self {
             CachedPlan::Spmm(p) => p.plan_bytes(),
             CachedPlan::Sddmm(e) => e.bytes(),
+            CachedPlan::Fused(e) => e.bytes(),
         }
     }
 }
@@ -385,6 +441,9 @@ impl PlanCache {
         let reordered = match &old_plan {
             CachedPlan::Spmm(p) => p.perm.is_some(),
             CachedPlan::Sddmm(e) => e.plan.perm.is_some(),
+            CachedPlan::Fused(e) => {
+                e.plan.sddmm.perm.is_some() || e.plan.spmm.perm.is_some()
+            }
         };
         if reordered {
             anyhow::bail!(
@@ -424,7 +483,20 @@ impl PlanCache {
                             &dparams,
                             &bparams,
                         );
-                        CachedPlan::Sddmm(Arc::new(SddmmEntry { plan, pattern: new_m.clone() }))
+                        CachedPlan::Sddmm(Arc::new(SddmmEntry {
+                            plan,
+                            pattern: Arc::new(new_m.clone()),
+                        }))
+                    }
+                    CachedPlan::Fused(_) => {
+                        // The two halves were distributed under
+                        // different θs, but `dparams` above can carry
+                        // only one; patching would silently re-split
+                        // the touched windows wrong. Rebuild cold.
+                        anyhow::bail!(
+                            "fused attention plans are not delta-patchable; \
+                             rebuild from the base matrix instead"
+                        );
                     }
                 };
                 self.insert(new_key, patched.clone());
@@ -537,6 +609,15 @@ mod tests {
         assert!(!k.reorder);
         assert_ne!(k, k.with_reorder(true));
         assert_eq!(k.with_reorder(false), k);
+        // fused keys never collide with either standalone op, and
+        // separate both halves' θs
+        let ka = PlanKey::attention(fp, &d1, &d2, &b);
+        assert!(ka.fused);
+        assert_eq!((ka.threshold, ka.spmm_threshold), (d1.threshold, d2.threshold));
+        assert_ne!(ka, PlanKey::sddmm(fp, &d1, &b));
+        assert_ne!(ka, PlanKey::spmm(fp, &d2, &b));
+        assert_ne!(ka, PlanKey::attention(fp, &d2, &d1, &b));
+        assert_eq!(ka, PlanKey::attention(fp, &d1, &d2, &b));
     }
 
     #[test]

@@ -76,6 +76,14 @@ pub struct ServeMetrics {
     /// and the plan was built unpermuted (also memoized; `Off`
     /// requests never decide and count nowhere).
     pub reorder_skipped: AtomicU64,
+    /// Fused-attention requests executed (SDDMM → softmax → SpMM in
+    /// one pass over a single shared plan).
+    pub fused_requests: AtomicU64,
+    /// Largest per-window score-segment residency any fused request
+    /// touched (elements) — the observable proof that fused serving
+    /// never materialized a full-edge intermediate (bounded by the
+    /// widest row window, not by nnz).
+    pub fused_peak_window_nnz: AtomicU64,
     /// Resolved-θ distribution: how many requests were served at each
     /// effective threshold (`usize::MAX` = flexible-only).
     theta_hist: Mutex<BTreeMap<usize, u64>>,
@@ -108,6 +116,8 @@ impl ServeMetrics {
             delta_rebuilt: AtomicU64::new(0),
             reorder_applied: AtomicU64::new(0),
             reorder_skipped: AtomicU64::new(0),
+            fused_requests: AtomicU64::new(0),
+            fused_peak_window_nnz: AtomicU64::new(0),
             theta_hist: Mutex::new(BTreeMap::new()),
             queue_hist: LatencyHist::new(),
             prep_hist: LatencyHist::new(),
@@ -172,6 +182,8 @@ impl ServeMetrics {
             delta_rebuilt: load(&self.delta_rebuilt),
             reorder_applied: load(&self.reorder_applied),
             reorder_skipped: load(&self.reorder_skipped),
+            fused_requests: load(&self.fused_requests),
+            fused_peak_window_nnz: load(&self.fused_peak_window_nnz),
             theta_dist: self.theta_hist.lock().unwrap().iter().map(|(&t, &c)| (t, c)).collect(),
             queue_hist: self.queue_hist.snapshot(),
             prep_hist: self.prep_hist.snapshot(),
@@ -218,6 +230,11 @@ pub struct MetricsReport {
     pub reorder_applied: u64,
     /// Auto-reorder decisions that predicted no gain (plan unpermuted).
     pub reorder_skipped: u64,
+    /// Fused-attention requests executed (one-pass pipeline).
+    pub fused_requests: u64,
+    /// Peak per-window score-segment residency across all fused
+    /// requests, in elements (full-edge intermediates never form).
+    pub fused_peak_window_nnz: u64,
     /// Resolved-θ distribution: `(θ, requests served at θ)`, ascending
     /// (`usize::MAX` = flexible-only).
     pub theta_dist: Vec<(usize, u64)>,
@@ -256,6 +273,8 @@ impl MetricsReport {
             delta_rebuilt: 0,
             reorder_applied: 0,
             reorder_skipped: 0,
+            fused_requests: 0,
+            fused_peak_window_nnz: 0,
             theta_dist: Vec::new(),
             queue_hist: HistSnapshot::default(),
             prep_hist: HistSnapshot::default(),
@@ -291,6 +310,8 @@ impl MetricsReport {
             out.delta_rebuilt += r.delta_rebuilt;
             out.reorder_applied += r.reorder_applied;
             out.reorder_skipped += r.reorder_skipped;
+            out.fused_requests += r.fused_requests;
+            out.fused_peak_window_nnz = out.fused_peak_window_nnz.max(r.fused_peak_window_nnz);
             out.workers += r.workers;
             out.elapsed_secs = out.elapsed_secs.max(r.elapsed_secs);
             out.peak_worker_workspace_bytes =
@@ -372,6 +393,11 @@ impl std::fmt::Display for MetricsReport {
             "auto-reorder: {} applied, {} skipped (per-pattern decisions)",
             self.reorder_applied, self.reorder_skipped
         )?;
+        writeln!(
+            f,
+            "fused attention: {} requests, peak window segment {} elems",
+            self.fused_requests, self.fused_peak_window_nnz
+        )?;
         let dist = self
             .theta_dist
             .iter()
@@ -412,6 +438,9 @@ mod tests {
         m.add(&m.delta_rebuilt, 1);
         m.add(&m.reorder_applied, 2);
         m.add(&m.reorder_skipped, 1);
+        m.add(&m.fused_requests, 2);
+        m.max(&m.fused_peak_window_nnz, 48);
+        m.max(&m.fused_peak_window_nnz, 17); // smaller window: no regress
         m.record_theta(5);
         m.record_theta(5);
         m.record_theta(usize::MAX);
@@ -427,6 +456,7 @@ mod tests {
         assert_eq!(r.theta_memo_hits, 3);
         assert_eq!((r.delta_patched, r.delta_rebuilt), (2, 1));
         assert_eq!((r.reorder_applied, r.reorder_skipped), (2, 1));
+        assert_eq!((r.fused_requests, r.fused_peak_window_nnz), (2, 48));
         assert_eq!(r.theta_dist, vec![(5, 2), (usize::MAX, 1)]);
         // Display renders without panicking and mentions the hit rate
         // and the resolved-θ distribution
@@ -434,6 +464,7 @@ mod tests {
         assert!(text.contains("75.0% hit rate"));
         assert!(text.contains("2 patched onto cached plans, 1 rebuilt"), "{text}");
         assert!(text.contains("auto-reorder: 2 applied, 1 skipped"), "{text}");
+        assert!(text.contains("fused attention: 2 requests"), "{text}");
         assert!(text.contains("[5:2 flex:1]"), "{text}");
     }
 
@@ -455,6 +486,8 @@ mod tests {
         a.add(&a.prep_full, 1);
         a.add(&a.prep_fast, 2);
         a.add(&a.reorder_applied, 1);
+        a.add(&a.fused_requests, 1);
+        a.max(&a.fused_peak_window_nnz, 10);
         a.record_theta(5);
         a.exec_hist.record(1_000_000);
         let b = ServeMetrics::new();
@@ -462,6 +495,7 @@ mod tests {
         b.add(&b.exec_nanos, 5_000_000); // mean 5 ms
         b.add(&b.prep_full, 1);
         b.add(&b.reorder_skipped, 1);
+        b.max(&b.fused_peak_window_nnz, 30);
         b.record_theta(5);
         b.record_theta(usize::MAX);
         b.exec_hist.record(5_000_000);
@@ -471,6 +505,8 @@ mod tests {
         assert_eq!(m.requests, 4);
         assert_eq!((m.prep_full, m.prep_fast), (2, 2));
         assert_eq!((m.reorder_applied, m.reorder_skipped), (1, 1));
+        // fused counters sum; the peak gauge takes the cluster max
+        assert_eq!((m.fused_requests, m.fused_peak_window_nnz), (1, 30));
         assert_eq!(m.workers, 4);
         // request-weighted mean: (3·1 + 1·5) / 4 = 2 ms
         assert!((m.mean_exec_ms - 2.0).abs() < 1e-9, "{}", m.mean_exec_ms);

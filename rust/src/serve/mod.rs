@@ -57,7 +57,9 @@ pub mod sched;
 pub mod session;
 
 pub use admission::{Admission, Rejected, TenantId, TenantStat};
-pub use cache::{CacheStats, CachedPlan, DeltaApplied, PatternState, PlanCache, PlanKey, SddmmEntry};
+pub use cache::{
+    CacheStats, CachedPlan, DeltaApplied, FusedEntry, PatternState, PlanCache, PlanKey, SddmmEntry,
+};
 pub use cluster::{Cluster, ClusterConfig, ClusterReport, ClusterTicket, Routing};
 pub use hist::{HistSnapshot, LatencyHist};
 pub use metrics::{MetricsReport, ServeMetrics};

@@ -30,14 +30,14 @@
 //!    allocation) — and the [`Response`] (output, timing split, hit
 //!    flag) is handed back to the waiting submitter.
 
-use super::cache::{CachedPlan, PlanCache, PlanKey, SddmmEntry};
+use super::cache::{CachedPlan, FusedEntry, PlanCache, PlanKey, SddmmEntry};
 use super::metrics::{MetricsReport, ServeMetrics};
 use super::sched::{Occupancy, OneShot, SchedParams, SharedQueue};
 use crate::balance::BalanceParams;
 use crate::delta::EdgeDelta;
 use crate::dist::{DistParams, Op};
 use crate::exec::sddmm::SddmmExecutor;
-use crate::exec::{SpmmExecutor, TcBackend, Workspace};
+use crate::exec::{FusedAttention, SpmmExecutor, TcBackend, Workspace};
 use crate::format::Precision;
 use crate::planner::{Planner, ReorderPolicy, ThetaPolicy};
 use crate::sparse::{Csr, Dense, PatternFingerprint};
@@ -76,6 +76,11 @@ pub enum OpInputs {
     Spmm { b: Dense },
     /// `C = (A · Bᵀ) ⊙ S`: A is `rows x k`, B is `cols x k`.
     Sddmm { a: Dense, b: Dense },
+    /// Fused sparse attention over the payload pattern:
+    /// `C = softmax_row(β · (Q·Kᵀ ⊙ S)) · V`, executed as one pass per
+    /// row window — scores never materialize as a full CSR. Q is
+    /// `rows x k`, K is `cols x k`, V is `cols x n`.
+    Attention { q: Dense, k: Dense, v: Dense, beta: f32 },
 }
 
 /// One serving request.
@@ -153,6 +158,42 @@ impl Request {
         }
     }
 
+    /// Fused sparse attention: SDDMM → row-softmax → SpMM over one
+    /// shared plan, in one pass. The matrix's values are the sampling
+    /// mask (1.0 everywhere for plain masked attention).
+    pub fn attention(m: Csr, q: Dense, k: Dense, v: Dense, beta: f32) -> Self {
+        Self {
+            payload: Payload::Matrix(m),
+            inputs: OpInputs::Attention { q, k, v, beta },
+            theta: ThetaPolicy::Auto,
+            dist: None,
+            balance: None,
+            precision: Precision::F32,
+            reorder: ReorderPolicy::Off,
+        }
+    }
+
+    /// Fused attention against a cached pattern (fresh mask values,
+    /// CSR order).
+    pub fn attention_handle(
+        fp: PatternFingerprint,
+        values: Vec<f32>,
+        q: Dense,
+        k: Dense,
+        v: Dense,
+        beta: f32,
+    ) -> Self {
+        Self {
+            payload: Payload::Handle { fp, values },
+            inputs: OpInputs::Attention { q, k, v, beta },
+            theta: ThetaPolicy::Auto,
+            dist: None,
+            balance: None,
+            precision: Precision::F32,
+            reorder: ReorderPolicy::Off,
+        }
+    }
+
     /// Choose how θ is resolved (ignored if [`Request::with_dist`]
     /// supplies explicit parameters).
     pub fn with_theta(mut self, t: ThetaPolicy) -> Self {
@@ -182,11 +223,14 @@ impl Request {
         self
     }
 
-    /// Op kind and dense feature width (the tuning input `n`).
+    /// Op kind and dense feature width (the tuning input `n`). Fused
+    /// attention never consults this — [`Engine::submit_async`] key
+    /// resolution branches off first and tunes both halves itself.
     fn op_and_width(&self) -> (Op, usize) {
         match &self.inputs {
             OpInputs::Spmm { b } => (Op::Spmm, b.cols),
             OpInputs::Sddmm { a, .. } => (Op::Sddmm, a.cols),
+            OpInputs::Attention { q, .. } => (Op::Sddmm, q.cols),
         }
     }
 }
@@ -593,12 +637,35 @@ impl Engine {
     /// recording resolved-θ provenance and metrics.
     fn resolve_key(&self, req: &Request) -> anyhow::Result<PlanKey> {
         let fp = req.payload.fingerprint();
-        let (op, n) = req.op_and_width();
         let bal = req.balance.unwrap_or_default();
         let matrix = match &req.payload {
             Payload::Matrix(m) => Some(m),
             Payload::Handle { .. } => None,
         };
+        // Fused attention carries two plan halves, so both θs are
+        // resolved (and memoized) independently: the SDDMM half tunes
+        // on the score width k, the SpMM half on the value width n. An
+        // explicit `with_dist` override applies to both. The reorder
+        // stage never fires — the fused executor walks windows in
+        // original row space only — and precision stays f32 (the fused
+        // kernel has no quantized clone path).
+        if let OpInputs::Attention { q, v, .. } = &req.inputs {
+            anyhow::ensure!(
+                req.precision == Precision::F32,
+                "fused attention serves f32 only; reduced precision is not supported"
+            );
+            let d_sddmm = match req.dist {
+                Some(d) => d,
+                None => self.resolve_dist(matrix, fp, Op::Sddmm, q.cols, req.theta)?,
+            };
+            let d_spmm = match req.dist {
+                Some(d) => d,
+                None => self.resolve_dist(matrix, fp, Op::Spmm, v.cols, req.theta)?,
+            };
+            self.metrics.record_theta(d_sddmm.threshold);
+            return Ok(PlanKey::attention(fp, &d_sddmm, &d_spmm, &bal));
+        }
+        let (op, n) = req.op_and_width();
         let d = match req.dist {
             Some(d) => d,
             None => self.resolve_dist(matrix, fp, op, n, req.theta)?,
@@ -746,7 +813,10 @@ impl Engine {
                     }
                     Op::Sddmm => {
                         let p = build_sddmm_plan(&new_m, &d, &bal, old_key.reorder);
-                        CachedPlan::Sddmm(Arc::new(SddmmEntry { plan: p, pattern: new_m }))
+                        CachedPlan::Sddmm(Arc::new(SddmmEntry {
+                            plan: p,
+                            pattern: Arc::new(new_m),
+                        }))
                     }
                 };
                 self.cache.insert(new_key, plan);
@@ -905,6 +975,17 @@ fn execute_one(
             timing.exec_secs = t.elapsed().as_secs_f64();
             Ok(Output::Sparse(out))
         }
+        OpInputs::Attention { q, k, v, beta } => {
+            let mut exec = resolve_attention(key, payload, cache, metrics, backend, cache_hit)?;
+            exec.flex_threads = flex_threads;
+            timing.prep_secs = t.elapsed().as_secs_f64();
+            let t = Instant::now();
+            let out = exec.execute_with(&q, &k, &v, beta, ws)?;
+            timing.exec_secs = t.elapsed().as_secs_f64();
+            metrics.add(&metrics.fused_requests, 1);
+            metrics.max(&metrics.fused_peak_window_nnz, exec.peak_seg_elems() as u64);
+            Ok(Output::Dense(out))
+        }
     }
 }
 
@@ -1052,11 +1133,11 @@ fn resolve_sddmm(
                 // clone, no distribution, no balancing)
                 let mut plan = entry.plan.clone();
                 plan.dist.set_values(&m.values);
-                return Ok(SddmmExecutor::from_plan(plan, m, backend));
+                return Ok(SddmmExecutor::from_plan(plan, Arc::new(m), backend));
             }
             metrics.add(&metrics.prep_full, 1);
             let plan = build_sddmm_plan(&m, dparams, &bparams, key.reorder);
-            let entry = SddmmEntry { plan, pattern: m };
+            let entry = SddmmEntry { plan, pattern: Arc::new(m) };
             if entry.bytes() <= cache.capacity_bytes() {
                 // record structural state for incremental delta patching
                 cache.record_pattern(&entry.pattern);
@@ -1083,14 +1164,93 @@ fn resolve_sddmm(
                 *cache_hit = true;
                 metrics.add(&metrics.prep_fast, 1);
                 // refresh values before construction (single TcfBlocks
-                // build under the traversal backend)
+                // build under the traversal backend); the cached
+                // pattern Arc is shared, so the fresh output values go
+                // into a private copy
                 let mut e = (*entry).clone();
                 e.plan.dist.set_values(&values);
-                e.pattern.values.copy_from_slice(&values);
+                Arc::make_mut(&mut e.pattern).values.copy_from_slice(&values);
                 Ok(SddmmExecutor::from_plan(e.plan, e.pattern, backend))
             }
             _ => anyhow::bail!(
                 "pattern handle {:#018x} ({}x{}, nnz {}) is not in the plan cache; resubmit the full matrix",
+                fp.hash,
+                fp.rows,
+                fp.cols,
+                fp.nnz
+            ),
+        },
+    }
+}
+
+/// Resolve a fused-attention executor (same warm/cold split). The
+/// cached [`FusedEntry`] carries both halves' balanced plans plus the
+/// shared pattern; a warm hit refreshes only the SDDMM half's mask
+/// values — the SpMM half's stored values are dead weight in the fused
+/// pipeline (stage 3 reads the softmaxed scores, never the matrix), so
+/// they are left untouched.
+fn resolve_attention(
+    key: PlanKey,
+    payload: Payload,
+    cache: &PlanCache,
+    metrics: &ServeMetrics,
+    backend: TcBackend,
+    cache_hit: &mut bool,
+) -> anyhow::Result<FusedAttention> {
+    let bparams = BalanceParams {
+        ts: key.ts,
+        cs: key.cs,
+        short_len: key.short_len,
+        enabled: key.balance_enabled,
+    };
+    // the key's threshold is the SDDMM half's θ, spmm_threshold the
+    // SpMM half's; fill_padding belongs to the SpMM half (the SDDMM
+    // distribution ignores it)
+    let d_sddmm = DistParams { threshold: key.threshold, fill_padding: false };
+    let d_spmm = DistParams { threshold: key.spmm_threshold, fill_padding: key.fill_padding };
+    match payload {
+        Payload::Matrix(m) => {
+            if let Some(CachedPlan::Fused(entry)) = cache.get(&key) {
+                *cache_hit = true;
+                metrics.add(&metrics.prep_fast, 1);
+                let mut plan = entry.plan.clone();
+                plan.sddmm.dist.set_values(&m.values);
+                return FusedAttention::from_plan(plan, Arc::new(m), backend);
+            }
+            metrics.add(&metrics.prep_full, 1);
+            let plan = crate::prep::preprocess_attention(
+                &m,
+                &d_sddmm,
+                &d_spmm,
+                &bparams,
+                crate::prep::PrepMode::Sequential,
+            );
+            let entry = FusedEntry { plan, pattern: Arc::new(m) };
+            if entry.bytes() <= cache.capacity_bytes() {
+                cache.record_pattern(&entry.pattern);
+                let shared = Arc::new(entry);
+                cache.insert(key, CachedPlan::Fused(shared.clone()));
+                FusedAttention::from_plan(shared.plan.clone(), shared.pattern.clone(), backend)
+            } else {
+                FusedAttention::from_plan(entry.plan, entry.pattern, backend)
+            }
+        }
+        Payload::Handle { fp, values } => match cache.get(&key) {
+            Some(CachedPlan::Fused(entry)) => {
+                anyhow::ensure!(
+                    values.len() == entry.plan.sddmm.dist.stats.nnz_total,
+                    "handle carries {} values but cached pattern has {} nonzeros",
+                    values.len(),
+                    entry.plan.sddmm.dist.stats.nnz_total
+                );
+                *cache_hit = true;
+                metrics.add(&metrics.prep_fast, 1);
+                let mut plan = entry.plan.clone();
+                plan.sddmm.dist.set_values(&values);
+                FusedAttention::from_plan(plan, entry.pattern.clone(), backend)
+            }
+            _ => anyhow::bail!(
+                "pattern handle {:#018x} ({}x{}, nnz {}) has no cached fused plan; resubmit the full matrix",
                 fp.hash,
                 fp.rows,
                 fp.cols,
@@ -1232,6 +1392,58 @@ mod tests {
             assert!((g - w).abs() < 1e-2 + 1e-3 * w.abs());
         }
         assert_eq!(eng.report().prep_fast, 1);
+    }
+
+    #[test]
+    fn fused_attention_round_trip_and_warm_path() {
+        let eng = engine(1, 64 << 20);
+        let mut rng = SplitMix64::new(510);
+        let m = gen::power_law(&mut rng, 200, 6.0, 2.0);
+        let q = Dense::random(&mut rng, 200, 16);
+        let k = Dense::random(&mut rng, 200, 16);
+        let v = Dense::random(&mut rng, 200, 32);
+
+        let r1 = eng.submit(Request::attention(m.clone(), q.clone(), k.clone(), v.clone(), 1.0));
+        assert!(!r1.cache_hit);
+        let out1 = r1.result.unwrap().into_dense().unwrap();
+        assert_eq!((out1.rows, out1.cols), (200, 32));
+
+        // same pattern warm-hits the fused entry; identical plan +
+        // identical inputs must reproduce the cold output bit-for-bit
+        // (fused windows are owner-written — no atomics, so thread
+        // count cannot perturb the accumulation order)
+        let r2 = eng.submit(Request::attention(m.clone(), q.clone(), k.clone(), v.clone(), 1.0));
+        assert!(r2.cache_hit, "same pattern must warm-hit the fused entry");
+        assert_eq!(r2.result.unwrap().into_dense().unwrap().data, out1.data);
+
+        // values-only handle traffic rides the same entry
+        let fp = m.pattern_fingerprint();
+        let r3 = eng.submit(Request::attention_handle(
+            fp,
+            m.values.clone(),
+            q.clone(),
+            k.clone(),
+            v.clone(),
+            1.0,
+        ));
+        assert!(r3.cache_hit, "handle must reuse the fused plan");
+        assert_eq!(r3.result.unwrap().into_dense().unwrap().data, out1.data);
+
+        // a standalone SDDMM over the same pattern is a separate entry
+        let r4 = eng.submit(Request::sddmm(m.clone(), q.clone(), k.clone()));
+        assert!(!r4.cache_hit, "fused and standalone plans must not share keys");
+        r4.result.unwrap();
+
+        let rep = eng.report();
+        assert_eq!(rep.errors, 0);
+        assert_eq!(rep.fused_requests, 3, "every fused execution must be counted");
+        assert!(rep.fused_peak_window_nnz > 0);
+        assert!(
+            rep.fused_peak_window_nnz <= m.nnz() as u64,
+            "peak window segment must be bounded by the pattern"
+        );
+        assert_eq!(rep.prep_full, 2, "one fused cold prep + one sddmm cold prep");
+        assert_eq!(rep.prep_fast, 2, "both fused repeats must ride the fast path");
     }
 
     #[test]

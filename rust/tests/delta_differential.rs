@@ -163,8 +163,16 @@ fn chained_deltas_match_scratch_sddmm() {
         let a = Dense::random(rng, m.rows, k);
         let b = Dense::random(rng, m.cols, k);
         let want_plan = preprocess_sddmm(&m, &dparams, &bparams, PrepMode::Sequential);
-        let got_x = SddmmExecutor::from_plan(plan.clone(), m.clone(), TcBackend::NativeBitmap);
-        let want_x = SddmmExecutor::from_plan(want_plan, m.clone(), TcBackend::NativeBitmap);
+        let got_x = SddmmExecutor::from_plan(
+            plan.clone(),
+            std::sync::Arc::new(m.clone()),
+            TcBackend::NativeBitmap,
+        );
+        let want_x = SddmmExecutor::from_plan(
+            want_plan,
+            std::sync::Arc::new(m.clone()),
+            TcBackend::NativeBitmap,
+        );
         let got = got_x.execute(&a, &b).unwrap();
         let want = want_x.execute(&a, &b).unwrap();
         assert_eq!(got.values, want.values, "executed SDDMM output diverged");

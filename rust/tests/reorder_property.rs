@@ -160,12 +160,12 @@ fn reordered_sddmm_bit_identical_at_any_theta() {
 
         let reord = SddmmExecutor::from_plan(
             preprocess_sddmm_reordered(&m, &d, &bal, PrepMode::Sequential, &perm),
-            m.clone(),
+            std::sync::Arc::new(m.clone()),
             TcBackend::NativeBitmap,
         );
         let plain = SddmmExecutor::from_plan(
             preprocess_sddmm(&m, &d, &bal, PrepMode::Sequential),
-            m.clone(),
+            std::sync::Arc::new(m.clone()),
             TcBackend::NativeBitmap,
         );
         let got = reord.execute(&a, &b).unwrap();
